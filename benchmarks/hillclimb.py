@@ -1,0 +1,81 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: measures named variants of the three chosen
+cells (hypothesis -> change -> measure loop; log in EXPERIMENTS.md §Perf).
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell A --variant q4
+"""
+import argparse
+import json
+import sys
+
+import jax
+from jax.sharding import AxisType
+
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import cell_roofline
+
+
+def mesh_of(shape_str):
+    if shape_str == "16x16":
+        return make_production_mesh(), "16x16"
+    dims = tuple(int(x) for x in shape_str.split("x"))
+    assert dims[0] * dims[1] == 256
+    return jax.make_mesh(dims, ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2), shape_str
+
+
+# cell -> (arch, shape); variants below
+CELLS = {
+    "A": ("deepseek-7b", "decode_32k"),
+    "B": ("gemma3-1b", "train_4k"),
+    "C": ("qwen3-14b", "train_4k"),
+    "C2": ("qwen3-moe-30b-a3b", "train_4k"),
+    "D": ("whisper-medium", "train_4k"),
+}
+
+VARIANTS = {
+    # name: dict(mesh=..., quantized=..., bits=..., remat=...)
+    "baseline": dict(),
+    "q4": dict(quantized=True, bits=4),
+    "q3": dict(quantized=True, bits=3),
+    "kv8": dict(kv_quant=True),
+    "q4_kv8": dict(quantized=True, bits=4, kv_quant=True),
+    "remat_dots": dict(remat="dots"),
+    "remat_none": dict(remat="none"),
+    "mesh64x4": dict(mesh="64x4"),
+    "mesh32x8": dict(mesh="32x8"),
+    "mesh64x4_dots": dict(mesh="64x4", remat="dots"),
+    "mesh32x8_dots": dict(mesh="32x8", remat="dots"),
+    "mesh128x2": dict(mesh="128x2"),
+    "mesh128x2_dots": dict(mesh="128x2", remat="dots"),
+    "mesh256x1": dict(mesh="256x1"),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--out", default="results/hillclimb.jsonl")
+    args = ap.parse_args(argv)
+    arch, shape = CELLS[args.cell]
+    v = VARIANTS[args.variant]
+    mesh, mesh_name = mesh_of(v.get("mesh", "16x16"))
+    r = cell_roofline(arch, shape, mesh, mesh_name,
+                      variant=f"{args.cell}:{args.variant}",
+                      quantized=v.get("quantized", False),
+                      bits=v.get("bits", 4),
+                      remat=v.get("remat", "full"),
+                      kv_quant=v.get("kv_quant", False))
+    rec = {k: val for k, val in r.to_dict().items() if k != "per_layer"}
+    rec["cell"] = args.cell
+    print(json.dumps(rec))
+    with open(args.out, "a") as f:
+        f.write(json.dumps(r.to_dict() | {"cell": args.cell}) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,285 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. The offline container has no
+WikiText/C4 and no GPU, so fidelity experiments run on synthetic corpora
+(heavy-tailed weights + outlier-feature activations, matching the paper's
+Fig. 1b setting) and the latency table is roofline-derived for the TPU
+target (wall-clock on this CPU is reported for the harness itself, not as
+TPU performance). Mapping to paper artifacts: DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (QuantConfig, compute_h, ganq_quantize,
+                        gptq_reconstruct, layer_objective, precondition,
+                        rtn_reconstruct, storage_bytes)
+from repro.data.synthetic import MarkovStream
+
+
+def _t(fn, *args, reps=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _llm_like_layer(seed, m=256, n=256, p=1024, outlier_cols=4,
+                    w_outliers=0):
+    """Heavy-tailed W + activation-outlier X (paper Fig. 1b regime)."""
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_t(df=4, size=(m, n)) * 0.02).astype(np.float32)
+    if w_outliers:
+        r = rng.integers(0, m, size=w_outliers)
+        c = rng.integers(0, n, size=w_outliers)
+        w[r, c] += rng.choice([-1., 1.], w_outliers) * 1.0
+    x = rng.normal(size=(n, p)).astype(np.float32)
+    scale = np.ones(n, np.float32)
+    scale[rng.choice(n, outlier_cols, replace=False)] = 30.0
+    x *= scale[:, None]
+    return jnp.asarray(w), compute_h(jnp.asarray(x))
+
+
+# ------------------------------------------------------------- Table 1
+
+def bench_table1_storage():
+    for mn, expect in ((2048, 25.78), (4096, 25.39), (8192, 25.20)):
+        s = storage_bytes(mn, mn, bits=4)
+        _row(f"table1_storage_m{mn}", 0.0,
+             f"lut_pct={s['lut_pct_of_fp16']:.2f} (paper {expect})")
+
+
+# ------------------------------------------------------------- Table 2
+
+def bench_table2_layer_error():
+    """Layer-output error at 4/3 bits, 5-seed mean: RTN/AWQ/GPTQ (uniform
+    grids), SqueezeLLM (sensitivity k-means LUT), GANQ (full-H LUT)."""
+    from repro.core import quantize_linear
+    for bits in (4, 3):
+        methods = ("rtn", "awq", "gptq", "squeezellm", "ganq",
+                   "ganq_fixed")
+        errs = {m: [] for m in methods}
+        us = {m: 0.0 for m in methods}
+        for seed in range(5):
+            w, h = _llm_like_layer(seed)
+            for m in methods:
+                precond = "fixed" if m == "ganq_fixed" else "adaptive"
+                real_m = "ganq" if m == "ganq_fixed" else m
+                cfg = QuantConfig(bits=bits, iters=8, precondition=precond)
+                us[m], res = _t(
+                    lambda m=real_m: quantize_linear(w, h, cfg, m))
+                if m == "awq":
+                    # awq layer stores the scaled-domain grid; its pipeline
+                    # err_history is already vs the true H
+                    errs[m].append(float(res.err_history[-1]))
+                else:
+                    errs[m].append(float(layer_objective(
+                        w, res.layer.dequantize(), h)))
+        base = np.mean(errs["rtn"])
+        for m in methods:
+            _row(f"table2_layer_err_{m}_{bits}bit", us[m],
+                 f"err={np.mean(errs[m]):.4f} rel_rtn="
+                 f"{np.mean(errs[m]) / base:.4f}")
+
+
+_E2E_CACHE = {}
+
+
+def _trained_small_lm():
+    if "model" in _E2E_CACHE:
+        return _E2E_CACHE["model"]
+    from repro.configs import get_config, reduce_config
+    from repro.train.loop import Trainer, TrainerConfig
+    from repro.train.optimizer import OptConfig
+    import dataclasses, tempfile
+    cfg = dataclasses.replace(reduce_config(get_config("deepseek-7b")),
+                              n_layers=4, d_model=128, n_heads=8,
+                              n_kv_heads=8, head_dim=16, d_ff=256,
+                              vocab_size=1024)
+    data = MarkovStream(cfg.vocab_size, batch=8, seq=64, seed=11)
+    tcfg = TrainerConfig(steps=150, ckpt_every=1000, log_every=1000,
+                         ckpt_dir=tempfile.mkdtemp())
+    tr = Trainer(cfg, data, tcfg,
+                 opt_cfg=OptConfig(lr=8e-3, warmup_steps=15, total_steps=150,
+                                   weight_decay=0.0))
+    tr.run()
+    params, _, _ = tr.init_or_restore()
+    _E2E_CACHE["model"] = (cfg, params, data)
+    return _E2E_CACHE["model"]
+
+
+def _ppl(params, cfg, batch):
+    from repro.models import forward_logits
+    logits = forward_logits(params, batch, cfg).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][..., None],
+                               axis=-1)[..., 0]
+    return float(jnp.exp(jnp.mean(logz - gold)))
+
+
+def bench_table2_e2e_ppl():
+    """Perplexity of a TRAINED small LM after sequential PTQ — the paper's
+    Table 2 protocol end-to-end (synthetic corpus; calib 32x128 tokens).
+
+    Note (EXPERIMENTS.md): a 150-step toy model has near-Gaussian weights,
+    so at 4-bit all error-compensating methods sit within noise of fp16 —
+    the paper's premise (heavy-tailed weights, Fig. 1b) does not hold for
+    it. The ranking GANQ < GPTQ < RTN emerges exactly where quantization
+    pressure is high (2-bit here; 3/4-bit on real heavy-tailed LLMs, cf.
+    bench_table2_layer_error which uses heavy-tailed W)."""
+    from repro.models.quantized import quantize_model_ptq
+    cfg, params, data = _trained_small_lm()
+    calib_stream = MarkovStream(cfg.vocab_size, batch=32, seq=128, seed=11)
+    calib = {k: jnp.asarray(v)
+             for k, v in calib_stream.batch_at(900).items()}
+    evalb = {k: jnp.asarray(v) for k, v in data.batch_at(901).items()}
+    ppl_fp = _ppl(params, cfg, evalb)
+    _row("table2_e2e_ppl_fp16", 0.0, f"ppl={ppl_fp:.3f}")
+    for bits in (4, 3, 2):
+        for method in ("rtn", "gptq", "ganq"):
+            qcfg = QuantConfig(bits=bits, iters=8, precondition="fixed")
+            t0 = time.perf_counter()
+            qp, _ = quantize_model_ptq(params, cfg, calib, qcfg, method)
+            us = (time.perf_counter() - t0) * 1e6
+            ppl = _ppl(qp, cfg, evalb)
+            _row(f"table2_e2e_ppl_{method}_{bits}bit", us,
+                 f"ppl={ppl:.3f} gap={ppl - ppl_fp:+.3f}")
+
+
+# ------------------------------------------------------------- Table 5
+
+def bench_table5_outliers():
+    """GANQ vs GANQ* (outlier split + full rows) on outlier-heavy W."""
+    for bits in (4, 3):
+        deltas = []
+        us = 0.0
+        for seed in range(3):
+            w, h = _llm_like_layer(100 + seed, w_outliers=256)
+            base = ganq_quantize(w, h=h, cfg=QuantConfig(
+                bits=bits, iters=6, precondition="fixed"))
+            t0 = time.perf_counter()
+            star = ganq_quantize(w, h=h, cfg=QuantConfig(
+                bits=bits, iters=6, precondition="fixed",
+                outlier_ratio=0.01, full_rows=2))
+            us = (time.perf_counter() - t0) * 1e6
+            e0 = float(layer_objective(w, base.layer.dequantize(), h))
+            e1 = float(layer_objective(w, star.layer.dequantize(), h))
+            deltas.append(e1 / e0)
+        _row(f"table5_ganq_star_{bits}bit", us,
+             f"err_ratio_vs_ganq={np.mean(deltas):.4f} (<1 = GANQ* wins)")
+
+
+# ------------------------------------------------------------- Table 6
+
+def bench_table6_decode_speedup():
+    """Roofline-derived decode speedup on the TPU target (batch-1 decode is
+    weight-bytes-bound; paper measures 2.24x/2.57x on RTX4090)."""
+    from repro.configs import get_config
+    for arch in ("deepseek-7b", "granite-3-8b"):
+        cfg = get_config(arch)
+        n_params = cfg.param_count()
+        bytes_fp16 = 2.0 * n_params
+        for bits in (4, 3):
+            levels = 1 << bits
+            d, f = cfg.d_model, cfg.d_ff
+            per_layer_rows = cfg.q_dim + 2 * cfg.kv_dim + d + 3 * f
+            lut_rows = per_layer_rows * cfg.n_layers
+            bytes_q = bits / 8 * n_params + 2 * levels * lut_rows
+            speedup = bytes_fp16 / bytes_q
+            _row(f"table6_decode_speedup_{arch}_{bits}bit", 0.0,
+                 f"weight_bytes_ratio={speedup:.2f}x "
+                 f"(paper RTX4090: 2.24x@4b / 2.57x@3b incl. overheads)")
+
+
+def bench_table6_kernel_walltime():
+    """LUT-mpGEMM kernel wall time (interpret mode — harness timing only)."""
+    from repro.kernels.ops import lut_linear
+    from repro.kernels.ref import lut_matmul_ref
+    from repro.core.packing import pack_nibbles
+    rng = np.random.default_rng(0)
+    m, n, p = 512, 512, 8
+    codes = jnp.asarray(rng.integers(0, 16, size=(m, n)).astype(np.uint8))
+    t = jnp.asarray(rng.normal(size=(m, 16)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    us_ref, _ = _t(lambda: lut_matmul_ref(codes, t, x))
+    _row("table6_kernel_xla_ref", us_ref, f"m={m} n={n} p={p}")
+    us_pal, _ = _t(lambda: lut_linear(codes, t, x, bits=4))
+    _row("table6_kernel_pallas_interpret", us_pal,
+         "interpret-mode (CPU emulation; not TPU perf)")
+    packed = pack_nibbles(codes)
+    us_pk, _ = _t(lambda: lut_linear(packed, t, x, bits=4, packed=True))
+    _row("table6_kernel_pallas_packed", us_pk, "0.5B/weight HBM layout")
+
+
+# ------------------------------------------------------------- Table 7
+
+def bench_table7_precondition():
+    """Preconditioning ablation: fixed-lambda sweep vs adaptive (App. A)."""
+    w, h = _llm_like_layer(7)
+    results = {}
+    for name, cfg in [
+        ("lam0.5", QuantConfig(iters=6, precondition="fixed", damp=0.5)),
+        ("lam0.01", QuantConfig(iters=6, precondition="fixed", damp=0.01)),
+        ("lam1e-4", QuantConfig(iters=6, precondition="fixed", damp=1e-4)),
+        ("adaptive", QuantConfig(iters=6, precondition="adaptive")),
+    ]:
+        res = ganq_quantize(w, h=h, cfg=cfg)
+        results[name] = float(layer_objective(w, res.layer.dequantize(), h))
+    base = min(results.values())
+    for name, err in results.items():
+        _row(f"table7_precond_{name}", 0.0,
+             f"err={err:.4f} rel_best={err / base:.3f}")
+
+
+# ------------------------------------------------------------- Fig 1b
+
+def bench_fig1b_weight_stats():
+    rng = np.random.default_rng(0)
+    w = rng.standard_t(df=4, size=100_000) * 0.02
+    g = rng.normal(size=100_000) * w.std()
+    kurt = lambda a: float(((a - a.mean()) ** 4).mean() / a.var() ** 2)
+    _row("fig1b_kurtosis", 0.0,
+         f"heavy_tailed={kurt(w):.1f} gaussian={kurt(g):.1f} "
+         "(>3 motivates non-uniform codebooks)")
+
+
+# ------------------------------------------------------------- §4.4 cost
+
+def bench_quant_cost():
+    """Quantization wall time per layer (paper §4.4: ~1h for 7B, K=10)."""
+    w, h = _llm_like_layer(3, m=512, n=512, p=2048)
+    for name, fn in [
+        ("rtn", lambda: rtn_reconstruct(w, 4)),
+        ("gptq", lambda: gptq_reconstruct(w, h, 4)),
+        ("ganq_k10", lambda: ganq_quantize(
+            w, h=h, cfg=QuantConfig(bits=4, iters=10))),
+    ]:
+        us, _ = _t(fn, reps=1)
+        _row(f"quant_cost_{name}_512x512", us, "per-layer wall (CPU)")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_table1_storage()
+    bench_table2_layer_error()
+    bench_table2_e2e_ppl()
+    bench_table5_outliers()
+    bench_table6_decode_speedup()
+    bench_table6_kernel_walltime()
+    bench_table7_precondition()
+    bench_fig1b_weight_stats()
+    bench_quant_cost()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Train a small LM for a few hundred steps with the fault-tolerant loop
+(checkpoint/restart + straggler monitor + schedule).
+
+    PYTHONPATH=src python examples/train_small.py
+"""
+import dataclasses
+import tempfile
+
+from repro.configs import get_config, reduce_config
+from repro.data.synthetic import MarkovStream
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optimizer import OptConfig
+
+cfg = dataclasses.replace(reduce_config(get_config("gemma3-1b")),
+                          d_model=128, n_heads=8, n_kv_heads=1, head_dim=16,
+                          d_ff=512, vocab_size=2048)
+data = MarkovStream(cfg.vocab_size, batch=8, seq=128, seed=3)
+tcfg = TrainerConfig(steps=200, ckpt_every=50, log_every=20,
+                     ckpt_dir=tempfile.mkdtemp(), remat="none")
+trainer = Trainer(cfg, data, tcfg,
+                  opt_cfg=OptConfig(lr=6e-3, warmup_steps=20,
+                                    total_steps=200, weight_decay=0.0))
+res = trainer.run()
+print("entropy floor (nats):", round(data.entropy_floor(), 3))
+for m in trainer.metrics_log:
+    print(f"step {m['step']:4d}  loss {m['loss']:.4f}  "
+          f"lr {m['lr']:.2e}  {m['sec'] * 1e3:.1f} ms/step")
+print(f"loss {res['first_loss']:.3f} -> {res['final_loss']:.3f} "
+      f"({res['steps_run']} steps, ckpts kept: {trainer.ckpt.all_steps()})")

@@ -1,0 +1,6 @@
+"""repro: GANQ (ICML 2025) — LUT-based non-uniform quantization on TPU.
+
+Layers: core (the paper's algorithm), kernels (Pallas TPU), models (10-arch
+zoo), sharding/train/serve/launch (distributed runtime), roofline (analysis).
+"""
+__version__ = "0.1.0"

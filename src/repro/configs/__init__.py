@@ -1,0 +1,65 @@
+"""Architecture registry: the 10 assigned configs + reduced smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from .base import ModelConfig
+
+from .moonshot_v1_16b_a3b import CONFIG as _moonshot
+from .qwen3_moe_30b_a3b import CONFIG as _qwen3moe
+from .granite_3_8b import CONFIG as _granite
+from .gemma3_1b import CONFIG as _gemma3
+from .deepseek_7b import CONFIG as _deepseek
+from .qwen3_14b import CONFIG as _qwen3
+from .qwen2_vl_7b import CONFIG as _qwen2vl
+from .rwkv6_7b import CONFIG as _rwkv6
+from .whisper_medium import CONFIG as _whisper
+from .recurrentgemma_2b import CONFIG as _rgemma
+
+_REGISTRY: Dict[str, ModelConfig] = {c.name: c for c in [
+    _moonshot, _qwen3moe, _granite, _gemma3, _deepseek, _qwen3, _qwen2vl,
+    _rwkv6, _whisper, _rgemma,
+]}
+
+
+def list_archs() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {list_archs()}")
+    return _REGISTRY[name]
+
+
+def reduce_config(cfg: ModelConfig, seq_budget: int = 64) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests: small width/depth/
+    vocab/experts, same layer pattern (tail layers included)."""
+    p = len(cfg.layer_pattern)
+    n_layers = min(cfg.n_layers, 2 * p + (1 if cfg.n_layers % p else 0))
+    n_heads = min(4, cfg.n_heads)
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    head_dim = 16
+    d_model = 64
+    sections = ()
+    if cfg.mrope_sections:
+        sections = (4, 2, 2)  # sums to head_dim // 2
+    changes = dict(
+        n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+        n_kv_heads=n_kv, head_dim=head_dim, d_ff=128,
+        vocab_size=512, sliding_window=min(cfg.sliding_window, 16),
+        lru_width=d_model, rwkv_head_size=16,
+        mrope_sections=sections,
+        n_experts=min(8, cfg.n_experts) if cfg.n_experts else 0,
+        top_k=min(2, cfg.top_k) if cfg.top_k else 0,
+        n_encoder_layers=min(2, cfg.n_encoder_layers),
+        # CPU test numerics: f32 compute for crisp parity asserts; ample MoE
+        # capacity so decode-vs-forward parity is not broken by token drops
+        compute_dtype="float32",
+        capacity_factor=8.0,
+    )
+    if cfg.family == "ssm":
+        changes["n_heads"] = d_model // 16
+        changes["n_kv_heads"] = d_model // 16
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,122 @@
+"""Model configuration schema covering all 10 assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description (exact assigned specs live in configs/<id>.py).
+
+    layer_pattern is cycled over n_layers and names each block kind:
+      'attn'  — full (global) causal attention + MLP/MoE
+      'local' — sliding-window attention + MLP
+      'rwkv'  — RWKV-6 time-mix + channel-mix (attention-free)
+      'rglru' — RG-LRU recurrent block + MLP (Griffin/RecurrentGemma)
+    """
+
+    name: str
+    family: str                     # dense | moe | vlm | ssm | audio | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    sliding_window: int = 4096
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = ()      # qwen2-vl M-RoPE half-dim split
+    # embeddings / head
+    tie_embeddings: bool = False
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    # modality frontend: 'tokens' (embedding table) | 'frames' | 'patches'
+    # (frames/patches are STUBS: input_specs provides precomputed embeddings)
+    frontend: str = "tokens"
+    # RWKV-6
+    rwkv_head_size: int = 64
+    # RG-LRU
+    lru_width: int = 0              # 0 -> d_model
+    conv_width: int = 4
+    # norms / activations
+    act: str = "silu"               # silu | gelu
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # serve-time KV-cache quantization (0 = off, 8 = int8 per-token/head
+    # scales) — beyond-paper extension of weight-only quantization to the
+    # decode-dominant KV traffic (EXPERIMENTS.md §Perf cell A)
+    kv_quant_bits: int = 0
+
+    # whether GANQ's long_500k cell applies (sub-quadratic decode path)
+    subquadratic: bool = False
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+        if self.lru_width == 0:
+            object.__setattr__(self, "lru_width", self.d_model)
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        p = self.layer_pattern
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Total parameter count (embeddings included)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        total = v * d                                   # embedding
+        if not self.tie_embeddings:
+            total += v * d                              # head
+        for kind in self.layer_kinds:
+            if kind in ("attn", "local"):
+                attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+                if self.n_experts:
+                    ffn = d * self.n_experts + self.n_experts * 3 * d * f
+                else:
+                    ffn = 3 * d * f
+                total += attn + ffn + 2 * d
+            elif kind == "rwkv":
+                total += 5 * d * d + d * d              # r,k,v,g,o + lora-ish
+                total += 2 * d * f + d * d + 2 * d      # channel mix
+            elif kind == "rglru":
+                r = self.lru_width
+                total += 2 * d * r + r * d              # in/gate/out projections
+                total += 2 * r * r                      # input & recurrence gates
+                total += 3 * d * f + 2 * d              # MLP
+        if self.is_encoder_decoder:
+            for _ in range(self.n_encoder_layers):
+                total += 2 * (d * self.q_dim + 2 * d * self.kv_dim
+                              + self.q_dim * d) + 2 * d * f + 2 * d
+        return total
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k of n_experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        total = self.param_count()
+        dense_ffn = self.n_experts * 3 * d * f
+        active_ffn = self.top_k * 3 * d * f
+        n_moe = sum(1 for k in self.layer_kinds if k in ("attn", "local"))
+        return total - n_moe * (dense_ffn - active_ffn)

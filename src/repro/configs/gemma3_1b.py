@@ -1,0 +1,14 @@
+"""gemma3-1b [dense/hybrid-attention] — (hf:google/gemma-3-1b-pt).
+26L d_model=1152 4H (GQA kv=1) d_ff=6912 vocab=262144; 5 local : 1 global,
+window 1024, head_dim 256 (official gemma3 value; q_dim != d_model).
+Runs long_500k: local layers are O(window); global KV is sequence-sharded."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b", family="dense",
+    n_layers=26, d_model=1152, n_heads=4, n_kv_heads=1, head_dim=256,
+    d_ff=6912, vocab_size=262144,
+    layer_pattern=("local", "local", "local", "local", "local", "attn"),
+    sliding_window=1024, rope_theta=1e6, tie_embeddings=True,
+    act="gelu", subquadratic=True,
+)

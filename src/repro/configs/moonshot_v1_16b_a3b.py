@@ -1,0 +1,11 @@
+"""moonshot-v1-16b-a3b [moe] — Moonlight-16B-A3B (hf:moonshotai/Moonlight-16B-A3B).
+48L d_model=2048 16H (GQA kv=16) d_ff=1408(expert) vocab=163840, MoE 64e top-6."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab_size=163840,
+    n_experts=64, top_k=6,
+    layer_pattern=("attn",), act="silu",
+)

@@ -1,0 +1,12 @@
+"""qwen2-vl-7b [vlm] — (arXiv:2409.12191). Backbone only; the vision
+frontend is a STUB (input_specs provides precomputed patch embeddings).
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064, M-RoPE (16,24,24)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    d_ff=18944, vocab_size=152064,
+    mrope_sections=(16, 24, 24), frontend="patches",
+    layer_pattern=("attn",), act="silu",
+)

@@ -1,0 +1,14 @@
+"""recurrentgemma-2b [hybrid] — Griffin (arXiv:2402.19427).
+26L d_model=2560 10H (GQA kv=1) d_ff=7680 vocab=256000; RG-LRU : local attn
+= 2 : 1, window 2048, head_dim 256 (official), lru_width 2560.
+Runs long_500k: recurrence is O(1); local attn is O(window)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab_size=256000, lru_width=2560, conv_width=4,
+    layer_pattern=("rglru", "rglru", "local"),
+    sliding_window=2048, tie_embeddings=True,
+    act="gelu", subquadratic=True,
+)

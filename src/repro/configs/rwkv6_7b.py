@@ -1,0 +1,11 @@
+"""rwkv6-7b [ssm] — RWKV-6 Finch (arXiv:2404.05892). Attention-free.
+32L d_model=4096 d_ff=14336 vocab=65536, head_size 64.
+Runs long_500k: O(1) state per token."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64,  # heads = d/head_size
+    d_ff=14336, vocab_size=65536, rwkv_head_size=64,
+    layer_pattern=("rwkv",), act="silu", subquadratic=True,
+)

@@ -1,0 +1,13 @@
+"""whisper-medium [audio] — (arXiv:2212.04356). Enc-dec; conv frontend is a
+STUB (input_specs provides precomputed frame embeddings).
+24L(+24 enc) d_model=1024 16H (MHA kv=16) d_ff=4096 vocab=51865."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab_size=51865,
+    is_encoder_decoder=True, n_encoder_layers=24, frontend="frames",
+    layer_pattern=("attn",), act="gelu", norm="layernorm",
+    tie_embeddings=True, norm_eps=1e-5,
+)

@@ -1,0 +1,28 @@
+"""GANQ core: the paper's contribution as a composable JAX module."""
+from .types import QuantConfig, QuantizedLinear, QuantResult
+from .precondition import precondition, safe_cholesky
+from .codebook import init_codebook, assign_nearest
+from .rtn import rtn_quantize, rtn_dequantize, rtn_reconstruct, rtn_codebook
+from .gptq import gptq_quantize, gptq_reconstruct
+from .ganq import (ganq_quantize, compute_h, h_from_tokens, layer_objective,
+                   s_step, t_step)
+from .outliers import (extract_outliers_topk, extract_outliers_percentile,
+                       apply_sparse, select_full_rows)
+from .packing import (pack_nibbles, unpack_nibbles, pack_bits_np,
+                      unpack_bits_np, storage_bytes)
+from .pipeline import HCollector, quantize_linear, SequentialPTQ
+
+__all__ = [
+    "QuantConfig", "QuantizedLinear", "QuantResult",
+    "precondition", "safe_cholesky",
+    "init_codebook", "assign_nearest",
+    "rtn_quantize", "rtn_dequantize", "rtn_reconstruct", "rtn_codebook",
+    "gptq_quantize", "gptq_reconstruct",
+    "ganq_quantize", "compute_h", "h_from_tokens", "layer_objective",
+    "s_step", "t_step",
+    "extract_outliers_topk", "extract_outliers_percentile", "apply_sparse",
+    "select_full_rows",
+    "pack_nibbles", "unpack_nibbles", "pack_bits_np", "unpack_bits_np",
+    "storage_bytes",
+    "HCollector", "quantize_linear", "SequentialPTQ",
+]

@@ -1,0 +1,112 @@
+"""Per-row codebook initialization T^0 for GANQ (paper §3.2, Algorithm 1 input).
+
+The paper takes an "initial codebook T^0" as given. We provide three
+initializers, all vectorized over the m rows:
+
+  * quantile — codebook entries at evenly spaced per-row quantiles. Adapts to
+    the (heavy-tailed, Fig. 1b) weight distribution; our default.
+  * kmeans   — per-row 1-D Lloyd's k-means (SqueezeLLM-style, unweighted).
+  * uniform  — per-row min/max linspace == the RTN uniform grid, for ablation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def init_uniform(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-row [min, max] uniform grid; (m, 2**bits)."""
+    levels = 1 << bits
+    lo = jnp.min(w, axis=1, keepdims=True)
+    hi = jnp.max(w, axis=1, keepdims=True)
+    t = jnp.linspace(0.0, 1.0, levels, dtype=w.dtype)[None, :]
+    return lo + (hi - lo) * t
+
+
+def init_quantile(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Codebook at per-row quantiles (k + 0.5) / 2**bits; (m, 2**bits)."""
+    levels = 1 << bits
+    qs = (jnp.arange(levels, dtype=jnp.float32) + 0.5) / levels
+    t = jnp.quantile(w.astype(jnp.float32), qs, axis=1).T  # (m, levels)
+    # guarantee strictly increasing entries so argmin assignment is sane
+    eps = 1e-8 * (1.0 + jnp.max(jnp.abs(w), axis=1, keepdims=True))
+    t = t + eps * jnp.arange(levels, dtype=jnp.float32)[None, :]
+    return t.astype(w.dtype)
+
+
+def assign_nearest(w: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """codes[i, j] = argmin_s |w[i, j] - t[i, s]|; (m, n) int32.
+
+    Memory-lean form: one (m, n, levels) broadcast per call — callers with
+    huge n should chunk columns (pipeline does).
+    """
+    d = jnp.abs(w[:, :, None] - t[:, None, :])
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("bits", "iters"))
+def init_kmeans(w: jnp.ndarray, bits: int, iters: int = 10) -> jnp.ndarray:
+    """Per-row 1-D k-means, Lloyd iterations, quantile-seeded; (m, 2**bits).
+
+    Update step avoids the (m, n, levels) one-hot by looping over the (small)
+    number of levels: per level, a masked mean over n.
+    """
+    levels = 1 << bits
+    w = w.astype(jnp.float32)
+    t0 = init_quantile(w, bits)
+
+    def step(t, _):
+        codes = assign_nearest(w, t)  # (m, n)
+        new_cols = []
+        for s in range(levels):
+            mask = (codes == s).astype(jnp.float32)
+            cnt = jnp.sum(mask, axis=1)
+            tot = jnp.sum(w * mask, axis=1)
+            mean = tot / jnp.maximum(cnt, 1.0)
+            new_cols.append(jnp.where(cnt > 0, mean, t[:, s]))
+        return jnp.stack(new_cols, axis=1), None
+
+    t, _ = jax.lax.scan(step, t0, None, length=iters)
+    return t
+
+
+@partial(jax.jit, static_argnames=("bits", "iters"))
+def weighted_kmeans(w: jnp.ndarray, weights: jnp.ndarray, bits: int,
+                    iters: int = 10) -> jnp.ndarray:
+    """Sensitivity-weighted per-row 1-D k-means (SqueezeLLM, Kim et al. '24).
+
+    weights (n,) — per-input-feature sensitivity; SqueezeLLM uses the
+    diagonal Fisher, approximated here by diag(H) = sum_t x_t^2 (the same
+    second-moment signal). Centroid update is the weighted mean.
+    """
+    levels = 1 << bits
+    w = w.astype(jnp.float32)
+    wt = jnp.maximum(weights.astype(jnp.float32), 1e-12)[None, :]
+    t0 = init_quantile(w, bits)
+
+    def step(t, _):
+        codes = assign_nearest(w, t)
+        cols = []
+        for s in range(levels):
+            mask = (codes == s).astype(jnp.float32) * wt
+            tot = jnp.sum(w * mask, axis=1)
+            cnt = jnp.sum(mask, axis=1)
+            cols.append(jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1e-12),
+                                  t[:, s]))
+        return jnp.stack(cols, axis=1), None
+
+    t, _ = jax.lax.scan(step, t0, None, length=iters)
+    return t
+
+
+def init_codebook(w: jnp.ndarray, bits: int, method: str = "quantile",
+                  kmeans_iters: int = 10) -> jnp.ndarray:
+    if method == "quantile":
+        return init_quantile(w, bits)
+    if method == "kmeans":
+        return init_kmeans(w, bits, kmeans_iters)
+    if method == "uniform":
+        return init_uniform(w, bits)
+    raise ValueError(f"unknown codebook init: {method!r}")

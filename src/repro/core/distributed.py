@@ -1,0 +1,70 @@
+"""Distributed GANQ quantization (shard_map).
+
+The paper's central scalability claim is that the MIQP decomposes across the
+m output rows (eq. 2) — on a pod this means the quantization itself shards:
+
+  * rows of W over the 'model' axis (embarrassingly parallel S/T steps —
+    zero collectives in the solver);
+  * calibration tokens over the 'data' axis for H accumulation
+    (one psum of an (n, n) Gram matrix per linear).
+
+`quantize_layer_sharded` quantizes a 7B-scale layer across a full pod with
+per-device row blocks; this is also how expert FFNs are quantized under EP
+(each expert's rows live with its shard).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from .ganq import _ganq_core
+from .types import QuantConfig
+
+
+def compute_h_sharded(mesh: Mesh, x_local_spec: P = P("data", None)):
+    """Returns a jitted fn: activations (tokens, n) sharded over 'data'
+    -> replicated H (n, n) via psum."""
+
+    @partial(shard_map, mesh=mesh, in_specs=(x_local_spec,),
+             out_specs=P(), check_vma=False)
+    def _h(x):
+        x = x.astype(jnp.float32)
+        h_local = x.T @ x
+        return jax.lax.psum(h_local, axis_name="data")
+
+    return jax.jit(_h)
+
+
+def quantize_layer_sharded(mesh: Mesh, w: jnp.ndarray, h: jnp.ndarray,
+                           cfg: QuantConfig, row_axis: str = "model"):
+    """GANQ on W (m, n) with rows sharded over `row_axis`; H replicated.
+
+    Returns (codes (m, n) uint8, codebook (m, 2^bits) f32, err_history) with
+    the same sharding as W's rows. No inter-device communication inside the
+    solver — the paper's row-decomposability realized at pod scale.
+    """
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(row_axis, None), P()),
+             out_specs=(P(row_axis, None), P(row_axis, None), P(row_axis)),
+             check_vma=False)
+    def _q(w_blk, h_full):
+        codes, t, errs = _ganq_core(
+            w_blk, h_full, bits=cfg.bits, iters=cfg.iters,
+            codebook_init=cfg.codebook_init, precond_mode=cfg.precondition,
+            damp=cfg.damp, kmeans_iters=cfg.kmeans_iters)
+        # keep the per-shard error trace; callers psum if they want a total
+        return codes, t, errs[None if errs.ndim == 0 else slice(None)]
+
+    return jax.jit(_q)(w, h)
+
+
+def shard_layer_weights(mesh: Mesh, w: jnp.ndarray,
+                        row_axis: str = "model") -> jax.Array:
+    """Place W with rows sharded for quantization."""
+    return jax.device_put(w, NamedSharding(mesh, P(row_axis, None)))

@@ -1,0 +1,188 @@
+"""GANQ Algorithm 1: GPU-adaptive layer-wise LUT-based non-uniform quantization.
+
+Implements the paper's alternating-direction solver of
+
+    min_{Q, T}  || W X - W~ X ||_F^2,   W~[i, j] = T[i, Q[i, j]]        (eq. 1)
+
+with:
+  * S-step (eq. 14-22): back-substitution over columns j = n-1 .. 0 against
+    the Cholesky factor L of H = X X^T, rows processed in parallel (a scan
+    over columns carrying the committed-error matrix E; the residual feedback
+    r = E @ L[:, j] is a matrix-vector product — MXU-friendly on TPU).
+  * T-step (eq. 7): batched closed-form least squares with a tiny
+    2^N x 2^N pseudo-inverse per row.
+
+The per-column argmin over the 2^N codebook entries and the triangular
+residual feedback are exactly Algorithm 1 in the paper; `kernels/backsub.py`
+provides the blocked Pallas TPU version of the S-step (VPU column loop +
+MXU cross-block propagation) and this module is its numerical oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .codebook import assign_nearest, init_codebook
+from .outliers import extract_outliers_topk, select_full_rows
+from .precondition import precondition
+from .types import QuantConfig, QuantResult, QuantizedLinear
+
+
+def compute_h(x: jnp.ndarray) -> jnp.ndarray:
+    """H = X X^T for X (n, p) activations (columns = calibration tokens)."""
+    x = x.astype(jnp.float32)
+    return x @ x.T
+
+
+def h_from_tokens(acts: jnp.ndarray) -> jnp.ndarray:
+    """H from (tokens..., n) activation batches (row-major token layout)."""
+    a = acts.reshape(-1, acts.shape[-1]).astype(jnp.float32)
+    return a.T @ a
+
+
+def layer_objective(w: jnp.ndarray, wq: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """||W X - W~ X||_F^2 = tr(E H E^T), E = W - W~  (eq. 9)."""
+    e = (w - wq).astype(jnp.float32)
+    return jnp.sum((e @ h.astype(jnp.float32)) * e)
+
+
+def s_step(w: jnp.ndarray, t: jnp.ndarray, l: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Back-substitution code assignment (paper eq. 16-22, Algorithm 1 inner loop).
+
+    Args:
+      w: (m, n) weights (fp32).
+      t: (m, 2^N) current codebook.
+      l: (n, n) lower-triangular Cholesky factor of preconditioned H.
+
+    Returns:
+      codes (m, n) int32, wq (m, n) quantized weights.
+
+    Complexity O(m n^2) — identical order to GPTQ. The scan carries the
+    committed-error matrix E whose column j is only populated once column j
+    has been quantized, so `E @ L[:, j]` realizes r = sum_{u>j} e_u L[u, j].
+    """
+    m, n = w.shape
+    w = w.astype(jnp.float32)
+    t = t.astype(jnp.float32)
+    l = l.astype(jnp.float32)
+    diag = jnp.diag(l)
+
+    def body(e, j):
+        r = e @ l[:, j]                                   # (m,) residual feedback
+        target = w[:, j] + r / diag[j]
+        idx = jnp.argmin(jnp.abs(target[:, None] - t), axis=1)
+        wq_j = jnp.take_along_axis(t, idx[:, None], axis=1)[:, 0]
+        e = e.at[:, j].set(w[:, j] - wq_j)
+        return e, idx.astype(jnp.int32)
+
+    cols = jnp.arange(n - 1, -1, -1)
+    e, codes_rev = jax.lax.scan(body, jnp.zeros((m, n), jnp.float32), cols)
+    codes = jnp.flip(codes_rev, axis=0).T                  # (m, n), natural order
+    wq = w - e
+    return codes, wq
+
+
+def t_step(w: jnp.ndarray, h: jnp.ndarray, codes: jnp.ndarray, t_old: jnp.ndarray,
+           wh: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Closed-form codebook update (paper eq. 7), batched over rows.
+
+    T_i = W_i H S_i^T (S_i H S_i^T)^+ ; codebook entries with no assigned
+    weight keep their previous value (the pinv would park them at 0).
+    """
+    levels = t_old.shape[1]
+    w = w.astype(jnp.float32)
+    h = h.astype(jnp.float32)
+    onehot = jax.nn.one_hot(codes, levels, dtype=jnp.float32)   # (m, n, L) == S_i^T
+    if wh is None:
+        wh = w @ h
+    c = jnp.einsum("mn,mnl->ml", wh, onehot)                    # W_i H S_i^T
+    sh = jnp.einsum("mnk,nv->mkv", onehot, h)                   # S_i H
+    g = jnp.einsum("mkv,mvl->mkl", sh, onehot)                  # S_i H S_i^T
+    g_pinv = jnp.linalg.pinv(g)                                 # (m, L, L)
+    t_ls = jnp.einsum("mk,mkl->ml", c, g_pinv)
+    counts = jnp.sum(onehot, axis=1)                            # (m, L)
+    return jnp.where(counts > 0, t_ls, t_old.astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("bits", "iters", "codebook_init",
+                                   "precond_mode", "kmeans_iters"))
+def _ganq_core(w: jnp.ndarray, h: jnp.ndarray, *, bits: int, iters: int,
+               codebook_init: str, precond_mode: str, damp: float,
+               kmeans_iters: int):
+    """Jitted alternating loop on the dense (post-outlier-split) weights."""
+    w = w.astype(jnp.float32)
+    hp = precondition(h, precond_mode, damp)
+    l = jnp.linalg.cholesky(hp)
+    t = init_codebook(w, bits, codebook_init, kmeans_iters).astype(jnp.float32)
+    wh = w @ hp
+
+    codes0 = assign_nearest(w, t)
+    wq0 = jnp.take_along_axis(t, codes0, axis=1)
+    err0 = layer_objective(w, wq0, hp)
+
+    def step(carry, _):
+        t, _codes = carry
+        codes, wq = s_step(w, t, l)
+        t = t_step(w, hp, codes, t, wh)
+        wq_t = jnp.take_along_axis(t, codes, axis=1)
+        err = layer_objective(w, wq_t, hp)
+        return (t, codes), err
+
+    (t, codes), errs = jax.lax.scan(step, (t, codes0), None, length=iters)
+    err_history = jnp.concatenate([err0[None], errs])
+    return codes.astype(jnp.uint8), t, err_history
+
+
+def ganq_quantize(w: jnp.ndarray, h: Optional[jnp.ndarray] = None,
+                  x: Optional[jnp.ndarray] = None,
+                  cfg: QuantConfig = QuantConfig(),
+                  bias: Optional[jnp.ndarray] = None) -> QuantResult:
+    """Quantize one linear layer W (m, n) with GANQ (Algorithm 1 + Alg. 2 split).
+
+    Exactly one of `h` (= X X^T, (n, n)) or `x` ((n, p) calibration
+    activations) must be given. Returns a `QuantResult` whose `layer` is a
+    serving-ready `QuantizedLinear` (codes + per-row LUT + optional sparse
+    outliers / full-precision rows).
+    """
+    if (h is None) == (x is None):
+        raise ValueError("provide exactly one of h= or x=")
+    if h is None:
+        h = compute_h(x)
+    w = jnp.asarray(w, jnp.float32)
+    m, n = w.shape
+
+    full_row_idx = full_row_val = None
+    w_work = w
+    if cfg.full_rows > 0:
+        full_row_idx, full_row_val = select_full_rows(w, h, cfg.full_rows)
+        # zero sensitive rows out of the quantization problem
+        w_work = w_work.at[full_row_idx].set(0.0)
+
+    sparse_idx = sparse_val = None
+    if cfg.outlier_ratio > 0.0:
+        w_work, sparse_idx, sparse_val = extract_outliers_topk(w_work, cfg.outlier_ratio)
+
+    perm = None
+    h_used = h
+    if cfg.act_order:
+        perm = jnp.argsort(-jnp.diag(h))
+        w_work = w_work[:, perm]
+        h_used = h[perm][:, perm]
+
+    codes, t, err_history = _ganq_core(
+        w_work, h_used, bits=cfg.bits, iters=cfg.iters,
+        codebook_init=cfg.codebook_init, precond_mode=cfg.precondition,
+        damp=cfg.damp, kmeans_iters=cfg.kmeans_iters)
+
+    if perm is not None:
+        inv = jnp.argsort(perm)
+        codes = codes[:, inv]
+
+    layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits,
+                            sparse_idx=sparse_idx, sparse_val=sparse_val,
+                            full_row_idx=full_row_idx, full_row_val=full_row_val,
+                            bias=bias)
+    return QuantResult(layer=layer, err_history=err_history)

@@ -1,0 +1,71 @@
+"""Outlier extraction (paper Algorithm 2 + full-row retention, GANQ*).
+
+Two forms:
+
+  * `extract_outliers_percentile` — the literal Algorithm 2: per-row symmetric
+    percentile cutoffs produce a boolean mask (data-dependent count). Used in
+    tests to pin the semantics.
+  * `extract_outliers_topk` — static-shape equivalent used in the JAX
+    pipeline: exactly k = round(n*r) entries per row (k/2 largest, k/2
+    smallest by value), which coincides with the percentile mask in the
+    absence of ties. Returns structured (m, k) indices/values, which the
+    serving path applies as a per-row k-sparse matvec (TPU-friendly: a
+    static gather + small einsum instead of CSR).
+
+`select_full_rows` retains the most sensitive rows in fp16 (SqueezeLLM's
+"full rows" knob used for the paper's Table 5 comparison); sensitivity of
+row i is the output-error weight w_i^T H w_i.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def extract_outliers_percentile(w: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    """Boolean outlier mask per Algorithm 2 (reference semantics)."""
+    m, n = w.shape
+    p = 1.0 - 0.5 * ratio
+    w_sorted = jnp.sort(w, axis=1)
+    upper = min(int(jnp.floor(n * p)), n - 1)
+    lower = int(jnp.ceil(n * (1.0 - p)))
+    c_upper = w_sorted[:, upper][:, None]
+    c_lower = w_sorted[:, lower][:, None]
+    return (w >= c_upper) | (w <= c_lower)
+
+
+def extract_outliers_topk(w: jnp.ndarray, ratio: float
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Static-shape Algorithm 2: returns (w_dense, idx (m,k), val (m,k)).
+
+    w_dense has the outlier slots zeroed (W_dense = W - W_sparse), shrinking
+    the per-row range the codebook must cover.
+    """
+    m, n = w.shape
+    k = max(2, int(round(n * ratio)))
+    k_hi = k // 2
+    k_lo = k - k_hi
+    order = jnp.argsort(w, axis=1)
+    idx = jnp.concatenate([order[:, :k_lo], order[:, n - k_hi:]], axis=1)  # (m, k)
+    rows = jnp.broadcast_to(jnp.arange(m)[:, None], idx.shape)
+    val = w[rows, idx]
+    w_dense = w.at[rows, idx].set(0.0)
+    return w_dense, idx.astype(jnp.int32), val
+
+
+def apply_sparse(idx: jnp.ndarray, val: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y_i = sum_k val[i,k] * x[idx[i,k], ...] — the W_sparse @ X branch.
+
+    x: (n, p) activations; returns (m, p).
+    """
+    gathered = x[idx]                       # (m, k, p)
+    return jnp.einsum("mk,mkp->mp", val.astype(x.dtype), gathered)
+
+
+def select_full_rows(w: jnp.ndarray, h: jnp.ndarray, num_rows: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top rows by sensitivity w_i^T H w_i, kept in full precision."""
+    sens = jnp.einsum("mn,nv,mv->m", w, h.astype(w.dtype), w)
+    idx = jnp.argsort(-sens)[:num_rows]
+    return idx.astype(jnp.int32), w[idx]

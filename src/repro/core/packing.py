@@ -1,0 +1,74 @@
+"""Code packing: in-graph nibble container + true bitstream storage.
+
+In-graph (serving) container: 4-bit nibbles, two codes per uint8 — the
+layout the Pallas LUT-mpGEMM kernel consumes. 3-bit codes also ride the
+nibble container in-graph (TPU alignment; 1 wasted bit), while checkpoints
+store the true 3/8-bytes-per-weight bitstream via numpy packbits.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------- nibble (jnp)
+
+def pack_nibbles(codes: jnp.ndarray) -> jnp.ndarray:
+    """(m, n) uint8 codes < 16 -> (m, ceil(n/2)) uint8. Pads odd n with 0."""
+    m, n = codes.shape
+    if n % 2:
+        codes = jnp.pad(codes, ((0, 0), (0, 1)))
+    lo = codes[:, 0::2]
+    hi = codes[:, 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """(m, ceil(n/2)) uint8 -> (m, n) uint8 codes."""
+    lo = packed & 0xF
+    hi = packed >> 4
+    out = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    return out[:, :n].astype(jnp.uint8)
+
+
+# ------------------------------------------------------------ bitstream (np)
+
+def pack_bits_np(codes: np.ndarray, bits: int) -> np.ndarray:
+    """(m, n) uint8 -> (m, ceil(n*bits/8)) uint8 true bitstream (storage)."""
+    m, n = codes.shape
+    shifts = np.arange(bits, dtype=np.uint8)
+    bitmat = ((codes[..., None] >> shifts) & 1).astype(np.uint8)  # (m, n, bits)
+    return np.packbits(bitmat.reshape(m, n * bits), axis=1, bitorder="little")
+
+
+def unpack_bits_np(packed: np.ndarray, bits: int, n: int) -> np.ndarray:
+    """Inverse of pack_bits_np."""
+    m = packed.shape[0]
+    bitmat = np.unpackbits(packed, axis=1, count=n * bits, bitorder="little")
+    bitmat = bitmat.reshape(m, n, bits)
+    shifts = np.arange(bits, dtype=np.uint8)
+    return np.sum(bitmat.astype(np.uint8) << shifts, axis=-1).astype(np.uint8)
+
+
+def storage_bytes(m: int, n: int, bits: int, levels: int = None,
+                  sparse_k: int = 0, full_rows: int = 0) -> dict:
+    """Theoretical storage accounting (paper Table 1).
+
+    fp16 codebook (m * 2^bits entries), true-packed codes, optional
+    structured sparse (fp16 value + int32 index) and full fp16 rows.
+    """
+    levels = levels if levels is not None else (1 << bits)
+    codes = m * n * bits / 8
+    lut = m * levels * 2
+    sparse = m * sparse_k * (2 + 4)
+    full = full_rows * n * 2
+    fp16 = m * n * 2
+    uniform = m * n * bits / 8 + 4 * m  # per-channel scale+zero fp16
+    total = codes + lut + sparse + full
+    return {
+        "fp16_bytes": fp16,
+        "uniform_bytes": uniform,
+        "lut_bytes": total,
+        "lut_pct_of_fp16": 100.0 * total / fp16,
+        "uniform_pct_of_fp16": 100.0 * uniform / fp16,
+    }

@@ -1,0 +1,144 @@
+"""Sequential layer-wise PTQ driver (paper §3 protocol).
+
+The paper quantizes decoder layers sequentially: each layer's H = X X^T is
+accumulated from calibration activations produced by the *already-quantized*
+prefix, then its linears are quantized and the (quantized) outputs propagate
+forward. This module provides the model-agnostic machinery:
+
+  * `HCollector` — streaming accumulation of per-linear H (and token counts),
+    fed by model forward passes run in "capture mode" (models/*.py blocks
+    call `collector.add(name, x)` on the 2-D inputs of every linear).
+  * `quantize_linear` — dispatch to ganq / ganq* / gptq / rtn on (W, H).
+  * `SequentialPTQ` — the per-block loop: capture -> quantize -> propagate.
+
+The model-facing half (walking a concrete parameter tree) lives in
+models/quantized.py; this file holds the reusable numerics so it is testable
+without any model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .ganq import compute_h, ganq_quantize, h_from_tokens, layer_objective
+from .gptq import gptq_quantize
+from .rtn import rtn_codebook, rtn_quantize
+from .types import QuantConfig, QuantResult, QuantizedLinear
+
+
+class HCollector:
+    """Accumulates H = sum_t x_t x_t^T per named linear, streaming over batches."""
+
+    def __init__(self):
+        self.h: Dict[str, jnp.ndarray] = {}
+        self.count: Dict[str, int] = {}
+
+    def add(self, name: str, x: jnp.ndarray) -> None:
+        """x: (..., n) activations entering linear `name`."""
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        h = x2.T @ x2
+        if name in self.h:
+            self.h[name] = self.h[name] + h
+            self.count[name] += x2.shape[0]
+        else:
+            self.h[name] = h
+            self.count[name] = x2.shape[0]
+
+    def get(self, name: str) -> jnp.ndarray:
+        return self.h[name]
+
+    def names(self):
+        return list(self.h.keys())
+
+
+def quantize_linear(w: jnp.ndarray, h: jnp.ndarray, cfg: QuantConfig,
+                    method: str = "ganq",
+                    bias: Optional[jnp.ndarray] = None) -> QuantResult:
+    """Quantize one (m, n) weight with the chosen method, LUT-serving-ready.
+
+    All methods emit a `QuantizedLinear` so every baseline runs on the same
+    LUT-mpGEMM deployment path (the paper's apples-to-apples setting).
+    """
+    if method == "ganq":
+        return ganq_quantize(w, h=h, cfg=cfg, bias=bias)
+    if method == "gptq":
+        codes, wq = gptq_quantize(w, h, cfg.bits, damp=max(cfg.damp, 0.01))
+        # express the affine grid as a per-row LUT so serving is uniform
+        t = rtn_codebook(w, cfg.bits)
+        layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits, bias=bias)
+        err = layer_objective(jnp.asarray(w, jnp.float32), wq, h)
+        return QuantResult(layer=layer, err_history=err[None])
+    if method == "rtn":
+        codes, _, _ = rtn_quantize(w, cfg.bits)
+        t = rtn_codebook(w, cfg.bits)
+        layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits, bias=bias)
+        wq = layer.dequantize()
+        err = layer_objective(jnp.asarray(w, jnp.float32), wq, h)
+        return QuantResult(layer=layer, err_history=err[None])
+    if method == "squeezellm":
+        # sensitivity-weighted k-means codebook + nearest assignment
+        # (SqueezeLLM, the paper's Table-5 LUT baseline; diagonal-H proxy
+        # for the Fisher sensitivity, no cross-column error feedback)
+        from .codebook import assign_nearest, weighted_kmeans
+        wf = jnp.asarray(w, jnp.float32)
+        t = weighted_kmeans(wf, jnp.diag(h), cfg.bits, cfg.kmeans_iters)
+        codes = assign_nearest(wf, t).astype(jnp.uint8)
+        layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits,
+                                bias=bias)
+        err = layer_objective(wf, layer.dequantize(), h)
+        return QuantResult(layer=layer, err_history=err[None])
+    if method == "awq":
+        # AWQ-style (Lin et al. '24): activation-aware per-input-channel
+        # scaling folded around a group-128 RTN grid; layer-level baseline
+        # (the runtime scale-folding into the previous op is assumed, as in
+        # the reference implementation)
+        wf = jnp.asarray(w, jnp.float32)
+        act_scale = jnp.sqrt(jnp.maximum(jnp.diag(h), 1e-12))
+        s = jnp.power(act_scale / jnp.mean(act_scale), 0.5)
+        n = wf.shape[1]
+        gs = 128 if n % 128 == 0 else None
+        from .rtn import rtn_reconstruct
+        wq = rtn_reconstruct(wf * s[None, :], cfg.bits, group_size=gs) \
+            / s[None, :]
+        # store via per-row LUT of the scaled grid for uniform serving
+        codes, _, _ = rtn_quantize(wf * s[None, :], cfg.bits)
+        t = rtn_codebook(wf * s[None, :], cfg.bits)
+        layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits,
+                                bias=bias)
+        err = layer_objective(wf, wq, h)
+        return QuantResult(layer=layer, err_history=err[None])
+    raise ValueError(f"unknown method {method!r}")
+
+
+@dataclasses.dataclass
+class SequentialPTQ:
+    """Block-by-block PTQ: capture H under the quantized prefix, quantize,
+    propagate quantized activations.
+
+    Args:
+      block_forward: fn(block_params, acts, collector|None) -> acts. When a
+        collector is passed the block must record every linear input.
+      quantize_block: fn(block_params, {name: H}, cfg) -> quantized params.
+      cfg: quantizer config.
+      method: 'ganq' | 'gptq' | 'rtn'.
+    """
+
+    block_forward: Callable
+    quantize_block: Callable
+    cfg: QuantConfig
+    method: str = "ganq"
+
+    def run(self, blocks_params: list, acts: jnp.ndarray):
+        """blocks_params: list of per-block param trees; acts: embedded calib
+        activations (batch, seq, d). Returns (quantized blocks, final acts)."""
+        out_blocks = []
+        for bp in blocks_params:
+            col = HCollector()
+            self.block_forward(bp, acts, col)              # capture pass
+            qbp = self.quantize_block(bp, col, self.cfg, self.method)
+            acts = self.block_forward(qbp, acts, None)     # propagate quantized
+            out_blocks.append(qbp)
+        return out_blocks, acts

@@ -1,0 +1,52 @@
+"""Positive-definiteness preconditioning of H = X X^T (paper Appendix A).
+
+GANQ's S-step needs a Cholesky factor of H. H is PSD by construction but can
+be singular (e.g. dead input features, p < n calibration). Two strategies:
+
+  * 'fixed'    — Remark 3.1: H + lambda * mean(diag(H)) * I.
+  * 'adaptive' — Appendix A (eq. 23-24): add a per-row offset enforcing
+                 diagonal dominance:  delta_i = max(sum_j |H_ij| - 2*H_ii, eps).
+
+Both return an SPD matrix; Table 7 of the paper (reproduced in
+benchmarks.run::bench_precondition) shows the method is insensitive to the
+choice, with 'adaptive' slightly best.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+_EPS = 1e-8
+
+
+def precondition_fixed(h: jnp.ndarray, damp: float = 0.01) -> jnp.ndarray:
+    """H + lambda*I with lambda relative to mean(diag(H)) (GPTQ-style damping)."""
+    n = h.shape[0]
+    lam = damp * jnp.mean(jnp.diag(h)) + _EPS
+    return h + lam * jnp.eye(n, dtype=h.dtype)
+
+
+def precondition_adaptive(h: jnp.ndarray) -> jnp.ndarray:
+    """Appendix A: enforce diagonal dominance with a per-row adaptive offset.
+
+    delta_i = max(sum_j |H_ij| - 2*H_ii, 1e-8);  H <- H + Diag(delta).
+    A symmetric diagonally dominant matrix with positive diagonal is SPD.
+    """
+    abs_row = jnp.sum(jnp.abs(h), axis=1)
+    delta = jnp.maximum(abs_row - 2.0 * jnp.diag(h), _EPS)
+    return h + jnp.diag(delta)
+
+
+def precondition(h: jnp.ndarray, mode: str = "adaptive", damp: float = 0.01) -> jnp.ndarray:
+    h = h.astype(jnp.float32)
+    h = 0.5 * (h + h.T)  # symmetrize against accumulation noise
+    if mode == "adaptive":
+        return precondition_adaptive(h)
+    if mode == "fixed":
+        return precondition_fixed(h, damp)
+    raise ValueError(f"unknown precondition mode: {mode!r}")
+
+
+def safe_cholesky(h: jnp.ndarray, mode: str = "adaptive", damp: float = 0.01) -> jnp.ndarray:
+    """Precondition then factor; returns lower-triangular L with H' = L L^T."""
+    return jnp.linalg.cholesky(precondition(h, mode, damp))

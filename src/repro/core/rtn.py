@@ -1,0 +1,69 @@
+"""Round-to-nearest (RTN) uniform quantization baseline (paper Tables 2/5).
+
+Asymmetric per-channel (per output row) affine quantization
+    q = clamp(round(w/s) + z, 0, 2^N - 1),   w~ = s * (q - z)
+optionally group-wise along the input dim (g128 rows in Table 5).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def _affine_params(w: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scale/zero over the last axis. Returns s, z with keepdims."""
+    qmax = (1 << bits) - 1
+    lo = jnp.minimum(jnp.min(w, axis=-1, keepdims=True), 0.0)
+    hi = jnp.maximum(jnp.max(w, axis=-1, keepdims=True), 0.0)
+    s = jnp.maximum((hi - lo) / qmax, 1e-10)
+    z = jnp.round(-lo / s)
+    return s, z
+
+
+def rtn_quantize(w: jnp.ndarray, bits: int,
+                 group_size: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Quantize (m, n) -> (codes uint8, scale, zero).
+
+    With group_size, scale/zero have shape (m, n/group_size, 1) and codes are
+    reshaped back to (m, n).
+    """
+    m, n = w.shape
+    wf = w.astype(jnp.float32)
+    if group_size is not None and group_size < n:
+        assert n % group_size == 0, (n, group_size)
+        wg = wf.reshape(m, n // group_size, group_size)
+        s, z = _affine_params(wg, bits)
+        q = jnp.clip(jnp.round(wg / s) + z, 0, (1 << bits) - 1)
+        return q.reshape(m, n).astype(jnp.uint8), s, z
+    s, z = _affine_params(wf, bits)
+    q = jnp.clip(jnp.round(wf / s) + z, 0, (1 << bits) - 1)
+    return q.astype(jnp.uint8), s, z
+
+
+def rtn_dequantize(codes: jnp.ndarray, s: jnp.ndarray, z: jnp.ndarray,
+                   group_size: Optional[int] = None) -> jnp.ndarray:
+    m, n = codes.shape
+    q = codes.astype(jnp.float32)
+    if group_size is not None and s.ndim == 3:
+        q = q.reshape(m, -1, group_size)
+        return (s * (q - z)).reshape(m, n)
+    return s * (q - z)
+
+
+def rtn_reconstruct(w: jnp.ndarray, bits: int,
+                    group_size: Optional[int] = None) -> jnp.ndarray:
+    """One-call W -> W~ for baselines."""
+    codes, s, z = rtn_quantize(w, bits, group_size)
+    return rtn_dequantize(codes, s, z, group_size).astype(w.dtype)
+
+
+def rtn_codebook(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """The RTN grid expressed as a per-row LUT codebook (m, 2**bits).
+
+    Lets RTN run on the same LUT-mpGEMM serving path for apples-to-apples
+    deployment comparisons.
+    """
+    s, z = _affine_params(w.astype(jnp.float32), bits)
+    levels = jnp.arange(1 << bits, dtype=jnp.float32)[None, :]
+    return s * (levels - z)

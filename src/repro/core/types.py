@@ -1,0 +1,138 @@
+"""Core containers for GANQ quantization.
+
+Everything is a plain pytree (dataclass of arrays) so it composes with
+jit/shard_map/checkpointing without a framework dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Configuration of the GANQ quantizer (Algorithm 1 + Appendix A/B).
+
+    Attributes:
+      bits: target bit-width N (codebook size 2**N). Paper uses 3 and 4.
+      iters: K, number of alternating (S-step, T-step) iterations.
+      codebook_init: initial T^0: 'quantile' (per-row quantiles — default),
+        'kmeans' (per-row 1-D k-means), or 'uniform' (per-row min/max grid,
+        i.e. the RTN grid — useful for ablation).
+      precondition: 'adaptive' (Appendix A diagonal dominance, eq. 23-24)
+        or 'fixed' (Remark 3.1, H + lambda*I).
+      damp: relative lambda for 'fixed' preconditioning (scaled by mean diag).
+      outlier_ratio: r in Algorithm 2 (0 disables GANQ* outlier split).
+      full_rows: number of highest-sensitivity rows kept in full precision
+        (SqueezeLLM-compatible setting used for the Table-5 comparison).
+      kmeans_iters: Lloyd iterations for 'kmeans' init.
+      act_order: process columns in descending diag(H) order (GPTQ-style
+        permutation; beyond-paper option, default off = paper-faithful).
+    """
+
+    bits: int = 4
+    iters: int = 10
+    codebook_init: str = "quantile"
+    precondition: str = "adaptive"
+    damp: float = 0.01
+    outlier_ratio: float = 0.0
+    full_rows: int = 0
+    kmeans_iters: int = 10
+    act_order: bool = False
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.bits
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedLinear:
+    """LUT-quantized linear layer: W~[i, j] = codebook[i, codes[i, j]].
+
+    Layout convention: rows are *output* channels (m = d_out), columns are
+    input features (n = d_in), matching the paper's W (m x n) acting as W @ x.
+
+    Fields:
+      codes: (m, n) uint8 codebook indices, values < 2**bits. (The in-graph
+        container; HBM/packed form lives in core.packing / kernels.)
+      codebook: (m, 2**bits) fp values (the per-row LUT T).
+      bits: static bit width.
+      sparse_idx/sparse_val: optional structured outliers (m, k) — Algorithm 2
+        residual kept in fp; applied as a per-row k-sparse matvec.
+      full_row_idx/full_row_val: optional rows kept entirely in fp.
+      bias: optional (m,).
+    """
+
+    codes: jax.Array
+    codebook: jax.Array
+    bits: int
+    packed: bool = False          # nibble-packed codes (m, ceil(n/2))
+    n_cols: int = 0               # original n when packed
+    sparse_idx: Optional[jax.Array] = None
+    sparse_val: Optional[jax.Array] = None
+    full_row_idx: Optional[jax.Array] = None
+    full_row_val: Optional[jax.Array] = None
+    bias: Optional[jax.Array] = None
+
+    def tree_flatten(self):
+        children = (self.codes, self.codebook, self.sparse_idx, self.sparse_val,
+                    self.full_row_idx, self.full_row_val, self.bias)
+        return children, (self.bits, self.packed, self.n_cols)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bits, packed, n_cols = aux
+        codes, codebook, sidx, sval, fidx, fval, bias = children
+        return cls(codes=codes, codebook=codebook, bits=bits, packed=packed,
+                   n_cols=n_cols, sparse_idx=sidx,
+                   sparse_val=sval, full_row_idx=fidx, full_row_val=fval, bias=bias)
+
+    @property
+    def shape(self):
+        n = self.n_cols if self.packed else self.codes.shape[1]
+        return (self.codes.shape[0], n)
+
+    def unpacked_codes(self) -> jax.Array:
+        if not self.packed:
+            return self.codes
+        from .packing import unpack_nibbles
+        return unpack_nibbles(self.codes, self.n_cols)
+
+    def dequantize(self) -> jax.Array:
+        """Materialize W~ (m, n) — reference/debug path."""
+        w = jnp.take_along_axis(self.codebook,
+                                self.unpacked_codes().astype(jnp.int32), axis=1)
+        if self.sparse_val is not None:
+            w = put_rows_sparse(w, self.sparse_idx, self.sparse_val)
+        if self.full_row_val is not None:
+            w = w.at[self.full_row_idx].set(self.full_row_val.astype(w.dtype))
+        return w
+
+    def storage_bits_per_weight(self) -> float:
+        m, n = self.shape
+        total = self.bits * m * n + 16 * m * (1 << self.bits)
+        if self.sparse_val is not None:
+            total += self.sparse_val.shape[1] * m * (16 + 32)
+        if self.full_row_val is not None:
+            total += self.full_row_val.size * 16
+        return total / (m * n)
+
+
+def put_rows_sparse(w: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
+    """Scatter per-row sparse values: w[i, idx[i, k]] += val[i, k]."""
+    m = w.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(m)[:, None], idx.shape)
+    return w.at[rows, idx].add(val.astype(w.dtype))
+
+
+@dataclasses.dataclass
+class QuantResult:
+    """Output of a layer quantization run."""
+
+    layer: QuantizedLinear
+    err_history: jax.Array  # (iters+1,) objective ||WX - W~X||_F^2 per iteration
+    err_rtn: float | jax.Array | None = None  # same objective for RTN baseline

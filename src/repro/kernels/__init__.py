@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for GANQ: LUT-mpGEMM serving + S-step quantization."""
+from .ops import lut_linear, s_step_blocked, vmem_plan
+from .lut_mpgemm import lut_matmul, lut_matmul_packed
+from .backsub import backsub

@@ -1,0 +1,129 @@
+"""GANQ S-step back-substitution Pallas TPU kernel (paper Alg. 1 inner loop).
+
+TPU adaptation of the paper's row-parallel GPU back-substitution:
+
+  * grid = (row_blocks, col_blocks); rows are embarrassingly parallel
+    (eq. 2's decomposition), column blocks iterate sequentially in REVERSE
+    (j = n-1 .. 0 order demanded by the triangular structure of L);
+  * within a column block, a VPU `fori_loop` performs the per-column
+    argmin-over-2^N assignment with exact within-block residual feedback;
+  * across column blocks, the committed error tile E_blk propagates into all
+    earlier columns with ONE MXU matmul per block —
+    `R[:, :col0] += E_blk @ L_rows` — converting the scalar feedback chain of
+    the GPU formulation into 128x128 systolic tiles. R lives in a VMEM
+    scratch accumulator that persists across the sequential grid dimension.
+
+Numerics: f32 throughout (quantization is an offline pass).
+Oracle: kernels/ref.py::backsub_ref == core.ganq.s_step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _backsub_kernel(w_ref, t_ref, l_ref, codes_ref, wq_ref, r_ref, *,
+                    bm: int, bn: int, n: int, nk: int, levels: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    cb = nk - 1 - k            # column block being processed (reverse order)
+    col0 = cb * bn             # first global column of this block
+
+    w = w_ref[...].astype(jnp.float32)            # (bm, bn)
+    t = t_ref[...].astype(jnp.float32)            # (bm, L)
+    lrows = l_ref[...].astype(jnp.float32)        # (bn, n) stripe of L
+    local_iota = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+
+    def body(i, e_blk):
+        jj = bn - 1 - i                            # local column, descending
+        gcol = col0 + jj                           # global column
+        # L[:, gcol] restricted to this block's rows — within-block feedback
+        lcol = pl.load(l_ref, (slice(None), pl.dslice(gcol, 1)))[:, 0]  # (bn,)
+        r_within = jnp.sum(e_blk * lcol[None, :].astype(jnp.float32), axis=1)
+        r_cross = pl.load(r_ref, (slice(None), pl.dslice(gcol, 1)))[:, 0]
+        ljj = pl.load(l_ref, (pl.dslice(jj, 1), pl.dslice(gcol, 1)))[0, 0]
+        wcol = pl.load(w_ref, (slice(None), pl.dslice(jj, 1)))[:, 0]
+        target = wcol.astype(jnp.float32) + (r_within + r_cross) / ljj
+        dist = jnp.abs(target[:, None] - t)        # (bm, L)
+        idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+        # decode chosen entry via compare-select (no per-lane gather on TPU)
+        wqcol = jnp.zeros((bm,), jnp.float32)
+        for s in range(levels):
+            wqcol += t[:, s] * (idx == s).astype(jnp.float32)
+        ecol = wcol.astype(jnp.float32) - wqcol
+        pl.store(codes_ref, (slice(None), pl.dslice(jj, 1)),
+                 idx[:, None].astype(codes_ref.dtype))
+        pl.store(wq_ref, (slice(None), pl.dslice(jj, 1)),
+                 wqcol[:, None].astype(wq_ref.dtype))
+        return jnp.where(local_iota == jj, ecol[:, None], e_blk)
+
+    e_blk = jax.lax.fori_loop(0, bn, body, jnp.zeros((bm, bn), jnp.float32))
+
+    # one MXU matmul propagates this block's errors into ALL earlier columns
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, n), 1)
+    lmask = jnp.where(col_iota < col0, lrows, 0.0)
+    r_ref[...] += jnp.dot(e_blk, lmask, preferred_element_type=jnp.float32)
+
+
+def _pad_l(l: jnp.ndarray, n_pad: int) -> jnp.ndarray:
+    """Extend L to (n_pad, n_pad): identity diagonal, zero coupling for pads."""
+    n = l.shape[0]
+    if n_pad == n:
+        return l
+    out = jnp.zeros((n_pad, n_pad), l.dtype)
+    out = out.at[:n, :n].set(l)
+    pad_idx = jnp.arange(n, n_pad)
+    return out.at[pad_idx, pad_idx].set(1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def backsub(w: jnp.ndarray, t: jnp.ndarray, l: jnp.ndarray, *,
+            block_m: int = 128, block_n: int = 128,
+            interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blocked GANQ S-step. w (m, n), t (m, L), l (n, n) lower-triangular.
+
+    Returns (codes (m, n) int32, wq (m, n) f32) — bit-exact vs the scan
+    oracle up to fp reassociation in the residual accumulation.
+    """
+    m, n = w.shape
+    levels = t.shape[1]
+    bm, bn = min(block_m, m), min(block_n, n)
+
+    mp = m + (-m) % bm
+    np_ = n + (-n) % bn
+    wp = jnp.zeros((mp, np_), jnp.float32).at[:m, :n].set(w.astype(jnp.float32))
+    tp = jnp.zeros((mp, levels), jnp.float32).at[:m].set(t.astype(jnp.float32))
+    lp = _pad_l(l.astype(jnp.float32), np_)
+    nm, nk = mp // bm, np_ // bn
+
+    kernel = functools.partial(_backsub_kernel, bm=bm, bn=bn, n=np_, nk=nk,
+                               levels=levels)
+    codes, wq = pl.pallas_call(
+        kernel,
+        grid=(nm, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, k: (i, nk - 1 - k)),   # W block
+            pl.BlockSpec((bm, levels), lambda i, k: (i, 0)),        # codebook
+            pl.BlockSpec((bn, np_), lambda i, k: (nk - 1 - k, 0)),  # L stripe
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, k: (i, nk - 1 - k)),
+            pl.BlockSpec((bm, bn), lambda i, k: (i, nk - 1 - k)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, np_), jnp.float32)],
+        interpret=interpret,
+    )(wp, tp, lp)
+    return codes[:m, :n], wq[:m, :n]

@@ -1,0 +1,168 @@
+"""LUT-based mixed-precision GEMM Pallas TPU kernel (paper Fig. 1a right).
+
+Computes Y = W~ @ X where W~[i, j] = T[i, Q[i, j]] without ever
+materializing W~ in HBM: packed 4-bit codes stream HBM->VMEM at
+0.5 bytes/weight and are decoded tile-by-tile inside the matmul.
+
+TPU adaptation of the GPU shared-memory LUT (SqueezeLLM kernels): TPUs have
+no efficient per-lane gather, so the per-row table lookup is re-expressed as
+a 2^N-way compare-select accumulation on the VPU — for each codebook slot s,
+`acc += T[:, s] * (codes == s)` — which vectorizes perfectly and feeds the
+decoded tile straight into the MXU. The codebook tile (block_m x 2^N fp32,
+e.g. 128x16 = 8 KiB) plays the role of the GPU shared-memory LUT and stays
+VMEM-resident for the whole K loop.
+
+Packed layout trick: rather than interleaving nibbles inside the kernel
+(an awkward lane shuffle on TPU), the wrapper pre-splits X by row parity and
+the kernel computes  Y = W_lo @ X_even + W_hi @ X_odd  — two clean MXU calls
+per tile, zero shuffles.
+
+Grid: (m_blocks, p_blocks, k_blocks), K innermost/sequential with an f32
+VMEM accumulator (flash-style).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_tile(codes: jnp.ndarray, t: jnp.ndarray, levels: int) -> jnp.ndarray:
+    """(bm, bk) uint8 codes + (bm, L) table -> (bm, bk) f32 via compare-select."""
+    acc = jnp.zeros(codes.shape, jnp.float32)
+    for s in range(levels):
+        acc += t[:, s][:, None] * (codes == s).astype(jnp.float32)
+    return acc
+
+
+def _lut_kernel_unpacked(codes_ref, t_ref, x_ref, o_ref, acc_ref, *,
+                         levels: int, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _decode_tile(codes_ref[...], t_ref[...].astype(jnp.float32), levels)
+    acc_ref[...] += jnp.dot(w, x_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _lut_kernel_packed(packed_ref, t_ref, xe_ref, xo_ref, o_ref, acc_ref, *,
+                       levels: int, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = packed_ref[...]
+    t = t_ref[...].astype(jnp.float32)
+    w_lo = _decode_tile(packed & 0xF, t, levels)
+    w_hi = _decode_tile(packed >> 4, t, levels)
+    acc_ref[...] += jnp.dot(w_lo, xe_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+    acc_ref[...] += jnp.dot(w_hi, xo_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(a, axis, mult, value=0):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "block_m", "block_k", "block_p", "interpret"))
+def lut_matmul(codes: jnp.ndarray, codebook: jnp.ndarray, x: jnp.ndarray, *,
+               bits: int = 4, block_m: int = 128, block_k: int = 512,
+               block_p: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """Y = decode(codes, codebook) @ x with unpacked uint8 codes.
+
+    codes: (m, n) uint8 < 2**bits; codebook: (m, 2**bits); x: (n, p).
+    Returns (m, p) in x.dtype.
+    """
+    m, n = codes.shape
+    p = x.shape[1]
+    levels = 1 << bits
+    bm, bk, bp = min(block_m, m), min(block_k, n), min(block_p, p)
+
+    cp = _pad_to(_pad_to(codes, 0, bm), 1, bk)
+    tp = _pad_to(codebook, 0, bm)
+    xp = _pad_to(_pad_to(x, 0, bk), 1, bp)
+    mp, np_ = cp.shape
+    pp = xp.shape[1]
+    nm, nk, npb = mp // bm, np_ // bk, pp // bp
+
+    out = pl.pallas_call(
+        functools.partial(_lut_kernel_unpacked, levels=levels, nk=nk),
+        grid=(nm, npb, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, levels), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bk, bp), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bp), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, pp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bp), jnp.float32)],
+        interpret=interpret,
+    )(cp, tp, xp)
+    return out[:m, :p]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "block_m", "block_k", "block_p", "interpret"))
+def lut_matmul_packed(packed: jnp.ndarray, codebook: jnp.ndarray,
+                      x: jnp.ndarray, *, bits: int = 4, block_m: int = 128,
+                      block_k: int = 512, block_p: int = 128,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Y = decode(packed nibbles) @ x; packed: (m, ceil(n/2)) uint8.
+
+    X is split by row parity outside the kernel so decode needs no
+    interleave: Y = W_lo @ X_even + W_hi @ X_odd.
+    """
+    m, half = packed.shape
+    n = x.shape[0]
+    p = x.shape[1]
+    levels = 1 << bits
+    # split X rows by parity (pad odd n with a zero row first)
+    xq = _pad_to(x, 0, 2)
+    x_even, x_odd = xq[0::2], xq[1::2]
+
+    bm = min(block_m, m)
+    bkh = min(block_k // 2, half)          # block over the *packed* axis
+    bp = min(block_p, p)
+
+    pp_ = _pad_to(_pad_to(packed, 0, bm), 1, bkh)
+    tp = _pad_to(codebook, 0, bm)
+    xe = _pad_to(_pad_to(x_even, 0, bkh), 1, bp)
+    xo = _pad_to(_pad_to(x_odd, 0, bkh), 1, bp)
+    mp, halfp = pp_.shape
+    ppad = xe.shape[1]
+    nm, nk, npb = mp // bm, halfp // bkh, ppad // bp
+
+    out = pl.pallas_call(
+        functools.partial(_lut_kernel_packed, levels=levels, nk=nk),
+        grid=(nm, npb, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bkh), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, levels), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bkh, bp), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bkh, bp), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bp), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, ppad), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bp), jnp.float32)],
+        interpret=interpret,
+    )(pp_, tp, xe, xo)
+    return out[:m, :p]

@@ -1,0 +1,80 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode; on TPU they compile
+natively. `lut_linear` is the serving entry point used by
+models/quantized.py: it picks packed/unpacked layout and falls back to the
+pure-XLA reference when Pallas is disabled (e.g. inside the 512-device
+SPMD dry-run, where the jnp path keeps the HLO analyzable).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .backsub import backsub
+from .lut_mpgemm import lut_matmul, lut_matmul_packed
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def lut_linear(codes_or_packed: jnp.ndarray, codebook: jnp.ndarray,
+               x: jnp.ndarray, *, bits: int = 4, packed: bool = False,
+               use_pallas: bool = True) -> jnp.ndarray:
+    """Y = W~ @ X for a LUT-quantized layer.
+
+    Args:
+      codes_or_packed: (m, n) uint8 codes, or (m, ceil(n/2)) nibble-packed.
+      codebook: (m, 2**bits).
+      x: (n, p) activations.
+    """
+    if not use_pallas:
+        if packed:
+            return ref.lut_matmul_packed_ref(codes_or_packed, codebook, x)
+        return ref.lut_matmul_ref(codes_or_packed, codebook, x)
+    interpret = not _on_tpu()
+    if packed:
+        return lut_matmul_packed(codes_or_packed, codebook, x, bits=bits,
+                                 interpret=interpret)
+    return lut_matmul(codes_or_packed, codebook, x, bits=bits,
+                      interpret=interpret)
+
+
+def s_step_blocked(w: jnp.ndarray, t: jnp.ndarray, l: jnp.ndarray, *,
+                   block_m: int = 128, block_n: int = 128,
+                   use_pallas: bool = True):
+    """GANQ S-step: Pallas blocked kernel (TPU) or scan oracle fallback."""
+    if not use_pallas:
+        return ref.backsub_ref(w, t, l)
+    codes, wq = backsub(w, t, l, block_m=block_m, block_n=block_n,
+                        interpret=not _on_tpu())
+    return codes, wq
+
+
+def vmem_plan(m: int, n: int, p: int, bits: int, block_m: int = 128,
+              block_k: int = 512, block_p: int = 128) -> dict:
+    """Static VMEM-footprint accounting for the LUT-mpGEMM kernel — used by
+    the roofline analysis (HBM bytes = what the kernel actually streams).
+
+    Per grid step resident set: packed codes tile, codebook tile, two X
+    parity tiles, f32 accumulator. HBM traffic: packed codes read once
+    (0.5 B/wt), X read m/block_m times, Y written once, LUT once.
+    """
+    levels = 1 << bits
+    vmem = (block_m * block_k // 2            # packed codes tile (u8)
+            + block_m * levels * 4            # codebook tile (f32)
+            + block_k * block_p * 2           # X tiles (bf16, both parities)
+            + block_m * block_p * 4)          # accumulator
+    n_row_blocks = -(-m // block_m)
+    hbm = {
+        "codes_bytes": m * n * 0.5,
+        "lut_bytes": m * levels * 2,
+        "x_bytes": n * p * 2 * n_row_blocks,   # X re-streamed per row block
+        "y_bytes": m * p * 2,
+    }
+    hbm["total_bytes"] = sum(hbm.values())
+    return {"vmem_bytes": vmem, **hbm}

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package is validated against these references in
+interpret mode across shape/dtype sweeps (tests/test_kernels_*.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.ganq import s_step as _s_step_core
+from repro.core.packing import unpack_nibbles
+
+
+def lut_decode_ref(codes: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """W~[i, j] = T[i, codes[i, j]]; codes (m, n) uint8, T (m, L)."""
+    return jnp.take_along_axis(codebook, codes.astype(jnp.int32), axis=1)
+
+
+def lut_matmul_ref(codes: jnp.ndarray, codebook: jnp.ndarray,
+                   x: jnp.ndarray) -> jnp.ndarray:
+    """Y = W~ @ X; codes (m, n), T (m, L), x (n, p) -> (m, p).
+
+    Accumulates in f32 (matches the kernel's MXU accumulator) and returns
+    x.dtype.
+    """
+    w = lut_decode_ref(codes, codebook).astype(jnp.float32)
+    y = w @ x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def lut_matmul_packed_ref(packed: jnp.ndarray, codebook: jnp.ndarray,
+                          x: jnp.ndarray) -> jnp.ndarray:
+    """Same as lut_matmul_ref but codes arrive nibble-packed (m, ceil(n/2))."""
+    n = x.shape[0]
+    codes = unpack_nibbles(packed, n)
+    return lut_matmul_ref(codes, codebook, x)
+
+
+def backsub_ref(w: jnp.ndarray, t: jnp.ndarray, l: jnp.ndarray):
+    """GANQ S-step oracle — defers to the core scan implementation."""
+    return _s_step_core(w, t, l)

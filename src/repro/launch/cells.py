@@ -1,0 +1,121 @@
+"""Dry-run cells: (architecture x input shape) -> lowerable jit closure.
+
+The 4 assigned shapes (LM-family):
+  train_4k    seq 4096,   global_batch 256   -> train_step
+  prefill_32k seq 32768,  global_batch 32    -> prefill_step
+  decode_32k  seq 32768,  global_batch 128   -> serve_step (1 token, KV 32k)
+  long_500k   seq 524288, global_batch 1     -> serve_step (sub-quadratic only)
+
+Applicability (DESIGN.md §6): long_500k runs only for subquadratic archs
+(rwkv6, recurrentgemma, gemma3); pure full-attention archs skip it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models.model import abstract_params
+from repro.sharding.partition import param_shardings
+from repro.train.optimizer import OptConfig
+from . import steps
+from .mesh import dp_axes_of
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 500k KV cache has no "
+                       "sub-quadratic path (DESIGN.md §6)")
+    return True, ""
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    kind: str
+    fn: object               # callable to jit
+    args: tuple              # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: object    # or None for auto
+    donate_argnums: tuple = ()
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               remat: str = "full", zero1: bool = False,
+               quantized_serve: bool = False, bits: int = 4,
+               ce_chunk: int = 512, accum: int = 1) -> Cell:
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} skipped: {why}")
+    if shp["kind"] in ("prefill", "decode"):
+        # serving always runs bf16 master weights (+ optional GANQ LUT)
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    ctx = steps.make_ctx(mesh, cfg)
+    params_sds = abstract_params(cfg)
+    if quantized_serve and shp["kind"] in ("prefill", "decode"):
+        from repro.models.quantized import abstract_quantize
+        params_sds = abstract_quantize(params_sds, cfg, bits=bits)
+    p_shard = param_shardings(params_sds, mesh)
+    seq, batch = shp["seq"], shp["batch"]
+
+    if shp["kind"] == "train":
+        opt_cfg = OptConfig()
+        fn = steps.make_train_step(cfg, ctx, opt_cfg, remat=remat,
+                                   ce_chunk=ce_chunk, accum=accum)
+        batch_sds = steps.batch_struct(cfg, batch, seq)
+        b_shard = steps.batch_shardings(cfg, mesh)
+        opt_sds = steps.opt_state_struct(params_sds)
+        o_shard = steps.opt_state_shardings(params_sds, mesh, zero1=zero1)
+        return Cell(arch, shape_name, "train", fn,
+                    (params_sds, opt_sds, batch_sds),
+                    (p_shard, o_shard, b_shard),
+                    (p_shard, o_shard, None),
+                    donate_argnums=(0, 1),
+                    meta={"tokens": batch * seq, "remat": remat,
+                          "zero1": zero1, "accum": accum})
+
+    if shp["kind"] == "prefill":
+        fn = steps.make_prefill_step(cfg, ctx)
+        batch_sds = steps.batch_struct(cfg, batch, seq)
+        b_shard = steps.batch_shardings(cfg, mesh)
+        return Cell(arch, shape_name, "prefill", fn,
+                    (params_sds, batch_sds), (p_shard, b_shard), None,
+                    meta={"tokens": batch * seq})
+
+    # decode
+    fn = steps.make_serve_step(cfg, ctx)
+    cache_sds = steps.abstract_cache(cfg, batch, seq)
+    c_shard = steps.cache_shardings(cache_sds, cfg, mesh, batch)
+    dp = dp_axes_of(mesh)
+    tok_spec = NamedSharding(mesh, P(dp) if batch > 1 else P())
+    tok_sds = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return Cell(arch, shape_name, "decode", fn,
+                (params_sds, cache_sds, tok_sds, pos_sds),
+                (p_shard, c_shard, tok_spec, tok_spec), None,
+                donate_argnums=(1,),
+                meta={"tokens": batch, "cache_len": seq})
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        return jitted.lower(*cell.args)

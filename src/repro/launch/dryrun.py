@@ -1,0 +1,119 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture x input shape) on
+the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh, recording
+memory_analysis / cost_analysis / the collective schedule per cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod --out results.jsonl
+
+The FIRST two lines above set XLA_FLAGS before any jax import — jax locks
+the device count on first init (assignment contract).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import list_archs, get_config
+from .cells import SHAPES, applicable, build_cell, lower_cell
+from .mesh import make_production_mesh
+
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)")
+
+
+def collective_summary(hlo_text: str) -> dict:
+    """Count collective ops by kind in compiled HLO (top-level; in-loop ops
+    are scaled by trip count in roofline/analysis.py)."""
+    counts = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind = m.group(1)
+        counts[kind] = counts.get(kind, 0) + 1
+    return counts
+
+
+def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+             remat: str = "full", zero1: bool = False) -> dict:
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    cfg = get_config(arch)
+    ok, why = applicable(cfg, shape_name)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_name, mesh, remat=remat, zero1=zero1)
+        lowered = lower_cell(cell, mesh)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 2),
+            kind=cell.kind,
+            flops_per_device=ca.get("flops"),
+            bytes_accessed_per_device=ca.get("bytes accessed"),
+            argument_bytes=ma.argument_size_in_bytes,
+            output_bytes=ma.output_size_in_bytes,
+            temp_bytes=ma.temp_size_in_bytes,
+            alias_bytes=ma.alias_size_in_bytes,
+            peak_hbm_bytes=(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                            + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+            collectives=collective_summary(hlo),
+            meta=cell.meta,
+        )
+    except Exception as e:  # noqa: BLE001 — dry-run reports all failures
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:],
+                   compile_s=round(time.time() - t0, 2))
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES),
+                    help="single shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 mesh instead of 16x16")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh, multi_pod,
+                               remat=args.remat, zero1=args.zero1)
+                line = json.dumps(rec)
+                print(line, flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(line + "\n")
+                if rec["status"] == "error":
+                    n_fail += 1
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

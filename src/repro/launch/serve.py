@@ -1,0 +1,87 @@
+"""Serving launcher: GANQ-quantize a model and serve batched requests.
+
+CPU demo (reduced config):
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
+      --bits 4 --requests 8
+
+Production decode-step compile check (the paper's deployment on a pod):
+  python -m repro.launch.serve --arch granite-3-8b --dry-run-only \\
+      --bits 4 --kv8
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--bits", type=int, default=4, choices=[2, 3, 4])
+    ap.add_argument("--method", default="ganq",
+                    choices=["ganq", "gptq", "rtn", "none"])
+    ap.add_argument("--kv8", action="store_true",
+                    help="int8 KV cache (beyond-paper)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--dry-run-only", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.dry_run_only:
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from .cells import build_cell, lower_cell
+        from .mesh import make_production_mesh
+        mesh = make_production_mesh()
+        cell = build_cell(args.arch, "decode_32k", mesh,
+                          quantized_serve=args.method != "none",
+                          bits=args.bits)
+        comp = lower_cell(cell, mesh).compile()
+        ma = comp.memory_analysis()
+        peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        print(f"decode step compiled OK; peak HBM/device {peak / 1e9:.2f} GB")
+        return 0
+
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduce_config
+    from repro.core import QuantConfig
+    from repro.data.synthetic import MarkovStream
+    from repro.models import init_params
+    from repro.models.quantized import quantize_model_ptq
+    from repro.serve.engine import GenRequest, ServeEngine
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    if args.kv8:
+        cfg = dataclasses.replace(cfg, kv_quant_bits=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    data = MarkovStream(cfg.vocab_size, batch=4, seq=32, seed=0)
+    if args.method != "none":
+        calib = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+        params, _ = quantize_model_ptq(
+            params, cfg, calib,
+            QuantConfig(bits=args.bits, iters=4, precondition="fixed"),
+            args.method)
+        print(f"quantized with {args.method} @{args.bits}-bit")
+    engine = ServeEngine(params, cfg, max_len=128)
+    prompts = data.batch_at(1)["tokens"][:, :16].tolist() * \
+        (args.requests // 4 + 1)
+    reqs = [GenRequest(prompt=p, max_new=args.max_new)
+            for p in prompts[:args.requests]]
+    t0 = time.time()
+    results = engine.serve_queue(reqs, batch_size=4)
+    dt = time.time() - t0
+    n_tok = sum(len(r.tokens) for r in results)
+    print(f"served {len(reqs)} requests / {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s, 1 CPU core)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

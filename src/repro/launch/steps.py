@@ -1,0 +1,256 @@
+"""Step functions (train / prefill / serve) + their sharding specs.
+
+These are the functions the multi-pod dry-run lowers and compiles, and the
+same functions launch/train.py and launch/serve.py run for real.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, train_loss
+from repro.models.model import (_dtype, _embed, _hidden, _logits_head,
+                                init_serve_cache, abstract_params)
+from repro.models import whisper as W
+from repro.models.transformer import init_stack_cache
+from repro.sharding.context import ShardCtx
+from repro.sharding.partition import param_shardings
+from repro.train.optimizer import OptConfig, OptState, adamw_update, \
+    init_opt_state
+from .mesh import dp_axes_of
+
+
+def make_ctx(mesh: Optional[Mesh], cfg: ModelConfig,
+             ep: Optional[bool] = None) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx()
+    return ShardCtx(mesh=mesh, dp_axes=dp_axes_of(mesh), tp_axis="model",
+                    ep=(cfg.n_experts > 0) if ep is None else ep)
+
+
+# ------------------------------------------------------------------- steps
+
+def make_train_step(cfg: ModelConfig, ctx: ShardCtx, opt_cfg: OptConfig,
+                    remat: str = "full", ce_chunk: int = 512,
+                    accum: int = 1):
+    """accum > 1: microbatch gradient accumulation (scan over the batch dim)
+    — divides activation memory by `accum` at the cost of re-streaming the
+    weights per microbatch."""
+    def train_step(params, opt_state: OptState, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(train_loss)(
+                params, batch, cfg, ctx, remat=remat, ce_chunk=ce_chunk)
+        else:
+            def micro(carry, mb):
+                acc_l, acc_g = carry
+                l, g = jax.value_and_grad(train_loss)(
+                    params, mb, cfg, ctx, remat=remat, ce_chunk=ce_chunk)
+                return (acc_l + l, jax.tree.map(jnp.add, acc_g, g)), None
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def split_mb(key_path, x):
+                # positions are (3, B, S); everything else is batch-major
+                name = str(key_path[-1].key) if key_path else ""
+                if name == "positions":
+                    r = x.reshape(3, accum, -1, *x.shape[2:])
+                    return jnp.moveaxis(r, 1, 0)
+                return x.reshape(accum, -1, *x.shape[1:])
+            mbs = jax.tree_util.tree_map_with_path(split_mb, batch)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zeros), mbs)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: ShardCtx):
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cache, tokens, pos, cfg, ctx)
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx,
+                      chunk: Optional[int] = 2048):
+    """Prompt pass: last-token logits + per-layer states (unit-stacked)."""
+    from repro.models.transformer import stack_apply
+    from repro.models.common import apply_norm
+
+    def prefill_step(params, batch):
+        cd = _dtype(cfg.compute_dtype)
+        if cfg.is_encoder_decoder:
+            enc_out = W.encode(params["stacks"], batch["frames"].astype(cd),
+                               cfg, ctx, None, chunk)
+            tok_emb = _embed(params, batch["tokens"], cfg, cd)
+            h = W.decode_train(params["stacks"], tok_emb, enc_out, cfg, ctx,
+                               None, chunk)
+            logits = _logits_head(params, h[:, -1, :], cfg, ctx)
+            return logits, enc_out
+        if cfg.frontend == "patches":
+            x = batch["embeds"].astype(cd)
+            positions = batch["positions"]
+        else:
+            x = _embed(params, batch["tokens"], cfg, cd)
+            b, s = batch["tokens"].shape
+            positions = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+            if cfg.mrope_sections:
+                positions = jnp.broadcast_to(positions[None], (3, b, s))
+        x = ctx.constrain(x, "dp", None, None)
+        x, _aux, states = stack_apply(params["stack"], x, positions, cfg, ctx,
+                                      None, chunk, collect_state=True)
+        x = apply_norm(params["final_ln"], x, cfg.norm, cfg.norm_eps)
+        logits = _logits_head(params, x[:, -1, :], cfg, ctx)
+        return logits, states
+    return prefill_step
+
+
+# --------------------------------------------------------------- input specs
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    """ShapeDtypeStruct stand-ins for a train/prefill batch."""
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if cfg.frontend == "patches":
+        return {"embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), bf16),
+                "positions": jax.ShapeDtypeStruct((3, batch, seq), i32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+    if cfg.frontend == "frames":
+        return {"frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), bf16),
+                "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh) -> Dict:
+    dp = dp_axes_of(mesh)
+    ns = lambda *spec: NamedSharding(mesh, P(*spec))
+    if cfg.frontend == "patches":
+        return {"embeds": ns(dp, None, None), "positions": ns(None, dp, None),
+                "labels": ns(dp, None)}
+    if cfg.frontend == "frames":
+        return {"frames": ns(dp, None, None), "tokens": ns(dp, None),
+                "labels": ns(dp, None)}
+    return {"tokens": ns(dp, None), "labels": ns(dp, None)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    cd = _dtype(cfg.compute_dtype)
+    if cfg.is_encoder_decoder:
+        enc = jax.ShapeDtypeStruct((batch, cache_len, cfg.d_model), cd)
+        params = abstract_params(cfg)
+        return jax.eval_shape(
+            lambda p, e: init_serve_cache(
+                p, {"frames": e}, batch, cache_len, cfg),
+            params, enc)
+    return jax.eval_shape(
+        lambda: init_stack_cache(batch, cache_len, cfg, cd))
+
+
+def cache_shardings(cache_sds, cfg: ModelConfig, mesh: Mesh, batch: int):
+    """Sharding rules for serve caches (DESIGN.md §4): batch over DP when
+    batch > 1; at batch 1 the *sequence* dim of attention caches shards over
+    DP (context parallelism for long decode); heads/width over TP when
+    divisible."""
+    dp = dp_axes_of(mesh)
+    tp = "model"
+    tp_size = mesh.shape[tp]
+
+    def rule(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = str(k.key)
+                break
+        shape = leaf.shape
+        rank = len(shape)
+        if name in ("k", "v"):
+            # batch over DP; kv-heads over TP when divisible, else the cache
+            # SEQUENCE dim shards over TP (flash-decode style); at batch 1
+            # the sequence dim takes every available axis.
+            lead = (None,) * (rank - 4)
+            b_, w_, kh, hd = shape[-4:]
+            k_div = kh % tp_size == 0
+            if b_ == 1:
+                w_axes = dp if k_div else (tuple(dp) if isinstance(dp, tuple)
+                                           else (dp,)) + (tp,)
+                wsz = 1
+                for a in (w_axes if isinstance(w_axes, tuple) else (w_axes,)):
+                    wsz *= mesh.shape[a]
+                w_spec = w_axes if w_ % wsz == 0 else None
+                return P(*lead, None, w_spec, tp if k_div else None, None)
+            if k_div:
+                return P(*lead, dp, None, tp, None)
+            w_spec = tp if w_ % tp_size == 0 else None
+            return P(*lead, dp, w_spec, None, None)
+        if name in ("k_scale", "v_scale"):
+            # (…, B, W, K) — mirror the k/v rule minus the head_dim axis
+            lead = (None,) * (rank - 3)
+            b_, w_, kh = shape[-3:]
+            k_div = kh % tp_size == 0
+            if b_ == 1:
+                return P(*lead, None, dp, tp if k_div else None)
+            if k_div:
+                return P(*lead, dp, None, tp)
+            w_spec = tp if w_ % tp_size == 0 else None
+            return P(*lead, dp, w_spec, None)
+        if name == "wkv":
+            lead = (None,) * (rank - 4)
+            b_, h_, _, _ = shape[-4:]
+            h_spec = tp if h_ % tp_size == 0 else None
+            return P(*lead, dp if b_ > 1 else None, h_spec, None, None)
+        if name in ("tm_shift", "cm_shift", "h"):
+            lead = (None,) * (rank - 2)
+            b_, d_ = shape[-2:]
+            return P(*lead, dp if b_ > 1 else None,
+                     tp if d_ % tp_size == 0 else None)
+        if name == "conv":
+            lead = (None,) * (rank - 3)
+            b_, _, r_ = shape[-3:]
+            return P(*lead, dp if b_ > 1 else None, None,
+                     tp if r_ % tp_size == 0 else None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, rule(path, leaf)), cache_sds)
+
+
+def opt_state_struct(params_sds) -> OptState:
+    return jax.eval_shape(init_opt_state, params_sds)
+
+
+def opt_state_shardings(params_sds, mesh: Mesh, zero1: bool = False):
+    """m/v shard like their parameters; ZeRO-1 additionally shards them over
+    the DP axis dim 0 when divisible (optimizer-state partitioning)."""
+    base = param_shardings(params_sds, mesh)
+    if zero1:
+        dp = dp_axes_of(mesh)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+
+        def shard_over_dp(sharding, leaf):
+            """ZeRO-1: place m/v on the DP axis along the first unsharded
+            dim it divides (optimizer math is elementwise, so any dim works;
+            GSPMD turns the grad all-reduce into reduce-scatter+all-gather)."""
+            spec = list(sharding.spec) + [None] * (len(leaf.shape)
+                                                   - len(sharding.spec))
+            for i, dim in enumerate(leaf.shape):
+                if spec[i] is None and dim % dp_size == 0:
+                    spec[i] = dp
+                    return NamedSharding(mesh, P(*spec))
+            return sharding
+        mv = jax.tree.map(shard_over_dp, base, params_sds)
+    else:
+        mv = base
+    return OptState(step=NamedSharding(mesh, P()), m=mv,
+                    v=jax.tree.map(lambda x: x, mv))

@@ -1,0 +1,86 @@
+"""Training launcher.
+
+Local smoke (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --reduced \\
+      --steps 50 --batch 8 --seq 64
+
+Production pod (TPU; sharding/mesh identical to the dry-run):
+  python -m repro.launch.train --arch qwen3-14b --mesh 32x8 --zero1 \\
+      --accum 8 --steps 10000 --ckpt-dir gs://...
+
+On this CPU container the production path is exercised via
+`--dry-run-only`, which lowers+compiles the exact step and prints the
+memory/cost analyses (the multi-pod contract lives in launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU smoke)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--mesh", default=None, help="e.g. 16x16 / 32x8")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--dry-run-only", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.dry_run_only:
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import jax
+        from jax.sharding import AxisType
+        from .cells import build_cell, lower_cell
+        dims = tuple(int(x) for x in (args.mesh or "16x16").split("x"))
+        mesh = jax.make_mesh(dims, ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        cell = build_cell(args.arch, "train_4k", mesh, remat=args.remat,
+                          zero1=args.zero1, accum=args.accum)
+        comp = lower_cell(cell, mesh).compile()
+        ma = comp.memory_analysis()
+        peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        print(f"compiled OK; peak HBM/device {peak / 1e9:.2f} GB; "
+              f"flops/device {comp.cost_analysis().get('flops'):.3e}")
+        return 0
+
+    from repro.configs import get_config, reduce_config
+    from repro.data.synthetic import MarkovStream
+    from repro.train.loop import Trainer, TrainerConfig
+    from repro.train.optimizer import OptConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    data = MarkovStream(cfg.vocab_size, batch=args.batch, seq=args.seq,
+                        seed=0, frontend=cfg.frontend, d_model=cfg.d_model)
+    tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, accum=args.accum,
+                         remat=args.remat, log_every=10)
+    trainer = Trainer(cfg, data, tcfg,
+                      opt_cfg=OptConfig(lr=args.lr,
+                                        warmup_steps=max(args.steps // 10, 1),
+                                        total_steps=args.steps))
+    res = trainer.run()
+    for m in trainer.metrics_log:
+        print(f"step {m['step']:6d}  loss {m['loss']:.4f}  "
+              f"{m['sec'] * 1e3:.1f} ms")
+    print(f"done: loss {res['first_loss']:.3f} -> {res['final_loss']:.3f} "
+          f"(resumed from {res['resumed_from']})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,276 @@
+"""Attention: MHA/GQA/MQA, causal + sliding-window, qk-norm, M-RoPE,
+KV caches (full + ring-buffer), cross-attention, chunked-query prefill.
+
+Layout: activations (B, S, d); heads materialized as (B, S, H, hd). GQA is
+computed grouped — K/V are never repeated in memory:
+scores = einsum('bskgh,btkh->bkgst').
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ShardCtx, LOCAL
+from .common import apply_mrope, apply_rope, dense_init, init_norm, \
+    rms_norm_headwise
+from .linears import linear_apply
+
+NEG_INF = -2.0 ** 30
+Params = Dict
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 6)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": dense_init(ks[0], d, qd, dtype),
+        "wk": dense_init(ks[1], d, kvd, dtype),
+        "wv": dense_init(ks[2], d, kvd, dtype),
+        "wo": dense_init(ks[3], qd, d, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), dtype)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), dtype)
+    return p
+
+
+def _heads(x: jnp.ndarray, n: int, hd: int) -> jnp.ndarray:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def project_q(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col, prefix,
+              rope: bool = True):
+    q = linear_apply(p["wq"], x, col, prefix + "wq")
+    q = ctx.constrain(q, "dp", None, ctx.tp_axis)
+    q = _heads(q, cfg.n_heads, cfg.head_dim)
+    if "q_norm" in p:
+        q = rms_norm_headwise(p["q_norm"], q, cfg.norm_eps)
+    if rope:
+        if cfg.mrope_sections:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def project_kv(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col, prefix,
+               rope: bool = True):
+    k = linear_apply(p["wk"], x, col, prefix + "wk")
+    v = linear_apply(p["wv"], x, col, prefix + "wv")
+    k = ctx.constrain(k, "dp", None, ctx.tp_axis)
+    v = ctx.constrain(v, "dp", None, ctx.tp_axis)
+    k = _heads(k, cfg.n_kv_heads, cfg.head_dim)
+    v = _heads(v, cfg.n_kv_heads, cfg.head_dim)
+    if "k_norm" in p:
+        k = rms_norm_headwise(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        if cfg.mrope_sections:
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _grouped_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q (B,Sq,H,hd), k (B,Sk,K,hd) -> (B,K,G,Sq,Sk) with H = K*G."""
+    b, sq, h, hd = q.shape
+    kk = k.shape[2]
+    g = h // kk
+    qg = q.reshape(b, sq, kk, g, hd)
+    return jnp.einsum("bskgh,btkh->bkgst", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+
+
+def _grouped_context(w: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """w (B,K,G,Sq,Sk), v (B,Sk,K,hd) -> (B,Sq,H,hd)."""
+    b, kk, g, sq, sk = w.shape
+    ctx = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return ctx.reshape(b, sq, kk * g, -1)
+
+
+def _mask_bias(qpos: jnp.ndarray, kpos: jnp.ndarray, kind: str,
+               window: int) -> jnp.ndarray:
+    """(Sq, Sk) additive bias; qpos/kpos (Sq,), (Sk,) absolute positions."""
+    dq = qpos[:, None]
+    dk = kpos[None, :]
+    if kind == "none":
+        allowed = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    elif kind == "causal":
+        allowed = dk <= dq
+    elif kind == "sliding":
+        allowed = (dk <= dq) & (dk > dq - window)
+    else:
+        raise ValueError(kind)
+    allowed = allowed & (dk[0:1, :] >= 0 if kpos.ndim else True)
+    return jnp.where(allowed, 0.0, NEG_INF)
+
+
+def _softmax(scores: jnp.ndarray) -> jnp.ndarray:
+    s = scores.astype(jnp.float32)
+    s = s - jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    w = jnp.exp(s)
+    return w / jnp.sum(w, axis=-1, keepdims=True)
+
+
+def attend_full(q, k, v, qpos, kpos, kind: str, window: int,
+                chunk: Optional[int] = None) -> jnp.ndarray:
+    """Full-sequence attention; optionally scanned over query chunks so the
+    (Sq, Sk) logits never exceed (chunk, Sk) — the prefill-32k memory path."""
+    if chunk is None or q.shape[1] <= chunk:
+        bias = _mask_bias(qpos, kpos, kind, window)
+        scores = _grouped_scores(q, k).astype(jnp.float32) + bias
+        return _grouped_context(_softmax(scores).astype(v.dtype), v)
+
+    b, sq, h, hd = q.shape
+    assert sq % chunk == 0, (sq, chunk)
+    nchunks = sq // chunk
+    qc = q.reshape(b, nchunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    pc = qpos.reshape(nchunks, chunk)
+
+    def one(args):
+        qi, pi = args
+        bias = _mask_bias(pi, kpos, kind, window)
+        scores = _grouped_scores(qi, k).astype(jnp.float32) + bias
+        return _grouped_context(_softmax(scores).astype(v.dtype), v)
+
+    out = jax.lax.map(one, (qc, pc))                     # (nchunks, B, chunk, H, hd)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+# ------------------------------------------------------------------ KV cache
+
+def init_cache(batch: int, cache_len: int, cfg: ModelConfig, dtype
+               ) -> Params:
+    shape = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_quant_bits == 8:
+        # int8 KV with per-(token, head) scales — halves decode HBM traffic
+        sshape = shape[:-1]
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.bfloat16),
+                "v_scale": jnp.zeros(sshape, jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def quantize_kv(x: jnp.ndarray):
+    """(…, hd) -> (int8 codes, bf16 scale over the last dim)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+            ).astype(dtype)
+
+
+def cache_write(cache: Params, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                pos: jnp.ndarray) -> Params:
+    """Write one step (B, 1, K, hd) at ring slot pos % W; pos (B,) int32."""
+    w = cache["k"].shape[1]
+    slot = pos % w
+    b = jnp.arange(k_new.shape[0])
+    if "k_scale" in cache:
+        kq, ks = quantize_kv(k_new[:, 0])
+        vq, vs = quantize_kv(v_new[:, 0])
+        return {
+            "k": cache["k"].at[b, slot].set(kq),
+            "v": cache["v"].at[b, slot].set(vq),
+            "k_scale": cache["k_scale"].at[b, slot].set(ks),
+            "v_scale": cache["v_scale"].at[b, slot].set(vs),
+        }
+    return {
+        "k": cache["k"].at[b, slot].set(k_new[:, 0].astype(cache["k"].dtype)),
+        "v": cache["v"].at[b, slot].set(v_new[:, 0].astype(cache["v"].dtype)),
+    }
+
+
+def cache_slot_positions(pos: jnp.ndarray, w: int) -> jnp.ndarray:
+    """(B, W) absolute position held by each ring slot (negative = empty)."""
+    slots = jnp.arange(w)[None, :]
+    cur = (pos % w)[:, None]
+    diff = (cur - slots) % w
+    return pos[:, None] - diff
+
+
+def attend_decode(q, cache: Params, pos: jnp.ndarray, kind: str,
+                  window: int) -> jnp.ndarray:
+    """q (B,1,H,hd) against ring cache; pos (B,) position of the new token
+    (already written to the cache)."""
+    if "k_scale" in cache:
+        k = dequantize_kv(cache["k"], cache["k_scale"], q.dtype)
+        v = dequantize_kv(cache["v"], cache["v_scale"], q.dtype)
+    else:
+        k, v = cache["k"], cache["v"]
+    b, w = k.shape[0], k.shape[1]
+    slot_pos = cache_slot_positions(pos, w)              # (B, W)
+    allowed = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if kind == "sliding":
+        allowed &= slot_pos > (pos[:, None] - window)
+    bias = jnp.where(allowed, 0.0, NEG_INF)[:, None, None, None, :]
+    scores = _grouped_scores(q, k).astype(jnp.float32) + bias  # (B,K,G,1,W)
+    return _grouped_context(_softmax(scores).astype(v.dtype), v)
+
+
+# --------------------------------------------------------------- full blocks
+
+def attention_block(p, x, positions, cfg: ModelConfig, kind: str,
+                    ctx: ShardCtx = LOCAL, col=None, prefix: str = "",
+                    chunk: Optional[int] = 4096 * 2):
+    """Training/prefill self-attention (returns output + fresh cache K/V)."""
+    q = project_q(p, x, positions, cfg, ctx, col, prefix)
+    k, v = project_kv(p, x, positions, cfg, ctx, col, prefix)
+    pos1 = positions if positions.ndim == 2 else positions[0]
+    o = attend_full(q, k, v, pos1[0], pos1[0],
+                    "causal" if kind == "attn" else "sliding",
+                    cfg.sliding_window, chunk)
+    o = o.reshape(*x.shape[:-1], cfg.q_dim)
+    y = linear_apply(p["wo"], o, col, prefix + "wo")
+    return ctx.constrain(y, "dp", None, None), (k, v)
+
+
+def attention_decode_block(p, x, pos, cache: Params, cfg: ModelConfig,
+                           kind: str, ctx: ShardCtx = LOCAL):
+    """One-token decode; x (B,1,d), pos (B,). Returns (y, new_cache)."""
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
+    else:
+        positions = pos[:, None]
+    q = project_q(p, x, positions, cfg, ctx, None, "")
+    k, v = project_kv(p, x, positions, cfg, ctx, None, "")
+    cache = cache_write(cache, k, v, pos)
+    o = attend_decode(q, cache, pos,
+                      "causal" if kind == "attn" else "sliding",
+                      cfg.sliding_window)
+    o = o.reshape(*x.shape[:-1], cfg.q_dim)
+    y = linear_apply(p["wo"], o, None, "")
+    return ctx.constrain(y, "dp", None, None), cache
+
+
+def cross_attention_block(p, x, enc_kv: Tuple[jnp.ndarray, jnp.ndarray],
+                          cfg: ModelConfig, ctx: ShardCtx = LOCAL,
+                          col=None, prefix: str = ""):
+    """Decoder cross-attention against precomputed encoder K/V (no mask)."""
+    b, s, _ = x.shape
+    dummy_pos = jnp.zeros((b, s), jnp.int32)
+    q = project_q(p, x, dummy_pos, cfg, ctx, col, prefix, rope=False)
+    k, v = enc_kv
+    sk = k.shape[1]
+    o = attend_full(q, k, v, jnp.arange(s), jnp.arange(sk), "none", 0,
+                    chunk=None)
+    o = o.reshape(*x.shape[:-1], cfg.q_dim)
+    y = linear_apply(p["wo"], o, col, prefix + "wo")
+    return ctx.constrain(y, "dp", None, None)
+
+
+def encode_cross_kv(p, enc_out: jnp.ndarray, cfg: ModelConfig,
+                    ctx: ShardCtx = LOCAL, col=None, prefix: str = ""):
+    """Precompute cross K/V from encoder output (whisper prefill)."""
+    b, s, _ = enc_out.shape
+    dummy_pos = jnp.zeros((b, s), jnp.int32)
+    return project_kv(p, enc_out, dummy_pos, cfg, ctx, col, prefix,
+                      rope=False)

@@ -1,0 +1,72 @@
+"""Linear-layer dispatch: dense fp weights or GANQ LUT-quantized weights.
+
+Every matmul in the model zoo goes through `linear_apply`, so swapping a
+model to its quantized form is a pure parameter-tree transformation
+(models/quantized.py) — the forward code is unchanged. This mirrors the
+paper's deployment story: same network, mpGEMM instead of GEMM.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax.numpy as jnp
+
+from repro.core.outliers import apply_sparse
+from repro.core.types import QuantizedLinear
+
+# module-level backend switch for LUT matmuls:
+#   'pallas' — fused Pallas kernel (interpret mode on CPU)
+#   'xla'    — take_along_axis dequant + dot (dry-run / SPMD path)
+_LUT_BACKEND = "xla"
+
+
+def set_lut_backend(name: str) -> None:
+    global _LUT_BACKEND
+    assert name in ("pallas", "xla"), name
+    _LUT_BACKEND = name
+
+
+def get_lut_backend() -> str:
+    return _LUT_BACKEND
+
+
+def cap(col, name: str, x: jnp.ndarray) -> None:
+    """Record linear input for H accumulation (PTQ capture mode)."""
+    if col is not None:
+        col.add(name, x)
+
+
+def linear_apply(w: Union[jnp.ndarray, QuantizedLinear], x: jnp.ndarray,
+                 col=None, name: str = "") -> jnp.ndarray:
+    """y = x @ W (dense) or x @ W~^T (LUT-quantized; W~ is (out, in)).
+
+    x: (..., d_in) any leading shape.
+    """
+    cap(col, name, x)
+    if isinstance(w, QuantizedLinear):
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])                    # (N, n)
+        if _LUT_BACKEND == "pallas":
+            from repro.kernels.ops import lut_linear       # lazy import
+            y = lut_linear(w.codes, w.codebook.astype(x.dtype), x2.T,
+                           bits=w.bits, packed=w.packed).T  # (N, m)
+        else:
+            wd = jnp.take_along_axis(w.codebook,
+                                     w.unpacked_codes().astype(jnp.int32),
+                                     axis=1)
+            y = x2 @ wd.astype(x.dtype).T
+        if w.sparse_val is not None:
+            y = y + apply_sparse(w.sparse_idx, w.sparse_val, x2.T).T.astype(y.dtype)
+        if w.full_row_val is not None:
+            y_full = x2 @ w.full_row_val.astype(x.dtype).T  # (N, n_full)
+            y = y.at[:, w.full_row_idx].set(y_full)
+        if w.bias is not None:
+            y = y + w.bias.astype(y.dtype)
+        return y.reshape(*lead, -1)
+    return x @ w.astype(x.dtype)
+
+
+def linear_out_dim(w: Union[jnp.ndarray, QuantizedLinear]) -> int:
+    if isinstance(w, QuantizedLinear):
+        return w.codes.shape[0]
+    return w.shape[-1]

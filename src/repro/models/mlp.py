@@ -1,0 +1,39 @@
+"""Dense MLPs: SwiGLU (llama-family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ShardCtx, LOCAL
+from .common import activation, dense_init
+from .linears import linear_apply
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int = 0):
+    f = d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu" and cfg.family == "audio":
+        # whisper: plain 2-matmul GELU MLP
+        return {"w_up": dense_init(ks[0], d, f, dtype),
+                "w_down": dense_init(ks[1], f, d, dtype)}
+    return {"w_gate": dense_init(ks[0], d, f, dtype),
+            "w_up": dense_init(ks[1], d, f, dtype),
+            "w_down": dense_init(ks[2], f, d, dtype)}
+
+
+def mlp_apply(p, x, cfg: ModelConfig, ctx: ShardCtx = LOCAL, col=None,
+              prefix: str = ""):
+    act = activation(cfg.act)
+    if "w_gate" not in p:
+        h = act(linear_apply(p["w_up"], x, col, prefix + "w_up"))
+        h = ctx.constrain(h, "dp", None, ctx.tp_axis)
+        y = linear_apply(p["w_down"], h, col, prefix + "w_down")
+        return ctx.constrain(y, "dp", None, None)
+    g = linear_apply(p["w_gate"], x, col, prefix + "w_gate")
+    u = linear_apply(p["w_up"], x, col, prefix + "w_up")
+    h = act(g) * u
+    h = ctx.constrain(h, "dp", None, ctx.tp_axis)
+    y = linear_apply(p["w_down"], h, col, prefix + "w_down")
+    return ctx.constrain(y, "dp", None, None)

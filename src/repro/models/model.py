@@ -1,0 +1,230 @@
+"""Model facade: init / train_loss / prefill / decode for every arch.
+
+Batch formats by frontend:
+  tokens : {"tokens": (B,S) i32, "labels": (B,S) i32}
+  patches: {"embeds": (B,S,d), "positions": (3,B,S) i32, "labels": (B,S)}
+  frames : {"frames": (B,S_enc,d), "tokens": (B,S_dec), "labels": (B,S_dec)}
+
+Cross-entropy is computed CHUNKED over the sequence (the (B,S,V) logits
+tensor is never materialized — with 262k vocabs it would dominate HBM).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ShardCtx, LOCAL
+from .common import apply_norm, embed_init, init_norm
+from .linears import linear_apply
+from .transformer import (init_stack, init_stack_cache, stack_apply,
+                          stack_decode, block_apply, pattern_split)
+from . import whisper as W
+
+Params = Dict
+AUX_COEF = 0.01
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = _dtype(cfg.param_dtype)
+    k_emb, k_stack, k_head = jax.random.split(key, 3)
+    p: Params = {"embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+                 "final_ln": init_norm(cfg.d_model, cfg.norm, dtype)}
+    if cfg.is_encoder_decoder:
+        p["stacks"] = W.init_whisper_stacks(k_stack, cfg, dtype)
+    else:
+        p["stack"] = init_stack(k_stack, cfg, dtype)
+    if not cfg.tie_embeddings:
+        p["head"] = embed_init(k_head, cfg.vocab_size, cfg.d_model, dtype).T
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct tree without allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _embed(p: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+           compute_dtype) -> jnp.ndarray:
+    return p["embed"][tokens].astype(compute_dtype)
+
+
+def _logits_head(p: Params, h: jnp.ndarray, cfg: ModelConfig,
+                 ctx: ShardCtx) -> jnp.ndarray:
+    head = p["embed"].T if cfg.tie_embeddings else p["head"]
+    logits = linear_apply(head, h)
+    mid = (None,) * (logits.ndim - 2)
+    return ctx.constrain(logits, "dp", *mid, ctx.tp_axis)
+
+
+def _hidden(p: Params, batch: Dict, cfg: ModelConfig, ctx: ShardCtx,
+            col=None, chunk: Optional[int] = 8192,
+            remat: str = "none") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Runs the backbone; returns (hidden (B,S,d), aux)."""
+    cd = _dtype(cfg.compute_dtype)
+    if cfg.is_encoder_decoder:
+        enc_out = W.encode(p["stacks"], batch["frames"].astype(cd), cfg, ctx,
+                           col, chunk)
+        tok_emb = _embed(p, batch["tokens"], cfg, cd)
+        h = W.decode_train(p["stacks"], tok_emb, enc_out, cfg, ctx, col, chunk)
+        return h, 0.0
+    if cfg.frontend == "patches":
+        x = batch["embeds"].astype(cd)
+        positions = batch["positions"]
+    else:
+        x = _embed(p, batch["tokens"], cfg, cd)
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    x = ctx.constrain(x, "dp", None, None)
+    h, aux = stack_apply(p["stack"], x, positions, cfg, ctx, col, chunk,
+                         remat=remat)
+    if not cfg.is_encoder_decoder:
+        h = apply_norm(p["final_ln"], h, cfg.norm, cfg.norm_eps)
+    return h, aux
+
+
+def chunked_ce_loss(p: Params, h: jnp.ndarray, labels: jnp.ndarray,
+                    cfg: ModelConfig, ctx: ShardCtx,
+                    chunk: int = 512) -> jnp.ndarray:
+    """Mean token CE without materializing (B,S,V)."""
+    b, s, d = h.shape
+    cs = chunk if s % chunk == 0 and s > chunk else s
+    nch = s // cs
+    hc = h.reshape(b, nch, cs, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nch, cs).transpose(1, 0, 2)
+
+    def one(carry, xs):
+        hi, li = xs
+        logits = _logits_head(p, hi, cfg, ctx).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(one, jnp.float32(0.0), (hc, lc))
+    return total / (b * s)
+
+
+def train_loss(p: Params, batch: Dict, cfg: ModelConfig,
+               ctx: ShardCtx = LOCAL, chunk: Optional[int] = 8192,
+               ce_chunk: int = 512, remat: str = "none") -> jnp.ndarray:
+    h, aux = _hidden(p, batch, cfg, ctx, None, chunk, remat)
+    loss = chunked_ce_loss(p, h, batch["labels"], cfg, ctx, ce_chunk)
+    return loss + AUX_COEF * aux
+
+
+def forward_logits(p: Params, batch: Dict, cfg: ModelConfig,
+                   ctx: ShardCtx = LOCAL, col=None,
+                   chunk: Optional[int] = 8192) -> jnp.ndarray:
+    """Full logits (B,S,V) — evaluation/debug path (small models only)."""
+    h, _ = _hidden(p, batch, cfg, ctx, col, chunk)
+    return _logits_head(p, h, cfg, ctx)
+
+
+# ------------------------------------------------------------------- serving
+
+def init_serve_cache(p: Params, batch: Dict, batch_size: int, cache_len: int,
+                     cfg: ModelConfig, ctx: ShardCtx = LOCAL):
+    cd = _dtype(cfg.compute_dtype)
+    if cfg.is_encoder_decoder:
+        enc_out = W.encode(p["stacks"], batch["frames"].astype(cd), cfg, ctx)
+        return W.init_whisper_cache(p["stacks"], batch_size, cache_len,
+                                    enc_out, cfg, cd)
+    return init_stack_cache(batch_size, cache_len, cfg, cd)
+
+
+def decode_step(p: Params, cache, tokens: jnp.ndarray, pos: jnp.ndarray,
+                cfg: ModelConfig, ctx: ShardCtx = LOCAL):
+    """One token for every sequence: tokens (B,) i32, pos (B,) i32.
+    Returns (logits (B,V), new_cache)."""
+    cd = _dtype(cfg.compute_dtype)
+    x = _embed(p, tokens[:, None], cfg, cd)
+    x = ctx.constrain(x, "dp", None, None)
+    if cfg.is_encoder_decoder:
+        h, cache = W.decode_step_whisper(p["stacks"], cache, x, pos, cfg, ctx)
+    else:
+        h, cache = stack_decode(p["stack"], cache, x, pos, cfg, ctx)
+        h = apply_norm(p["final_ln"], h, cfg.norm, cfg.norm_eps)
+    logits = _logits_head(p, h[:, 0, :], cfg, ctx)
+    return logits, cache
+
+
+def prefill(p: Params, batch: Dict, cfg: ModelConfig, ctx: ShardCtx = LOCAL,
+            cache_len: Optional[int] = None):
+    """Run the prompt, build a cache positioned after the prompt.
+
+    Implementation: forward pass for logits + per-layer recompute of K/V via
+    a scan of decode steps is wasteful; instead we run block_apply capturing
+    fresh K/V and scatter them into ring caches.
+    """
+    cd = _dtype(cfg.compute_dtype)
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError("use init_serve_cache + decode for enc-dec")
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    pattern, n_units, _ = pattern_split(cfg)
+    x = _embed(p, tokens, cfg, cd)
+    if cfg.frontend == "patches" and "embeds" in batch:
+        x = batch["embeds"].astype(cd)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions[None], (3, b, s))
+
+    caches = {"units": [], "tail": []}
+    li = 0
+    unit_caches = [[] for _ in pattern]
+    for u in range(n_units):
+        for pos_i, kind in enumerate(pattern):
+            blk = jax.tree.map(lambda a, u=u: a[u], p["stack"]["units"][pos_i])
+            x, _, st = block_apply(kind, blk, x, positions, cfg, ctx)
+            unit_caches[pos_i].append(
+                _state_to_cache(kind, st, s, cache_len, cfg, cd))
+            li += 1
+    for i, blk in enumerate(p["stack"]["tail"]):
+        kind = pattern[i]
+        x, _, st = block_apply(kind, blk, x, positions, cfg, ctx)
+        caches["tail"].append(_state_to_cache(kind, st, s, cache_len, cfg, cd))
+    caches["units"] = [jax.tree.map(lambda *xs: jnp.stack(xs), *cs)
+                       if cs else None for cs in unit_caches]
+    h = apply_norm(p["final_ln"], x, cfg.norm, cfg.norm_eps)
+    logits = _logits_head(p, h[:, -1, :], cfg, ctx)
+    return logits, caches
+
+
+def _state_to_cache(kind: str, st, s: int, cache_len: int, cfg: ModelConfig,
+                    dtype):
+    """Convert prefill block state into the decode cache layout."""
+    if kind in ("attn", "local"):
+        from .attention import init_cache, quantize_kv
+        k, v = st
+        w = cache_len if kind == "attn" else min(cache_len,
+                                                 cfg.sliding_window)
+        b = k.shape[0]
+        cache = init_cache(b, w, cfg, dtype)
+        keep = min(s, w)
+        slots = jnp.arange(s - keep, s) % w
+        if "k_scale" in cache:
+            kq, ks = quantize_kv(k[:, s - keep:])
+            vq, vs = quantize_kv(v[:, s - keep:])
+            cache["k"] = cache["k"].at[:, slots].set(kq)
+            cache["v"] = cache["v"].at[:, slots].set(vq)
+            cache["k_scale"] = cache["k_scale"].at[:, slots].set(ks)
+            cache["v_scale"] = cache["v_scale"].at[:, slots].set(vs)
+        else:
+            cache["k"] = cache["k"].at[:, slots].set(
+                k[:, s - keep:].astype(dtype))
+            cache["v"] = cache["v"].at[:, slots].set(
+                v[:, s - keep:].astype(dtype))
+        return cache
+    return st  # rwkv / rglru states already carry everything

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts with capacity-based dispatch and expert parallelism.
+
+Design (DESIGN.md §4): experts are sharded over the `model` axis ("EP over
+TP"). Token activations are replicated across that axis at the block
+boundary, so dispatch needs NO all_to_all: each expert shard gathers the
+tokens routed to its local experts into a static (E_local, C, d) buffer,
+runs dense batched FFNs, scatters back weighted by router probs, and the
+cross-shard combine rides the same psum TP already pays for the FFN output.
+
+Dispatch is gather/scatter-based (sort-free ranking via stable argsort +
+searchsorted), NOT the GShard one-hot dispatch einsum — the einsum form
+inflates FLOPs by O(E) and would poison the compute roofline.
+
+Capacity: C = ceil(T * top_k / E * capacity_factor) tokens per expert
+(static shape); overflow tokens are dropped (their residual path passes
+through), matching standard dropping MoE semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ShardCtx, LOCAL
+from .common import activation, dense_init
+from .linears import linear_apply
+
+Params = Dict
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    scale = 1.0 / jnp.sqrt(d)
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router kept fp32
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) /
+                   jnp.sqrt(f)).astype(dtype),
+    }
+
+
+def _dispatch_ranks(flat_e: jnp.ndarray) -> jnp.ndarray:
+    """rank[i] = how many earlier slots chose the same expert (stable)."""
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(flat_e.shape[0], dtype=jnp.int32) - first
+    return jnp.zeros_like(flat_e).at[order].set(rank_sorted)
+
+
+def capacity(tokens: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = int(-(-tokens * top_k * cf // n_experts))
+    return max(8, c + (-c) % 8)
+
+
+def _as_dense(w, dtype):
+    """Dense (E, d_in, d_out) view; dequantizes LUT expert weights."""
+    if hasattr(w, "dequantize") and not isinstance(w, jnp.ndarray):
+        return w.dequantize(dtype)
+    return w.astype(dtype)
+
+
+def _expert_ffn(x_buf: jnp.ndarray, p: Params, act) -> jnp.ndarray:
+    """(E_loc, C, d) -> (E_loc, C, d) batched SwiGLU over local experts."""
+    g = jnp.einsum("ecd,edf->ecf", x_buf, _as_dense(p["w_gate"], x_buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", x_buf, _as_dense(p["w_up"], x_buf.dtype))
+    h = act(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, _as_dense(p["w_down"], x_buf.dtype))
+
+
+def _moe_local(xf: jnp.ndarray, top_i: jnp.ndarray, top_p: jnp.ndarray,
+               expert_p: Params, act, e0: int, e_loc: int, cap_c: int,
+               col=None, prefix: str = "") -> jnp.ndarray:
+    """Dispatch/FFN/combine for experts [e0, e0+e_loc); xf (T, d).
+
+    Perf note (EXPERIMENTS.md §Perf, qwen3-moe hillclimb): slot->token is
+    `flat_t = arange(T*k) // k`, i.e. CONTIGUOUS k-blocks per token — so the
+    token gather is a broadcast and the combine scatter-add is a
+    reshape+sum over k. Only the slot->capacity-buffer permutation is a
+    genuine scatter/gather.
+    """
+    t_total, d = xf.shape
+    k = top_i.shape[-1]
+    flat_e = top_i.reshape(-1).astype(jnp.int32)           # (T*k,)
+    flat_p = top_p.reshape(-1)
+    rank = _dispatch_ranks(flat_e)
+    valid = ((flat_e >= e0) & (flat_e < e0 + e_loc) & (rank < cap_c))
+    be = jnp.where(valid, flat_e - e0, e_loc)              # trash row e_loc
+    bc = jnp.where(valid, rank, 0)
+    x_slots = jnp.broadcast_to(xf[:, None, :], (t_total, k, d)) \
+        .reshape(t_total * k, d)                           # gather-free
+    buf = jnp.zeros((e_loc + 1, cap_c, d), xf.dtype).at[be, bc].set(x_slots)
+    if col is not None:                                    # PTQ capture
+        for e in range(e_loc):
+            col.add(f"{prefix}expert{e0 + e}", buf[e])
+    out = _expert_ffn(buf[:e_loc], expert_p, act)
+    out = jnp.concatenate([out, jnp.zeros((1, cap_c, d), out.dtype)], axis=0)
+    slot_out = out[be, bc]                                 # (T*k, d)
+    weight = jnp.where(valid, flat_p, 0.0).astype(xf.dtype)[:, None]
+    return (weight * slot_out).reshape(t_total, k, d).sum(axis=1)
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              ctx: ShardCtx = LOCAL, col=None, prefix: str = ""):
+    """Returns (y (B,S,d), aux_loss scalar). Router in fp32."""
+    b, s, d = x.shape
+    t_total = b * s
+    xf = x.reshape(t_total, d)
+    if col is not None:
+        col.add(prefix + "router", xf)
+    logits = (xf.astype(jnp.float32) @ p["router"])        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=0)                           # (E,)
+    ce = jnp.mean(jax.nn.one_hot(top_i[:, 0], cfg.n_experts, dtype=jnp.float32),
+                  axis=0)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+
+    act = activation(cfg.act)
+    if ctx.ep and ctx.mesh is not None and ctx.tp_axis is not None:
+        tp = ctx.mesh.shape[ctx.tp_axis]
+        e_loc = cfg.n_experts // tp
+        # per-shard token count: tokens are sharded over dp only
+        dp_size = 1
+        for a in ctx.dp_axes:
+            dp_size *= ctx.mesh.shape[a]
+        cap_c = capacity(t_total // dp_size, cfg.top_k, cfg.n_experts,
+                         cfg.capacity_factor)
+        dp_spec = ctx.dp
+
+        def shard_fn(xf_l, ti_l, tp_l, wg, wu, wd):
+            e0 = jax.lax.axis_index(ctx.tp_axis) * e_loc
+            y_l = _moe_local(xf_l, ti_l, tp_l,
+                             {"w_gate": wg, "w_up": wu, "w_down": wd},
+                             act, e0, e_loc, cap_c)
+            return jax.lax.psum(y_l, ctx.tp_axis)
+
+        y = shard_map(
+            shard_fn, mesh=ctx.mesh,
+            in_specs=(P(dp_spec, None), P(dp_spec, None), P(dp_spec, None),
+                      P(ctx.tp_axis, None, None), P(ctx.tp_axis, None, None),
+                      P(ctx.tp_axis, None, None)),
+            out_specs=P(dp_spec, None),
+            check_vma=False,
+        )(xf, top_i, top_p.astype(x.dtype), p["w_gate"], p["w_up"], p["w_down"])
+    else:
+        cap_c = capacity(t_total, cfg.top_k, cfg.n_experts, cfg.capacity_factor)
+        y = _moe_local(xf, top_i, top_p.astype(x.dtype),
+                       p, act, 0, cfg.n_experts, cap_c, col, prefix)
+    y = y.reshape(b, s, d)
+    return ctx.constrain(y, "dp", None, None), aux

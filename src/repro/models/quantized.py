@@ -1,0 +1,319 @@
+"""Whole-model PTQ: convert a model's linear weights to GANQ LUT form.
+
+Implements the paper's sequential layer-wise protocol: for each block, H is
+accumulated from calibration activations produced by the ALREADY-QUANTIZED
+prefix, the block's linears are quantized (GANQ / GPTQ / RTN), and the
+quantized block's outputs propagate to the next block.
+
+Quantized set (paper setting): every transformer-block GEMM — attention
+projections, MLP, MoE expert FFNs (per-expert H from *dispatched* tokens),
+RWKV r/k/v/g/o + channel-mix, RG-LRU in/gate/out projections. Kept fp:
+embeddings, lm head, norms, routers, RWKV decay LoRA, RG-LRU gates/conv
+(<1% of params; DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import HCollector, QuantConfig, quantize_linear
+from repro.core.types import QuantizedLinear
+from repro.sharding.context import ShardCtx, LOCAL
+from .common import apply_norm
+from .model import _dtype, _embed
+from .transformer import block_apply, pattern_split
+
+# per-kind quantizable weights: (param subpath, capture name suffix)
+_BLOCK_LINEARS = {
+    "attn": [("attn/wq", "attn/wq"), ("attn/wk", "attn/wk"),
+             ("attn/wv", "attn/wv"), ("attn/wo", "attn/wo")],
+    "mlp": [("mlp/w_gate", "mlp/w_gate"), ("mlp/w_up", "mlp/w_up"),
+            ("mlp/w_down", "mlp/w_down")],
+    "mlp_gelu": [("mlp/w_up", "mlp/w_up"), ("mlp/w_down", "mlp/w_down")],
+    "rwkv": [("tm/wr", "tm/wr"), ("tm/wk", "tm/wk"), ("tm/wv", "tm/wv"),
+             ("tm/wg", "tm/wg"), ("tm/wo", "tm/wo"),
+             ("cm/wk", "cm/wk"), ("cm/wv", "cm/wv"), ("cm/wr", "cm/wr")],
+    "rglru": [("rec/w_in", "rec/w_in"), ("rec/w_gate", "rec/w_gate"),
+              ("rec/w_out", "rec/w_out")],
+}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedExperts:
+    """Stacked per-expert LUT weights: codes (E, m, n[/2]), codebook (E, m, L)."""
+
+    codes: jax.Array
+    codebook: jax.Array
+    bits: int
+    packed: bool = False
+    n_cols: int = 0
+
+    def tree_flatten(self):
+        return (self.codes, self.codebook), (self.bits, self.packed,
+                                             self.n_cols)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bits, packed, n_cols = aux
+        return cls(children[0], children[1], bits, packed, n_cols)
+
+    def dequantize(self, dtype) -> jax.Array:
+        """(E, n, m) dense weights in the einsum layout (x @ w)."""
+        codes = self.codes
+        if self.packed:
+            lo = codes & 0xF
+            hi = codes >> 4
+            codes = jnp.stack([lo, hi], axis=-1).reshape(
+                codes.shape[0], codes.shape[1], -1)[:, :, :self.n_cols]
+        w = jnp.take_along_axis(self.codebook, codes.astype(jnp.int32),
+                                axis=2)                       # (E, m, n)
+        return jnp.swapaxes(w, 1, 2).astype(dtype)
+
+
+def _tree_get(tree, path: str):
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def _tree_set(tree, path: str, value):
+    parts = path.split("/")
+    node = tree
+    for part in parts[:-1]:
+        node = node[part]
+    node[parts[-1]] = value
+
+
+def _quantize_one(w: jnp.ndarray, h: jnp.ndarray, qcfg: QuantConfig,
+                  method: str) -> Tuple[QuantizedLinear, float]:
+    """w is (d_in, d_out) model layout -> GANQ's (m=out, n=in) via transpose."""
+    res = quantize_linear(jnp.asarray(w, jnp.float32).T, h, qcfg, method)
+    return res.layer, float(res.err_history[-1])
+
+
+def block_linear_specs(kind: str, cfg: ModelConfig) -> List[Tuple[str, str]]:
+    specs = []
+    if kind in ("attn", "local"):
+        specs += _BLOCK_LINEARS["attn"]
+        if cfg.n_experts == 0:
+            specs += (_BLOCK_LINEARS["mlp_gelu"] if cfg.act == "gelu"
+                      and cfg.family == "audio" else _BLOCK_LINEARS["mlp"])
+    elif kind == "rwkv":
+        specs += _BLOCK_LINEARS["rwkv"]
+    elif kind == "rglru":
+        specs += _BLOCK_LINEARS["rglru"]
+        specs += (_BLOCK_LINEARS["mlp_gelu"] if cfg.act == "gelu"
+                  and cfg.family == "audio" else _BLOCK_LINEARS["mlp"])
+    return specs
+
+
+def quantize_block(block_params: Dict, kind: str, col: HCollector,
+                   cfg: ModelConfig, qcfg: QuantConfig, method: str,
+                   prefix: str) -> Tuple[Dict, Dict[str, float]]:
+    """Quantize all linears of one block given captured H. Returns
+    (new params, {name: final layer error})."""
+    qp = jax.tree.map(lambda x: x, block_params)  # shallow-ish copy
+    report: Dict[str, float] = {}
+    for path, capname in block_linear_specs(kind, cfg):
+        w = _tree_get(block_params, path)
+        h = col.get(prefix + capname)
+        layer, err = _quantize_one(w, h, qcfg, method)
+        _tree_set(qp, path, layer)
+        report[prefix + capname] = err
+    # MoE experts: per-expert H from dispatched tokens
+    if "moe" in block_params:
+        moe = block_params["moe"]
+        e = cfg.n_experts
+        qlayers = {"w_gate": [], "w_up": [], "w_down": []}
+        for ei in range(e):
+            h_in = col.get(f"{prefix}moe/expert{ei}")
+            for wname in ("w_gate", "w_up"):
+                res = quantize_linear(
+                    jnp.asarray(moe[wname][ei], jnp.float32).T, h_in, qcfg,
+                    method)
+                qlayers[wname].append(res.layer)
+            # w_down input = hidden activations; approximate H with identity-
+            # free capture: use the gate/up output Gram is not captured —
+            # use weight-space (H=I) for w_down (documented approximation)
+            hid = moe["w_down"].shape[1]
+            res = quantize_linear(
+                jnp.asarray(moe["w_down"][ei], jnp.float32).T,
+                jnp.eye(hid, dtype=jnp.float32), qcfg, method)
+            qlayers["w_down"].append(res.layer)
+        for wname, layers in qlayers.items():
+            codes = jnp.stack([l.codes for l in layers])
+            books = jnp.stack([l.codebook for l in layers])
+            qp["moe"][wname] = QuantizedExperts(codes, books, qcfg.bits)
+        report[prefix + "moe/experts"] = float("nan")
+    return qp, report
+
+
+def quantize_model_ptq(params: Dict, cfg: ModelConfig, batch: Dict,
+                       qcfg: QuantConfig, method: str = "ganq",
+                       ctx: ShardCtx = LOCAL):
+    """Sequential layer-wise PTQ for decoder-only stacks.
+
+    batch: calibration inputs (same format as train batches).
+    Returns (quantized params, per-linear error report).
+    """
+    if cfg.is_encoder_decoder:
+        return quantize_whisper_oneshot(params, cfg, batch, qcfg, method, ctx)
+    cd = _dtype(cfg.compute_dtype)
+    pattern, n_units, _ = pattern_split(cfg)
+    if cfg.frontend == "patches":
+        x = batch["embeds"].astype(cd)
+        positions = batch["positions"]
+    else:
+        x = _embed(params, batch["tokens"], cfg, cd)
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+
+    report: Dict[str, float] = {}
+    new_units: List[List[Dict]] = [[] for _ in pattern]
+    new_tail: List[Dict] = []
+    li = 0
+    for u in range(n_units):
+        for pos_i, kind in enumerate(pattern):
+            blk = jax.tree.map(lambda a, u=u: a[u],
+                               params["stack"]["units"][pos_i])
+            col = HCollector()
+            block_apply(kind, blk, x, positions, cfg, ctx, col,
+                        prefix=f"layer{li}/")
+            qblk, rep = quantize_block(blk, kind, col, cfg, qcfg, method,
+                                       f"layer{li}/")
+            report.update(rep)
+            x, _, _ = block_apply(kind, qblk, x, positions, cfg, ctx)
+            new_units[pos_i].append(qblk)
+            li += 1
+    for i, blk in enumerate(params["stack"]["tail"]):
+        kind = pattern[i]
+        col = HCollector()
+        block_apply(kind, blk, x, positions, cfg, ctx, col,
+                    prefix=f"layer{li}/")
+        qblk, rep = quantize_block(blk, kind, col, cfg, qcfg, method,
+                                   f"layer{li}/")
+        report.update(rep)
+        x, _, _ = block_apply(kind, qblk, x, positions, cfg, ctx)
+        new_tail.append(qblk)
+        li += 1
+
+    qparams = dict(params)
+    qparams["stack"] = {
+        "units": [jax.tree.map(lambda *xs: jnp.stack(xs), *us) if us else None
+                  for us in new_units],
+        "tail": new_tail,
+    }
+    return qparams, report
+
+
+def quantize_whisper_oneshot(params: Dict, cfg: ModelConfig, batch: Dict,
+                             qcfg: QuantConfig, method: str,
+                             ctx: ShardCtx = LOCAL):
+    """One-pass capture for the enc-dec stacks (H from the fp model)."""
+    from .model import forward_logits
+    col = HCollector()
+    forward_logits(params, batch, cfg, ctx, col=col)
+    report: Dict[str, float] = {}
+    qparams = jax.tree.map(lambda x: x, params)
+    stacks = params["stacks"]
+    for side, n in (("enc", cfg.n_encoder_layers), ("dec", cfg.n_layers)):
+        qlayers = []
+        for i in range(n):
+            blk = jax.tree.map(lambda a, i=i: a[i], stacks[side])
+            specs = [("attn/wq", "attn/wq"), ("attn/wk", "attn/wk"),
+                     ("attn/wv", "attn/wv"), ("attn/wo", "attn/wo"),
+                     ("mlp/w_up", "mlp/w_up"), ("mlp/w_down", "mlp/w_down")]
+            if side == "dec":
+                specs += [("xattn/wq", "xattn/wq"), ("xattn/wk", "xattn/wk"),
+                          ("xattn/wv", "xattn/wv"), ("xattn/wo", "xattn/wo")]
+            qblk = jax.tree.map(lambda x: x, blk)
+            for path, capname in specs:
+                w = _tree_get(blk, path)
+                h = col.get(f"{side}{i}/{capname}")
+                layer, err = _quantize_one(w, h, qcfg, method)
+                _tree_set(qblk, path, layer)
+                report[f"{side}{i}/{capname}"] = err
+            qlayers.append(qblk)
+        qparams["stacks"][side] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                               *qlayers)
+    return qparams, report
+
+
+_QUANT_2D = ("attn/wq", "attn/wk", "attn/wv", "attn/wo", "xattn/wq",
+             "xattn/wk", "xattn/wv", "xattn/wo", "mlp/w_gate", "mlp/w_up",
+             "mlp/w_down", "tm/wr", "tm/wk", "tm/wv", "tm/wg", "tm/wo",
+             "cm/wk", "cm/wv", "cm/wr", "rec/w_in", "rec/w_gate",
+             "rec/w_out")
+_QUANT_MOE = ("moe/w_gate", "moe/w_up", "moe/w_down")
+
+
+def abstract_quantize(params_sds: Dict, cfg: ModelConfig, bits: int = 4,
+                      packed: bool = True,
+                      book_dtype=jnp.bfloat16) -> Dict:
+    """ShapeDtypeStruct transform: dense linears -> LUT-quantized containers
+    (no allocation — the dry-run's quantized-serving variant)."""
+    levels = 1 << bits
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v, f"{prefix}{i}/") for i, v in enumerate(node)]
+            return type(node)(t) if isinstance(node, tuple) else t
+        if node is None:
+            return None
+        path = prefix.rstrip("/")
+        shape = node.shape
+        if any(q in path for q in _QUANT_MOE) and len(shape) >= 3:
+            *lead, e, din, dout = shape
+            nc = (din + 1) // 2 if packed else din
+            return QuantizedExperts(
+                codes=jax.ShapeDtypeStruct((*lead, e, dout, nc), jnp.uint8),
+                codebook=jax.ShapeDtypeStruct((*lead, e, dout, levels),
+                                              book_dtype),
+                bits=bits, packed=packed, n_cols=din)
+        if any(q in path for q in _QUANT_2D) and len(shape) >= 2:
+            *lead, din, dout = shape
+            nc = (din + 1) // 2 if packed else din
+            return QuantizedLinear(
+                codes=jax.ShapeDtypeStruct((*lead, dout, nc), jnp.uint8),
+                codebook=jax.ShapeDtypeStruct((*lead, dout, levels),
+                                              book_dtype),
+                bits=bits, packed=packed, n_cols=din)
+        return node
+
+    return walk(params_sds, "")
+
+
+def model_storage_report(qparams: Dict) -> Dict[str, float]:
+    """Aggregate bits/weight over all quantized leaves."""
+    total_w = 0
+    total_bits = 0.0
+    def visit(node):
+        nonlocal total_w, total_bits
+        if isinstance(node, (QuantizedLinear, QuantizedExperts)):
+            shape = node.codes.shape          # (possibly unit-stacked)
+            lead = 1
+            for d in shape[:-1]:
+                lead *= d
+            n = node.n_cols if node.packed else shape[-1]
+            count = lead * n
+            levels = node.codebook.shape[-1]
+            total_w += count
+            total_bits += node.bits * count + 16 * lead * levels
+            if isinstance(node, QuantizedLinear) and node.sparse_val is not None:
+                total_bits += node.sparse_val.size * (16 + 32)
+    jax.tree.map(visit, qparams,
+                 is_leaf=lambda x: isinstance(x, (QuantizedLinear,
+                                                  QuantizedExperts)))
+    return {"quantized_weights": total_w,
+            "bits_per_weight": total_bits / max(total_w, 1)}

@@ -1,0 +1,119 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block structure (Griffin Fig. 2): input -> two branches
+  (a) gate branch:      x @ W_gate -> GeLU
+  (b) recurrent branch: x @ W_in -> causal depthwise conv1d -> RG-LRU
+then elementwise product, then @ W_out.
+
+RG-LRU recurrence (Griffin eq. 1-4), per channel:
+  r_t = sigmoid(x_t @ W_a);  i_t = sigmoid(x_t @ W_x)
+  log a_t = -c * softplus(Lambda) * r_t            (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the linear recurrence with an associative scan
+(log-depth on TPU); decode is the O(1) single-step update — this is why
+recurrentgemma runs the long_500k cell. Gates W_a/W_x are full linears
+(quantizable; the reference uses block-diagonal — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ShardCtx, LOCAL
+from .common import dense_init
+from .linears import linear_apply
+
+Params = Dict
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> Params:
+    d, r = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so a^c spans ~(0.9, 0.999) as in the paper
+    lam = jax.random.uniform(ks[5], (r,), minval=0.9, maxval=0.999)
+    lam_param = jnp.log(jnp.expm1(-jnp.log(lam) / _C))  # inverse softplus
+    return {
+        "w_in": dense_init(ks[0], d, r, dtype),
+        "w_gate": dense_init(ks[1], d, r, dtype),
+        "w_out": dense_init(ks[2], r, d, dtype),
+        "w_a": dense_init(ks[3], r, r, dtype),
+        "w_x": dense_init(ks[4], r, r, dtype),
+        "lam": lam_param.astype(jnp.float32),
+        "conv_w": (jax.random.normal(ks[6], (cfg.conv_width, r)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((r,), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d. x (B,S,r), w (cw,r), state (B,cw-1,r) holds
+    the trailing inputs of the previous segment. Returns (y, new_state)."""
+    cw = w.shape[0]
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(cw))
+    new_state = xp[:, -(cw - 1):, :] if cw > 1 else state
+    return y + b[None, None, :], new_state
+
+
+def _rglru_gates(p: Params, x: jnp.ndarray):
+    """x (B,S,r) -> (log_a, beta*gated_input) for the linear recurrence."""
+    rt = jax.nn.sigmoid(linear_apply(p["w_a"], x)).astype(jnp.float32)
+    it = jax.nn.sigmoid(linear_apply(p["w_x"], x)).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * rt              # (B,S,r)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12))
+    return a, beta * it * x.astype(jnp.float32)
+
+
+def rglru_scan(p: Params, x: jnp.ndarray, h0: jnp.ndarray):
+    """Associative-scan evaluation of h_t = a_t h_{t-1} + b_t; h0 (B,r)."""
+    a, b = _rglru_gates(p, x)
+    # fold h0 into the first step: b_0 <- b_0 + a_0 * h0
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(p: Params, x1: jnp.ndarray, h_prev: jnp.ndarray):
+    """Single decode step; x1 (B,1,r), h_prev (B,r)."""
+    a, b = _rglru_gates(p, x1)
+    h = a[:, 0] * h_prev.astype(jnp.float32) + b[:, 0]
+    return h[:, None, :].astype(x1.dtype), h
+
+
+def rglru_block(p: Params, x: jnp.ndarray, state: Dict, cfg: ModelConfig,
+                ctx: ShardCtx = LOCAL, col=None, prefix: str = "",
+                decode: bool = False):
+    """Full recurrent block. state = {conv (B,cw-1,r), h (B,r)}."""
+    gate = jax.nn.gelu(linear_apply(p["w_gate"], x, col, prefix + "w_gate"))
+    u = linear_apply(p["w_in"], x, col, prefix + "w_in")
+    u = ctx.constrain(u, "dp", None, ctx.tp_axis)
+    u, conv_state = _causal_conv(u, p["conv_w"].astype(u.dtype),
+                                 p["conv_b"].astype(u.dtype), state["conv"])
+    if decode:
+        h_seq, h_last = rglru_step(p, u, state["h"])
+    else:
+        h_seq, h_last = rglru_scan(p, u, state["h"])
+    y = h_seq * gate
+    out = linear_apply(p["w_out"], y, col, prefix + "w_out")
+    out = ctx.constrain(out, "dp", None, None)
+    return out, {"conv": conv_state, "h": h_last}
+
+
+def init_rglru_state(batch: int, cfg: ModelConfig, dtype) -> Dict:
+    r = cfg.lru_width
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+            "h": jnp.zeros((batch, r), jnp.float32)}

@@ -1,0 +1,179 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Semantics (per head, head_size hs; i indexes key-channels, j value-channels):
+
+    y_t[j]   = sum_i r_t[i] * ( S_t[i,j] + u[i] * k_t[i] * v_t[j] )
+    S_{t+1}  = diag(w_t) S_t + k_t v_t^T,      w_t in (0, 1) data-dependent
+
+Training/prefill uses a chunked parallel form (within-chunk attention-like
+matmuls + cross-chunk state carry), the standard TPU-friendly linear-
+attention evaluation: MXU-dense within chunks, one (hs x hs) state update
+per chunk. Decode is the single-step recurrence on a cached state —
+O(1) per token, which is why rwkv6 runs the long_500k cell.
+
+The decay w_t follows Finch: w_t = exp(-exp(w0 + tanh(x W_a) W_b)) with a
+low-rank (LoRA-style) data-dependent part; token-shift interpolation uses
+static per-channel mu (the small LoRA mixers of the reference impl are
+folded into mu — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ShardCtx, LOCAL
+from .common import dense_init
+from .linears import linear_apply
+
+Params = Dict
+LORA_RANK = 64
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    ks = jax.random.split(key, 9)
+    return {
+        "wr": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wg": dense_init(ks[3], d, d, dtype),
+        "wo": dense_init(ks[4], d, d, dtype),
+        "mu": (jax.random.uniform(ks[5], (4, d)) * 0.5).astype(dtype),
+        "decay_w0": jnp.zeros((d,), jnp.float32) + 0.5,
+        "decay_a": dense_init(ks[6], d, LORA_RANK, jnp.float32),
+        "decay_b": dense_init(ks[7], LORA_RANK, d, jnp.float32),
+        "bonus_u": (jax.random.normal(ks[8], (d,)) * 0.1).astype(jnp.float32),
+    }
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "wk": dense_init(ks[0], d, f, dtype),
+        "wv": dense_init(ks[1], f, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+        "mu": (jax.random.uniform(ks[3], (2, d)) * 0.5).astype(dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+    """(B,S,d) -> previous-token stream; prev (B,d) seeds position -1."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _decay(p: Params, xw: jnp.ndarray) -> jnp.ndarray:
+    """w_t in (0,1): exp(-exp(...)), Finch eq.
+
+    The upper clip bounds -log(w) <= e^0.05 ~ 1.05 per step so that the
+    chunked evaluation's exp(-cumsum(log w)) stays < e^{1.05*chunk} — safely
+    inside fp32 for chunk <= 64 (see _wkv_chunk factorization).
+    """
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_a"]) @ p["decay_b"]
+    log_neg = p["decay_w0"] + lora
+    return jnp.exp(-jnp.exp(jnp.clip(log_neg, -8.0, 0.05)))
+
+
+def _wkv_chunk(r, k, v, w, u, s0):
+    """One chunk of the recurrence, parallel within-chunk.
+
+    r,k,v,w: (B,C,H,hs) — w is the decay; u: (H,hs); s0: (B,H,hs,hs).
+    Returns (y (B,C,H,hs), s_next).
+    """
+    bsz, c, h, hs = r.shape
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-8))
+    clog = jnp.cumsum(logw, axis=1)                     # c_t = prod_{u<=t} w_u
+    c_prev = jnp.concatenate([jnp.zeros_like(clog[:, :1]), clog[:, :-1]],
+                             axis=1)                    # c_{t-1}, c_0 = 1
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # within-chunk: A[t,s] = (r_t * c_{t-1}/c_s) . k_s  for s < t; diag u-term
+    r_dec = rf * jnp.exp(c_prev)                        # (B,C,H,hs)
+    k_dec = kf * jnp.exp(-clog)
+    scores = jnp.einsum("bthi,bshi->bhts", r_dec, k_dec)
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    scores = jnp.where(tri[None, None], scores, 0.0)
+    diag = jnp.einsum("bthi,bthi->bth", rf * u[None, None], kf)
+    y = jnp.einsum("bhts,bshj->bthj", scores, vf)
+    y += diag[..., None] * vf
+    # cross-chunk: contribution of the carried state
+    y += jnp.einsum("bthi,bhij->bthj", r_dec, s0)
+    # state update to end of chunk
+    k_tail = kf * jnp.exp(clog[:, -1:, :, :] - clog)    # prod_{u=s+1}^{C} w
+    s_next = s0 * jnp.exp(clog[:, -1])[..., None] + \
+        jnp.einsum("bshi,bshj->bhij", k_tail, vf)
+    return y.astype(r.dtype), s_next
+
+
+def rwkv_time_mix(p: Params, x: jnp.ndarray, state: Tuple, cfg: ModelConfig,
+                  ctx: ShardCtx = LOCAL, col=None, prefix: str = "",
+                  chunk: int = 64):
+    """x (B,S,d); state = (shift (B,d), wkv (B,H,hs,hs)). Returns y, state."""
+    b, s, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    shift_prev, s0 = state
+    xx = _token_shift(x, shift_prev)
+    mu = p["mu"]
+    xr, xk, xv, xg = (_lerp(x, xx, mu[i]) for i in range(4))
+    r = linear_apply(p["wr"], xr, col, prefix + "wr")
+    k = linear_apply(p["wk"], xk, col, prefix + "wk")
+    v = linear_apply(p["wv"], xv, col, prefix + "wv")
+    g = jax.nn.silu(linear_apply(p["wg"], xg, col, prefix + "wg"))
+    w = _decay(p, xk)
+    to_h = lambda t: t.reshape(b, s, h, hs)
+    u = p["bonus_u"].reshape(h, hs)
+
+    cs = min(chunk, s)
+    if s % cs:
+        cs = s  # fall back to one chunk for ragged tiny shapes
+    n_chunks = s // cs
+    rc, kc, vc, wc = (to_h(t).reshape(b, n_chunks, cs, h, hs)
+                      .transpose(1, 0, 2, 3, 4) for t in (r, k, v, w))
+
+    def body(s_carry, args):
+        ri, ki, vi, wi = args
+        y, s_carry = _wkv_chunk(ri, ki, vi, wi, u, s_carry)
+        return s_carry, y
+
+    s_out, ys = jax.lax.scan(body, s0.astype(jnp.float32), (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, d)
+    y = y * g
+    out = linear_apply(p["wo"], y, col, prefix + "wo")
+    out = ctx.constrain(out, "dp", None, None)
+    return out, (x[:, -1, :], s_out)
+
+
+def rwkv_channel_mix(p: Params, x: jnp.ndarray, shift_prev: jnp.ndarray,
+                     cfg: ModelConfig, ctx: ShardCtx = LOCAL, col=None,
+                     prefix: str = ""):
+    xx = _token_shift(x, shift_prev)
+    mu = p["mu"]
+    xk = _lerp(x, xx, mu[0])
+    xr = _lerp(x, xx, mu[1])
+    k = jnp.square(jax.nn.relu(linear_apply(p["wk"], xk, col, prefix + "wk")))
+    k = ctx.constrain(k, "dp", None, ctx.tp_axis)
+    kv = linear_apply(p["wv"], k, col, prefix + "wv")
+    r = jax.nn.sigmoid(linear_apply(p["wr"], xr, col, prefix + "wr"))
+    y = r * kv
+    return ctx.constrain(y, "dp", None, None), x[:, -1, :]
+
+
+def init_rwkv_state(batch: int, cfg: ModelConfig, dtype) -> Tuple:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    return {
+        "tm_shift": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, hs, hs), jnp.float32),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+    }

@@ -1,0 +1,270 @@
+"""Decoder-stack assembly: pattern-unit layer stacking with scan.
+
+Heterogeneous layer patterns (gemma3's 5 local : 1 global, recurrentgemma's
+2 RG-LRU : 1 local-attn) are stacked as repeating *pattern units*: params of
+each position in the unit are stacked across the n_layers//P repeats and the
+stack is evaluated with one `lax.scan` (compile-time O(P), not O(L)).
+Remainder layers (n_layers % P) are applied unrolled.
+
+Capture mode (PTQ H collection) iterates layers unrolled — calibration
+models are small and the collector is a Python-side accumulator.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ShardCtx, LOCAL
+from .attention import (attention_block, attention_decode_block, init_attention,
+                        init_cache)
+from .common import init_norm, apply_norm
+from .mlp import init_mlp, mlp_apply
+from .moe import init_moe, moe_apply
+from .rglru import init_rglru, init_rglru_state, rglru_block
+from .rwkv6 import (init_rwkv_channel_mix, init_rwkv_state, init_rwkv_time_mix,
+                    rwkv_channel_mix, rwkv_time_mix)
+
+Params = Dict
+
+
+# ----------------------------------------------------------------- one block
+
+def init_block(key, kind: str, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn", "local"):
+        p = {"ln1": init_norm(d, cfg.norm, dtype),
+             "attn": init_attention(ks[0], cfg, dtype),
+             "ln2": init_norm(d, cfg.norm, dtype)}
+        if cfg.n_experts:
+            p["moe"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg, dtype)
+        return p
+    if kind == "rwkv":
+        return {"ln1": init_norm(d, cfg.norm, dtype),
+                "tm": init_rwkv_time_mix(ks[0], cfg, dtype),
+                "ln2": init_norm(d, cfg.norm, dtype),
+                "cm": init_rwkv_channel_mix(ks[1], cfg, dtype)}
+    if kind == "rglru":
+        return {"ln1": init_norm(d, cfg.norm, dtype),
+                "rec": init_rglru(ks[0], cfg, dtype),
+                "ln2": init_norm(d, cfg.norm, dtype),
+                "mlp": init_mlp(ks[1], cfg, dtype)}
+    raise ValueError(kind)
+
+
+def _ffn(p, x, cfg, ctx, col, prefix):
+    if "moe" in p:
+        return moe_apply(p["moe"], x, cfg, ctx, col, prefix + "moe/")
+    return mlp_apply(p["mlp"], x, cfg, ctx, col, prefix + "mlp/"), 0.0
+
+
+def block_apply(kind: str, p: Params, x, positions, cfg: ModelConfig,
+                ctx: ShardCtx = LOCAL, col=None, prefix: str = "",
+                chunk: Optional[int] = 8192):
+    """Train/prefill forward. Returns (x, aux, kv) — kv only for attn kinds."""
+    aux = 0.0
+    if kind in ("attn", "local"):
+        h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, kv = attention_block(p["attn"], h, positions, cfg, kind, ctx, col,
+                                prefix + "attn/", chunk)
+        x = x + a
+        h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        f, aux = _ffn(p, h, cfg, ctx, col, prefix)
+        return x + f, aux, kv
+    if kind == "rwkv":
+        b = x.shape[0]
+        st = init_rwkv_state(b, cfg, x.dtype)
+        h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, (tm_shift, wkv) = rwkv_time_mix(
+            p["tm"], h, (st["tm_shift"], st["wkv"]), cfg, ctx, col,
+            prefix + "tm/")
+        x = x + a
+        h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        c, cm_shift = rwkv_channel_mix(p["cm"], h, st["cm_shift"], cfg, ctx,
+                                       col, prefix + "cm/")
+        return x + c, aux, {"tm_shift": tm_shift, "wkv": wkv,
+                            "cm_shift": cm_shift}
+    if kind == "rglru":
+        b = x.shape[0]
+        st = init_rglru_state(b, cfg, x.dtype)
+        h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, rec_state = rglru_block(p["rec"], h, st, cfg, ctx, col,
+                                   prefix + "rec/")
+        x = x + a
+        h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        f, aux = _ffn(p, h, cfg, ctx, col, prefix)
+        return x + f, aux, rec_state
+    raise ValueError(kind)
+
+
+def block_decode(kind: str, p: Params, x, pos, cache, cfg: ModelConfig,
+                 ctx: ShardCtx = LOCAL):
+    """One-token decode. cache is this layer's state; returns (x, cache)."""
+    if kind in ("attn", "local"):
+        h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, cache = attention_decode_block(p["attn"], h, pos, cache, cfg, kind,
+                                          ctx)
+        x = x + a
+        h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        f, _ = _ffn(p, h, cfg, ctx, None, "")
+        return x + f, cache
+    if kind == "rwkv":
+        h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, (tm_shift, wkv) = rwkv_time_mix(
+            p["tm"], h, (cache["tm_shift"], cache["wkv"]), cfg, ctx)
+        x = x + a
+        h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        c, cm_shift = rwkv_channel_mix(p["cm"], h, cache["cm_shift"], cfg, ctx)
+        return x + c, {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
+    if kind == "rglru":
+        h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, rec_state = rglru_block(p["rec"], h, cache, cfg, ctx, decode=True)
+        x = x + a
+        h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        f, _ = _ffn(p, h, cfg, ctx, None, "")
+        return x + f, rec_state
+    raise ValueError(kind)
+
+
+def init_layer_cache(kind: str, batch: int, cache_len: int, cfg: ModelConfig,
+                     dtype):
+    if kind == "attn":
+        return init_cache(batch, cache_len, cfg, dtype)
+    if kind == "local":
+        return init_cache(batch, min(cache_len, cfg.sliding_window), cfg,
+                          dtype)
+    if kind == "rwkv":
+        return init_rwkv_state(batch, cfg, dtype)
+    if kind == "rglru":
+        return init_rglru_state(batch, cfg, dtype)
+    raise ValueError(kind)
+
+
+# -------------------------------------------------------------------- stacks
+
+def pattern_split(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, int]:
+    """(pattern, n_units, n_tail)."""
+    p = cfg.layer_pattern
+    return p, cfg.n_layers // len(p), cfg.n_layers % len(p)
+
+
+def init_stack(key, cfg: ModelConfig, dtype) -> Params:
+    pattern, n_units, n_tail = pattern_split(cfg)
+    keys = jax.random.split(key, cfg.n_layers)
+    layers: List[Params] = [init_block(keys[i], cfg.layer_kinds[i], cfg, dtype)
+                            for i in range(cfg.n_layers)]
+    units = []
+    for pos in range(len(pattern)):
+        per_pos = [layers[u * len(pattern) + pos] for u in range(n_units)]
+        units.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_pos)
+                     if n_units else None)
+    tail = layers[n_units * len(pattern):]
+    return {"units": units, "tail": tail}
+
+
+def stack_apply(params: Params, x, positions, cfg: ModelConfig,
+                ctx: ShardCtx = LOCAL, col=None,
+                chunk: Optional[int] = 8192, collect_state: bool = False,
+                remat: str = "none"):
+    """Forward through all layers (training / logits path). Returns (x, aux)
+    — or (x, aux, states) with collect_state=True (prefill: fresh K/V and
+    recurrent states per layer, unit-stacked).
+
+    remat: 'none' | 'full' | 'dots' — activation checkpointing of the unit
+    scan body (training memory knob; see EXPERIMENTS.md §Perf).
+    Capture mode (col != None) runs unrolled.
+    """
+    pattern, n_units, _ = pattern_split(cfg)
+
+    if col is not None:
+        aux = 0.0
+        li = 0
+        for u in range(n_units):
+            for pos, kind in enumerate(pattern):
+                p = jax.tree.map(lambda a, u=u: a[u], params["units"][pos])
+                x, a, _ = block_apply(kind, p, x, positions, cfg, ctx, col,
+                                      prefix=f"layer{li}/", chunk=chunk)
+                aux += a
+                li += 1
+        for i, p in enumerate(params["tail"]):
+            x, a, _ = block_apply(pattern[i], p, x, positions, cfg, ctx, col,
+                                  prefix=f"layer{li}/", chunk=chunk)
+            aux += a
+            li += 1
+        return x, aux
+
+    collected = None
+    if n_units:
+        def body(carry, unit_params):
+            h, aux = carry
+            states = []
+            for pos, kind in enumerate(pattern):
+                h, a, st = block_apply(kind, unit_params[pos], h, positions,
+                                       cfg, ctx, None, chunk=chunk)
+                states.append(st)
+                aux += a
+            return (h, aux), tuple(states) if collect_state else None
+
+        if remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, prevent_cse=False,
+                policy=jax.checkpoint_policies.checkpoint_dots)
+        (x, aux), collected = jax.lax.scan(body, (x, 0.0),
+                                           tuple(params["units"]))
+    else:
+        aux = 0.0
+    tail_states = []
+    for i, p in enumerate(params["tail"]):
+        x, a, st = block_apply(pattern[i], p, x, positions, cfg, ctx, None,
+                               chunk=chunk)
+        tail_states.append(st)
+        aux += a
+    if collect_state:
+        return x, aux, {"units": list(collected) if collected else [],
+                        "tail": tail_states}
+    return x, aux
+
+
+def init_stack_cache(batch: int, cache_len: int, cfg: ModelConfig, dtype):
+    pattern, n_units, n_tail = pattern_split(cfg)
+    units = []
+    for pos, kind in enumerate(pattern):
+        per = [init_layer_cache(kind, batch, cache_len, cfg, dtype)
+               for _ in range(n_units)]
+        units.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+                     if n_units else None)
+    tail = [init_layer_cache(pattern[i], batch, cache_len, cfg, dtype)
+            for i in range(n_tail)]
+    return {"units": units, "tail": tail}
+
+
+def stack_decode(params: Params, cache: Params, x, pos, cfg: ModelConfig,
+                 ctx: ShardCtx = LOCAL):
+    """One-token decode through all layers. Returns (x, new_cache)."""
+    pattern, n_units, _ = pattern_split(cfg)
+    new_units = []
+    if n_units:
+        def body(h, xs):
+            unit_params, unit_cache = xs
+            new_caches = []
+            for p_i, kind in enumerate(pattern):
+                h, c = block_decode(kind, unit_params[p_i], h, pos,
+                                    unit_cache[p_i], cfg, ctx)
+                new_caches.append(c)
+            return h, tuple(new_caches)
+
+        x, caches = jax.lax.scan(
+            body, x, (tuple(params["units"]), tuple(cache["units"])))
+        new_units = list(caches)
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        x, c = block_decode(pattern[i], p, x, pos, cache["tail"][i], cfg, ctx)
+        new_tail.append(c)
+    return x, {"units": new_units, "tail": new_tail}

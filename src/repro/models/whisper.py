@@ -1,0 +1,171 @@
+"""Whisper-style encoder-decoder backbone (conv frontend is a STUB).
+
+Per the assignment, the modality frontend is stubbed: `input_specs()`
+provides precomputed mel-frame embeddings (B, S_enc, d_model) in place of
+the two conv layers. Encoder: bidirectional attention + GELU MLP,
+sinusoidal positions, LayerNorm. Decoder: causal self-attention +
+cross-attention + GELU MLP. No RoPE (absolute positions).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ShardCtx, LOCAL
+from .attention import (attend_full, attention_decode_block,
+                        cross_attention_block, encode_cross_kv, init_attention,
+                        init_cache, attention_block)
+from .common import apply_norm, init_norm, sinusoidal_positions
+from .mlp import init_mlp, mlp_apply
+
+Params = Dict
+
+
+def init_enc_layer(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm, dtype),
+            "attn": init_attention(ks[0], cfg, dtype),
+            "ln2": init_norm(cfg.d_model, cfg.norm, dtype),
+            "mlp": init_mlp(ks[1], cfg, dtype)}
+
+
+def init_dec_layer(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm, dtype),
+            "attn": init_attention(ks[0], cfg, dtype),
+            "ln_x": init_norm(cfg.d_model, cfg.norm, dtype),
+            "xattn": init_attention(ks[1], cfg, dtype, cross=True),
+            "ln2": init_norm(cfg.d_model, cfg.norm, dtype),
+            "mlp": init_mlp(ks[2], cfg, dtype)}
+
+
+def init_whisper_stacks(key, cfg: ModelConfig, dtype) -> Params:
+    ke, kd = jax.random.split(key)
+    enc = [init_enc_layer(k, cfg, dtype)
+           for k in jax.random.split(ke, cfg.n_encoder_layers)]
+    dec = [init_dec_layer(k, cfg, dtype)
+           for k in jax.random.split(kd, cfg.n_layers)]
+    stack = lambda ls: jax.tree.map(lambda *xs: jnp.stack(xs), *ls)
+    return {"enc": stack(enc), "dec": stack(dec),
+            "enc_ln": init_norm(cfg.d_model, cfg.norm, dtype),
+            "dec_ln": init_norm(cfg.d_model, cfg.norm, dtype)}
+
+
+def _enc_layer_apply(p, x, cfg, ctx, col, prefix, chunk):
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    from .attention import project_q, project_kv  # bidirectional attention
+    q = project_q(p["attn"], h, positions, cfg, ctx, col, prefix + "attn/",
+                  rope=False)
+    k, v = project_kv(p["attn"], h, positions, cfg, ctx, col,
+                      prefix + "attn/", rope=False)
+    o = attend_full(q, k, v, jnp.arange(s), jnp.arange(s), "none", 0, chunk)
+    o = o.reshape(b, s, cfg.q_dim)
+    from .linears import linear_apply
+    x = x + ctx.constrain(linear_apply(p["attn"]["wo"], o, col,
+                                       prefix + "attn/wo"), "dp", None, None)
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    return x + mlp_apply(p["mlp"], h, cfg, ctx, col, prefix + "mlp/")
+
+
+def encode(params, frames: jnp.ndarray, cfg: ModelConfig,
+           ctx: ShardCtx = LOCAL, col=None, chunk: Optional[int] = 8192):
+    """frames: precomputed (B, S_enc, d) stub embeddings -> encoder output."""
+    b, s, d = frames.shape
+    x = frames + sinusoidal_positions(s, d).astype(frames.dtype)[None]
+    if col is not None:
+        for i in range(cfg.n_encoder_layers):
+            p = jax.tree.map(lambda a, i=i: a[i], params["enc"])
+            x = _enc_layer_apply(p, x, cfg, ctx, col, f"enc{i}/", chunk)
+    else:
+        def body(h, p):
+            return _enc_layer_apply(p, h, cfg, ctx, None, "", chunk), None
+        x, _ = jax.lax.scan(body, x, params["enc"])
+    return apply_norm(params["enc_ln"], x, cfg.norm, cfg.norm_eps)
+
+
+def _dec_layer_apply(p, x, enc_out, cfg, ctx, col, prefix, chunk):
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    a, _ = attention_block(p["attn"], h, positions, cfg, "attn", ctx, col,
+                           prefix + "attn/", chunk)
+    x = x + a
+    h = apply_norm(p["ln_x"], x, cfg.norm, cfg.norm_eps)
+    enc_kv = encode_cross_kv(p["xattn"], enc_out, cfg, ctx, col,
+                             prefix + "xattn/")
+    x = x + cross_attention_block(p["xattn"], h, enc_kv, cfg, ctx, col,
+                                  prefix + "xattn/")
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    return x + mlp_apply(p["mlp"], h, cfg, ctx, col, prefix + "mlp/")
+
+
+def decode_train(params, tok_emb: jnp.ndarray, enc_out: jnp.ndarray,
+                 cfg: ModelConfig, ctx: ShardCtx = LOCAL, col=None,
+                 chunk: Optional[int] = 8192):
+    """Teacher-forced decoder pass; tok_emb (B, S_dec, d)."""
+    b, s, d = tok_emb.shape
+    x = tok_emb + sinusoidal_positions(s, d).astype(tok_emb.dtype)[None]
+    if col is not None:
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a, i=i: a[i], params["dec"])
+            x = _dec_layer_apply(p, x, enc_out, cfg, ctx, col, f"dec{i}/",
+                                 chunk)
+    else:
+        def body(h, p):
+            return _dec_layer_apply(p, h, enc_out, cfg, ctx, None, "",
+                                    chunk), None
+        x, _ = jax.lax.scan(body, x, params["dec"])
+    return apply_norm(params["dec_ln"], x, cfg.norm, cfg.norm_eps)
+
+
+# ------------------------------------------------------------------- serving
+
+def init_whisper_cache(params, batch: int, cache_len: int, enc_out,
+                       cfg: ModelConfig, dtype):
+    """Self-attn ring caches + precomputed cross K/V per decoder layer.
+
+    Cross K/V is stored under "k"/"v" dict keys so the serve sharding rules
+    (launch/steps.py) shard it like every other cache (batch over DP, heads
+    over TP) — as a bare tuple it silently replicated 400+ GB/device.
+    """
+    def per_layer(p):
+        k, v = encode_cross_kv(p["xattn"], enc_out, cfg)
+        return {"k": k, "v": v}
+    cross = jax.vmap(per_layer, in_axes=(0,))(params["dec"]) \
+        if cfg.n_layers else None
+    self_caches = [init_cache(batch, cache_len, cfg, dtype)
+                   for _ in range(cfg.n_layers)]
+    self_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *self_caches)
+    return {"self": self_stacked, "cross": cross}
+
+
+def decode_step_whisper(params, cache, tok_emb: jnp.ndarray, pos: jnp.ndarray,
+                        cfg: ModelConfig, ctx: ShardCtx = LOCAL):
+    """One decoder token; tok_emb (B,1,d); pos (B,)."""
+    d = cfg.d_model
+    pe = sinusoidal_positions(int(2 ** 15), d)
+    x = tok_emb + pe[pos][:, None, :].astype(tok_emb.dtype)
+
+    def body(h, xs):
+        p, self_c, cross_kv = xs
+        hh = apply_norm(p["ln1"], h, cfg.norm, cfg.norm_eps)
+        a, self_c = attention_decode_block(p["attn"], hh, pos, self_c, cfg,
+                                           "attn", ctx)
+        h = h + a
+        hh = apply_norm(p["ln_x"], h, cfg.norm, cfg.norm_eps)
+        h = h + cross_attention_block(p["xattn"], hh,
+                                      (cross_kv["k"], cross_kv["v"]),
+                                      cfg, ctx)
+        hh = apply_norm(p["ln2"], h, cfg.norm, cfg.norm_eps)
+        h = h + mlp_apply(p["mlp"], hh, cfg, ctx)
+        return h, self_c
+
+    x, new_self = jax.lax.scan(body, x,
+                               (params["dec"], cache["self"], cache["cross"]))
+    x = apply_norm(params["dec_ln"], x, cfg.norm, cfg.norm_eps)
+    return x, {"self": new_self, "cross": cache["cross"]}

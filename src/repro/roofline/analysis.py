@@ -1,0 +1,477 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e target).
+
+    compute_s    = HLO_FLOPs / peak_FLOPs            (per chip)
+    memory_s     = HLO_bytes / HBM_bw                (per chip)
+    collective_s = wire_bytes / ICI_bw               (per chip)
+
+Methodology (DESIGN.md §5): `cost_analysis()` counts a scan/while body ONCE
+(verified in this container), so totals use COMPONENT ACCOUNTING — the
+per-layer block is compiled separately per pattern position (fwd+bwd for
+train), scaled by layer count, plus an embed+head+loss "edges" compile and
+an analytic optimizer term. Collective wire bytes are parsed from each
+component's post-SPMD HLO (per-device shapes) with a ring model:
+all-reduce 2(g-1)/g, all-gather/reduce-scatter/all-to-all (g-1)/g,
+collective-permute 1x.
+
+The full-graph compile from launch/dryrun.py supplies the FIT proof
+(memory_analysis) and the compile-success bit; this module supplies the
+scaled cost terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.launch.cells import SHAPES, applicable
+from repro.launch.mesh import dp_axes_of
+from repro.launch import steps as steps_mod
+from repro.models.model import _dtype, abstract_params
+from repro.models.transformer import (block_apply, block_decode, init_block,
+                                      init_layer_cache, pattern_split)
+from repro.sharding.partition import param_shardings
+
+# ------------------------------------------------------------------- hardware
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per chip, flat model)
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_OP_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_wire_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Per-device wire bytes by collective kind (ring model). Post-SPMD HLO
+    shapes are per-device. Async (-start/-done) pairs count once; -start
+    tuple types (operand, result) are halved."""
+    by_kind: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_OP_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        kind = m.group(1)
+        eq = line.find("=")
+        if eq < 0:
+            continue
+        type_str = line[eq + 1:m.start()]
+        out_bytes = _shape_bytes(type_str)
+        if m.group(2) and type_str.strip().startswith("("):
+            out_bytes //= 2                      # (operand, result) tuple
+        g = 2
+        gm = _GROUPS_RE.search(line)
+        gi = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            g = max(2, len(gm.group(1).split(",")))
+        elif gi:
+            g = max(2, int(gi.group(2)))   # [num_groups, group_size]<=[N]
+        if kind == "all-reduce":
+            wire = 2.0 * (g - 1) / g * out_bytes
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            wire = (g - 1) / g * out_bytes
+        else:  # collective-permute
+            wire = float(out_bytes)
+        by_kind[kind] = by_kind.get(kind, 0.0) + wire
+    return sum(by_kind.values()), by_kind
+
+
+# ------------------------------------------------------------ component cost
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float
+    bytes: float
+    coll: float
+    coll_by_kind: Dict[str, float]
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z0-9]+\[[0-9,]*\]|\([^)]*\))\S*\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*([a-z0-9]+\[[0-9,]*\])")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+
+# ops that are free / fused on TPU (layout, precision, metadata plumbing)
+_FREE_OPS = {"convert", "copy", "transpose", "bitcast", "bitcast-convert",
+             "reshape", "tuple", "get-tuple-element", "parameter",
+             "constant", "iota", "broadcast", "after-all", "partition-id",
+             "replica-id", "copy-start", "copy-done"}
+_INPLACE_ROOTS = {"scatter", "dynamic-update-slice"}
+
+
+def tpu_bytes_accessed(hlo_text: str) -> float:
+    """Re-derive per-device HBM bytes from post-SPMD HLO with TPU-reality
+    rules (methodology, EXPERIMENTS.md §Roofline):
+
+    * fusion-granularity accounting: each ENTRY op charges outputs +
+      operands, with an EFFECTIVE-SIZE map: free ops (convert / copy /
+      transpose / reshape / broadcast / bitcast) forward their input's
+      effective size, so a dot that XLA:CPU feeds through a bf16->f32
+      emulation chain charges the bf16 read a TPU MXU would issue;
+    * fusions rooted in scatter / dynamic-update-slice are IN-PLACE on TPU
+      (read-modify-write of the update slice only);
+    * while/conditional bodies count once (same basis as cost_analysis
+      FLOPs; trip counts are applied by the component scaler).
+    """
+    comps: Dict[str, List] = {}
+    types: Dict[str, str] = {}
+    roots: Dict[str, str] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        header = (not line.startswith("  ")) and ("{" in line) and \
+            ("= " not in ls.split("(")[0])
+        if header and ("(" in ls):
+            cur = ls.split("(")[0].replace("ENTRY", "").strip().lstrip("%")
+            comps[cur] = []
+            if ls.startswith("ENTRY"):
+                entry = cur
+            for pname, ptype in _PARAM_RE.findall(ls):
+                types[f"{cur}/{pname}"] = ptype
+            continue
+        m = _DEF_RE.match(line)
+        if not m or cur is None:
+            continue
+        dname, dtype, op = m.groups()
+        types[f"{cur}/{dname}"] = dtype
+        comps[cur].append((dname, dtype, op, line[m.end():]))
+        if ls.startswith("ROOT"):
+            roots[cur] = op
+
+    if entry is None:
+        return 0.0
+
+    eff: Dict[str, float] = {}
+
+    def operand_names(rest: str):
+        return _OPERAND_RE.findall(rest.split(")", 1)[0])
+
+    def eff_of(name: str) -> float:
+        if name in eff:
+            return eff[name]
+        t = types.get(f"{entry}/{name}")
+        return float(_shape_bytes(t)) if t else 0.0
+
+    total = 0.0
+    for dname, dtype, op, rest in comps[entry]:
+        out_b = float(_shape_bytes(dtype))
+        opnds = operand_names(rest)
+        callee = None
+        if op == "fusion":
+            cm = _CALLS_RE.search(rest)
+            callee = cm.group(1) if cm else None
+            root = roots.get(callee, "")
+        else:
+            root = op
+        if op in _FREE_OPS or (op == "fusion" and root in _FREE_OPS):
+            # free: forward the SUM of operand effective sizes (a fused
+            # dequant reads codes+scales; a convert reads its one input),
+            # capped at the declared output size
+            ine = sum(eff_of(o) for o in opnds)
+            eff[dname] = min(ine if ine > 0 else out_b, out_b)
+            continue
+        if root in _INPLACE_ROOTS:
+            # in-place update: charge r-m-w of the update slice (approx by
+            # the smallest positive operand) + index reads
+            sizes = sorted(x for x in (eff_of(o) for o in opnds) if x > 0)
+            upd = sizes[0] if sizes else 0.0
+            total += 3.0 * upd
+            big = max((eff_of(o) for o in opnds), default=out_b)
+            eff[dname] = min(big, out_b)
+            continue
+        total += out_b + sum(eff_of(o) for o in opnds)
+        eff[dname] = out_b
+    return total
+
+
+def _analyze(compiled) -> CompCost:
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll, by_kind = collective_wire_bytes(hlo)
+    tpu_bytes = tpu_bytes_accessed(hlo)
+    raw = float(ca.get("bytes accessed", 0.0))
+    # fall back to raw cost-analysis bytes if the parser finds nothing
+    return CompCost(flops=float(ca.get("flops", 0.0)),
+                    bytes=tpu_bytes if tpu_bytes > 0 else raw,
+                    coll=coll, coll_by_kind=by_kind)
+
+
+def _abstract_block(cfg: ModelConfig, kind: str):
+    dtype = _dtype(cfg.param_dtype)
+    return jax.eval_shape(
+        lambda k: init_block(k, kind, cfg, dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _positions_sds(cfg: ModelConfig, b: int, s: int):
+    if cfg.mrope_sections:
+        return jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def block_cost_train(cfg: ModelConfig, kind: str, mesh: Mesh, b: int, s: int,
+                     ctx, remat: str = "full") -> CompCost:
+    """fwd+bwd cost of one block at global (b, s); remat matches the
+    baseline train_step (recompute flops are counted)."""
+    bp = _abstract_block(cfg, kind)
+    cd = _dtype(cfg.compute_dtype)
+    x_sds = jax.ShapeDtypeStruct((b, s, cfg.d_model), cd)
+    pos_sds = _positions_sds(cfg, b, s)
+    dp = dp_axes_of(mesh)
+    x_sh = NamedSharding(mesh, P(dp, None, None))
+    pos_sh = NamedSharding(mesh, P(None, dp, None) if cfg.mrope_sections
+                           else P(dp, None))
+    p_sh = param_shardings(bp, mesh)
+
+    def f(bp, x, positions):
+        def fwd(bp, x):
+            y, aux, _ = block_apply(kind, bp, x, positions, cfg, ctx,
+                                    chunk=8192)
+            return y, aux
+        if remat == "full":
+            fwd = jax.checkpoint(fwd, prevent_cse=False)
+        elif remat == "dots":
+            fwd = jax.checkpoint(fwd, prevent_cse=False,
+                                 policy=jax.checkpoint_policies.checkpoint_dots)
+        def loss(bp, x):
+            y, aux = fwd(bp, x)
+            return jnp.sum(y.astype(jnp.float32)) + 0.0 * aux
+        gb, gx = jax.grad(loss, argnums=(0, 1))(bp, x)
+        return gb, gx
+
+    with jax.set_mesh(mesh):
+        comp = jax.jit(f, in_shardings=(p_sh, x_sh, pos_sh)).lower(
+            bp, x_sds, pos_sds).compile()
+    return _analyze(comp)
+
+
+def block_cost_forward(cfg: ModelConfig, kind: str, mesh: Mesh, b: int,
+                       s: int, ctx, chunk: int = 2048) -> CompCost:
+    bp = _abstract_block(cfg, kind)
+    cd = _dtype(cfg.compute_dtype)
+    x_sds = jax.ShapeDtypeStruct((b, s, cfg.d_model), cd)
+    pos_sds = _positions_sds(cfg, b, s)
+    dp = dp_axes_of(mesh)
+    x_sh = NamedSharding(mesh, P(dp, None, None))
+    pos_sh = NamedSharding(mesh, P(None, dp, None) if cfg.mrope_sections
+                           else P(dp, None))
+    p_sh = param_shardings(bp, mesh)
+
+    def f(bp, x, positions):
+        y, _, _ = block_apply(kind, bp, x, positions, cfg, ctx, chunk=chunk)
+        return y
+
+    with jax.set_mesh(mesh):
+        comp = jax.jit(f, in_shardings=(p_sh, x_sh, pos_sh)).lower(
+            bp, x_sds, pos_sds).compile()
+    return _analyze(comp)
+
+
+def block_cost_decode(cfg: ModelConfig, kind: str, mesh: Mesh, b: int,
+                      cache_len: int, ctx, quantized: bool = False,
+                      bits: int = 4) -> CompCost:
+    bp = _abstract_block(cfg, kind)
+    if quantized:
+        from repro.models.quantized import abstract_quantize
+        bp = abstract_quantize(bp, cfg, bits=bits)
+    cd = _dtype(cfg.compute_dtype)
+    cache_sds = jax.eval_shape(
+        lambda: init_layer_cache(kind, b, cache_len, cfg, cd))
+    c_sh = steps_mod.cache_shardings(cache_sds, cfg, mesh, b)
+    x_sds = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cd)
+    pos_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    dp = dp_axes_of(mesh)
+    x_sh = NamedSharding(mesh, P(dp if b > 1 else None, None, None))
+    pos_sh = NamedSharding(mesh, P(dp if b > 1 else None))
+    p_sh = param_shardings(bp, mesh)
+
+    def f(bp, x, pos, cache):
+        return block_decode(kind, bp, x, pos, cache, cfg, ctx)
+
+    with jax.set_mesh(mesh):
+        comp = jax.jit(f, in_shardings=(p_sh, x_sh, pos_sh, c_sh),
+                       donate_argnums=(3,)).lower(
+            bp, x_sds, pos_sds, cache_sds).compile()
+    return _analyze(comp)
+
+
+def edges_cost(cfg: ModelConfig, mesh: Mesh, b: int, s: int, ctx,
+               train: bool, ce_chunk: int = 512) -> CompCost:
+    """Embed + final head/loss cost (train: with grads; serve: last token)."""
+    from repro.models.model import chunked_ce_loss
+    cd = _dtype(cfg.compute_dtype)
+    pdt = _dtype(cfg.param_dtype)
+    emb_sds = jax.ShapeDtypeStruct((cfg.vocab_size, cfg.d_model), pdt)
+    emb_sh = param_shardings({"embed": emb_sds}, mesh)["embed"]
+    toks_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    dp = dp_axes_of(mesh)
+    t_sh = NamedSharding(mesh, P(dp if b > 1 else None, None))
+    params_mini = {"embed": emb_sds}
+    if train:
+        def f(p, tokens, labels):
+            def loss(p):
+                h = p["embed"][tokens].astype(cd)
+                return chunked_ce_loss(
+                    {"embed": p["embed"]} | {"head": None}, h, labels,
+                    dataclasses.replace(cfg, tie_embeddings=True), ctx,
+                    ce_chunk)
+            return jax.grad(loss)(p)
+        with jax.set_mesh(mesh):
+            comp = jax.jit(f, in_shardings=({"embed": emb_sh}, t_sh, t_sh)
+                           ).lower(params_mini, toks_sds, toks_sds).compile()
+    else:
+        def f(p, tokens):
+            h = p["embed"][tokens].astype(cd)
+            return h[:, -1, :] @ p["embed"].T.astype(cd)
+        with jax.set_mesh(mesh):
+            comp = jax.jit(f, in_shardings=({"embed": emb_sh}, t_sh)).lower(
+                params_mini, toks_sds).compile()
+    return _analyze(comp)
+
+
+# --------------------------------------------------------------- aggregation
+
+def optimizer_flops(cfg: ModelConfig, mesh: Mesh) -> float:
+    """AdamW elementwise update ~15 flops/param, params sharded over tp."""
+    tp = mesh.shape.get("model", 1)
+    return 15.0 * cfg.param_count() / tp
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    variant: str
+    flops_dev: float
+    bytes_dev: float
+    coll_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    per_layer: Optional[List[Dict]] = None
+    coll_by_kind: Optional[Dict[str, float]] = None
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def cell_roofline(arch: str, shape_name: str, mesh: Mesh, mesh_name: str,
+                  variant: str = "baseline", quantized: bool = False,
+                  bits: int = 4, remat: str = "full",
+                  kv_quant: bool = False) -> Roofline:
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    seq, batch = shp["seq"], shp["batch"]
+    if shp["kind"] in ("prefill", "decode"):
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16",
+                                  kv_quant_bits=8 if kv_quant else 0)
+    ctx = steps_mod.make_ctx(mesh, cfg)
+    pattern, n_units, n_tail = pattern_split(cfg)
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+
+    per_layer = []
+    tot = CompCost(0.0, 0.0, 0.0, {})
+
+    def add(c: CompCost, times: int, label: str):
+        nonlocal tot
+        merged = dict(tot.coll_by_kind)
+        for k, v in c.coll_by_kind.items():
+            merged[k] = merged.get(k, 0.0) + v * times
+        tot = CompCost(tot.flops + c.flops * times,
+                       tot.bytes + c.bytes * times,
+                       tot.coll + c.coll * times, merged)
+        per_layer.append({"label": label, "times": times,
+                          "flops": c.flops, "bytes": c.bytes, "coll": c.coll})
+
+    kinds_counted: Dict[str, int] = {}
+    for pos, kind in enumerate(pattern):
+        kinds_counted[kind] = kinds_counted.get(kind, 0) + n_units
+    for i in range(n_tail):
+        kinds_counted[pattern[i]] = kinds_counted.get(pattern[i], 0) + 1
+    if cfg.is_encoder_decoder:
+        kinds_counted = {"attn": cfg.n_layers}      # decoder blocks
+        enc_layers = cfg.n_encoder_layers
+
+    if shp["kind"] == "train":
+        for kind, count in kinds_counted.items():
+            c = block_cost_train(cfg, kind, mesh, batch, seq, ctx, remat)
+            add(c, count, f"block/{kind} (fwd+bwd)")
+        if cfg.is_encoder_decoder:
+            c = block_cost_train(cfg, "attn", mesh, batch, seq, ctx, remat)
+            add(c, enc_layers, "enc-block approx (fwd+bwd)")
+        e = edges_cost(cfg, mesh, batch, seq, ctx, train=True)
+        add(e, 1, "embed+loss (fwd+bwd)")
+        opt_f = optimizer_flops(cfg, mesh)
+        add(CompCost(opt_f, 12.0 * cfg.param_count() / mesh.shape["model"],
+                     0.0, {}), 1, "optimizer (analytic)")
+        model_flops = 6.0 * cfg.active_param_count() * batch * seq
+    elif shp["kind"] == "prefill":
+        for kind, count in kinds_counted.items():
+            c = block_cost_forward(cfg, kind, mesh, batch, seq, ctx)
+            add(c, count, f"block/{kind} (fwd)")
+        if cfg.is_encoder_decoder:
+            c = block_cost_forward(cfg, "attn", mesh, batch, seq, ctx)
+            add(c, enc_layers, "enc-block approx (fwd)")
+        e = edges_cost(cfg, mesh, batch, seq, ctx, train=False)
+        add(e, 1, "embed+head")
+        model_flops = 2.0 * cfg.active_param_count() * batch * seq
+    else:  # decode
+        for kind, count in kinds_counted.items():
+            c = block_cost_decode(cfg, kind, mesh, batch, seq, ctx,
+                                  quantized=quantized, bits=bits)
+            add(c, count, f"block/{kind} (decode)")
+        if cfg.is_encoder_decoder:
+            # cross-attention reads a (B, S_enc) cache — approx with self blk
+            c = block_cost_decode(cfg, "attn", mesh, batch, seq, ctx,
+                                  quantized=quantized, bits=bits)
+            add(c, cfg.n_layers, "xattn approx (decode)")
+        e = edges_cost(cfg, mesh, batch, 1, ctx, train=False)
+        add(e, 1, "embed+head")
+        model_flops = 2.0 * cfg.active_param_count() * batch
+
+    compute_s = tot.flops / PEAK_FLOPS
+    memory_s = tot.bytes / HBM_BW
+    coll_s = tot.coll / ICI_BW
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    useful = model_flops / max(tot.flops * n_chips, 1.0)
+    return Roofline(arch=arch, shape=shape_name, mesh=mesh_name,
+                    variant=variant,
+                    flops_dev=tot.flops, bytes_dev=tot.bytes,
+                    coll_dev=tot.coll, compute_s=compute_s,
+                    memory_s=memory_s, collective_s=coll_s, dominant=dom,
+                    model_flops=model_flops, useful_ratio=useful,
+                    per_layer=per_layer, coll_by_kind=tot.coll_by_kind)

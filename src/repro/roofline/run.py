@@ -1,0 +1,85 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline sweep driver: component-accounted three-term roofline for every
+(arch x shape) on the single-pod 16x16 mesh (per the assignment, the
+roofline table is single-pod; the multi-pod pass in launch/dryrun.py proves
+the pod axis shards).
+
+  PYTHONPATH=src python -m repro.roofline.run --out results/roofline.jsonl
+  PYTHONPATH=src python -m repro.roofline.run --arch gemma3-1b --shape train_4k
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+from repro.configs import get_config, list_archs
+from repro.launch.cells import SHAPES, applicable
+from repro.launch.mesh import make_production_mesh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--quantized", action="store_true",
+                    help="GANQ LUT-quantized serving variant (decode cells)")
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override logical mesh, e.g. 64x4 (256 chips)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.roofline.analysis import cell_roofline
+
+    if args.mesh_shape:
+        import jax
+        from jax.sharding import AxisType
+        dims = tuple(int(x) for x in args.mesh_shape.split("x"))
+        assert len(dims) == 2 and dims[0] * dims[1] == 256, dims
+        mesh = jax.make_mesh(dims, ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        mesh_name = args.mesh_shape
+    else:
+        mesh = make_production_mesh(multi_pod=False)
+        mesh_name = "16x16"
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    variant = args.variant or ("q%d-lut" % args.bits if args.quantized
+                               else "baseline")
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            cfg = get_config(arch)
+            ok, why = applicable(cfg, shape)
+            rec = {"arch": arch, "shape": shape, "variant": variant}
+            if not ok:
+                rec.update(status="skipped", reason=why)
+            else:
+                t0 = time.time()
+                try:
+                    r = cell_roofline(arch, shape, mesh, mesh_name,
+                                      variant=variant,
+                                      quantized=args.quantized,
+                                      bits=args.bits, remat=args.remat)
+                    rec.update(status="ok", analyze_s=round(time.time() - t0, 1),
+                               **r.to_dict())
+                except Exception as e:  # noqa: BLE001
+                    rec.update(status="error",
+                               error=f"{type(e).__name__}: {e}",
+                               traceback=traceback.format_exc()[-1500:])
+                    n_fail += 1
+            print(json.dumps({k: v for k, v in rec.items()
+                              if k != "per_layer"}), flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

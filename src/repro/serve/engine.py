@@ -1,0 +1,113 @@
+"""Batched serving engine: prefill + decode with LUT-quantized weights.
+
+This is the paper's deployment scenario (§4.3 profiling): weight-only
+quantized model, batched generation, memory-bound decode. The engine
+processes a queue of prompts in equal-length groups (batched prefill),
+decodes with per-sequence positions and stop conditions, and admits the
+next group when a batch drains (static batching with group scheduling —
+the continuous-batching upgrade slot is the `admit` hook).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, prefill
+from repro.sharding.context import ShardCtx, LOCAL
+
+
+@dataclasses.dataclass
+class GenRequest:
+    prompt: List[int]
+    max_new: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class GenResult:
+    tokens: List[int]
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    steps: int = 0
+
+
+def sample_token(logits: jnp.ndarray, temperature: float,
+                 key) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, ctx: ShardCtx = LOCAL,
+                 max_len: int = 512):
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx
+        self.max_len = max_len
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, ctx))
+
+    def generate_batch(self, requests: List[GenRequest],
+                       seed: int = 0) -> List[GenResult]:
+        """All prompts in a call must share a length (group scheduling)."""
+        assert len({len(r.prompt) for r in requests}) == 1, \
+            "engine processes equal-length prompt groups"
+        b = len(requests)
+        plen = len(requests[0].prompt)
+        max_new = max(r.max_new for r in requests)
+        toks = jnp.asarray([r.prompt for r in requests], jnp.int32)
+
+        t0 = time.time()
+        logits, cache = prefill(self.params, {"tokens": toks}, self.cfg,
+                                self.ctx, cache_len=self.max_len)
+        prefill_s = time.time() - t0
+
+        key = jax.random.PRNGKey(seed)
+        outs = [[] for _ in range(b)]
+        done = np.zeros(b, bool)
+        temp = requests[0].temperature
+        cur = sample_token(logits, temp, key)
+        t1 = time.time()
+        steps = 0
+        for i in range(max_new):
+            for j in range(b):
+                if not done[j]:
+                    outs[j].append(int(cur[j]))
+                    r = requests[j]
+                    if (r.eos_id is not None and int(cur[j]) == r.eos_id) \
+                            or len(outs[j]) >= r.max_new:
+                        done[j] = True
+            if done.all() or plen + i + 1 >= self.max_len:
+                break
+            pos = jnp.full((b,), plen + i, jnp.int32)
+            logits, cache = self._decode(self.params, cache, cur, pos)
+            key, sub = jax.random.split(key)
+            cur = sample_token(logits, temp, sub)
+            steps += 1
+        decode_s = time.time() - t1
+        return [GenResult(tokens=outs[j], prefill_s=prefill_s,
+                          decode_s=decode_s, steps=steps)
+                for j in range(b)]
+
+    def serve_queue(self, requests: List[GenRequest],
+                    batch_size: int = 4) -> List[GenResult]:
+        """Group queue by prompt length, process in batches."""
+        groups: Dict[int, List[int]] = {}
+        for i, r in enumerate(requests):
+            groups.setdefault(len(r.prompt), []).append(i)
+        results: List[Optional[GenResult]] = [None] * len(requests)
+        for _, idxs in sorted(groups.items()):
+            for k in range(0, len(idxs), batch_size):
+                chunk = idxs[k:k + batch_size]
+                res = self.generate_batch([requests[i] for i in chunk])
+                for i, r in zip(chunk, res):
+                    results[i] = r
+        return results  # type: ignore[return-value]

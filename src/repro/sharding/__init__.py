@@ -1,0 +1,1 @@
+from .context import ShardCtx, LOCAL

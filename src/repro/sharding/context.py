@@ -1,0 +1,55 @@
+"""Sharding context threaded through model apply functions.
+
+Keeps the model code mesh-agnostic: with ctx.mesh=None every constraint is
+a no-op (single-device smoke tests); with a production mesh the same code
+emits GSPMD sharding constraints and (for MoE) shard_map expert parallelism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)   # ("pod","data") on the multi-pod mesh
+    tp_axis: Optional[str] = "model"
+    ep: bool = False                        # expert parallelism via shard_map
+    seq_shard_kv: bool = False              # SP for long-context decode KV
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def spec(self, *axes) -> P:
+        return P(*axes)
+
+    def constrain(self, x, *axes):
+        """with_sharding_constraint if a mesh is active, else identity.
+
+        `axes` entries: None, 'dp' (expands to dp_axes), or a mesh axis name.
+        Axes that do not evenly divide the corresponding dim are dropped
+        (avoids GSPMD padding waste, e.g. 40 heads over tp=16).
+        """
+        if self.mesh is None or self.tp_axis is None:
+            return x
+        expanded = []
+        for i, a in enumerate(axes):
+            a = self.dp if a == "dp" else a
+            if a is not None:
+                names = a if isinstance(a, tuple) else (a,)
+                size = 1
+                for n in names:
+                    size *= self.mesh.shape[n]
+                if i >= x.ndim or x.shape[i] % size != 0:
+                    a = None
+            expanded.append(a)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*expanded)))
+
+
+LOCAL = ShardCtx()

@@ -1,0 +1,135 @@
+"""Parameter partitioning rules (DP/TP/EP) — DESIGN.md §4.
+
+Megatron-style TP over the `model` axis: column-parallel in-projections,
+row-parallel out-projections, vocab-sharded embedding/head, EP expert
+weights sharded on the expert dim. Stacked pattern-unit parameters get
+leading `None`s automatically (rules are written for the base rank).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path-substring predicate, base-rank, spec builder given tp axis)
+_RULES = [
+    # embeddings / head
+    ("embed",           2, lambda tp: (tp, None)),
+    ("head",            2, lambda tp: (None, tp)),
+    # attention
+    ("attn/wq",         2, lambda tp: (None, tp)),
+    ("attn/wk",         2, lambda tp: (None, tp)),
+    ("attn/wv",         2, lambda tp: (None, tp)),
+    ("attn/wo",         2, lambda tp: (tp, None)),
+    ("xattn/wq",        2, lambda tp: (None, tp)),
+    ("xattn/wk",        2, lambda tp: (None, tp)),
+    ("xattn/wv",        2, lambda tp: (None, tp)),
+    ("xattn/wo",        2, lambda tp: (tp, None)),
+    # dense MLP
+    ("mlp/w_gate",      2, lambda tp: (None, tp)),
+    ("mlp/w_up",        2, lambda tp: (None, tp)),
+    ("mlp/w_down",      2, lambda tp: (tp, None)),
+    # MoE (expert-parallel over the model axis)
+    ("moe/router",      2, lambda tp: (None, None)),
+    ("moe/w_gate",      3, lambda tp: (tp, None, None)),
+    ("moe/w_up",        3, lambda tp: (tp, None, None)),
+    ("moe/w_down",      3, lambda tp: (tp, None, None)),
+    # RWKV-6
+    ("tm/wr",           2, lambda tp: (None, tp)),
+    ("tm/wk",           2, lambda tp: (None, tp)),
+    ("tm/wv",           2, lambda tp: (None, tp)),
+    ("tm/wg",           2, lambda tp: (None, tp)),
+    ("tm/wo",           2, lambda tp: (tp, None)),
+    ("cm/wk",           2, lambda tp: (None, tp)),
+    ("cm/wv",           2, lambda tp: (tp, None)),
+    ("cm/wr",           2, lambda tp: (None, tp)),
+    # RG-LRU
+    ("rec/w_in",        2, lambda tp: (None, tp)),
+    ("rec/w_gate",      2, lambda tp: (None, tp)),
+    ("rec/w_out",       2, lambda tp: (tp, None)),
+    ("rec/w_a",         2, lambda tp: (None, tp)),
+    ("rec/w_x",         2, lambda tp: (None, tp)),
+    ("rec/conv_w",      2, lambda tp: (None, tp)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+def spec_for_param(path, leaf, tp_axis: Optional[str]) -> P:
+    """PartitionSpec for one parameter leaf (stacked dims get None).
+
+    Quantized leaves (children of QuantizedLinear, reached through a
+    FlattenedIndexKey) are TRANSPOSED vs. the dense weight — GANQ stores
+    (m=out, n=in) — so the 2-D rules swap; the codebook/sparse/bias leaves
+    shard on the out (row) dim only.
+    """
+    if tp_axis is None:
+        return P()
+    pstr = _path_str(path)
+    rank = len(leaf.shape)
+    q_idx = None
+    if path and hasattr(path[-1], "idx") and not hasattr(path[-1], "key"):
+        q_idx = path[-1].idx     # index within QuantizedLinear children
+    for needle, base_rank, builder in _RULES:
+        if needle in pstr:
+            base = tuple(builder(tp_axis))
+            if q_idx is not None and base_rank == 2:
+                in_spec, out_spec = base
+                if q_idx == 0:                       # codes (m, n[/2])
+                    base = (out_spec, in_spec)
+                elif q_idx in (1, 2, 3, 6):          # codebook/sparse/bias
+                    base = ((out_spec,) + (None,) * (rank - 1))[:rank]
+                else:                                # full rows: replicate
+                    return P()
+            if rank < len(base):
+                return P()
+            pad = (None,) * (rank - len(base))
+            return P(*(pad + base))
+    return P()  # norms, gates, biases, small vectors: replicated
+
+
+def _drop_nondividing(spec: P, shape, mesh: Mesh) -> P:
+    """pjit argument shardings require exact divisibility: spec axes that
+    don't divide their dim are moved to another unsharded dim that does
+    (e.g. vocab 49155 % 16 != 0 -> shard the d_model dim instead), else
+    dropped."""
+    def axsize(a):
+        names = a if isinstance(a, tuple) else (a,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        return size
+
+    out = list(tuple(spec)) + [None] * (len(shape) - len(tuple(spec)))
+    for i, a in enumerate(list(out)):
+        if a is not None and shape[i] % axsize(a) != 0:
+            out[i] = None
+            for j in range(len(shape)):       # rescue onto a dividing dim
+                if out[j] is None and shape[j] % axsize(a) == 0 and j != i:
+                    out[j] = a
+                    break
+    return P(*out)
+
+
+def param_shardings(params, mesh: Mesh, tp_axis: Optional[str] = "model"):
+    """NamedSharding tree matching `params` (works on ShapeDtypeStructs)."""
+    def one(path, leaf):
+        spec = spec_for_param(path, leaf, tp_axis)
+        return NamedSharding(mesh, _drop_nondividing(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_specs(params, tp_axis: Optional[str] = "model"):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_param(path, leaf, tp_axis), params)

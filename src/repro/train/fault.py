@@ -1,0 +1,88 @@
+"""Fault tolerance: straggler detection, failure injection, elastic re-mesh.
+
+In a single-process container the *mechanisms* are real (the monitor, the
+restart path, the resharding restore); the failures themselves are injected
+(a real pod wires `HostFailure` to the platform's health service instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class HostFailure(RuntimeError):
+    """Raised when a (simulated) host dies mid-step."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministic failure schedule for tests: fail at given steps."""
+
+    fail_at: tuple = ()
+    _raised: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at and step not in self._raised:
+            self._raised.add(step)
+            raise HostFailure(f"injected host failure at step {step}")
+
+
+class StragglerMonitor:
+    """EWMA per-host step-time monitor.
+
+    flag(host) when its step time exceeds `threshold` x the fleet median
+    EWMA for `patience` consecutive steps — the mitigation hook then
+    requests that host's eviction (elastic re-mesh) or enables backup
+    execution for its shard.
+    """
+
+    def __init__(self, n_hosts: int, alpha: float = 0.3,
+                 threshold: float = 1.8, patience: int = 3):
+        self.ewma = np.zeros(n_hosts)
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.strikes = np.zeros(n_hosts, np.int32)
+        self.flagged: List[int] = []
+
+    def record(self, host_times: np.ndarray) -> List[int]:
+        """host_times: seconds per host for this step. Returns newly flagged
+        hosts."""
+        m = self.ewma == 0
+        self.ewma = np.where(m, host_times,
+                             self.alpha * host_times
+                             + (1 - self.alpha) * self.ewma)
+        med = np.median(self.ewma)
+        slow = self.ewma > self.threshold * med
+        self.strikes = np.where(slow, self.strikes + 1, 0)
+        newly = [int(h) for h in np.nonzero(self.strikes == self.patience)[0]
+                 if h not in self.flagged]
+        self.flagged.extend(newly)
+        return newly
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    """Re-mesh decision after losing hosts: shrink the DP axis (TP stays —
+    model-parallel groups are atomic), keep global batch by raising the
+    per-shard microbatch."""
+
+    old_dp: int
+    lost_hosts: int
+    hosts_per_dp_shard: int = 1
+
+    @property
+    def new_dp(self) -> int:
+        usable = self.old_dp - self.lost_hosts * self.hosts_per_dp_shard
+        # largest divisor of old_dp that fits (keeps batch divisible)
+        for cand in range(usable, 0, -1):
+            if self.old_dp % cand == 0:
+                return cand
+        return 1
+
+    @property
+    def accumulation_factor(self) -> int:
+        return self.old_dp // self.new_dp

@@ -1,0 +1,113 @@
+"""Gradient compression for the DP all-reduce (PowerSGD, Vogels et al. '19).
+
+Rank-r compression with error feedback: per 2-D gradient G (m, n),
+  P = psum(G_err @ Q);  P <- orthonormalize(P);  R = psum(G_err^T @ P)
+  G_hat = P @ R^T;      err <- G_err - G_hat        (kept local)
+Collective bytes drop from m*n to r*(m+n) per tensor — on the slow `pod`
+axis of the multi-pod mesh this is the dominant gradient-sync win.
+Small/1-D leaves psum uncompressed.
+
+Integration: the compressed train step runs the model under GSPMD auto
+sharding on the `model` axis while the DP axes are MANUAL (shard_map with
+auto={'model'}), so the backward pass produces LOCAL gradients that we
+compress before the explicit psum. See steps in make_compressed_train_step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.models import train_loss
+from repro.sharding.context import ShardCtx
+from repro.train.optimizer import OptConfig, adamw_update
+
+
+def _orthonormalize(p: jnp.ndarray) -> jnp.ndarray:
+    q, _ = jnp.linalg.qr(p.astype(jnp.float32))
+    return q
+
+
+def powersgd_psum(grads, err, axis_names, rank: int, key):
+    """Compress+psum every 2-D leaf; returns (synced grads, new error)."""
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    flat_err = jax.tree_util.tree_leaves(err)
+    out_g, out_e = [], []
+    keys = jax.random.split(key, len(flat))
+    for g, e, k in zip(flat, flat_err, keys):
+        g = g.astype(jnp.float32) + e
+        if g.ndim == 2 and min(g.shape) > 4 * rank:
+            m, n = g.shape
+            q0 = jax.random.normal(k, (n, rank), jnp.float32) / jnp.sqrt(n)
+            p = jax.lax.psum(g @ q0, axis_names)
+            p = _orthonormalize(p)
+            r = jax.lax.psum(g.T @ p, axis_names)      # (n, rank)
+            g_hat_local = p @ r.T / jax.lax.psum(1, axis_names)
+            # the reconstruction is already the *mean* of shard grads
+            out_g.append(g_hat_local)
+            out_e.append(g - g_hat_local)
+        else:
+            out_g.append(jax.lax.pmean(g, axis_names))
+            out_e.append(jnp.zeros_like(g))
+    return (jax.tree_util.tree_unflatten(treedef, out_g),
+            jax.tree_util.tree_unflatten(treedef, out_e))
+
+
+def compressed_bytes_ratio(shapes, rank: int) -> float:
+    """Analytic wire-bytes ratio vs dense all-reduce (for §Perf)."""
+    dense = comp = 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        dense += n
+        if len(s) == 2 and min(s) > 4 * rank:
+            comp += rank * (s[0] + s[1])
+        else:
+            comp += n
+    return comp / dense
+
+
+def make_compressed_train_step(cfg: ModelConfig, mesh, opt_cfg: OptConfig,
+                               rank: int = 8, remat: str = "full"):
+    """Train step with PowerSGD-compressed DP gradient sync.
+
+    Manual over DP axes, auto over 'model' (GSPMD keeps TP). MoE archs use
+    the dense local path inside (EP+compression composition is future work).
+    """
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    inner_ctx = ShardCtx(mesh=None)   # constraints handled by outer jit
+
+    def local_loss(params, batch):
+        return train_loss(params, batch, cfg, inner_ctx, remat=remat)
+
+    def inner(params, opt_state, err, key, batch_l):
+        loss, g = jax.value_and_grad(local_loss)(params, batch_l)
+        g, err = powersgd_psum(g, err, dp_axes, rank, key)
+        loss = jax.lax.pmean(loss, dp_axes)
+        params, opt_state, metrics = adamw_update(params, g, opt_state,
+                                                  opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, err, metrics
+
+    batch_spec = {"tokens": P(dp_axes, None), "labels": P(dp_axes, None)}
+
+    def step(params, opt_state, err, key, batch):
+        return shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), batch_spec),
+            out_specs=(P(), P(), P(), P()),
+            axis_names=set(dp_axes),   # manual over DP; 'model' stays auto
+            check_vma=False,
+        )(params, opt_state, err, key, batch)
+
+    return step
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,197 @@
+"""Unit + property tests for the GANQ core algorithm (paper Alg. 1)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (QuantConfig, assign_nearest, compute_h, ganq_quantize,
+                        gptq_reconstruct, layer_objective, precondition,
+                        rtn_reconstruct, s_step, t_step)
+from repro.core.precondition import safe_cholesky
+
+
+def make_problem(seed, m=32, n=48, p=128, corr=True):
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_t(df=4, size=(m, n)) * 0.02).astype(np.float32)
+    if corr:
+        u = rng.normal(size=(n, 8)).astype(np.float32)
+        z = rng.normal(size=(8, p)).astype(np.float32)
+        x = u @ z + 0.1 * rng.normal(size=(n, p)).astype(np.float32)
+    else:
+        x = rng.normal(size=(n, p)).astype(np.float32)
+    return jnp.asarray(w), compute_h(jnp.asarray(x))
+
+
+# ------------------------------------------------------------- preconditioning
+
+@given(st.integers(0, 1000), st.integers(4, 24))
+@settings(max_examples=20, deadline=None)
+def test_precondition_adaptive_is_spd(seed, n):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 3)).astype(np.float32)  # rank-deficient H
+    h = jnp.asarray(x @ x.T)
+    hp = precondition(h, "adaptive")
+    ev = np.linalg.eigvalsh(np.asarray(hp))
+    assert ev.min() > 0, ev.min()
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_safe_cholesky_finite(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(16, 2)).astype(np.float32)
+    h = jnp.asarray(x @ x.T)
+    for mode in ("adaptive", "fixed"):
+        l = safe_cholesky(h, mode)
+        assert bool(jnp.all(jnp.isfinite(l)))
+
+
+# --------------------------------------------------------------------- S-step
+
+def test_s_step_identity_h_is_nearest_codebook():
+    """With H = I (L = I), back-substitution has no feedback: the code of each
+    element must be the plain nearest codebook entry."""
+    w, _ = make_problem(0)
+    t = jnp.sort(jnp.asarray(np.random.default_rng(0).normal(size=(w.shape[0], 16))
+                             .astype(np.float32)), axis=1)
+    l = jnp.eye(w.shape[1], dtype=jnp.float32)
+    codes, wq = s_step(w, t, l)
+    expected = assign_nearest(w, t)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(expected))
+    np.testing.assert_allclose(np.asarray(wq),
+                               np.asarray(jnp.take_along_axis(t, expected, 1)),
+                               rtol=1e-6)
+
+
+def test_s_step_improves_on_nearest_assignment():
+    """Residual feedback must not be worse than feedback-free assignment under
+    the true objective (greedy, but on correlated H it wins clearly)."""
+    w, h = make_problem(3)
+    hp = precondition(h, "fixed", 0.01)
+    l = jnp.linalg.cholesky(hp)
+    from repro.core import init_codebook
+    t = init_codebook(w, 4, "quantile")
+    codes_near = assign_nearest(w, t)
+    wq_near = jnp.take_along_axis(t, codes_near, 1)
+    _, wq_bs = s_step(w, t, l)
+    e_near = float(layer_objective(w, wq_near, hp))
+    e_bs = float(layer_objective(w, wq_bs, hp))
+    assert e_bs <= e_near * 1.001, (e_bs, e_near)
+
+
+def test_s_step_codes_in_range():
+    w, h = make_problem(4)
+    l = safe_cholesky(h)
+    from repro.core import init_codebook
+    for bits in (3, 4):
+        t = init_codebook(w, bits, "quantile")
+        codes, _ = s_step(w, t, l)
+        assert int(codes.min()) >= 0 and int(codes.max()) < (1 << bits)
+
+
+# --------------------------------------------------------------------- T-step
+
+@given(st.integers(0, 500))
+@settings(max_examples=8, deadline=None)
+def test_t_step_never_increases_objective(seed):
+    """Given fixed codes, the closed-form T update is the least-squares optimum
+    — guaranteed no worse than the previous codebook (paper eq. 7)."""
+    w, h = make_problem(seed, m=16, n=24, p=64)
+    hp = precondition(h, "fixed", 0.01)
+    from repro.core import init_codebook
+    t0 = init_codebook(w, 3, "quantile")
+    codes = assign_nearest(w, t0)
+    wq0 = jnp.take_along_axis(t0, codes, 1)
+    e0 = float(layer_objective(w, wq0, hp))
+    t1 = t_step(w, hp, codes, t0)
+    wq1 = jnp.take_along_axis(t1, codes, 1)
+    e1 = float(layer_objective(w, wq1, hp))
+    assert e1 <= e0 * (1 + 1e-4), (e1, e0)
+
+
+def test_t_step_keeps_unused_entries():
+    w, h = make_problem(7, m=8, n=16, p=32)
+    hp = precondition(h, "fixed", 0.01)
+    t0 = jnp.tile(jnp.linspace(-1, 1, 8, dtype=jnp.float32), (8, 1))
+    codes = jnp.zeros((8, 16), jnp.int32)  # only code 0 used
+    t1 = t_step(w, hp, codes, t0)
+    np.testing.assert_allclose(np.asarray(t1[:, 1:]), np.asarray(t0[:, 1:]),
+                               rtol=1e-6)
+
+
+# ----------------------------------------------------------------- end-to-end
+
+def test_ganq_beats_rtn_and_gptq_on_correlated_h():
+    w, h = make_problem(11, m=48, n=64, p=256)
+    res = ganq_quantize(w, h=h, cfg=QuantConfig(bits=4, iters=8,
+                                                precondition="fixed"))
+    e_ganq = float(layer_objective(w, res.layer.dequantize(), h))
+    e_rtn = float(layer_objective(w, rtn_reconstruct(w, 4), h))
+    e_gptq = float(layer_objective(w, gptq_reconstruct(w, h, 4), h))
+    assert e_ganq < e_rtn, (e_ganq, e_rtn)
+    assert e_ganq < e_gptq, (e_ganq, e_gptq)
+
+
+def test_ganq_err_history_decreases_overall():
+    w, h = make_problem(13)
+    res = ganq_quantize(w, h=h, cfg=QuantConfig(bits=4, iters=6))
+    hist = np.asarray(res.err_history)
+    assert hist[-1] <= hist[0]
+    assert np.all(np.isfinite(hist))
+
+
+def test_ganq_3bit_and_outliers():
+    """Table 5's claim holds in its own regime: rows with extreme outliers
+    that stretch the codebook range (paper Fig. 1b)."""
+    w, h = make_problem(17)
+    rng = np.random.default_rng(170)
+    w = np.array(w)  # writable copy
+    rows = rng.integers(0, w.shape[0], size=w.shape[0])
+    cols = rng.integers(0, w.shape[1], size=w.shape[0])
+    w[rows, cols] += rng.choice([-1.0, 1.0], size=w.shape[0]) * 1.5  # ~75x sigma
+    w = jnp.asarray(w)
+    base = ganq_quantize(w, h=h, cfg=QuantConfig(bits=3, iters=6,
+                                                 precondition="fixed"))
+    star = ganq_quantize(w, h=h, cfg=QuantConfig(bits=3, iters=6,
+                                                 precondition="fixed",
+                                                 outlier_ratio=0.04))
+    e_base = float(layer_objective(w, base.layer.dequantize(), h))
+    e_star = float(layer_objective(w, star.layer.dequantize(), h))
+    assert e_star < e_base, (e_star, e_base)  # Table 5's claim
+
+
+def test_ganq_full_rows_kept_exact():
+    w, h = make_problem(19)
+    res = ganq_quantize(w, h=h, cfg=QuantConfig(bits=4, iters=2, full_rows=3))
+    wq = np.asarray(res.layer.dequantize())
+    idx = np.asarray(res.layer.full_row_idx)
+    np.testing.assert_allclose(wq[idx], np.asarray(w)[idx], rtol=1e-6)
+
+
+def test_ganq_act_order_roundtrip():
+    """Column permutation must be undone — codes must decode consistently."""
+    w, h = make_problem(23)
+    res = ganq_quantize(w, h=h, cfg=QuantConfig(bits=4, iters=4, act_order=True,
+                                                precondition="fixed"))
+    e = float(layer_objective(w, res.layer.dequantize(), h))
+    e_rtn = float(layer_objective(w, rtn_reconstruct(w, 4), h))
+    assert e < e_rtn
+
+
+def test_ganq_from_x_equals_from_h():
+    rng = np.random.default_rng(29)
+    w = jnp.asarray(rng.normal(size=(16, 24)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(24, 64)).astype(np.float32))
+    r1 = ganq_quantize(w, x=x, cfg=QuantConfig(iters=2))
+    r2 = ganq_quantize(w, h=compute_h(x), cfg=QuantConfig(iters=2))
+    np.testing.assert_array_equal(np.asarray(r1.layer.codes),
+                                  np.asarray(r2.layer.codes))
+
+
+def test_ganq_rejects_bad_args():
+    w = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        ganq_quantize(w)
+    with pytest.raises(ValueError):
+        ganq_quantize(w, h=jnp.eye(4), x=jnp.zeros((4, 8)))
