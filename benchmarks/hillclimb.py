@@ -11,10 +11,10 @@ import json
 import sys
 
 import jax
-from jax.sharding import AxisType
 
 from repro.launch.mesh import make_production_mesh
 from repro.roofline.analysis import cell_roofline
+from repro.sharding.compat import make_mesh
 
 
 def mesh_of(shape_str):
@@ -22,8 +22,7 @@ def mesh_of(shape_str):
         return make_production_mesh(), "16x16"
     dims = tuple(int(x) for x in shape_str.split("x"))
     assert dims[0] * dims[1] == 256
-    return jax.make_mesh(dims, ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2), shape_str
+    return make_mesh(dims, ("data", "model")), shape_str
 
 
 # cell -> (arch, shape); variants below

@@ -34,20 +34,25 @@ qparams, _ = quantize_model_ptq(params, cfg, calib,
                                 QuantConfig(bits=4, iters=4,
                                             precondition="fixed"), "ganq")
 
-engine = ServeEngine(qparams, cfg, max_len=128)
-prompts = data.batch_at(1)["tokens"][:, :16].tolist()
-reqs = [GenRequest(prompt=p, max_new=24, temperature=0.0) for p in prompts]
+engine = ServeEngine(qparams, cfg, max_len=128, n_slots=4)
+# continuous batching: mixed prompt lengths, no grouping required
+toks = data.batch_at(1)["tokens"]
+lens = [16, 12, 20, 16, 9, 14, 16, 11]
+reqs = [GenRequest(prompt=toks[i, :lens[i]].tolist(), max_new=24,
+                   temperature=0.0) for i in range(8)]
 t0 = time.time()
-results = engine.serve_queue(reqs, batch_size=4)
+results = engine.serve(reqs)
 dt = time.time() - t0
 n_tok = sum(len(r.tokens) for r in results)
+st = engine.last_stats
 print(f"served {len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
-      f"({n_tok / dt:.1f} tok/s on 1 CPU core)")
+      f"({n_tok / dt:.1f} tok/s wall, {st['decode_tok_per_s']:.1f} decode "
+      f"tok/s, {st['slot_reuses']} slot reuses, 1 CPU core)")
 for i, r in enumerate(results[:2]):
     print(f"req{i}: {r.tokens[:12]}…")
 
 # parity: fp16 engine greedy tokens vs quantized engine
-fp = ServeEngine(params, cfg, max_len=128).serve_queue(reqs, batch_size=4)
+fp = ServeEngine(params, cfg, max_len=128, n_slots=4).serve(reqs)
 agree = sum(a == b for r1, r2 in zip(results, fp)
             for a, b in zip(r1.tokens, r2.tokens))
 total = sum(len(r.tokens) for r in fp)

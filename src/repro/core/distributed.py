@@ -20,7 +20,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.sharding.compat import shard_map
 
 from .ganq import _ganq_core
 from .types import QuantConfig

@@ -132,7 +132,9 @@ def lut_matmul_packed(packed: jnp.ndarray, codebook: jnp.ndarray,
     interleave: Y = W_lo @ X_even + W_hi @ X_odd.
     """
     m, half = packed.shape
-    n = x.shape[0]
+    assert x.shape[0] in (2 * half, 2 * half - 1), \
+        (f"x rows ({x.shape[0]}) must match the packed K axis "
+         f"(2*{half} nibbles, odd n allowed one short)")
     p = x.shape[1]
     levels = 1 << bits
     # split X rows by parity (pad odd n with a zero row first)

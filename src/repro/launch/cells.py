@@ -22,6 +22,7 @@ from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.models.model import abstract_params
 from repro.sharding.partition import param_shardings
+from repro.sharding.compat import set_mesh
 from repro.train.optimizer import OptConfig
 from . import steps
 from .mesh import dp_axes_of
@@ -114,7 +115,7 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh,
 
 
 def lower_cell(cell: Cell, mesh: Mesh):
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                          out_shardings=cell.out_shardings,
                          donate_argnums=cell.donate_argnums)

@@ -56,7 +56,8 @@ def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
         lowered = lower_cell(cell, mesh)
         compiled = lowered.compile()
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        from repro.sharding.compat import cost_analysis
+        ca = cost_analysis(compiled)
         hlo = compiled.as_text()
         rec.update(
             status="ok",

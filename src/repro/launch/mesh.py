@@ -9,21 +9,19 @@ from __future__ import annotations
 
 from typing import Tuple
 
-import jax
-from jax.sharding import AxisType
+from repro.sharding.compat import make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape: Tuple[int, ...] = (2, 4),
                    axes: Tuple[str, ...] = ("data", "model")):
     """Small mesh for CPU multi-device tests (8 fake devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def dp_axes_of(mesh) -> Tuple[str, ...]:

@@ -26,6 +26,10 @@ def main(argv=None) -> int:
                     help="int8 KV cache (beyond-paper)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots for continuous batching")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = all at once")
     ap.add_argument("--dry-run-only", action="store_true")
     args = ap.parse_args(argv)
 
@@ -48,6 +52,7 @@ def main(argv=None) -> int:
     import dataclasses
     import jax
     import jax.numpy as jnp
+    import numpy as np
     from repro.configs import get_config, reduce_config
     from repro.core import QuantConfig
     from repro.data.synthetic import MarkovStream
@@ -69,17 +74,27 @@ def main(argv=None) -> int:
             QuantConfig(bits=args.bits, iters=4, precondition="fixed"),
             args.method)
         print(f"quantized with {args.method} @{args.bits}-bit")
-    engine = ServeEngine(params, cfg, max_len=128)
-    prompts = data.batch_at(1)["tokens"][:, :16].tolist() * \
-        (args.requests // 4 + 1)
-    reqs = [GenRequest(prompt=p, max_new=args.max_new)
-            for p in prompts[:args.requests]]
+    engine = ServeEngine(params, cfg, max_len=128, n_slots=args.slots)
+    # mixed-length traffic: continuous batching needs no length grouping
+    rng = np.random.default_rng(0)
+    toks = data.batch_at(1)["tokens"]
+    reqs = [GenRequest(prompt=toks[i % toks.shape[0],
+                                   :int(rng.integers(8, 24))].tolist(),
+                       max_new=args.max_new)
+            for i in range(args.requests)]
+    arrivals = None
+    if args.rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
+                                             size=len(reqs))).tolist()
     t0 = time.time()
-    results = engine.serve_queue(reqs, batch_size=4)
+    results = engine.serve(reqs, arrival_times=arrivals)
     dt = time.time() - t0
     n_tok = sum(len(r.tokens) for r in results)
+    st = engine.last_stats
     print(f"served {len(reqs)} requests / {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s, 1 CPU core)")
+          f"({n_tok / dt:.1f} tok/s wall, "
+          f"{st['decode_tok_per_s']:.1f} decode tok/s, "
+          f"{st['slot_reuses']} slot reuses, 1 CPU core)")
     return 0
 
 

@@ -40,12 +40,11 @@ def main(argv=None) -> int:
     if args.dry_run_only:
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-        import jax
-        from jax.sharding import AxisType
+        from repro.sharding import compat
+        from repro.sharding.compat import make_mesh
         from .cells import build_cell, lower_cell
         dims = tuple(int(x) for x in (args.mesh or "16x16").split("x"))
-        mesh = jax.make_mesh(dims, ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh(dims, ("data", "model"))
         cell = build_cell(args.arch, "train_4k", mesh, remat=args.remat,
                           zero1=args.zero1, accum=args.accum)
         comp = lower_cell(cell, mesh).compile()
@@ -53,7 +52,8 @@ def main(argv=None) -> int:
         peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
         print(f"compiled OK; peak HBM/device {peak / 1e9:.2f} GB; "
-              f"flops/device {comp.cost_analysis().get('flops'):.3e}")
+              f"flops/device "
+              f"{compat.cost_analysis(comp).get('flops', 0.0):.3e}")
         return 0
 
     from repro.configs import get_config, reduce_config

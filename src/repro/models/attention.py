@@ -169,23 +169,37 @@ def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
 
 
 def cache_write(cache: Params, k_new: jnp.ndarray, v_new: jnp.ndarray,
-                pos: jnp.ndarray) -> Params:
-    """Write one step (B, 1, K, hd) at ring slot pos % W; pos (B,) int32."""
+                pos: jnp.ndarray,
+                active: Optional[jnp.ndarray] = None) -> Params:
+    """Write one step (B, 1, K, hd) at ring slot pos % W; pos (B,) int32.
+
+    `active` (B,) bool gates the write per sequence: an inactive slot's ring
+    row is written back unchanged, so draining/free slots in a continuous-
+    batching engine never corrupt their cache between requests.
+    """
     w = cache["k"].shape[1]
     slot = pos % w
     b = jnp.arange(k_new.shape[0])
+
+    def put(buf, row):
+        row = row.astype(buf.dtype)
+        if active is not None:
+            a = active.reshape((-1,) + (1,) * (row.ndim - 1))
+            row = jnp.where(a, row, buf[b, slot])
+        return buf.at[b, slot].set(row)
+
     if "k_scale" in cache:
         kq, ks = quantize_kv(k_new[:, 0])
         vq, vs = quantize_kv(v_new[:, 0])
         return {
-            "k": cache["k"].at[b, slot].set(kq),
-            "v": cache["v"].at[b, slot].set(vq),
-            "k_scale": cache["k_scale"].at[b, slot].set(ks),
-            "v_scale": cache["v_scale"].at[b, slot].set(vs),
+            "k": put(cache["k"], kq),
+            "v": put(cache["v"], vq),
+            "k_scale": put(cache["k_scale"], ks),
+            "v_scale": put(cache["v_scale"], vs),
         }
     return {
-        "k": cache["k"].at[b, slot].set(k_new[:, 0].astype(cache["k"].dtype)),
-        "v": cache["v"].at[b, slot].set(v_new[:, 0].astype(cache["v"].dtype)),
+        "k": put(cache["k"], k_new[:, 0]),
+        "v": put(cache["v"], v_new[:, 0]),
     }
 
 
@@ -198,9 +212,16 @@ def cache_slot_positions(pos: jnp.ndarray, w: int) -> jnp.ndarray:
 
 
 def attend_decode(q, cache: Params, pos: jnp.ndarray, kind: str,
-                  window: int) -> jnp.ndarray:
+                  window: int,
+                  active: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """q (B,1,H,hd) against ring cache; pos (B,) position of the new token
-    (already written to the cache)."""
+    (already written to the cache).
+
+    `active` (B,) bool masks whole sequences: an inactive slot attends to
+    nothing (its softmax degrades to a uniform read — finite garbage the
+    caller discards), so free slots in a slot-batched decode step cost no
+    correctness.
+    """
     if "k_scale" in cache:
         k = dequantize_kv(cache["k"], cache["k_scale"], q.dtype)
         v = dequantize_kv(cache["v"], cache["v_scale"], q.dtype)
@@ -211,6 +232,8 @@ def attend_decode(q, cache: Params, pos: jnp.ndarray, kind: str,
     allowed = (slot_pos >= 0) & (slot_pos <= pos[:, None])
     if kind == "sliding":
         allowed &= slot_pos > (pos[:, None] - window)
+    if active is not None:
+        allowed &= active[:, None]
     bias = jnp.where(allowed, 0.0, NEG_INF)[:, None, None, None, :]
     scores = _grouped_scores(q, k).astype(jnp.float32) + bias  # (B,K,G,1,W)
     return _grouped_context(_softmax(scores).astype(v.dtype), v)
@@ -234,7 +257,8 @@ def attention_block(p, x, positions, cfg: ModelConfig, kind: str,
 
 
 def attention_decode_block(p, x, pos, cache: Params, cfg: ModelConfig,
-                           kind: str, ctx: ShardCtx = LOCAL):
+                           kind: str, ctx: ShardCtx = LOCAL,
+                           active: Optional[jnp.ndarray] = None):
     """One-token decode; x (B,1,d), pos (B,). Returns (y, new_cache)."""
     if cfg.mrope_sections:
         positions = jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
@@ -242,10 +266,10 @@ def attention_decode_block(p, x, pos, cache: Params, cfg: ModelConfig,
         positions = pos[:, None]
     q = project_q(p, x, positions, cfg, ctx, None, "")
     k, v = project_kv(p, x, positions, cfg, ctx, None, "")
-    cache = cache_write(cache, k, v, pos)
+    cache = cache_write(cache, k, v, pos, active)
     o = attend_decode(q, cache, pos,
                       "causal" if kind == "attn" else "sliding",
-                      cfg.sliding_window)
+                      cfg.sliding_window, active)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
     y = linear_apply(p["wo"], o, None, "")
     return ctx.constrain(y, "dp", None, None), cache

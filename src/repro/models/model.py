@@ -20,8 +20,9 @@ from repro.configs.base import ModelConfig
 from repro.sharding.context import ShardCtx, LOCAL
 from .common import apply_norm, embed_init, init_norm
 from .linears import linear_apply
-from .transformer import (init_stack, init_stack_cache, stack_apply,
-                          stack_decode, block_apply, pattern_split)
+from .transformer import (cache_insert, init_stack, init_stack_cache,
+                          stack_apply, stack_decode, block_apply,
+                          pattern_split)
 from . import whisper as W
 
 Params = Dict
@@ -134,38 +135,56 @@ def forward_logits(p: Params, batch: Dict, cfg: ModelConfig,
 # ------------------------------------------------------------------- serving
 
 def init_serve_cache(p: Params, batch: Dict, batch_size: int, cache_len: int,
-                     cfg: ModelConfig, ctx: ShardCtx = LOCAL):
+                     cfg: ModelConfig, ctx: ShardCtx = LOCAL,
+                     cache=None, slot: Optional[jnp.ndarray] = None):
+    """Allocate a serve cache — or, given `cache` + `slot`, reset just that
+    slot row to zeros (admission hygiene for continuous batching)."""
     cd = _dtype(cfg.compute_dtype)
     if cfg.is_encoder_decoder:
         enc_out = W.encode(p["stacks"], batch["frames"].astype(cd), cfg, ctx)
         return W.init_whisper_cache(p["stacks"], batch_size, cache_len,
                                     enc_out, cfg, cd)
+    if cache is not None and slot is not None:
+        blank = init_stack_cache(1, cache_len, cfg, cd)
+        return cache_insert(cache, blank, slot)
     return init_stack_cache(batch_size, cache_len, cfg, cd)
 
 
 def decode_step(p: Params, cache, tokens: jnp.ndarray, pos: jnp.ndarray,
-                cfg: ModelConfig, ctx: ShardCtx = LOCAL):
+                cfg: ModelConfig, ctx: ShardCtx = LOCAL,
+                active: Optional[jnp.ndarray] = None):
     """One token for every sequence: tokens (B,) i32, pos (B,) i32.
-    Returns (logits (B,V), new_cache)."""
+    Returns (logits (B,V), new_cache).
+
+    `active` (B,) bool marks live slots in a slot-batched decode step:
+    inactive rows neither write their cache nor advance recurrent state, so
+    a continuous-batching engine can run one fixed-shape jitted step over a
+    partially occupied slot batch."""
     cd = _dtype(cfg.compute_dtype)
     x = _embed(p, tokens[:, None], cfg, cd)
     x = ctx.constrain(x, "dp", None, None)
     if cfg.is_encoder_decoder:
         h, cache = W.decode_step_whisper(p["stacks"], cache, x, pos, cfg, ctx)
     else:
-        h, cache = stack_decode(p["stack"], cache, x, pos, cfg, ctx)
+        h, cache = stack_decode(p["stack"], cache, x, pos, cfg, ctx, active)
         h = apply_norm(p["final_ln"], h, cfg.norm, cfg.norm_eps)
     logits = _logits_head(p, h[:, 0, :], cfg, ctx)
     return logits, cache
 
 
 def prefill(p: Params, batch: Dict, cfg: ModelConfig, ctx: ShardCtx = LOCAL,
-            cache_len: Optional[int] = None):
+            cache_len: Optional[int] = None, cache=None,
+            slot: Optional[jnp.ndarray] = None):
     """Run the prompt, build a cache positioned after the prompt.
 
     Implementation: forward pass for logits + per-layer recompute of K/V via
     a scan of decode steps is wasteful; instead we run block_apply capturing
     fresh K/V and scatter them into ring caches.
+
+    With `cache` + `slot` (continuous batching admission) the prompt batch
+    must be a single sequence; its freshly built per-layer states are
+    inserted into row `slot` of the slot-batched `cache` and the updated
+    slot cache is returned instead of a standalone one.
     """
     cd = _dtype(cfg.compute_dtype)
     if cfg.is_encoder_decoder:
@@ -199,6 +218,9 @@ def prefill(p: Params, batch: Dict, cfg: ModelConfig, ctx: ShardCtx = LOCAL,
                        if cs else None for cs in unit_caches]
     h = apply_norm(p["final_ln"], x, cfg.norm, cfg.norm_eps)
     logits = _logits_head(p, h[:, -1, :], cfg, ctx)
+    if cache is not None and slot is not None:
+        assert b == 1, "slot insertion prefills one sequence at a time"
+        return logits, cache_insert(cache, caches, slot)
     return logits, caches
 
 

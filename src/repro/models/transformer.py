@@ -102,13 +102,31 @@ def block_apply(kind: str, p: Params, x, positions, cfg: ModelConfig,
     raise ValueError(kind)
 
 
+def _freeze_inactive(active, new_state, old_state):
+    """Per-slot select: inactive slots keep their previous recurrent state
+    (leaves are batch-major, (B, ...))."""
+    if active is None:
+        return new_state
+
+    def sel(n, o):
+        a = active.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o.astype(n.dtype))
+
+    return jax.tree.map(sel, new_state, old_state)
+
+
 def block_decode(kind: str, p: Params, x, pos, cache, cfg: ModelConfig,
-                 ctx: ShardCtx = LOCAL):
-    """One-token decode. cache is this layer's state; returns (x, cache)."""
+                 ctx: ShardCtx = LOCAL, active=None):
+    """One-token decode. cache is this layer's state; returns (x, cache).
+
+    `active` (B,) bool marks live slots in a slot-batched decode: attention
+    gates its cache write and attends-to-nothing on inactive rows; recurrent
+    (rwkv / rglru) state is frozen for inactive rows.
+    """
     if kind in ("attn", "local"):
         h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
         a, cache = attention_decode_block(p["attn"], h, pos, cache, cfg, kind,
-                                          ctx)
+                                          ctx, active)
         x = x + a
         h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
         f, _ = _ffn(p, h, cfg, ctx, None, "")
@@ -120,14 +138,15 @@ def block_decode(kind: str, p: Params, x, pos, cache, cfg: ModelConfig,
         x = x + a
         h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
         c, cm_shift = rwkv_channel_mix(p["cm"], h, cache["cm_shift"], cfg, ctx)
-        return x + c, {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
+        new = {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
+        return x + c, _freeze_inactive(active, new, cache)
     if kind == "rglru":
         h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
         a, rec_state = rglru_block(p["rec"], h, cache, cfg, ctx, decode=True)
         x = x + a
         h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
         f, _ = _ffn(p, h, cfg, ctx, None, "")
-        return x + f, rec_state
+        return x + f, _freeze_inactive(active, rec_state, cache)
     raise ValueError(kind)
 
 
@@ -246,7 +265,7 @@ def init_stack_cache(batch: int, cache_len: int, cfg: ModelConfig, dtype):
 
 
 def stack_decode(params: Params, cache: Params, x, pos, cfg: ModelConfig,
-                 ctx: ShardCtx = LOCAL):
+                 ctx: ShardCtx = LOCAL, active=None):
     """One-token decode through all layers. Returns (x, new_cache)."""
     pattern, n_units, _ = pattern_split(cfg)
     new_units = []
@@ -256,7 +275,7 @@ def stack_decode(params: Params, cache: Params, x, pos, cfg: ModelConfig,
             new_caches = []
             for p_i, kind in enumerate(pattern):
                 h, c = block_decode(kind, unit_params[p_i], h, pos,
-                                    unit_cache[p_i], cfg, ctx)
+                                    unit_cache[p_i], cfg, ctx, active)
                 new_caches.append(c)
             return h, tuple(new_caches)
 
@@ -265,6 +284,28 @@ def stack_decode(params: Params, cache: Params, x, pos, cfg: ModelConfig,
         new_units = list(caches)
     new_tail = []
     for i, p in enumerate(params["tail"]):
-        x, c = block_decode(pattern[i], p, x, pos, cache["tail"][i], cfg, ctx)
+        x, c = block_decode(pattern[i], p, x, pos, cache["tail"][i], cfg, ctx,
+                            active)
         new_tail.append(c)
     return x, {"units": new_units, "tail": new_tail}
+
+
+def cache_insert(cache: Params, sub: Params, slot) -> Params:
+    """Insert a single-sequence stack cache into row `slot` of a slot-batched
+    stack cache (the continuous-batching admission path).
+
+    `cache` leaves are slot-batched: unit-stacked leaves (U, B, ...) carry the
+    batch on axis 1, tail leaves (B, ...) on axis 0. `sub` is the same
+    structure built with batch 1 (e.g. by `prefill`); `slot` may be a traced
+    int32 so one jitted insert serves every slot. Works unchanged for every
+    cache variant (full + ring attention, int8 KV with scales, rwkv / rglru
+    recurrent state) because it is pure tree surgery.
+    """
+    units = [None if cu is None else
+             jax.tree.map(lambda big, small: big.at[:, slot].set(
+                 small[:, 0].astype(big.dtype)), cu, su)
+             for cu, su in zip(cache["units"], sub["units"])]
+    tail = [jax.tree.map(lambda big, small: big.at[slot].set(
+                small[0].astype(big.dtype)), ct, st)
+            for ct, st in zip(cache["tail"], sub["tail"])]
+    return {"units": units, "tail": tail}

@@ -30,6 +30,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.launch.cells import SHAPES, applicable
+from repro.sharding.compat import set_mesh
 from repro.launch.mesh import dp_axes_of
 from repro.launch import steps as steps_mod
 from repro.models.model import _dtype, abstract_params
@@ -116,6 +117,7 @@ _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z0-9]+\[[0-9,]*\]|
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 _PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*([a-z0-9]+\[[0-9,]*\])")
 _CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
 
 # ops that are free / fused on TPU (layout, precision, metadata plumbing)
 _FREE_OPS = {"convert", "copy", "transpose", "bitcast", "bitcast-convert",
@@ -188,9 +190,16 @@ def tpu_bytes_accessed(hlo_text: str) -> float:
             cm = _CALLS_RE.search(rest)
             callee = cm.group(1) if cm else None
             root = roots.get(callee, "")
+        elif op == "call":
+            # XLA:CPU (older versions) wraps parallelized converts/copies in
+            # `call(...), to_apply=%computation` instead of fusions
+            cm = _TO_APPLY_RE.search(rest)
+            callee = cm.group(1) if cm else None
+            root = roots.get(callee, "")
         else:
             root = op
-        if op in _FREE_OPS or (op == "fusion" and root in _FREE_OPS):
+        if op in _FREE_OPS or (op in ("fusion", "call")
+                               and root in _FREE_OPS):
             # free: forward the SUM of operand effective sizes (a fused
             # dequant reads codes+scales; a convert reads its one input),
             # capped at the declared output size
@@ -212,7 +221,8 @@ def tpu_bytes_accessed(hlo_text: str) -> float:
 
 
 def _analyze(compiled) -> CompCost:
-    ca = compiled.cost_analysis() or {}
+    from repro.sharding.compat import cost_analysis
+    ca = cost_analysis(compiled)
     hlo = compiled.as_text()
     coll, by_kind = collective_wire_bytes(hlo)
     tpu_bytes = tpu_bytes_accessed(hlo)
@@ -266,7 +276,7 @@ def block_cost_train(cfg: ModelConfig, kind: str, mesh: Mesh, b: int, s: int,
         gb, gx = jax.grad(loss, argnums=(0, 1))(bp, x)
         return gb, gx
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         comp = jax.jit(f, in_shardings=(p_sh, x_sh, pos_sh)).lower(
             bp, x_sds, pos_sds).compile()
     return _analyze(comp)
@@ -288,7 +298,7 @@ def block_cost_forward(cfg: ModelConfig, kind: str, mesh: Mesh, b: int,
         y, _, _ = block_apply(kind, bp, x, positions, cfg, ctx, chunk=chunk)
         return y
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         comp = jax.jit(f, in_shardings=(p_sh, x_sh, pos_sh)).lower(
             bp, x_sds, pos_sds).compile()
     return _analyze(comp)
@@ -315,7 +325,7 @@ def block_cost_decode(cfg: ModelConfig, kind: str, mesh: Mesh, b: int,
     def f(bp, x, pos, cache):
         return block_decode(kind, bp, x, pos, cache, cfg, ctx)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         comp = jax.jit(f, in_shardings=(p_sh, x_sh, pos_sh, c_sh),
                        donate_argnums=(3,)).lower(
             bp, x_sds, pos_sds, cache_sds).compile()
@@ -343,14 +353,14 @@ def edges_cost(cfg: ModelConfig, mesh: Mesh, b: int, s: int, ctx,
                     dataclasses.replace(cfg, tie_embeddings=True), ctx,
                     ce_chunk)
             return jax.grad(loss)(p)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             comp = jax.jit(f, in_shardings=({"embed": emb_sh}, t_sh, t_sh)
                            ).lower(params_mini, toks_sds, toks_sds).compile()
     else:
         def f(p, tokens):
             h = p["embed"][tokens].astype(cd)
             return h[:, -1, :] @ p["embed"].T.astype(cd)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             comp = jax.jit(f, in_shardings=({"embed": emb_sh}, t_sh)).lower(
                 params_mini, toks_sds).compile()
     return _analyze(comp)

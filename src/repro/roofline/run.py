@@ -37,12 +37,10 @@ def main(argv=None) -> int:
     from repro.roofline.analysis import cell_roofline
 
     if args.mesh_shape:
-        import jax
-        from jax.sharding import AxisType
+        from repro.sharding.compat import make_mesh
         dims = tuple(int(x) for x in args.mesh_shape.split("x"))
         assert len(dims) == 2 and dims[0] * dims[1] == 256, dims
-        mesh = jax.make_mesh(dims, ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh(dims, ("data", "model"))
         mesh_name = args.mesh_shape
     else:
         mesh = make_production_mesh(multi_pod=False)

@@ -1,11 +1,26 @@
-"""Batched serving engine: prefill + decode with LUT-quantized weights.
+"""Continuous-batching serving engine over a slot-addressed KV cache.
 
-This is the paper's deployment scenario (§4.3 profiling): weight-only
-quantized model, batched generation, memory-bound decode. The engine
-processes a queue of prompts in equal-length groups (batched prefill),
-decodes with per-sequence positions and stop conditions, and admits the
-next group when a batch drains (static batching with group scheduling —
-the continuous-batching upgrade slot is the `admit` hook).
+This is the paper's deployment scenario (§4.3 profiling) made traffic-
+shaped: weight-only LUT-quantized model, memory-bound batched decode. The
+subsystem is split three ways:
+
+  scheduler.py — host-side request queue + slot table (`SlotScheduler`):
+      admission into any free slot, per-request eos / length / deadline
+      finish tracking, dense per-slot arrays for the device step.
+  sampler.py   — per-sequence temperature / top-k sampling with stable
+      per-request PRNG streams (results independent of co-scheduling).
+  engine.py    — this file: owns the slot-batched cache (one row per
+      scheduler slot, every cache variant: full + ring attention, int8 KV,
+      RWKV / RG-LRU recurrent state) and drives ONE jitted fixed-shape
+      decode step with an active mask. New requests are prefilled into free
+      slots mid-flight (`prefill(..., cache=, slot=)` inserts the prompt's
+      per-layer states into the slot row) while other slots keep decoding —
+      no drain barrier, which is what keeps the LUT-mpGEMM decode path busy
+      under mixed-length Poisson traffic.
+
+`generate_batch` keeps the seed engine's static equal-length group path as
+a reference implementation; greedy continuous batching is token-identical
+to it per request (see tests/test_serve_scheduler.py).
 """
 from __future__ import annotations
 
@@ -18,96 +33,201 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, prefill
+from repro.models import decode_step, init_serve_cache, prefill
 from repro.sharding.context import ShardCtx, LOCAL
+from .sampler import request_key, sample_tokens
+from .scheduler import GenRequest, GenResult, SlotScheduler
 
-
-@dataclasses.dataclass
-class GenRequest:
-    prompt: List[int]
-    max_new: int = 32
-    temperature: float = 0.0
-    eos_id: Optional[int] = None
-
-
-@dataclasses.dataclass
-class GenResult:
-    tokens: List[int]
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    steps: int = 0
-
-
-def sample_token(logits: jnp.ndarray, temperature: float,
-                 key) -> jnp.ndarray:
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+__all__ = ["GenRequest", "GenResult", "ServeEngine"]
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, ctx: ShardCtx = LOCAL,
-                 max_len: int = 512):
+                 max_len: int = 512, n_slots: int = 4):
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError("serving is decoder-only")
         self.params = params
         self.cfg = cfg
         self.ctx = ctx
         self.max_len = max_len
+        self.n_slots = n_slots
+        # the cache is donated: each step/admission rebinds it, and without
+        # donation XLA copies the whole slot-batched KV cache per call
         self._decode = jax.jit(
-            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, ctx))
+            lambda p, c, t, pos, act: decode_step(p, c, t, pos, cfg, ctx,
+                                                  act),
+            donate_argnums=(1,))
+        self._decode_legacy = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, ctx),
+            donate_argnums=(1,))
+
+        def _sample(logits, temps, top_ks, base_keys, nsamp):
+            keys = jax.vmap(jax.random.fold_in)(base_keys, nsamp)
+            return sample_tokens(logits, temps, top_ks, keys)
+
+        self._sample = jax.jit(_sample)
+        self._prefill_jits: Dict[int, object] = {}
+        self.last_stats: Dict[str, float] = {}
+
+    # -------------------------------------------------- continuous batching
+
+    def _prefill_insert(self, cache, tokens: jnp.ndarray, slot: int):
+        """Jitted per prompt length: prefill one sequence into a slot row."""
+        plen = tokens.shape[1]
+        fn = self._prefill_jits.get(plen)
+        if fn is None:
+            fn = jax.jit(lambda p, c, t, s: prefill(
+                p, {"tokens": t}, self.cfg, self.ctx,
+                cache_len=self.max_len, cache=c, slot=s),
+                donate_argnums=(1,))
+            self._prefill_jits[plen] = fn
+        return fn(self.params, cache, tokens, jnp.int32(slot))
+
+    def serve(self, requests: List[GenRequest], seed: int = 0,
+              arrival_times: Optional[List[float]] = None,
+              n_slots: Optional[int] = None) -> List[GenResult]:
+        """Continuous batching: admit on any free slot, decode a fixed slot
+        batch with an active mask, results in submission order.
+
+        `arrival_times` (seconds from call start, per request) simulates an
+        open-loop arrival process; requests are not admitted before their
+        arrival. Without it, everything is admittable immediately.
+        """
+        ns = n_slots or self.n_slots
+        sched = SlotScheduler(ns, self.max_len)
+        submitted = []
+        for i, r in enumerate(requests):
+            if arrival_times is not None:
+                r = dataclasses.replace(r, arrival_s=float(arrival_times[i]))
+            submitted.append(r)
+        uids = [r.uid for r in submitted]
+        # admission keys the PRNG stream on submission index (seed-stable
+        # across calls); the FIFO queue must be arrival-ordered or an early
+        # request queued behind a late one head-of-line blocks
+        stream_ids = {r.uid: i for i, r in enumerate(submitted)}
+        for r in sorted(submitted, key=lambda r: r.arrival_s):
+            sched.submit(r)
+
+        cache = init_serve_cache(self.params, {}, ns, self.max_len, self.cfg,
+                                 self.ctx)
+        base_keys = np.zeros((ns, 2), np.uint32)
+        t_start = time.perf_counter()
+        now = lambda: time.perf_counter() - t_start
+        decode_s = 0.0
+        decode_steps = 0
+        decode_tokens = 0
+        prefills = 0
+
+        while not sched.done():
+            for slot in sched.free_slots():
+                req = sched.next_ready(now())
+                if req is None:
+                    break
+                t0 = time.perf_counter()
+                toks = jnp.asarray([req.prompt], jnp.int32)
+                logits, cache = self._prefill_insert(cache, toks, slot)
+                bkey = np.asarray(
+                    request_key(seed, stream_ids[req.uid]), np.uint32)
+                first = self._sample(
+                    logits, jnp.asarray([req.temperature], jnp.float32),
+                    jnp.asarray([req.top_k], jnp.int32),
+                    jnp.asarray(bkey[None]), jnp.zeros((1,), jnp.int32))
+                first = int(jax.block_until_ready(first)[0])
+                base_keys[slot] = bkey
+                prefills += 1
+                sched.admit(slot, req, first, now(),
+                            time.perf_counter() - t0)
+
+            if sched.n_active == 0:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                time.sleep(max(0.0, min(nxt - now(), 0.05)))
+                continue
+
+            toks, pos, act, temps, top_ks, nsamp = sched.batch_arrays()
+            t0 = time.perf_counter()
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(toks), jnp.asarray(pos),
+                                         jnp.asarray(act))
+            samp = self._sample(logits, jnp.asarray(temps),
+                                jnp.asarray(top_ks), jnp.asarray(base_keys),
+                                jnp.asarray(nsamp))
+            samp = np.asarray(jax.block_until_ready(samp))
+            decode_s += time.perf_counter() - t0
+            decode_steps += 1
+            decode_tokens += int(act.sum())
+            sched.record_step(samp, now())
+
+        wall = now()
+        self.last_stats = {
+            "wall_s": wall, "decode_s": decode_s,
+            "decode_steps": decode_steps, "decode_tokens": decode_tokens,
+            "decode_tok_per_s": decode_tokens / decode_s if decode_s else 0.0,
+            "prefills": prefills, "slot_reuses": sched.slot_reuses,
+        }
+        return [sched.results[u] for u in uids]
+
+    def serve_queue(self, requests: List[GenRequest],
+                    batch_size: Optional[int] = None,
+                    seed: int = 0) -> List[GenResult]:
+        """Legacy entry point — now continuous batching over `batch_size`
+        slots (mixed prompt lengths welcome; no length grouping needed)."""
+        return self.serve(requests, seed=seed, n_slots=batch_size)
+
+    # ------------------------------------------------- static reference path
 
     def generate_batch(self, requests: List[GenRequest],
                        seed: int = 0) -> List[GenResult]:
-        """All prompts in a call must share a length (group scheduling)."""
+        """Seed engine's static group path (equal-length prompts, drain the
+        whole batch): kept as the equivalence reference for the continuous
+        path and for offline batch jobs. Sampling is per-sequence."""
         assert len({len(r.prompt) for r in requests}) == 1, \
-            "engine processes equal-length prompt groups"
+            "static path processes equal-length prompt groups"
         b = len(requests)
         plen = len(requests[0].prompt)
         max_new = max(r.max_new for r in requests)
         toks = jnp.asarray([r.prompt for r in requests], jnp.int32)
+        temps = jnp.asarray([r.temperature for r in requests], jnp.float32)
+        top_ks = jnp.asarray([r.top_k for r in requests], jnp.int32)
+        base_keys = jnp.stack([request_key(seed, j)
+                               for j in range(len(requests))])
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, cache = prefill(self.params, {"tokens": toks}, self.cfg,
                                 self.ctx, cache_len=self.max_len)
-        prefill_s = time.time() - t0
+        jax.block_until_ready(logits)
+        prefill_s = time.perf_counter() - t0
 
-        key = jax.random.PRNGKey(seed)
         outs = [[] for _ in range(b)]
         done = np.zeros(b, bool)
-        temp = requests[0].temperature
-        cur = sample_token(logits, temp, key)
-        t1 = time.time()
+        cur = self._sample(logits, temps, top_ks, base_keys,
+                           jnp.zeros((b,), jnp.int32))
+        cur = jax.block_until_ready(cur)
+        t1 = time.perf_counter()
         steps = 0
         for i in range(max_new):
+            cur_np = np.asarray(cur)
             for j in range(b):
                 if not done[j]:
-                    outs[j].append(int(cur[j]))
+                    outs[j].append(int(cur_np[j]))
                     r = requests[j]
-                    if (r.eos_id is not None and int(cur[j]) == r.eos_id) \
+                    if (r.eos_id is not None and int(cur_np[j]) == r.eos_id) \
                             or len(outs[j]) >= r.max_new:
                         done[j] = True
             if done.all() or plen + i + 1 >= self.max_len:
                 break
             pos = jnp.full((b,), plen + i, jnp.int32)
-            logits, cache = self._decode(self.params, cache, cur, pos)
-            key, sub = jax.random.split(key)
-            cur = sample_token(logits, temp, sub)
+            logits, cache = self._decode_legacy(self.params, cache, cur, pos)
+            cur = self._sample(logits, temps, top_ks, base_keys,
+                               jnp.full((b,), i + 1, jnp.int32))
+            cur = jax.block_until_ready(cur)
             steps += 1
-        decode_s = time.time() - t1
+        decode_s = time.perf_counter() - t1
         return [GenResult(tokens=outs[j], prefill_s=prefill_s,
-                          decode_s=decode_s, steps=steps)
+                          decode_s=decode_s, steps=steps,
+                          finish_reason="eos" if (requests[j].eos_id is not None
+                                                  and outs[j] and outs[j][-1]
+                                                  == requests[j].eos_id)
+                          else "length")
                 for j in range(b)]
-
-    def serve_queue(self, requests: List[GenRequest],
-                    batch_size: int = 4) -> List[GenResult]:
-        """Group queue by prompt length, process in batches."""
-        groups: Dict[int, List[int]] = {}
-        for i, r in enumerate(requests):
-            groups.setdefault(len(r.prompt), []).append(i)
-        results: List[Optional[GenResult]] = [None] * len(requests)
-        for _, idxs in sorted(groups.items()):
-            for k in range(0, len(idxs), batch_size):
-                chunk = idxs[k:k + batch_size]
-                res = self.generate_batch([requests[i] for i in chunk])
-                for i, r in zip(chunk, res):
-                    results[i] = r
-        return results  # type: ignore[return-value]

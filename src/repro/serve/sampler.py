@@ -1,0 +1,43 @@
+"""Per-sequence sampling for slot-batched decode.
+
+Each slot carries its own temperature / top-k / PRNG stream, so a hot
+creative-writing request and a greedy extraction request can share one
+decode step. Greedy (temperature <= 0) rows take the argmax and ignore the
+key, which keeps continuous-batching output bit-identical to a standalone
+greedy decode regardless of what the co-scheduled slots are doing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_top_k(logits: jnp.ndarray, top_ks: jnp.ndarray) -> jnp.ndarray:
+    """Mask logits outside each row's top-k. top_ks (B,) i32; <=0 = keep all."""
+    v = logits.shape[-1]
+    k = jnp.where(top_ks <= 0, v, jnp.minimum(top_ks, v)).astype(jnp.int32)
+    sorted_desc = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
+    thresh = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    return jnp.where(logits >= thresh, logits, -jnp.inf)
+
+
+def sample_tokens(logits: jnp.ndarray, temps: jnp.ndarray,
+                  top_ks: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """logits (B,V), temps (B,), top_ks (B,), keys (B,2) u32 -> (B,) i32."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = apply_top_k(logits, top_ks) / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temps <= 0.0, greedy, sampled)
+
+
+def sample_token(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
+    """Batch-uniform sampling (legacy static path)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def request_key(seed: int, stream: int):
+    """Per-request stream keyed on the request's index within a serve call:
+    reproducible from (seed, position) alone, decorrelated across slots."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), stream)

@@ -1,0 +1,176 @@
+"""Slot scheduler for continuous batching: queue, admission, completion.
+
+The scheduler is the host-side half of the serving engine. It owns the
+request queue and a fixed table of `n_slots` decode slots; the device-side
+half (engine.py) owns the slot-batched KV cache whose row i mirrors slot i
+here. Admission is per-slot: whenever a slot frees (eos / length budget /
+deadline), the next arrived request is prefillable into it mid-flight —
+no barrier on the rest of the batch.
+
+All bookkeeping is numpy/python (one dict lookup per slot per step); the
+dense per-slot arrays handed to the jitted decode step are assembled in
+`batch_arrays`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_UID = itertools.count()
+
+
+@dataclasses.dataclass
+class GenRequest:
+    prompt: List[int]
+    max_new: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    top_k: int = 0                     # 0 = no truncation
+    deadline_s: Optional[float] = None  # decode wall-clock budget, None = off
+    arrival_s: float = 0.0             # offset from serve() start (Poisson)
+    uid: int = dataclasses.field(default_factory=lambda: next(_UID))
+
+
+@dataclasses.dataclass
+class GenResult:
+    tokens: List[int]
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    steps: int = 0
+    finish_reason: str = "length"      # length | eos | deadline
+    done_s: float = 0.0                # completion time, offset from serve()
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: GenRequest
+    pos: int                           # position of the latest token
+    cur_token: int                     # latest sampled token (next step input)
+    tokens: List[int]
+    started_s: float
+    prefill_s: float
+    steps: int = 0
+
+
+class SlotScheduler:
+    """Request queue + slot table; the engine drives it step by step."""
+
+    def __init__(self, n_slots: int, max_len: int):
+        assert n_slots >= 1
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.queue: deque = deque()
+        self.slots: List[Optional[_Slot]] = [None] * n_slots
+        self.results: Dict[int, GenResult] = {}
+        self.slot_reuses = 0           # admissions into a previously used slot
+        self._used = [False] * n_slots
+
+    # ------------------------------------------------------------ queue side
+
+    def submit(self, req: GenRequest) -> None:
+        assert len(req.prompt) >= 1, "empty prompt"
+        assert len(req.prompt) < self.max_len, \
+            f"prompt ({len(req.prompt)}) must fit the cache ({self.max_len})"
+        self.queue.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def next_ready(self, now_s: float) -> Optional[GenRequest]:
+        """Pop the next request whose arrival time has passed (FIFO)."""
+        if self.queue and self.queue[0].arrival_s <= now_s:
+            return self.queue.popleft()
+        return None
+
+    def next_arrival(self) -> Optional[float]:
+        return self.queue[0].arrival_s if self.queue else None
+
+    # ------------------------------------------------------------- slot side
+
+    def admit(self, slot: int, req: GenRequest, first_token: int,
+              now_s: float, prefill_s: float) -> bool:
+        """Bind req to slot with its prefill-sampled first token.
+        Returns True if the request finished immediately (it still occupied
+        the slot for zero decode steps)."""
+        assert self.slots[slot] is None
+        if self._used[slot]:
+            self.slot_reuses += 1
+        self._used[slot] = True
+        st = _Slot(req=req, pos=len(req.prompt) - 1, cur_token=first_token,
+                   tokens=[first_token], started_s=now_s, prefill_s=prefill_s)
+        self.slots[slot] = st
+        return self._maybe_finish(slot, now_s)
+
+    def _maybe_finish(self, slot: int, now_s: float) -> bool:
+        st = self.slots[slot]
+        reason = None
+        if st.req.eos_id is not None and st.tokens[-1] == st.req.eos_id:
+            reason = "eos"
+        elif len(st.tokens) >= st.req.max_new:
+            reason = "length"
+        elif st.pos + 2 >= self.max_len:   # next token would overflow cache
+            reason = "length"
+        elif (st.req.deadline_s is not None
+                and now_s - st.started_s > st.req.deadline_s):
+            reason = "deadline"
+        if reason is None:
+            return False
+        self.results[st.req.uid] = GenResult(
+            tokens=st.tokens, prefill_s=st.prefill_s,
+            decode_s=now_s - st.started_s, steps=st.steps,
+            finish_reason=reason, done_s=now_s)
+        self.slots[slot] = None
+        return True
+
+    def record_step(self, sampled: np.ndarray, now_s: float) -> List[int]:
+        """Fold one decode step's sampled tokens (n_slots,) back in.
+        Returns slots freed this step."""
+        freed = []
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            st.pos += 1
+            st.steps += 1
+            st.cur_token = int(sampled[i])
+            st.tokens.append(st.cur_token)
+            if self._maybe_finish(i, now_s):
+                freed.append(i)
+        return freed
+
+    # ------------------------------------------------- arrays for the device
+
+    def batch_arrays(self) -> Tuple[np.ndarray, ...]:
+        """(tokens, pos, active, temps, top_ks, n_sampled) dense over slots;
+        inactive rows hold harmless values (token 0 at pos 0, masked in the
+        model). n_sampled feeds the per-request PRNG stream index."""
+        toks = np.zeros(self.n_slots, np.int32)
+        pos = np.zeros(self.n_slots, np.int32)
+        act = np.zeros(self.n_slots, bool)
+        temps = np.zeros(self.n_slots, np.float32)
+        top_ks = np.zeros(self.n_slots, np.int32)
+        nsamp = np.zeros(self.n_slots, np.int32)
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            toks[i] = st.cur_token
+            pos[i] = st.pos + 1        # position the next token will occupy
+            act[i] = True
+            temps[i] = st.req.temperature
+            top_ks[i] = st.req.top_k
+            nsamp[i] = len(st.tokens)
+        return toks, pos, act, temps, top_ks, nsamp
+
+    def done(self) -> bool:
+        return not self.queue and self.n_active == 0

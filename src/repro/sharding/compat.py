@@ -1,0 +1,66 @@
+"""jax version-compat shims for sharding APIs.
+
+The repo targets the modern spellings (`jax.shard_map` with `check_vma` /
+`axis_names`, `jax.make_mesh(..., axis_types=...)`) but must run on older
+jax (0.4.x) where shard_map lives in `jax.experimental`, `check_vma` is
+`check_rep`, `axis_names` is the complementary `auto` set, and
+`jax.sharding.AxisType` does not exist. Import from here, not from jax.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:                                    # jax >= 0.6 exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                     # pragma: no cover - version compat
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+try:                                    # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                     # pragma: no cover - version compat
+    AxisType = None
+
+_PARAMS = inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+              axis_names=None):
+    kw = {}
+    if check_vma is not None:
+        kw["check_vma" if "check_vma" in _PARAMS else "check_rep"] = check_vma
+    if axis_names is not None:
+        if "axis_names" in _PARAMS:
+            kw["axis_names"] = set(axis_names)
+        else:  # old jax: `auto` = the mesh axes that are NOT manual
+            kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+_real_set_mesh = getattr(jax, "set_mesh", None)
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context: jax.set_mesh on new jax; on old jax the Mesh
+    object is itself the context manager."""
+    if _real_set_mesh is not None:
+        return _real_set_mesh(mesh)
+    return mesh
+
+
+def cost_analysis(compiled) -> dict:
+    """compiled.cost_analysis() as a flat dict (old jax returns a list)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where the jax version has them."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -20,7 +20,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from repro.sharding.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models import train_loss

@@ -1,6 +1,9 @@
 """Property/unit tests: packing, outliers, codebooks, RTN, GPTQ, pipeline."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (HCollector, QuantConfig, apply_sparse, compute_h,

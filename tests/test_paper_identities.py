@@ -1,6 +1,9 @@
 """Mathematical identities from the paper, verified numerically."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import compute_h, layer_objective, precondition

@@ -46,7 +46,8 @@ def test_walker_bf16_matmul_not_inflated():
     c = _compile(lambda x, y: (x @ y), sds, sds)
     b = tpu_bytes_accessed(c.as_text())
     ideal = 3 * m * m * 2
-    raw = c.cost_analysis().get("bytes accessed")
+    from repro.sharding.compat import cost_analysis
+    raw = cost_analysis(c).get("bytes accessed")
     assert b <= raw  # never exceeds raw HLO accounting
     assert b < 2.0 * ideal, (b, ideal, raw)
 
@@ -73,14 +74,15 @@ def test_collective_parser_on_psum():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.roofline.analysis import collective_wire_bytes
-        mesh = jax.make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
+        from repro.sharding.compat import make_mesh, set_mesh
+        mesh = make_mesh((8,), ("d",))
         n = 1 << 16
         def f(x):
             return jax.lax.with_sharding_constraint(
                 x.sum(0, keepdims=True), NamedSharding(mesh, P()))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             c = jax.jit(f, in_shardings=NamedSharding(mesh, P("d", None)),
                         out_shardings=NamedSharding(mesh, P())).lower(
                 jax.ShapeDtypeStruct((8, n), jnp.float32)).compile()
