@@ -254,6 +254,45 @@ def bench_serving_throughput():
              f"slot_reuses={st['slot_reuses']} rate={rate}/s")
 
 
+# -------------------------------------------- mixed-precision policy
+
+
+def bench_mixed_precision_serving():
+    """Uniform 4-bit vs a 3-bit-MLP/4-bit-attention `PrecisionPolicy`,
+    reporting bits/weight and continuous-batching decode throughput side
+    by side (the Any-Precision/FineQuant-style serving question: how much
+    HBM does the mixed model give back, at what fidelity/throughput)."""
+    from repro.core import LayerRule, PrecisionPolicy
+    from repro.models.quantized import (model_storage_report,
+                                        quantize_model_ptq)
+    from repro.serve.engine import GenRequest, ServeEngine
+    cfg, params, data = _trained_small_lm()
+    calib = {k: jnp.asarray(v) for k, v in data.batch_at(800).items()}
+    evalb = {k: jnp.asarray(v) for k, v in data.batch_at(901).items()}
+    base = QuantConfig(bits=4, iters=4, precondition="fixed")
+    scenarios = (
+        ("uniform4", PrecisionPolicy.uniform(base)),
+        ("mixed_3mlp_4attn", PrecisionPolicy(
+            qcfg=base, rules=(LayerRule(pattern="*/mlp/*", bits=3),))),
+    )
+    rng = np.random.default_rng(42)
+    toks = data.batch_at(801)["tokens"]
+    reqs = [GenRequest(prompt=toks[i % toks.shape[0],
+                                   :int(rng.integers(6, 20))].tolist(),
+                       max_new=8) for i in range(8)]
+    for name, policy in scenarios:
+        qp, report = quantize_model_ptq(params, cfg, calib, policy=policy)
+        rep = model_storage_report(qp, report)
+        engine = ServeEngine(qp, cfg, max_len=64, n_slots=4)
+        engine.serve(reqs)      # warm: prefill jits per prompt length
+        engine.serve(reqs)
+        st = engine.last_stats
+        _row(f"mixed_policy_{name}", st["wall_s"] * 1e6,
+             f"bits_per_weight={rep['bits_per_weight']:.2f} "
+             f"decode_tok_s={st['decode_tok_per_s']:.1f} "
+             f"ppl={_ppl(qp, cfg, evalb):.3f}")
+
+
 # ------------------------------------------------------------- Table 7
 
 def bench_table7_precondition():
@@ -310,6 +349,7 @@ def main() -> None:
     bench_table6_decode_speedup()
     bench_table6_kernel_walltime()
     bench_serving_throughput()
+    bench_mixed_precision_serving()
     bench_table7_precondition()
     bench_fig1b_weight_stats()
     bench_quant_cost()

@@ -1,5 +1,7 @@
 """End-to-end PTQ: train a small LM, quantize it layer-by-layer with the
-sequential GANQ pipeline, compare perplexity across methods and bit-widths.
+sequential GANQ pipeline, compare perplexity across methods and bit-widths —
+then run a mixed-precision `PrecisionPolicy` (3-bit MLPs / 4-bit attention)
+through the same pipeline.
 
     PYTHONPATH=src python examples/quantize_llm.py
 """
@@ -9,7 +11,7 @@ import tempfile
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_config
-from repro.core import QuantConfig
+from repro.core import LayerRule, PrecisionPolicy, QuantConfig
 from repro.data.synthetic import MarkovStream
 from repro.models import forward_logits
 from repro.models.quantized import model_storage_report, quantize_model_ptq
@@ -50,3 +52,15 @@ for bits in (4, 3, 2):
         print(f"{method:5s} {bits}-bit: ppl {ppl(qp, cfg, evalb):7.3f}   "
               f"{rep['bits_per_weight']:.2f} bits/weight "
               f"({len(report)} linears)")
+
+# mixed precision: one pass, per-layer bits by sublayer type
+policy = PrecisionPolicy(
+    qcfg=QuantConfig(bits=4, iters=8, precondition="fixed"),
+    rules=(LayerRule(pattern="*/mlp/*", bits=3),))
+qp, report = quantize_model_ptq(params, cfg, calib, policy=policy)
+rep = model_storage_report(qp, report)
+print(f"mixed 3-bit-mlp/4-bit-attn: ppl {ppl(qp, cfg, evalb):7.3f}   "
+      f"{rep['bits_per_weight']:.2f} bits/weight")
+for name, r in list(rep["per_layer"].items())[:7]:
+    print(f"  {name:24s} {r['bits']}-bit {r['fmt']:12s} "
+          f"{r['bits_per_weight']:5.2f} b/w  err {r['err']:.4f}")

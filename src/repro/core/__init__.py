@@ -1,5 +1,10 @@
 """GANQ core: the paper's contribution as a composable JAX module."""
-from .types import QuantConfig, QuantizedLinear, QuantResult
+from .types import (QuantConfig, QuantizedLinear, QuantizedExperts,
+                    QuantResult)
+from .formats import (WeightFormat, register_format, get_format,
+                      available_formats, packed_linear_fmt)
+from .policy import (ExecPolicy, LayerRule, LayerQuantReport,
+                     PrecisionPolicy, parse_policy)
 from .precondition import precondition, safe_cholesky
 from .codebook import init_codebook, assign_nearest
 from .rtn import rtn_quantize, rtn_dequantize, rtn_reconstruct, rtn_codebook
@@ -10,10 +15,15 @@ from .outliers import (extract_outliers_topk, extract_outliers_percentile,
                        apply_sparse, select_full_rows)
 from .packing import (pack_nibbles, unpack_nibbles, pack_bits_np,
                       unpack_bits_np, storage_bytes)
-from .pipeline import HCollector, quantize_linear, SequentialPTQ
+from .pipeline import (HCollector, quantize_linear, register_quantizer,
+                       available_quantizers, SequentialPTQ)
 
 __all__ = [
-    "QuantConfig", "QuantizedLinear", "QuantResult",
+    "QuantConfig", "QuantizedLinear", "QuantizedExperts", "QuantResult",
+    "WeightFormat", "register_format", "get_format", "available_formats",
+    "packed_linear_fmt",
+    "ExecPolicy", "LayerRule", "LayerQuantReport", "PrecisionPolicy",
+    "parse_policy",
     "precondition", "safe_cholesky",
     "init_codebook", "assign_nearest",
     "rtn_quantize", "rtn_dequantize", "rtn_reconstruct", "rtn_codebook",
@@ -24,5 +34,6 @@ __all__ = [
     "select_full_rows",
     "pack_nibbles", "unpack_nibbles", "pack_bits_np", "unpack_bits_np",
     "storage_bytes",
-    "HCollector", "quantize_linear", "SequentialPTQ",
+    "HCollector", "quantize_linear", "register_quantizer",
+    "available_quantizers", "SequentialPTQ",
 ]

@@ -1,0 +1,394 @@
+"""WeightFormat registry: every serving weight layout as one object.
+
+The deployment story of the paper is "same network, LUT-mpGEMM instead of
+GEMM"; in practice a served model mixes *several* layouts — dense fp
+embeddings, unpacked LUT for debugging, nibble-packed LUT-4/LUT-3 for HBM
+bandwidth, LUT+sparse-outlier (GANQ*), stacked-experts LUT for MoE. Each
+layout is a `WeightFormat` registered here and owns the full vertical:
+
+  encode(layer)        canonical (unpacked) container -> this layout
+  apply(layer, x2, backend)   y = x2 @ W~^T   (x2 is (N, d_in))
+  dequantize(layer)    materialize W~ in GANQ layout ((m, n) / (E, m, n))
+  abstract(shape, ...) ShapeDtypeStruct container for dry-runs
+  storage_bits(layer)  (total_bits, n_weights) from the REAL dtypes
+
+`models.linears.linear_apply`, `kernels.ops.lut_linear`,
+`models.quantized.abstract_quantize` and `model_storage_report` all route
+through this registry, so adding a layout is one class here — no flag
+threading through model code.
+
+Storage accounting counts codes at the true checkpoint bitstream width
+(`bits` per weight — `core.packing.pack_bits_np`); the in-graph nibble
+container of 3-bit codes spends 4 bits/weight for TPU alignment but is
+not what hits the serving checkpoint. Codebook / sparse / full-row bits
+derive from the actual array dtypes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .outliers import outlier_k
+from .packing import pack_nibbles, unpack_nibbles
+from .types import QuantizedExperts, QuantizedLinear, put_rows_sparse
+
+_FORMATS: Dict[str, "WeightFormat"] = {}
+
+
+def register_format(cls):
+    """Class decorator: instantiate and register under cls.name."""
+    inst = cls()
+    assert inst.name and inst.name not in _FORMATS, inst.name
+    _FORMATS[inst.name] = inst
+    return cls
+
+
+def get_format(name: str) -> "WeightFormat":
+    try:
+        return _FORMATS[name]
+    except KeyError:
+        raise KeyError(f"unknown weight format {name!r}; "
+                       f"available: {available_formats()}") from None
+
+
+def available_formats():
+    return sorted(_FORMATS)
+
+
+def dtype_bits(dtype) -> int:
+    return jnp.dtype(dtype).itemsize * 8
+
+
+def _index_bits(idx) -> int:
+    return dtype_bits(idx.dtype) if idx is not None else 32
+
+
+class WeightFormat:
+    """Base class; subclasses register with @register_format.
+
+    `packed` marks nibble-packed code layouts. `expert_fmt` names the
+    stacked-experts counterpart a policy maps MoE expert weights to (None
+    = this format cannot represent expert stacks — quantizing an MoE
+    model under it is a loud error).
+    """
+
+    name: str = ""
+    packed: bool = False
+    expert_fmt: Optional[str] = None
+
+    # --------------------------------------------------------------- encode
+    def encode(self, layer: QuantizedLinear) -> QuantizedLinear:
+        """Re-layout a canonical (unpacked, fmt='lut'/'lut_sparse') layer."""
+        raise NotImplementedError(self.name)
+
+    # ---------------------------------------------------------------- apply
+    def apply(self, layer, x2: jnp.ndarray, *,
+              backend: str = "xla") -> jnp.ndarray:
+        """y = x2 @ W~^T for x2 (N, d_in); returns (N, d_out), no bias."""
+        raise NotImplementedError(self.name)
+
+    # ----------------------------------------------------------- dequantize
+    def dequantize(self, layer) -> jnp.ndarray:
+        raise NotImplementedError(self.name)
+
+    # ------------------------------------------------------------- abstract
+    def abstract(self, shape: Tuple[int, ...], bits: int, book_dtype,
+                 code_dtype=jnp.uint8, qcfg=None):
+        """ShapeDtypeStruct container for a dense param of `shape`
+        ((*lead, d_in, d_out) — model layout, as stored in param trees).
+        `qcfg` lets sparse-carrying formats size their outlier/full-row
+        leaves exactly as the quantizer will emit them."""
+        raise NotImplementedError(self.name)
+
+    # ---------------------------------------------------------------- bits
+    def storage_bits(self, layer) -> Tuple[float, int]:
+        """(total storage bits, number of represented weights)."""
+        raise NotImplementedError(self.name)
+
+
+# ---------------------------------------------------------------- dense fp
+
+@register_format
+class DenseFormat(WeightFormat):
+    """Raw fp weights in model layout (d_in, d_out) — the fallthrough for
+    everything the policy keeps in full precision."""
+
+    name = "dense"
+
+    def encode(self, layer):
+        return layer
+
+    def apply(self, w, x2, *, backend: str = "xla"):
+        return x2 @ w.astype(x2.dtype)
+
+    def dequantize(self, w):
+        return w
+
+    def abstract(self, shape, bits, book_dtype, code_dtype=jnp.uint8,
+                 qcfg=None):
+        return jax.ShapeDtypeStruct(shape, book_dtype)
+
+    def storage_bits(self, w):
+        return float(dtype_bits(w.dtype) * w.size), int(w.size)
+
+
+# --------------------------------------------------------------- LUT family
+
+def _sparse_full_bits(layer: QuantizedLinear) -> float:
+    extra = 0.0
+    if layer.sparse_val is not None:
+        extra += layer.sparse_val.size * (dtype_bits(layer.sparse_val.dtype)
+                                          + _index_bits(layer.sparse_idx))
+    if layer.full_row_val is not None:
+        extra += layer.full_row_val.size * dtype_bits(layer.full_row_val.dtype)
+        extra += layer.full_row_idx.size * _index_bits(layer.full_row_idx)
+    return extra
+
+
+class _LUTBase(WeightFormat):
+    """Shared apply/dequantize for per-row LUT layouts; subclasses set
+    `packed` and the encode/abstract layout."""
+
+    def apply(self, layer: QuantizedLinear, x2, *, backend: str = "xla"):
+        from repro.kernels.ops import lut_linear       # lazy: avoids cycle
+        if backend == "pallas":
+            y = lut_linear(layer.codes, layer.codebook.astype(x2.dtype),
+                           x2.T, bits=layer.bits, fmt=layer.fmt).T
+        else:
+            wd = jnp.take_along_axis(layer.codebook,
+                                     layer.unpacked_codes().astype(jnp.int32),
+                                     axis=1)
+            y = x2 @ wd.astype(x2.dtype).T
+        if layer.sparse_val is not None:
+            from .outliers import apply_sparse
+            y = y + apply_sparse(layer.sparse_idx, layer.sparse_val,
+                                 x2.T).T.astype(y.dtype)
+        if layer.full_row_val is not None:
+            y_full = x2 @ layer.full_row_val.astype(x2.dtype).T
+            y = y.at[:, layer.full_row_idx].set(y_full)
+        return y
+
+    def dequantize(self, layer: QuantizedLinear) -> jnp.ndarray:
+        w = jnp.take_along_axis(layer.codebook,
+                                layer.unpacked_codes().astype(jnp.int32),
+                                axis=1)
+        if layer.sparse_val is not None:
+            w = put_rows_sparse(w, layer.sparse_idx, layer.sparse_val)
+        if layer.full_row_val is not None:
+            w = w.at[layer.full_row_idx].set(
+                layer.full_row_val.astype(w.dtype))
+        return w
+
+    def storage_bits(self, layer: QuantizedLinear):
+        shape = layer.codes.shape          # possibly unit-stacked (*lead, m, nc)
+        lead = 1
+        for d in shape[:-1]:
+            lead *= d
+        n = layer.n_cols if self.packed else shape[-1]
+        count = lead * n
+        total = layer.bits * count \
+            + layer.codebook.size * dtype_bits(layer.codebook.dtype) \
+            + _sparse_full_bits(layer)
+        return float(total), int(count)
+
+
+@register_format
+class LUTFormat(_LUTBase):
+    """Unpacked per-row LUT: codes (m, n) uint8, any bit width. The
+    canonical in-graph form every quantizer emits."""
+
+    name = "lut"
+    packed = False
+    expert_fmt = "experts"
+
+    def encode(self, layer):
+        assert not layer.packed, "already packed; decode first"
+        return dataclasses.replace(layer, fmt=self.name,
+                                   n_cols=layer.codes.shape[-1])
+
+    def abstract(self, shape, bits, book_dtype, code_dtype=jnp.uint8,
+                 qcfg=None):
+        *lead, din, dout = shape
+        return QuantizedLinear(
+            codes=jax.ShapeDtypeStruct((*lead, dout, din), code_dtype),
+            codebook=jax.ShapeDtypeStruct((*lead, dout, 1 << bits),
+                                          book_dtype),
+            bits=bits, fmt=self.name, n_cols=din)
+
+
+@register_format
+class LUTSparseFormat(LUTFormat):
+    """Unpacked LUT + structured sparse outliers / full fp rows (GANQ*,
+    Algorithm 2). Same apply/dequantize as `lut` — the sparse fields are
+    simply populated — but declared as its own format so policies can
+    request it and storage accounting names it."""
+
+    name = "lut_sparse"
+
+    def abstract(self, shape, bits, book_dtype, code_dtype=jnp.uint8,
+                 qcfg=None):
+        base = super().abstract(shape, bits, book_dtype, code_dtype)
+        *lead, din, dout = shape
+        if qcfg is not None and qcfg.outlier_ratio > 0:
+            k = outlier_k(din, qcfg.outlier_ratio)
+            base.sparse_idx = jax.ShapeDtypeStruct((*lead, dout, k),
+                                                   jnp.int32)
+            base.sparse_val = jax.ShapeDtypeStruct((*lead, dout, k),
+                                                   book_dtype)
+        if qcfg is not None and qcfg.full_rows > 0:
+            base.full_row_idx = jax.ShapeDtypeStruct(
+                (*lead, qcfg.full_rows), jnp.int32)
+            base.full_row_val = jax.ShapeDtypeStruct(
+                (*lead, qcfg.full_rows, din), book_dtype)
+        return base
+
+
+class _NibblePackedLUT(_LUTBase):
+    """Nibble-packed codes (m, ceil(n/2)): two codes per uint8, the HBM
+    layout the Pallas LUT-mpGEMM kernel streams at 0.5 B/weight."""
+
+    packed = True
+    expert_fmt = "experts_packed"
+    bits: int = 4
+
+    def encode(self, layer):
+        assert layer.bits <= self.bits, (layer.bits, self.bits)
+        assert layer.sparse_val is None and layer.full_row_val is None, \
+            "packed formats carry no sparse/full-row fields; use 'lut_sparse'"
+        if layer.packed:
+            return dataclasses.replace(layer, fmt=self.name)
+        n = layer.codes.shape[-1]
+        return dataclasses.replace(layer, codes=pack_nibbles(layer.codes),
+                                   fmt=self.name, n_cols=n)
+
+    def abstract(self, shape, bits, book_dtype, code_dtype=jnp.uint8,
+                 qcfg=None):
+        *lead, din, dout = shape
+        return QuantizedLinear(
+            codes=jax.ShapeDtypeStruct((*lead, dout, (din + 1) // 2),
+                                       code_dtype),
+            codebook=jax.ShapeDtypeStruct((*lead, dout, 1 << bits),
+                                          book_dtype),
+            bits=bits, fmt=self.name, n_cols=din)
+
+
+@register_format
+class LUT4PackedFormat(_NibblePackedLUT):
+    name = "lut4_packed"
+    bits = 4
+
+
+@register_format
+class LUT3PackedFormat(_NibblePackedLUT):
+    """3-bit codes riding the nibble container in-graph (TPU alignment;
+    1 wasted bit); checkpoints store the true 3 bits/weight bitstream,
+    which is what `storage_bits` counts."""
+
+    name = "lut3_packed"
+    bits = 3
+
+
+# ------------------------------------------------------------------ experts
+
+class _ExpertsBase(WeightFormat):
+    """Stacked per-expert LUTs: codes (E, m, n[/2]), codebook (E, m, L),
+    optional GANQ* sparse outliers / full rows applied per expert.
+    Applied via dequantize + batched einsum in models.moe (dispatch is
+    token-routed; there is no single (N, d_in) matmul to intercept)."""
+
+    def apply(self, layer, x2, *, backend: str = "xla"):
+        raise NotImplementedError(
+            "expert weights apply inside moe_apply via dequantize()")
+
+    def dequantize(self, layer: QuantizedExperts) -> jnp.ndarray:
+        codes = layer.codes
+        if self.packed:
+            e, m, half = codes.shape
+            codes = unpack_nibbles(codes.reshape(e * m, half),
+                                   layer.n_cols).reshape(e, m, layer.n_cols)
+        w = jnp.take_along_axis(layer.codebook, codes.astype(jnp.int32),
+                                axis=2)                       # (E, m, n)
+        if layer.sparse_val is not None:
+            w = jax.vmap(put_rows_sparse)(w, layer.sparse_idx,
+                                          layer.sparse_val)
+        if layer.full_row_val is not None:
+            w = jax.vmap(lambda we, idx, val:
+                         we.at[idx].set(val.astype(we.dtype)))(
+                             w, layer.full_row_idx, layer.full_row_val)
+        return w
+
+    def encode(self, layer: QuantizedExperts) -> QuantizedExperts:
+        if self.packed and not layer.packed:
+            assert layer.bits <= 4, (layer.bits, "nibble container")
+            e, m, n = layer.codes.shape
+            packed = pack_nibbles(layer.codes.reshape(e * m, n))
+            return dataclasses.replace(layer,
+                                       codes=packed.reshape(e, m, -1),
+                                       fmt=self.name, n_cols=n)
+        assert layer.packed == self.packed, \
+            "already packed; decode first"          # no silent relabel
+        return dataclasses.replace(layer, fmt=self.name,
+                                   n_cols=layer.n_cols
+                                   or layer.codes.shape[-1])
+
+    def abstract(self, shape, bits, book_dtype, code_dtype=jnp.uint8,
+                 qcfg=None):
+        *lead, e, din, dout = shape
+        nc = (din + 1) // 2 if self.packed else din
+        out = QuantizedExperts(
+            codes=jax.ShapeDtypeStruct((*lead, e, dout, nc), code_dtype),
+            codebook=jax.ShapeDtypeStruct((*lead, e, dout, 1 << bits),
+                                          book_dtype),
+            bits=bits, fmt=self.name, n_cols=din)
+        if qcfg is not None and qcfg.outlier_ratio > 0:
+            k = outlier_k(din, qcfg.outlier_ratio)
+            out.sparse_idx = jax.ShapeDtypeStruct((*lead, e, dout, k),
+                                                  jnp.int32)
+            out.sparse_val = jax.ShapeDtypeStruct((*lead, e, dout, k),
+                                                  book_dtype)
+        if qcfg is not None and qcfg.full_rows > 0:
+            out.full_row_idx = jax.ShapeDtypeStruct(
+                (*lead, e, qcfg.full_rows), jnp.int32)
+            out.full_row_val = jax.ShapeDtypeStruct(
+                (*lead, e, qcfg.full_rows, din), book_dtype)
+        return out
+
+    def storage_bits(self, layer: QuantizedExperts):
+        shape = layer.codes.shape
+        lead = 1
+        for d in shape[:-1]:
+            lead *= d
+        n = layer.n_cols if self.packed else shape[-1]
+        count = lead * n
+        total = layer.bits * count \
+            + layer.codebook.size * dtype_bits(layer.codebook.dtype) \
+            + _sparse_full_bits(layer)
+        return float(total), int(count)
+
+
+@register_format
+class ExpertsFormat(_ExpertsBase):
+    name = "experts"
+    packed = False
+    expert_fmt = "experts"
+
+
+@register_format
+class ExpertsPackedFormat(_ExpertsBase):
+    name = "experts_packed"
+    packed = True
+    expert_fmt = "experts_packed"
+
+
+def packed_linear_fmt(bits: int) -> str:
+    """The nibble-packed linear format for a bit width. 3-bit has its own
+    name (true-bitstream storage accounting); other widths <= 4 ride the
+    4-bit nibble container."""
+    if bits == 3:
+        return "lut3_packed"
+    if bits <= 4:
+        return "lut4_packed"
+    raise ValueError(f"no packed format for {bits}-bit codes")

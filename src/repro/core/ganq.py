@@ -181,7 +181,9 @@ def ganq_quantize(w: jnp.ndarray, h: Optional[jnp.ndarray] = None,
         inv = jnp.argsort(perm)
         codes = codes[:, inv]
 
-    layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits,
+    fmt = ("lut_sparse" if sparse_val is not None or full_row_val is not None
+           else "lut")
+    layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits, fmt=fmt,
                             sparse_idx=sparse_idx, sparse_val=sparse_val,
                             full_row_idx=full_row_idx, full_row_val=full_row_val,
                             bias=bias)

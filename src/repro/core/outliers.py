@@ -35,6 +35,13 @@ def extract_outliers_percentile(w: jnp.ndarray, ratio: float) -> jnp.ndarray:
     return (w >= c_upper) | (w <= c_lower)
 
 
+def outlier_k(n: int, ratio: float) -> int:
+    """Static per-row outlier count of `extract_outliers_topk` — the single
+    definition shared with the abstract (ShapeDtypeStruct) transform so
+    dry-run sparse leaves are sized exactly as the quantizer emits them."""
+    return max(2, int(round(n * ratio)))
+
+
 def extract_outliers_topk(w: jnp.ndarray, ratio: float
                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Static-shape Algorithm 2: returns (w_dense, idx (m,k), val (m,k)).
@@ -43,7 +50,7 @@ def extract_outliers_topk(w: jnp.ndarray, ratio: float
     the per-row range the codebook must cover.
     """
     m, n = w.shape
-    k = max(2, int(round(n * ratio)))
+    k = outlier_k(n, ratio)
     k_hi = k // 2
     k_lo = k - k_hi
     order = jnp.argsort(w, axis=1)

@@ -4,6 +4,11 @@ In-graph (serving) container: 4-bit nibbles, two codes per uint8 — the
 layout the Pallas LUT-mpGEMM kernel consumes. 3-bit codes also ride the
 nibble container in-graph (TPU alignment; 1 wasted bit), while checkpoints
 store the true 3/8-bytes-per-weight bitstream via numpy packbits.
+
+These are the low-level primitives; which layout a served layer actually
+uses is the `WeightFormat` tag on its container (`core.formats` — e.g.
+'lut4_packed' / 'lut3_packed' call `pack_nibbles` in `encode`, and
+storage accounting counts the bitstream width).
 """
 from __future__ import annotations
 

@@ -8,7 +8,9 @@ forward. This module provides the model-agnostic machinery:
   * `HCollector` — streaming accumulation of per-linear H (and token counts),
     fed by model forward passes run in "capture mode" (models/*.py blocks
     call `collector.add(name, x)` on the 2-D inputs of every linear).
-  * `quantize_linear` — dispatch to ganq / ganq* / gptq / rtn on (W, H).
+  * `quantize_linear` — dispatch on (W, H) to any quantizer registered with
+    `@register_quantizer` (ganq / gptq / rtn / squeezellm / awq built in;
+    out-of-tree methods register the same way — no string chain to edit).
   * `SequentialPTQ` — the per-block loop: capture -> quantize -> propagate.
 
 The model-facing half (walking a concrete parameter tree) lives in
@@ -54,63 +56,102 @@ class HCollector:
         return list(self.h.keys())
 
 
+# ------------------------------------------------------- quantizer registry
+
+_QUANTIZERS: Dict[str, Callable] = {}
+
+
+def register_quantizer(name: str):
+    """Decorator: register fn(w, h, cfg, bias) -> QuantResult under `name`.
+
+    Every registered method must emit a `QuantizedLinear` so every baseline
+    runs on the same LUT-mpGEMM deployment path (the paper's
+    apples-to-apples setting) and composes with `PrecisionPolicy` rules.
+    """
+    def deco(fn: Callable) -> Callable:
+        assert name not in _QUANTIZERS, name
+        _QUANTIZERS[name] = fn
+        return fn
+    return deco
+
+
+def available_quantizers():
+    return sorted(_QUANTIZERS)
+
+
 def quantize_linear(w: jnp.ndarray, h: jnp.ndarray, cfg: QuantConfig,
                     method: str = "ganq",
                     bias: Optional[jnp.ndarray] = None) -> QuantResult:
-    """Quantize one (m, n) weight with the chosen method, LUT-serving-ready.
+    """Quantize one (m, n) weight with a registered method."""
+    try:
+        fn = _QUANTIZERS[method]
+    except KeyError:
+        raise ValueError(f"unknown method {method!r}; "
+                         f"available: {available_quantizers()}") from None
+    return fn(w, h, cfg, bias)
 
-    All methods emit a `QuantizedLinear` so every baseline runs on the same
-    LUT-mpGEMM deployment path (the paper's apples-to-apples setting).
-    """
-    if method == "ganq":
-        return ganq_quantize(w, h=h, cfg=cfg, bias=bias)
-    if method == "gptq":
-        codes, wq = gptq_quantize(w, h, cfg.bits, damp=max(cfg.damp, 0.01))
-        # express the affine grid as a per-row LUT so serving is uniform
-        t = rtn_codebook(w, cfg.bits)
-        layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits, bias=bias)
-        err = layer_objective(jnp.asarray(w, jnp.float32), wq, h)
-        return QuantResult(layer=layer, err_history=err[None])
-    if method == "rtn":
-        codes, _, _ = rtn_quantize(w, cfg.bits)
-        t = rtn_codebook(w, cfg.bits)
-        layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits, bias=bias)
-        wq = layer.dequantize()
-        err = layer_objective(jnp.asarray(w, jnp.float32), wq, h)
-        return QuantResult(layer=layer, err_history=err[None])
-    if method == "squeezellm":
-        # sensitivity-weighted k-means codebook + nearest assignment
-        # (SqueezeLLM, the paper's Table-5 LUT baseline; diagonal-H proxy
-        # for the Fisher sensitivity, no cross-column error feedback)
-        from .codebook import assign_nearest, weighted_kmeans
-        wf = jnp.asarray(w, jnp.float32)
-        t = weighted_kmeans(wf, jnp.diag(h), cfg.bits, cfg.kmeans_iters)
-        codes = assign_nearest(wf, t).astype(jnp.uint8)
-        layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits,
-                                bias=bias)
-        err = layer_objective(wf, layer.dequantize(), h)
-        return QuantResult(layer=layer, err_history=err[None])
-    if method == "awq":
-        # AWQ-style (Lin et al. '24): activation-aware per-input-channel
-        # scaling folded around a group-128 RTN grid; layer-level baseline
-        # (the runtime scale-folding into the previous op is assumed, as in
-        # the reference implementation)
-        wf = jnp.asarray(w, jnp.float32)
-        act_scale = jnp.sqrt(jnp.maximum(jnp.diag(h), 1e-12))
-        s = jnp.power(act_scale / jnp.mean(act_scale), 0.5)
-        n = wf.shape[1]
-        gs = 128 if n % 128 == 0 else None
-        from .rtn import rtn_reconstruct
-        wq = rtn_reconstruct(wf * s[None, :], cfg.bits, group_size=gs) \
-            / s[None, :]
-        # store via per-row LUT of the scaled grid for uniform serving
-        codes, _, _ = rtn_quantize(wf * s[None, :], cfg.bits)
-        t = rtn_codebook(wf * s[None, :], cfg.bits)
-        layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits,
-                                bias=bias)
-        err = layer_objective(wf, wq, h)
-        return QuantResult(layer=layer, err_history=err[None])
-    raise ValueError(f"unknown method {method!r}")
+
+@register_quantizer("ganq")
+def _ganq(w, h, cfg, bias) -> QuantResult:
+    return ganq_quantize(w, h=h, cfg=cfg, bias=bias)
+
+
+@register_quantizer("gptq")
+def _gptq(w, h, cfg, bias) -> QuantResult:
+    codes, wq = gptq_quantize(w, h, cfg.bits, damp=max(cfg.damp, 0.01))
+    # express the affine grid as a per-row LUT so serving is uniform
+    t = rtn_codebook(w, cfg.bits)
+    layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits, bias=bias)
+    err = layer_objective(jnp.asarray(w, jnp.float32), wq, h)
+    return QuantResult(layer=layer, err_history=err[None])
+
+
+@register_quantizer("rtn")
+def _rtn(w, h, cfg, bias) -> QuantResult:
+    codes, _, _ = rtn_quantize(w, cfg.bits)
+    t = rtn_codebook(w, cfg.bits)
+    layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits, bias=bias)
+    wq = layer.dequantize()
+    err = layer_objective(jnp.asarray(w, jnp.float32), wq, h)
+    return QuantResult(layer=layer, err_history=err[None])
+
+
+@register_quantizer("squeezellm")
+def _squeezellm(w, h, cfg, bias) -> QuantResult:
+    # sensitivity-weighted k-means codebook + nearest assignment
+    # (SqueezeLLM, the paper's Table-5 LUT baseline; diagonal-H proxy
+    # for the Fisher sensitivity, no cross-column error feedback)
+    from .codebook import assign_nearest, weighted_kmeans
+    wf = jnp.asarray(w, jnp.float32)
+    t = weighted_kmeans(wf, jnp.diag(h), cfg.bits, cfg.kmeans_iters)
+    codes = assign_nearest(wf, t).astype(jnp.uint8)
+    layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits,
+                            bias=bias)
+    err = layer_objective(wf, layer.dequantize(), h)
+    return QuantResult(layer=layer, err_history=err[None])
+
+
+@register_quantizer("awq")
+def _awq(w, h, cfg, bias) -> QuantResult:
+    # AWQ-style (Lin et al. '24): activation-aware per-input-channel
+    # scaling folded around a group-128 RTN grid; layer-level baseline
+    # (the runtime scale-folding into the previous op is assumed, as in
+    # the reference implementation)
+    wf = jnp.asarray(w, jnp.float32)
+    act_scale = jnp.sqrt(jnp.maximum(jnp.diag(h), 1e-12))
+    s = jnp.power(act_scale / jnp.mean(act_scale), 0.5)
+    n = wf.shape[1]
+    gs = 128 if n % 128 == 0 else None
+    from .rtn import rtn_reconstruct
+    wq = rtn_reconstruct(wf * s[None, :], cfg.bits, group_size=gs) \
+        / s[None, :]
+    # store via per-row LUT of the scaled grid for uniform serving
+    codes, _, _ = rtn_quantize(wf * s[None, :], cfg.bits)
+    t = rtn_codebook(wf * s[None, :], cfg.bits)
+    layer = QuantizedLinear(codes=codes, codebook=t, bits=cfg.bits,
+                            bias=bias)
+    err = layer_objective(wf, wq, h)
+    return QuantResult(layer=layer, err_history=err[None])
 
 
 @dataclasses.dataclass
@@ -123,7 +164,7 @@ class SequentialPTQ:
         collector is passed the block must record every linear input.
       quantize_block: fn(block_params, {name: H}, cfg) -> quantized params.
       cfg: quantizer config.
-      method: 'ganq' | 'gptq' | 'rtn'.
+      method: any name in `available_quantizers()`.
     """
 
     block_forward: Callable

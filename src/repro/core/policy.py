@@ -1,0 +1,173 @@
+"""Per-layer precision policy + execution policy for mixed-precision PTQ.
+
+`PrecisionPolicy` maps layer names to (QuantConfig, quantizer method,
+WeightFormat) so one PTQ pass can emit e.g. 3-bit MLPs / 4-bit attention /
+fp lm-head and the result serves unchanged through the slot engine. Rules
+are first-match-wins fnmatch globs over the per-linear capture names the
+pipeline already uses ("layer3/mlp/w_up", "layer0/attn/wq",
+"layer1/moe/w_down", "dec0/xattn/wq"); `abstract_quantize` resolves the
+same rules against param-tree paths ("stack/units/0/mlp/w_up"), so write
+patterns that match both — sublayer-type globs like "*/mlp/*" do.
+
+Note: pattern-unit stacking (models/transformer.py) stacks the same
+position across units, so rules must be *depth-uniform* (keyed on sublayer
+type, not "layer7/..."), or the per-unit containers cannot be stacked —
+exactly the mixed-precision shapes related LUT-serving work (Any-Precision
+LLM, FineQuant) deploys.
+
+`ExecPolicy` carries backend switches that used to be module globals
+(`models.linears._LUT_BACKEND`); it is threaded through `ShardCtx` so the
+choice is explicit per call tree instead of ambient mutable state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Optional, Tuple
+
+from .types import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPolicy:
+    """Execution knobs threaded through ShardCtx (no module globals).
+
+    lut_backend: 'xla' (take_along_axis dequant + dot; dry-run / SPMD path)
+      or 'pallas' (fused LUT-mpGEMM kernel; interpret mode off-TPU).
+    """
+
+    lut_backend: str = "xla"
+
+    def __post_init__(self):
+        assert self.lut_backend in ("xla", "pallas"), self.lut_backend
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerRule:
+    """One policy rule: fnmatch `pattern` -> precision/format override.
+
+    Exactly one of {keep_fp, bits, qcfg} decides the precision:
+      keep_fp=True  leave the weight in full precision (skip quantization)
+      bits=N        quantize with the policy default QuantConfig at N bits
+      qcfg=...      fully custom QuantConfig for matching layers
+    `method` / `fmt` override the quantizer and serving format when set.
+    """
+
+    pattern: str
+    bits: Optional[int] = None
+    qcfg: Optional[QuantConfig] = None
+    method: Optional[str] = None
+    fmt: Optional[str] = None
+    keep_fp: bool = False
+    # segment=True: `pattern` must equal one whole "/"-separated path
+    # component ('attn' matches 'layer0/attn/wq' but NOT 'dec0/xattn/wq');
+    # False: ordinary fnmatch glob over the full name.
+    segment: bool = False
+
+    def matches(self, name: str) -> bool:
+        if self.segment:
+            return self.pattern in name.split("/")
+        return fnmatch.fnmatchcase(name, self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedQuant:
+    """Policy decision for one layer; qcfg=None means keep full precision."""
+
+    qcfg: Optional[QuantConfig]
+    method: str
+    fmt: str
+
+    @property
+    def keep_fp(self) -> bool:
+        return self.qcfg is None
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """First-match-wins layer rules over a uniform default.
+
+    qcfg/method/fmt are the defaults for every layer no rule matches —
+    `PrecisionPolicy(qcfg=QuantConfig(bits=4))` is exactly the old uniform
+    behaviour. `fmt` must name a linear `WeightFormat` ('lut',
+    'lut4_packed', 'lut3_packed', 'lut_sparse'); MoE expert weights map to
+    the stacked-experts counterpart automatically.
+    """
+
+    qcfg: QuantConfig = QuantConfig()
+    method: str = "ganq"
+    fmt: str = "lut"
+    rules: Tuple[LayerRule, ...] = ()
+
+    @classmethod
+    def uniform(cls, qcfg: QuantConfig, method: str = "ganq",
+                fmt: str = "lut") -> "PrecisionPolicy":
+        return cls(qcfg=qcfg, method=method, fmt=fmt)
+
+    def resolve(self, name: str) -> ResolvedQuant:
+        for r in self.rules:
+            if not r.matches(name):
+                continue
+            if r.keep_fp:
+                return ResolvedQuant(None, r.method or self.method, "dense")
+            qcfg = r.qcfg
+            if qcfg is None:
+                qcfg = (dataclasses.replace(self.qcfg, bits=r.bits)
+                        if r.bits is not None else self.qcfg)
+            return ResolvedQuant(qcfg, r.method or self.method,
+                                 r.fmt or self.fmt)
+        return ResolvedQuant(self.qcfg, self.method, self.fmt)
+
+
+def parse_policy(spec: str, qcfg: QuantConfig, method: str = "ganq",
+                 fmt: str = "lut") -> PrecisionPolicy:
+    """Build a PrecisionPolicy from a CLI spec string.
+
+    spec: comma-separated `pattern=value` entries, value one of
+      fp          keep full precision
+      N           bits (default QuantConfig rebased to N bits)
+      N@format    bits + serving-format override
+    A pattern without glob characters matches a whole path segment
+    ('attn' hits 'layer0/attn/wq' but not 'dec0/xattn/wq'); glob
+    patterns fnmatch the full layer name.
+
+    Example: "mlp=3,attn=4,w_down=fp"  — 3-bit MLPs, 4-bit attention,
+    fp w_down; everything else uses the default `qcfg`.
+    """
+    rules = []
+    for entry in filter(None, (e.strip() for e in spec.split(","))):
+        if "=" not in entry:
+            raise ValueError(f"policy entry {entry!r} is not pattern=value")
+        pat, val = (s.strip() for s in entry.split("=", 1))
+        segment = not any(c in pat for c in "*?[/")
+        if not segment and "/" in pat and not any(c in pat for c in "*?["):
+            pat = f"*{pat}*"           # glob-free subpath: substring match
+        if val == "fp":
+            rules.append(LayerRule(pattern=pat, keep_fp=True,
+                                   segment=segment))
+            continue
+        rule_fmt = None
+        if "@" in val:
+            val, rule_fmt = (s.strip() for s in val.split("@", 1))
+        rules.append(LayerRule(pattern=pat, bits=int(val), fmt=rule_fmt,
+                               segment=segment))
+    return PrecisionPolicy(qcfg=qcfg, method=method, fmt=fmt,
+                           rules=tuple(rules))
+
+
+@dataclasses.dataclass
+class LayerQuantReport:
+    """Per-linear PTQ report entry: error AND storage, per layer.
+
+    `float(entry)` returns the layer objective ||WX - W~X||_F^2 so scalar
+    consumers keep working.
+    """
+
+    err: float
+    bits_per_weight: float
+    bits: Optional[int]          # codebook bit width; None = kept fp
+    fmt: str
+    method: str
+
+    def __float__(self) -> float:
+        return float(self.err)

@@ -2,6 +2,12 @@
 
 Everything is a plain pytree (dataclass of arrays) so it composes with
 jit/shard_map/checkpointing without a framework dependency.
+
+`QuantizedLinear` / `QuantizedExperts` are *thin carriers*: arrays plus a
+`fmt` tag naming a `WeightFormat` in `core.formats`. All behaviour —
+matmul dispatch, dequantize, packing, storage accounting, abstract
+(ShapeDtypeStruct) construction — lives in the format registry; the
+methods here are convenience wrappers that delegate to it.
 """
 from __future__ import annotations
 
@@ -57,10 +63,15 @@ class QuantizedLinear:
     input features (n = d_in), matching the paper's W (m x n) acting as W @ x.
 
     Fields:
-      codes: (m, n) uint8 codebook indices, values < 2**bits. (The in-graph
-        container; HBM/packed form lives in core.packing / kernels.)
+      codes: (m, n) uint8 codebook indices (or (m, ceil(n/2)) nibble-packed
+        for packed formats), values < 2**bits.
       codebook: (m, 2**bits) fp values (the per-row LUT T).
       bits: static bit width.
+      fmt: name of the owning `WeightFormat` ('lut', 'lut4_packed',
+        'lut3_packed', 'lut_sparse', ...). The registry entry defines how
+        codes are laid out, applied, dequantized and accounted.
+      n_cols: original n (always set for packed formats; 0 means
+        codes.shape[-1]).
       sparse_idx/sparse_val: optional structured outliers (m, k) — Algorithm 2
         residual kept in fp; applied as a per-row k-sparse matvec.
       full_row_idx/full_row_val: optional rows kept entirely in fp.
@@ -70,8 +81,8 @@ class QuantizedLinear:
     codes: jax.Array
     codebook: jax.Array
     bits: int
-    packed: bool = False          # nibble-packed codes (m, ceil(n/2))
-    n_cols: int = 0               # original n when packed
+    fmt: str = "lut"
+    n_cols: int = 0               # original n when the format packs codes
     sparse_idx: Optional[jax.Array] = None
     sparse_val: Optional[jax.Array] = None
     full_row_idx: Optional[jax.Array] = None
@@ -81,19 +92,28 @@ class QuantizedLinear:
     def tree_flatten(self):
         children = (self.codes, self.codebook, self.sparse_idx, self.sparse_val,
                     self.full_row_idx, self.full_row_val, self.bias)
-        return children, (self.bits, self.packed, self.n_cols)
+        return children, (self.bits, self.fmt, self.n_cols)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        bits, packed, n_cols = aux
+        bits, fmt, n_cols = aux
         codes, codebook, sidx, sval, fidx, fval, bias = children
-        return cls(codes=codes, codebook=codebook, bits=bits, packed=packed,
+        return cls(codes=codes, codebook=codebook, bits=bits, fmt=fmt,
                    n_cols=n_cols, sparse_idx=sidx,
-                   sparse_val=sval, full_row_idx=fidx, full_row_val=fval, bias=bias)
+                   sparse_val=sval, full_row_idx=fidx, full_row_val=fval,
+                   bias=bias)
+
+    def _format(self):
+        from .formats import get_format   # lazy: formats imports this module
+        return get_format(self.fmt)
+
+    @property
+    def packed(self) -> bool:
+        return self._format().packed
 
     @property
     def shape(self):
-        n = self.n_cols if self.packed else self.codes.shape[1]
+        n = self.n_cols if self.packed else self.codes.shape[-1]
         return (self.codes.shape[0], n)
 
     def unpacked_codes(self) -> jax.Array:
@@ -104,22 +124,63 @@ class QuantizedLinear:
 
     def dequantize(self) -> jax.Array:
         """Materialize W~ (m, n) — reference/debug path."""
-        w = jnp.take_along_axis(self.codebook,
-                                self.unpacked_codes().astype(jnp.int32), axis=1)
-        if self.sparse_val is not None:
-            w = put_rows_sparse(w, self.sparse_idx, self.sparse_val)
-        if self.full_row_val is not None:
-            w = w.at[self.full_row_idx].set(self.full_row_val.astype(w.dtype))
-        return w
+        return self._format().dequantize(self)
 
     def storage_bits_per_weight(self) -> float:
-        m, n = self.shape
-        total = self.bits * m * n + 16 * m * (1 << self.bits)
-        if self.sparse_val is not None:
-            total += self.sparse_val.shape[1] * m * (16 + 32)
-        if self.full_row_val is not None:
-            total += self.full_row_val.size * 16
-        return total / (m * n)
+        total, count = self._format().storage_bits(self)
+        return total / count
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedExperts:
+    """Stacked per-expert LUT weights: codes (E, m, n[/2]), codebook (E, m, L).
+
+    `fmt` names the owning format ('experts' unpacked / 'experts_packed'
+    nibble-packed); decode and storage accounting route through it.
+    Optional GANQ* fields ride alongside either layout: sparse outliers
+    (E, m, k) and full-precision rows ((E, r) idx / (E, r, n) val), applied
+    per expert at decode.
+    """
+
+    codes: jax.Array
+    codebook: jax.Array
+    bits: int
+    fmt: str = "experts"
+    n_cols: int = 0
+    sparse_idx: Optional[jax.Array] = None
+    sparse_val: Optional[jax.Array] = None
+    full_row_idx: Optional[jax.Array] = None
+    full_row_val: Optional[jax.Array] = None
+
+    def tree_flatten(self):
+        children = (self.codes, self.codebook, self.sparse_idx,
+                    self.sparse_val, self.full_row_idx, self.full_row_val)
+        return children, (self.bits, self.fmt, self.n_cols)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bits, fmt, n_cols = aux
+        codes, codebook, sidx, sval, fidx, fval = children
+        return cls(codes, codebook, bits, fmt, n_cols, sparse_idx=sidx,
+                   sparse_val=sval, full_row_idx=fidx, full_row_val=fval)
+
+    def _format(self):
+        from .formats import get_format
+        return get_format(self.fmt)
+
+    @property
+    def packed(self) -> bool:
+        return self._format().packed
+
+    def dequantize(self, dtype) -> jax.Array:
+        """(E, n, m) dense weights in the einsum layout (x @ w)."""
+        w = self._format().dequantize(self)               # (E, m, n)
+        return jnp.swapaxes(w, 1, 2).astype(dtype)
+
+    def storage_bits_per_weight(self) -> float:
+        total, count = self._format().storage_bits(self)
+        return total / count
 
 
 def put_rows_sparse(w: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:

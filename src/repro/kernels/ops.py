@@ -9,6 +9,7 @@ SPMD dry-run, where the jnp path keeps the HLO analyzable).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,14 +25,21 @@ def _on_tpu() -> bool:
 
 def lut_linear(codes_or_packed: jnp.ndarray, codebook: jnp.ndarray,
                x: jnp.ndarray, *, bits: int = 4, packed: bool = False,
-               use_pallas: bool = True) -> jnp.ndarray:
+               use_pallas: bool = True,
+               fmt: Optional[str] = None) -> jnp.ndarray:
     """Y = W~ @ X for a LUT-quantized layer.
 
     Args:
       codes_or_packed: (m, n) uint8 codes, or (m, ceil(n/2)) nibble-packed.
       codebook: (m, 2**bits).
       x: (n, p) activations.
+      fmt: optional `WeightFormat` name — when given, the code layout
+        (packed or not) is read from the registry instead of the `packed`
+        flag, so callers can route by format tag alone.
     """
+    if fmt is not None:
+        from repro.core.formats import get_format
+        packed = get_format(fmt).packed
     if not use_pallas:
         if packed:
             return ref.lut_matmul_packed_ref(codes_or_packed, codebook, x)

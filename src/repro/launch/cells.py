@@ -58,6 +58,7 @@ class Cell:
 def build_cell(arch: str, shape_name: str, mesh: Mesh,
                remat: str = "full", zero1: bool = False,
                quantized_serve: bool = False, bits: int = 4,
+               policy_spec: str = None,
                ce_chunk: int = 512, accum: int = 1) -> Cell:
     cfg = get_config(arch)
     shp = SHAPES[shape_name]
@@ -71,7 +72,14 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh,
     params_sds = abstract_params(cfg)
     if quantized_serve and shp["kind"] in ("prefill", "decode"):
         from repro.models.quantized import abstract_quantize
-        params_sds = abstract_quantize(params_sds, cfg, bits=bits)
+        policy = None
+        if policy_spec:
+            from repro.core import QuantConfig, parse_policy
+            from repro.core.formats import packed_linear_fmt
+            policy = parse_policy(policy_spec, QuantConfig(bits=bits),
+                                  fmt=packed_linear_fmt(bits))
+        params_sds = abstract_quantize(params_sds, cfg, bits=bits,
+                                       policy=policy)
     p_shard = param_shardings(params_sds, mesh)
     seq, batch = shp["seq"], shp["batch"]
 

@@ -42,7 +42,9 @@ def collective_summary(hlo_text: str) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
-             remat: str = "full", zero1: bool = False) -> dict:
+             remat: str = "full", zero1: bool = False,
+             quantized_serve: bool = False, bits: int = 4,
+             policy_spec: str = None) -> dict:
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16"}
     cfg = get_config(arch)
@@ -52,7 +54,9 @@ def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
         return rec
     t0 = time.time()
     try:
-        cell = build_cell(arch, shape_name, mesh, remat=remat, zero1=zero1)
+        cell = build_cell(arch, shape_name, mesh, remat=remat, zero1=zero1,
+                          quantized_serve=quantized_serve, bits=bits,
+                          policy_spec=policy_spec)
         lowered = lower_cell(cell, mesh)
         compiled = lowered.compile()
         ma = compiled.memory_analysis()
@@ -92,6 +96,14 @@ def main(argv=None) -> int:
     ap.add_argument("--remat", default="full",
                     choices=["none", "full", "dots"])
     ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--quantized-serve", action="store_true",
+                    help="lower prefill/decode cells on LUT-quantized "
+                         "weight containers (WeightFormat registry)")
+    ap.add_argument("--bits", type=int, default=4,
+                    help="bit width for --quantized-serve")
+    ap.add_argument("--policy", default=None,
+                    help="mixed-precision spec for --quantized-serve "
+                         "(core.policy.parse_policy syntax)")
     ap.add_argument("--out", default=None, help="append JSONL here")
     args = ap.parse_args(argv)
 
@@ -105,7 +117,9 @@ def main(argv=None) -> int:
         for arch in archs:
             for shape_name in shapes:
                 rec = run_cell(arch, shape_name, mesh, multi_pod,
-                               remat=args.remat, zero1=args.zero1)
+                               remat=args.remat, zero1=args.zero1,
+                               quantized_serve=args.quantized_serve,
+                               bits=args.bits, policy_spec=args.policy)
                 line = json.dumps(rec)
                 print(line, flush=True)
                 if args.out:

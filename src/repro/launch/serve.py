@@ -4,6 +4,10 @@ CPU demo (reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
       --bits 4 --requests 8
 
+Mixed-precision policy (3-bit MLPs, 4-bit attention, fp-kept w_down):
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
+      --policy "mlp=3,attn=4" --requests 8
+
 Production decode-step compile check (the paper's deployment on a pod):
   python -m repro.launch.serve --arch granite-3-8b --dry-run-only \\
       --bits 4 --kv8
@@ -22,6 +26,14 @@ def main(argv=None) -> int:
     ap.add_argument("--bits", type=int, default=4, choices=[2, 3, 4])
     ap.add_argument("--method", default="ganq",
                     choices=["ganq", "gptq", "rtn", "none"])
+    ap.add_argument("--policy", default=None,
+                    help="per-layer precision spec, e.g. 'mlp=3,attn=4,"
+                         "head=fp' or 'mlp=3@lut3_packed' (see "
+                         "core.policy.parse_policy); default uniform --bits")
+    ap.add_argument("--lut-backend", default="xla",
+                    choices=["xla", "pallas"],
+                    help="LUT-matmul backend (ExecPolicy threaded through "
+                         "ShardCtx; no global state)")
     ap.add_argument("--kv8", action="store_true",
                     help="int8 KV cache (beyond-paper)")
     ap.add_argument("--requests", type=int, default=8)
@@ -41,7 +53,7 @@ def main(argv=None) -> int:
         mesh = make_production_mesh()
         cell = build_cell(args.arch, "decode_32k", mesh,
                           quantized_serve=args.method != "none",
-                          bits=args.bits)
+                          bits=args.bits, policy_spec=args.policy)
         comp = lower_cell(cell, mesh).compile()
         ma = comp.memory_analysis()
         peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
@@ -54,27 +66,35 @@ def main(argv=None) -> int:
     import jax.numpy as jnp
     import numpy as np
     from repro.configs import get_config, reduce_config
-    from repro.core import QuantConfig
+    from repro.core import QuantConfig, parse_policy
     from repro.data.synthetic import MarkovStream
     from repro.models import init_params
-    from repro.models.quantized import quantize_model_ptq
+    from repro.models.quantized import model_storage_report, quantize_model_ptq
     from repro.serve.engine import GenRequest, ServeEngine
+    from repro.sharding.context import LOCAL
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_config(cfg)
     if args.kv8:
         cfg = dataclasses.replace(cfg, kv_quant_bits=8)
+    ctx = LOCAL.with_lut_backend(args.lut_backend)
     params = init_params(jax.random.PRNGKey(0), cfg)
     data = MarkovStream(cfg.vocab_size, batch=4, seq=32, seed=0)
     if args.method != "none":
         calib = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
-        params, _ = quantize_model_ptq(
-            params, cfg, calib,
-            QuantConfig(bits=args.bits, iters=4, precondition="fixed"),
-            args.method)
-        print(f"quantized with {args.method} @{args.bits}-bit")
-    engine = ServeEngine(params, cfg, max_len=128, n_slots=args.slots)
+        qcfg = QuantConfig(bits=args.bits, iters=4, precondition="fixed")
+        policy = (parse_policy(args.policy, qcfg, args.method)
+                  if args.policy else None)
+        params, report = quantize_model_ptq(
+            params, cfg, calib, qcfg, args.method, policy=policy)
+        rep = model_storage_report(params, report)
+        pol_str = f" policy '{args.policy}'" if args.policy else ""
+        print(f"quantized with {args.method} @{args.bits}-bit{pol_str}: "
+              f"{rep['bits_per_weight']:.2f} bits/weight over "
+              f"{rep['quantized_weights']} weights")
+    engine = ServeEngine(params, cfg, ctx=ctx, max_len=128,
+                         n_slots=args.slots)
     # mixed-length traffic: continuous batching needs no length grouping
     rng = np.random.default_rng(0)
     toks = data.batch_at(1)["tokens"]

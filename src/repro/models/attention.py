@@ -43,7 +43,7 @@ def _heads(x: jnp.ndarray, n: int, hd: int) -> jnp.ndarray:
 
 def project_q(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col, prefix,
               rope: bool = True):
-    q = linear_apply(p["wq"], x, col, prefix + "wq")
+    q = linear_apply(p["wq"], x, col, prefix + "wq", ctx)
     q = ctx.constrain(q, "dp", None, ctx.tp_axis)
     q = _heads(q, cfg.n_heads, cfg.head_dim)
     if "q_norm" in p:
@@ -58,8 +58,8 @@ def project_q(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col, prefix,
 
 def project_kv(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col, prefix,
                rope: bool = True):
-    k = linear_apply(p["wk"], x, col, prefix + "wk")
-    v = linear_apply(p["wv"], x, col, prefix + "wv")
+    k = linear_apply(p["wk"], x, col, prefix + "wk", ctx)
+    v = linear_apply(p["wv"], x, col, prefix + "wv", ctx)
     k = ctx.constrain(k, "dp", None, ctx.tp_axis)
     v = ctx.constrain(v, "dp", None, ctx.tp_axis)
     k = _heads(k, cfg.n_kv_heads, cfg.head_dim)
@@ -252,7 +252,7 @@ def attention_block(p, x, positions, cfg: ModelConfig, kind: str,
                     "causal" if kind == "attn" else "sliding",
                     cfg.sliding_window, chunk)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
-    y = linear_apply(p["wo"], o, col, prefix + "wo")
+    y = linear_apply(p["wo"], o, col, prefix + "wo", ctx)
     return ctx.constrain(y, "dp", None, None), (k, v)
 
 
@@ -271,7 +271,7 @@ def attention_decode_block(p, x, pos, cache: Params, cfg: ModelConfig,
                       "causal" if kind == "attn" else "sliding",
                       cfg.sliding_window, active)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
-    y = linear_apply(p["wo"], o, None, "")
+    y = linear_apply(p["wo"], o, None, "", ctx)
     return ctx.constrain(y, "dp", None, None), cache
 
 
@@ -287,7 +287,7 @@ def cross_attention_block(p, x, enc_kv: Tuple[jnp.ndarray, jnp.ndarray],
     o = attend_full(q, k, v, jnp.arange(s), jnp.arange(sk), "none", 0,
                     chunk=None)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
-    y = linear_apply(p["wo"], o, col, prefix + "wo")
+    y = linear_apply(p["wo"], o, col, prefix + "wo", ctx)
     return ctx.constrain(y, "dp", None, None)
 
 

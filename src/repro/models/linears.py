@@ -1,33 +1,27 @@
-"""Linear-layer dispatch: dense fp weights or GANQ LUT-quantized weights.
+"""Linear-layer dispatch through the WeightFormat registry.
 
 Every matmul in the model zoo goes through `linear_apply`, so swapping a
 model to its quantized form is a pure parameter-tree transformation
 (models/quantized.py) — the forward code is unchanged. This mirrors the
 paper's deployment story: same network, mpGEMM instead of GEMM.
+
+Dispatch is on the container's `fmt` tag (raw arrays are 'dense'); the
+LUT-matmul backend ('xla' | 'pallas') comes from `ctx.exec_policy`
+(`repro.core.policy.ExecPolicy`) threaded through `ShardCtx` — there is no
+module-global backend switch. Migration from the old API:
+
+    set_lut_backend("pallas"); linear_apply(w, x)          # removed
+    linear_apply(w, x, ctx=ctx.with_lut_backend("pallas"))  # now
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+from typing import Union
 
 import jax.numpy as jnp
 
-from repro.core.outliers import apply_sparse
+from repro.core.formats import get_format
 from repro.core.types import QuantizedLinear
-
-# module-level backend switch for LUT matmuls:
-#   'pallas' — fused Pallas kernel (interpret mode on CPU)
-#   'xla'    — take_along_axis dequant + dot (dry-run / SPMD path)
-_LUT_BACKEND = "xla"
-
-
-def set_lut_backend(name: str) -> None:
-    global _LUT_BACKEND
-    assert name in ("pallas", "xla"), name
-    _LUT_BACKEND = name
-
-
-def get_lut_backend() -> str:
-    return _LUT_BACKEND
+from repro.sharding.context import ShardCtx, LOCAL
 
 
 def cap(col, name: str, x: jnp.ndarray) -> None:
@@ -37,36 +31,26 @@ def cap(col, name: str, x: jnp.ndarray) -> None:
 
 
 def linear_apply(w: Union[jnp.ndarray, QuantizedLinear], x: jnp.ndarray,
-                 col=None, name: str = "") -> jnp.ndarray:
+                 col=None, name: str = "",
+                 ctx: ShardCtx = LOCAL) -> jnp.ndarray:
     """y = x @ W (dense) or x @ W~^T (LUT-quantized; W~ is (out, in)).
 
-    x: (..., d_in) any leading shape.
+    x: (..., d_in) any leading shape. `ctx.exec_policy.lut_backend` picks
+    the LUT-matmul implementation for quantized weights.
     """
     cap(col, name, x)
-    if isinstance(w, QuantizedLinear):
-        lead = x.shape[:-1]
-        x2 = x.reshape(-1, x.shape[-1])                    # (N, n)
-        if _LUT_BACKEND == "pallas":
-            from repro.kernels.ops import lut_linear       # lazy import
-            y = lut_linear(w.codes, w.codebook.astype(x.dtype), x2.T,
-                           bits=w.bits, packed=w.packed).T  # (N, m)
-        else:
-            wd = jnp.take_along_axis(w.codebook,
-                                     w.unpacked_codes().astype(jnp.int32),
-                                     axis=1)
-            y = x2 @ wd.astype(x.dtype).T
-        if w.sparse_val is not None:
-            y = y + apply_sparse(w.sparse_idx, w.sparse_val, x2.T).T.astype(y.dtype)
-        if w.full_row_val is not None:
-            y_full = x2 @ w.full_row_val.astype(x.dtype).T  # (N, n_full)
-            y = y.at[:, w.full_row_idx].set(y_full)
-        if w.bias is not None:
-            y = y + w.bias.astype(y.dtype)
-        return y.reshape(*lead, -1)
-    return x @ w.astype(x.dtype)
+    fmt = getattr(w, "fmt", None)
+    if fmt is None:                                        # dense fp weights
+        return x @ w.astype(x.dtype)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])                        # (N, n)
+    y = get_format(fmt).apply(w, x2, backend=ctx.lut_backend)
+    if w.bias is not None:
+        y = y + w.bias.astype(y.dtype)
+    return y.reshape(*lead, -1)
 
 
 def linear_out_dim(w: Union[jnp.ndarray, QuantizedLinear]) -> int:
-    if isinstance(w, QuantizedLinear):
+    if getattr(w, "fmt", None) is not None:
         return w.codes.shape[0]
     return w.shape[-1]

@@ -27,13 +27,13 @@ def mlp_apply(p, x, cfg: ModelConfig, ctx: ShardCtx = LOCAL, col=None,
               prefix: str = ""):
     act = activation(cfg.act)
     if "w_gate" not in p:
-        h = act(linear_apply(p["w_up"], x, col, prefix + "w_up"))
+        h = act(linear_apply(p["w_up"], x, col, prefix + "w_up", ctx))
         h = ctx.constrain(h, "dp", None, ctx.tp_axis)
-        y = linear_apply(p["w_down"], h, col, prefix + "w_down")
+        y = linear_apply(p["w_down"], h, col, prefix + "w_down", ctx)
         return ctx.constrain(y, "dp", None, None)
-    g = linear_apply(p["w_gate"], x, col, prefix + "w_gate")
-    u = linear_apply(p["w_up"], x, col, prefix + "w_up")
+    g = linear_apply(p["w_gate"], x, col, prefix + "w_gate", ctx)
+    u = linear_apply(p["w_up"], x, col, prefix + "w_up", ctx)
     h = act(g) * u
     h = ctx.constrain(h, "dp", None, ctx.tp_axis)
-    y = linear_apply(p["w_down"], h, col, prefix + "w_down")
+    y = linear_apply(p["w_down"], h, col, prefix + "w_down", ctx)
     return ctx.constrain(y, "dp", None, None)

@@ -61,7 +61,7 @@ def _embed(p: Params, tokens: jnp.ndarray, cfg: ModelConfig,
 def _logits_head(p: Params, h: jnp.ndarray, cfg: ModelConfig,
                  ctx: ShardCtx) -> jnp.ndarray:
     head = p["embed"].T if cfg.tie_embeddings else p["head"]
-    logits = linear_apply(head, h)
+    logits = linear_apply(head, h, ctx=ctx)
     mid = (None,) * (logits.ndim - 2)
     return ctx.constrain(logits, "dp", *mid, ctx.tp_axis)
 

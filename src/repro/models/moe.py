@@ -62,17 +62,29 @@ def capacity(tokens: int, top_k: int, n_experts: int, cf: float) -> int:
 
 
 def _as_dense(w, dtype):
-    """Dense (E, d_in, d_out) view; dequantizes LUT expert weights."""
-    if hasattr(w, "dequantize") and not isinstance(w, jnp.ndarray):
+    """Dense (E, d_in, d_out) view; dequantizes LUT expert weights (the
+    `fmt` tag marks a quantized container — decode routes through the
+    WeightFormat registry inside `dequantize`)."""
+    if getattr(w, "fmt", None) is not None:
         return w.dequantize(dtype)
     return w.astype(dtype)
 
 
-def _expert_ffn(x_buf: jnp.ndarray, p: Params, act) -> jnp.ndarray:
-    """(E_loc, C, d) -> (E_loc, C, d) batched SwiGLU over local experts."""
+def _expert_ffn(x_buf: jnp.ndarray, p: Params, act, col=None,
+                prefix: str = "", e0: int = 0) -> jnp.ndarray:
+    """(E_loc, C, d) -> (E_loc, C, d) batched SwiGLU over local experts.
+
+    In capture mode (`col`), the post-activation hidden state is recorded
+    per expert as `{prefix}expert{e}/hidden` — the Gram of the true w_down
+    input, so PTQ quantizes w_down against H = h h^T instead of H = I
+    (capacity-padding rows are zero and contribute nothing to H).
+    """
     g = jnp.einsum("ecd,edf->ecf", x_buf, _as_dense(p["w_gate"], x_buf.dtype))
     u = jnp.einsum("ecd,edf->ecf", x_buf, _as_dense(p["w_up"], x_buf.dtype))
     h = act(g) * u
+    if col is not None:
+        for e in range(h.shape[0]):
+            col.add(f"{prefix}expert{e0 + e}/hidden", h[e])
     return jnp.einsum("ecf,efd->ecd", h, _as_dense(p["w_down"], x_buf.dtype))
 
 
@@ -101,7 +113,7 @@ def _moe_local(xf: jnp.ndarray, top_i: jnp.ndarray, top_p: jnp.ndarray,
     if col is not None:                                    # PTQ capture
         for e in range(e_loc):
             col.add(f"{prefix}expert{e0 + e}", buf[e])
-    out = _expert_ffn(buf[:e_loc], expert_p, act)
+    out = _expert_ffn(buf[:e_loc], expert_p, act, col, prefix, e0)
     out = jnp.concatenate([out, jnp.zeros((1, cap_c, d), out.dtype)], axis=0)
     slot_out = out[be, bc]                                 # (T*k, d)
     weight = jnp.where(valid, flat_p, 0.0).astype(xf.dtype)[:, None]

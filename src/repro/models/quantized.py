@@ -6,10 +6,25 @@ prefix, the block's linears are quantized (GANQ / GPTQ / RTN), and the
 quantized block's outputs propagate to the next block.
 
 Quantized set (paper setting): every transformer-block GEMM — attention
-projections, MLP, MoE expert FFNs (per-expert H from *dispatched* tokens),
-RWKV r/k/v/g/o + channel-mix, RG-LRU in/gate/out projections. Kept fp:
+projections, MLP, MoE expert FFNs (per-expert H from *dispatched* tokens;
+w_down against the captured per-expert hidden-activation Gram), RWKV
+r/k/v/g/o + channel-mix, RG-LRU in/gate/out projections. Kept fp:
 embeddings, lm head, norms, routers, RWKV decay LoRA, RG-LRU gates/conv
 (<1% of params; DESIGN.md §Arch-applicability).
+
+Mixed precision: every entry point takes a `PrecisionPolicy`
+(core/policy.py) mapping layer-name patterns to per-layer QuantConfig /
+quantizer method / `WeightFormat`, so one PTQ pass can emit e.g. 3-bit
+MLPs + 4-bit attention + fp-kept projections that serve unchanged through
+the slot engine. The legacy `(qcfg, method)` arguments build a uniform
+policy. Storage accounting and the dry-run `abstract_quantize` route
+through the `WeightFormat` registry (core/formats.py), so both always
+agree with what the quantizer actually emitted.
+
+NOTE on stacking: pattern-unit params are stacked across units
+(transformer.py), so policies must be depth-uniform (rules keyed on
+sublayer type like "*/mlp/*", not "layer7/..."): containers with
+different bit widths cannot be stacked into one leaf.
 """
 from __future__ import annotations
 
@@ -21,7 +36,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import HCollector, QuantConfig, quantize_linear
-from repro.core.types import QuantizedLinear
+from repro.core.formats import dtype_bits, get_format
+from repro.core.policy import LayerQuantReport, PrecisionPolicy, ResolvedQuant
+from repro.core.types import QuantizedExperts, QuantizedLinear
 from repro.sharding.context import ShardCtx, LOCAL
 from .common import apply_norm
 from .model import _dtype, _embed
@@ -41,38 +58,17 @@ _BLOCK_LINEARS = {
               ("rec/w_out", "rec/w_out")],
 }
 
+# whisper decoder cross-attention (oneshot path)
+_XATTN_LINEARS = [("xattn/wq", "xattn/wq"), ("xattn/wk", "xattn/wk"),
+                  ("xattn/wv", "xattn/wv"), ("xattn/wo", "xattn/wo")]
 
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class QuantizedExperts:
-    """Stacked per-expert LUT weights: codes (E, m, n[/2]), codebook (E, m, L)."""
-
-    codes: jax.Array
-    codebook: jax.Array
-    bits: int
-    packed: bool = False
-    n_cols: int = 0
-
-    def tree_flatten(self):
-        return (self.codes, self.codebook), (self.bits, self.packed,
-                                             self.n_cols)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        bits, packed, n_cols = aux
-        return cls(children[0], children[1], bits, packed, n_cols)
-
-    def dequantize(self, dtype) -> jax.Array:
-        """(E, n, m) dense weights in the einsum layout (x @ w)."""
-        codes = self.codes
-        if self.packed:
-            lo = codes & 0xF
-            hi = codes >> 4
-            codes = jnp.stack([lo, hi], axis=-1).reshape(
-                codes.shape[0], codes.shape[1], -1)[:, :, :self.n_cols]
-        w = jnp.take_along_axis(self.codebook, codes.astype(jnp.int32),
-                                axis=2)                       # (E, m, n)
-        return jnp.swapaxes(w, 1, 2).astype(dtype)
+# Quantizable param subpaths, derived from the block specs above — the
+# single source of truth shared by the sequential pipeline and the
+# abstract (dry-run) transform; no separately-maintained path list.
+QUANT_2D: Tuple[str, ...] = tuple(sorted(
+    {p for specs in _BLOCK_LINEARS.values() for p, _ in specs}
+    | {p for p, _ in _XATTN_LINEARS}))
+QUANT_MOE: Tuple[str, ...] = ("moe/w_gate", "moe/w_up", "moe/w_down")
 
 
 def _tree_get(tree, path: str):
@@ -90,11 +86,51 @@ def _tree_set(tree, path: str, value):
     node[parts[-1]] = value
 
 
-def _quantize_one(w: jnp.ndarray, h: jnp.ndarray, qcfg: QuantConfig,
-                  method: str) -> Tuple[QuantizedLinear, float]:
-    """w is (d_in, d_out) model layout -> GANQ's (m=out, n=in) via transpose."""
-    res = quantize_linear(jnp.asarray(w, jnp.float32).T, h, qcfg, method)
-    return res.layer, float(res.err_history[-1])
+def _as_policy(qcfg: Optional[QuantConfig], method: str,
+               policy: Optional[PrecisionPolicy]) -> PrecisionPolicy:
+    if policy is not None:
+        return policy
+    if qcfg is None:
+        raise ValueError("provide qcfg (uniform) or policy=")
+    return PrecisionPolicy.uniform(qcfg, method)
+
+
+def _fp_report(w: jnp.ndarray) -> LayerQuantReport:
+    return LayerQuantReport(err=0.0, bits_per_weight=dtype_bits(w.dtype),
+                            bits=None, fmt="dense", method="none")
+
+
+def _expert_fmt(linear_fmt: str) -> str:
+    """Stacked-experts counterpart of a linear format, from the registry."""
+    efmt = get_format(linear_fmt).expert_fmt
+    if efmt is None:
+        raise ValueError(
+            f"format {linear_fmt!r} has no stacked-experts counterpart "
+            f"(set `expert_fmt` on its WeightFormat to quantize MoE "
+            f"expert weights with it)")
+    return efmt
+
+
+def _quantize_one(w: jnp.ndarray, h: jnp.ndarray,
+                  r: ResolvedQuant) -> Tuple[QuantizedLinear,
+                                             LayerQuantReport]:
+    """w is (d_in, d_out) model layout -> GANQ's (m=out, n=in) via
+    transpose; the resolved format re-layouts the canonical container."""
+    res = quantize_linear(jnp.asarray(w, jnp.float32).T, h, r.qcfg, r.method)
+    layer = res.layer
+    # a quantizer emitting sparse outliers / full rows (GANQ*) stays
+    # 'lut_sparse': packed containers carry no sparse fields, so a packed
+    # policy format falls back rather than aborting the PTQ pass
+    target = r.fmt
+    if layer.fmt == "lut_sparse" and (target == "lut"
+                                      or get_format(target).packed):
+        target = "lut_sparse"
+    layer = get_format(target).encode(layer)   # idempotent; normalizes n_cols
+    total, count = get_format(layer.fmt).storage_bits(layer)
+    rep = LayerQuantReport(err=float(res.err_history[-1]),
+                           bits_per_weight=total / count,
+                           bits=r.qcfg.bits, fmt=layer.fmt, method=r.method)
+    return layer, rep
 
 
 def block_linear_specs(kind: str, cfg: ModelConfig) -> List[Tuple[str, str]]:
@@ -114,56 +150,88 @@ def block_linear_specs(kind: str, cfg: ModelConfig) -> List[Tuple[str, str]]:
 
 
 def quantize_block(block_params: Dict, kind: str, col: HCollector,
-                   cfg: ModelConfig, qcfg: QuantConfig, method: str,
-                   prefix: str) -> Tuple[Dict, Dict[str, float]]:
-    """Quantize all linears of one block given captured H. Returns
-    (new params, {name: final layer error})."""
+                   cfg: ModelConfig, policy: PrecisionPolicy,
+                   prefix: str) -> Tuple[Dict, Dict[str, LayerQuantReport]]:
+    """Quantize all linears of one block given captured H under the policy.
+    Returns (new params, {name: LayerQuantReport})."""
     qp = jax.tree.map(lambda x: x, block_params)  # shallow-ish copy
-    report: Dict[str, float] = {}
+    report: Dict[str, LayerQuantReport] = {}
     for path, capname in block_linear_specs(kind, cfg):
+        name = prefix + capname
         w = _tree_get(block_params, path)
-        h = col.get(prefix + capname)
-        layer, err = _quantize_one(w, h, qcfg, method)
+        r = policy.resolve(name)
+        if r.keep_fp:
+            report[name] = _fp_report(w)
+            continue
+        layer, rep = _quantize_one(w, col.get(name), r)
         _tree_set(qp, path, layer)
-        report[prefix + capname] = err
-    # MoE experts: per-expert H from dispatched tokens
+        report[name] = rep
+    # MoE experts: per-expert H from dispatched tokens; w_down against the
+    # captured per-expert hidden-activation Gram (gate/up output)
     if "moe" in block_params:
         moe = block_params["moe"]
         e = cfg.n_experts
-        qlayers = {"w_gate": [], "w_up": [], "w_down": []}
-        for ei in range(e):
-            h_in = col.get(f"{prefix}moe/expert{ei}")
-            for wname in ("w_gate", "w_up"):
+        for wname in ("w_gate", "w_up", "w_down"):
+            name = f"{prefix}moe/{wname}"
+            r = policy.resolve(name)
+            if r.keep_fp:
+                report[name] = _fp_report(moe[wname])
+                continue
+            layers, errs = [], []
+            for ei in range(e):
+                h = (col.get(f"{prefix}moe/expert{ei}/hidden")
+                     if wname == "w_down"
+                     else col.get(f"{prefix}moe/expert{ei}"))
                 res = quantize_linear(
-                    jnp.asarray(moe[wname][ei], jnp.float32).T, h_in, qcfg,
-                    method)
-                qlayers[wname].append(res.layer)
-            # w_down input = hidden activations; approximate H with identity-
-            # free capture: use the gate/up output Gram is not captured —
-            # use weight-space (H=I) for w_down (documented approximation)
-            hid = moe["w_down"].shape[1]
-            res = quantize_linear(
-                jnp.asarray(moe["w_down"][ei], jnp.float32).T,
-                jnp.eye(hid, dtype=jnp.float32), qcfg, method)
-            qlayers["w_down"].append(res.layer)
-        for wname, layers in qlayers.items():
-            codes = jnp.stack([l.codes for l in layers])
-            books = jnp.stack([l.codebook for l in layers])
-            qp["moe"][wname] = QuantizedExperts(codes, books, qcfg.bits)
-        report[prefix + "moe/experts"] = float("nan")
+                    jnp.asarray(moe[wname][ei], jnp.float32).T, h, r.qcfg,
+                    r.method)
+                layers.append(res.layer)
+                errs.append(float(res.err_history[-1]))
+
+            def stack_opt(attr):
+                vals = [getattr(l, attr) for l in layers]
+                return None if vals[0] is None else jnp.stack(vals)
+            experts = QuantizedExperts(
+                codes=jnp.stack([l.codes for l in layers]),
+                codebook=jnp.stack([l.codebook for l in layers]),
+                bits=r.qcfg.bits, n_cols=layers[0].codes.shape[-1],
+                sparse_idx=stack_opt("sparse_idx"),
+                sparse_val=stack_opt("sparse_val"),
+                full_row_idx=stack_opt("full_row_idx"),
+                full_row_val=stack_opt("full_row_val"))
+            # same fallback as _quantize_one: sparse/full-row fields ride
+            # the unpacked experts container, never a packed one
+            lfmt = r.fmt
+            if (any(l.fmt == "lut_sparse" for l in layers)
+                    and (lfmt == "lut" or get_format(lfmt).packed)):
+                lfmt = "lut_sparse"
+            efmt = _expert_fmt(lfmt)
+            if efmt != experts.fmt:
+                experts = get_format(efmt).encode(experts)
+            qp["moe"][wname] = experts
+            total, count = get_format(experts.fmt).storage_bits(experts)
+            report[name] = LayerQuantReport(
+                err=float(jnp.mean(jnp.asarray(errs))),
+                bits_per_weight=total / count, bits=r.qcfg.bits,
+                fmt=experts.fmt, method=r.method)
     return qp, report
 
 
 def quantize_model_ptq(params: Dict, cfg: ModelConfig, batch: Dict,
-                       qcfg: QuantConfig, method: str = "ganq",
-                       ctx: ShardCtx = LOCAL):
+                       qcfg: Optional[QuantConfig] = None,
+                       method: str = "ganq", ctx: ShardCtx = LOCAL,
+                       policy: Optional[PrecisionPolicy] = None):
     """Sequential layer-wise PTQ for decoder-only stacks.
 
     batch: calibration inputs (same format as train batches).
-    Returns (quantized params, per-linear error report).
+    Either `qcfg` (+ `method`) for a uniform pass or `policy=` for
+    per-layer mixed precision. Returns (quantized params,
+    {layer name: LayerQuantReport}) — per-layer error AND storage.
     """
+    policy = _as_policy(qcfg, method, policy)
     if cfg.is_encoder_decoder:
-        return quantize_whisper_oneshot(params, cfg, batch, qcfg, method, ctx)
+        return quantize_whisper_oneshot(params, cfg, batch, policy=policy,
+                                        ctx=ctx)
     cd = _dtype(cfg.compute_dtype)
     pattern, n_units, _ = pattern_split(cfg)
     if cfg.frontend == "patches":
@@ -177,7 +245,7 @@ def quantize_model_ptq(params: Dict, cfg: ModelConfig, batch: Dict,
         if cfg.mrope_sections:
             positions = jnp.broadcast_to(positions[None], (3, b, s))
 
-    report: Dict[str, float] = {}
+    report: Dict[str, LayerQuantReport] = {}
     new_units: List[List[Dict]] = [[] for _ in pattern]
     new_tail: List[Dict] = []
     li = 0
@@ -188,7 +256,7 @@ def quantize_model_ptq(params: Dict, cfg: ModelConfig, batch: Dict,
             col = HCollector()
             block_apply(kind, blk, x, positions, cfg, ctx, col,
                         prefix=f"layer{li}/")
-            qblk, rep = quantize_block(blk, kind, col, cfg, qcfg, method,
+            qblk, rep = quantize_block(blk, kind, col, cfg, policy,
                                        f"layer{li}/")
             report.update(rep)
             x, _, _ = block_apply(kind, qblk, x, positions, cfg, ctx)
@@ -199,7 +267,7 @@ def quantize_model_ptq(params: Dict, cfg: ModelConfig, batch: Dict,
         col = HCollector()
         block_apply(kind, blk, x, positions, cfg, ctx, col,
                     prefix=f"layer{li}/")
-        qblk, rep = quantize_block(blk, kind, col, cfg, qcfg, method,
+        qblk, rep = quantize_block(blk, kind, col, cfg, policy,
                                    f"layer{li}/")
         report.update(rep)
         x, _, _ = block_apply(kind, qblk, x, positions, cfg, ctx)
@@ -215,53 +283,70 @@ def quantize_model_ptq(params: Dict, cfg: ModelConfig, batch: Dict,
     return qparams, report
 
 
-def quantize_whisper_oneshot(params: Dict, cfg: ModelConfig, batch: Dict,
-                             qcfg: QuantConfig, method: str,
-                             ctx: ShardCtx = LOCAL):
+def quantize_whisper_oneshot(params: Dict, cfg: ModelConfig,
+                             batch: Dict,
+                             qcfg: Optional[QuantConfig] = None,
+                             method: str = "ganq", ctx: ShardCtx = LOCAL,
+                             policy: Optional[PrecisionPolicy] = None):
     """One-pass capture for the enc-dec stacks (H from the fp model)."""
     from .model import forward_logits
+    policy = _as_policy(qcfg, method, policy)
     col = HCollector()
     forward_logits(params, batch, cfg, ctx, col=col)
-    report: Dict[str, float] = {}
+    report: Dict[str, LayerQuantReport] = {}
     qparams = jax.tree.map(lambda x: x, params)
     stacks = params["stacks"]
     for side, n in (("enc", cfg.n_encoder_layers), ("dec", cfg.n_layers)):
         qlayers = []
         for i in range(n):
             blk = jax.tree.map(lambda a, i=i: a[i], stacks[side])
-            specs = [("attn/wq", "attn/wq"), ("attn/wk", "attn/wk"),
-                     ("attn/wv", "attn/wv"), ("attn/wo", "attn/wo"),
-                     ("mlp/w_up", "mlp/w_up"), ("mlp/w_down", "mlp/w_down")]
-            if side == "dec":
-                specs += [("xattn/wq", "xattn/wq"), ("xattn/wk", "xattn/wk"),
-                          ("xattn/wv", "xattn/wv"), ("xattn/wo", "xattn/wo")]
+            specs = (_BLOCK_LINEARS["attn"] + _BLOCK_LINEARS["mlp_gelu"]
+                     + (_XATTN_LINEARS if side == "dec" else []))
             qblk = jax.tree.map(lambda x: x, blk)
             for path, capname in specs:
+                name = f"{side}{i}/{capname}"
                 w = _tree_get(blk, path)
-                h = col.get(f"{side}{i}/{capname}")
-                layer, err = _quantize_one(w, h, qcfg, method)
+                r = policy.resolve(name)
+                if r.keep_fp:
+                    report[name] = _fp_report(w)
+                    continue
+                layer, rep = _quantize_one(w, col.get(name), r)
                 _tree_set(qblk, path, layer)
-                report[f"{side}{i}/{capname}"] = err
+                report[name] = rep
             qlayers.append(qblk)
         qparams["stacks"][side] = jax.tree.map(lambda *xs: jnp.stack(xs),
                                                *qlayers)
     return qparams, report
 
 
-_QUANT_2D = ("attn/wq", "attn/wk", "attn/wv", "attn/wo", "xattn/wq",
-             "xattn/wk", "xattn/wv", "xattn/wo", "mlp/w_gate", "mlp/w_up",
-             "mlp/w_down", "tm/wr", "tm/wk", "tm/wv", "tm/wg", "tm/wo",
-             "cm/wk", "cm/wv", "cm/wr", "rec/w_in", "rec/w_gate",
-             "rec/w_out")
-_QUANT_MOE = ("moe/w_gate", "moe/w_up", "moe/w_down")
-
-
 def abstract_quantize(params_sds: Dict, cfg: ModelConfig, bits: int = 4,
-                      packed: bool = True,
-                      book_dtype=jnp.bfloat16) -> Dict:
+                      packed: bool = True, book_dtype=jnp.bfloat16,
+                      policy: Optional[PrecisionPolicy] = None) -> Dict:
     """ShapeDtypeStruct transform: dense linears -> LUT-quantized containers
-    (no allocation — the dry-run's quantized-serving variant)."""
-    levels = 1 << bits
+    (no allocation — the dry-run's quantized-serving variant).
+
+    Containers are built by the `WeightFormat` registry, so the dry-run
+    tree structurally matches real `quantize_model_ptq` output for the
+    same policy. Policy rules resolve against param-tree paths here
+    ("stack/units/0/mlp/w_up") vs capture names in the real pipeline
+    ("layer3/mlp/w_up") — sublayer-type patterns like "*/mlp/*" match
+    both. Legacy (bits, packed) args build a uniform policy.
+    """
+    if policy is None:
+        from repro.core.formats import packed_linear_fmt
+        fmt = packed_linear_fmt(bits) if packed else "lut"
+        policy = PrecisionPolicy(qcfg=QuantConfig(bits=bits), fmt=fmt)
+
+    def resolved_fmt(r):
+        # mirror _quantize_one: only ganq emits sparse outlier / full-row
+        # fields, and they force 'lut_sparse' (packed containers carry no
+        # sparse fields). Returns (fmt, qcfg-for-sparse-shapes-or-None).
+        sparse = (r.method == "ganq"
+                  and (r.qcfg.outlier_ratio > 0 or r.qcfg.full_rows > 0))
+        fmt = r.fmt
+        if sparse and (fmt == "lut" or get_format(fmt).packed):
+            fmt = "lut_sparse"
+        return fmt, (r.qcfg if sparse else None)
 
     def walk(node, prefix):
         if isinstance(node, dict):
@@ -273,47 +358,51 @@ def abstract_quantize(params_sds: Dict, cfg: ModelConfig, bits: int = 4,
             return None
         path = prefix.rstrip("/")
         shape = node.shape
-        if any(q in path for q in _QUANT_MOE) and len(shape) >= 3:
-            *lead, e, din, dout = shape
-            nc = (din + 1) // 2 if packed else din
-            return QuantizedExperts(
-                codes=jax.ShapeDtypeStruct((*lead, e, dout, nc), jnp.uint8),
-                codebook=jax.ShapeDtypeStruct((*lead, e, dout, levels),
-                                              book_dtype),
-                bits=bits, packed=packed, n_cols=din)
-        if any(q in path for q in _QUANT_2D) and len(shape) >= 2:
-            *lead, din, dout = shape
-            nc = (din + 1) // 2 if packed else din
-            return QuantizedLinear(
-                codes=jax.ShapeDtypeStruct((*lead, dout, nc), jnp.uint8),
-                codebook=jax.ShapeDtypeStruct((*lead, dout, levels),
-                                              book_dtype),
-                bits=bits, packed=packed, n_cols=din)
+        if any(q in path for q in QUANT_MOE) and len(shape) >= 3:
+            r = policy.resolve(path)
+            if r.keep_fp:
+                return node
+            fmt, sparse_qcfg = resolved_fmt(r)
+            return get_format(_expert_fmt(fmt)).abstract(
+                shape, r.qcfg.bits, book_dtype, qcfg=sparse_qcfg)
+        if any(q in path for q in QUANT_2D) and len(shape) >= 2:
+            r = policy.resolve(path)
+            if r.keep_fp:
+                return node
+            fmt, sparse_qcfg = resolved_fmt(r)
+            return get_format(fmt).abstract(
+                shape, r.qcfg.bits, book_dtype, qcfg=sparse_qcfg)
         return node
 
     return walk(params_sds, "")
 
 
-def model_storage_report(qparams: Dict) -> Dict[str, float]:
-    """Aggregate bits/weight over all quantized leaves."""
+def model_storage_report(qparams: Dict,
+                         report: Optional[Dict[str, LayerQuantReport]] = None
+                         ) -> Dict:
+    """Aggregate bits/weight over all quantized leaves, accounted by each
+    leaf's `WeightFormat` from the REAL dtypes (codebook/sparse/full-row
+    arrays as stored; codes at the checkpoint bitstream width) —
+    `QuantizedExperts` included. Pass the per-layer `report` from
+    `quantize_model_ptq` to get it merged in under "per_layer"
+    (per-layer bits/weight AND quantization error)."""
     total_w = 0
     total_bits = 0.0
+
     def visit(node):
         nonlocal total_w, total_bits
         if isinstance(node, (QuantizedLinear, QuantizedExperts)):
-            shape = node.codes.shape          # (possibly unit-stacked)
-            lead = 1
-            for d in shape[:-1]:
-                lead *= d
-            n = node.n_cols if node.packed else shape[-1]
-            count = lead * n
-            levels = node.codebook.shape[-1]
+            bits, count = get_format(node.fmt).storage_bits(node)
+            total_bits += bits
             total_w += count
-            total_bits += node.bits * count + 16 * lead * levels
-            if isinstance(node, QuantizedLinear) and node.sparse_val is not None:
-                total_bits += node.sparse_val.size * (16 + 32)
     jax.tree.map(visit, qparams,
                  is_leaf=lambda x: isinstance(x, (QuantizedLinear,
                                                   QuantizedExperts)))
-    return {"quantized_weights": total_w,
-            "bits_per_weight": total_bits / max(total_w, 1)}
+    out = {"quantized_weights": total_w,
+           "bits_per_weight": total_bits / max(total_w, 1)}
+    if report is not None:
+        out["per_layer"] = {
+            name: {"err": r.err, "bits_per_weight": r.bits_per_weight,
+                   "bits": r.bits, "fmt": r.fmt, "method": r.method}
+            for name, r in report.items()}
+    return out

@@ -98,8 +98,9 @@ def rglru_block(p: Params, x: jnp.ndarray, state: Dict, cfg: ModelConfig,
                 ctx: ShardCtx = LOCAL, col=None, prefix: str = "",
                 decode: bool = False):
     """Full recurrent block. state = {conv (B,cw-1,r), h (B,r)}."""
-    gate = jax.nn.gelu(linear_apply(p["w_gate"], x, col, prefix + "w_gate"))
-    u = linear_apply(p["w_in"], x, col, prefix + "w_in")
+    gate = jax.nn.gelu(linear_apply(p["w_gate"], x, col, prefix + "w_gate",
+                                    ctx))
+    u = linear_apply(p["w_in"], x, col, prefix + "w_in", ctx)
     u = ctx.constrain(u, "dp", None, ctx.tp_axis)
     u, conv_state = _causal_conv(u, p["conv_w"].astype(u.dtype),
                                  p["conv_b"].astype(u.dtype), state["conv"])
@@ -108,7 +109,7 @@ def rglru_block(p: Params, x: jnp.ndarray, state: Dict, cfg: ModelConfig,
     else:
         h_seq, h_last = rglru_scan(p, u, state["h"])
     y = h_seq * gate
-    out = linear_apply(p["w_out"], y, col, prefix + "w_out")
+    out = linear_apply(p["w_out"], y, col, prefix + "w_out", ctx)
     out = ctx.constrain(out, "dp", None, None)
     return out, {"conv": conv_state, "h": h_last}
 

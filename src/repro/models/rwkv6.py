@@ -125,10 +125,10 @@ def rwkv_time_mix(p: Params, x: jnp.ndarray, state: Tuple, cfg: ModelConfig,
     xx = _token_shift(x, shift_prev)
     mu = p["mu"]
     xr, xk, xv, xg = (_lerp(x, xx, mu[i]) for i in range(4))
-    r = linear_apply(p["wr"], xr, col, prefix + "wr")
-    k = linear_apply(p["wk"], xk, col, prefix + "wk")
-    v = linear_apply(p["wv"], xv, col, prefix + "wv")
-    g = jax.nn.silu(linear_apply(p["wg"], xg, col, prefix + "wg"))
+    r = linear_apply(p["wr"], xr, col, prefix + "wr", ctx)
+    k = linear_apply(p["wk"], xk, col, prefix + "wk", ctx)
+    v = linear_apply(p["wv"], xv, col, prefix + "wv", ctx)
+    g = jax.nn.silu(linear_apply(p["wg"], xg, col, prefix + "wg", ctx))
     w = _decay(p, xk)
     to_h = lambda t: t.reshape(b, s, h, hs)
     u = p["bonus_u"].reshape(h, hs)
@@ -148,7 +148,7 @@ def rwkv_time_mix(p: Params, x: jnp.ndarray, state: Tuple, cfg: ModelConfig,
     s_out, ys = jax.lax.scan(body, s0.astype(jnp.float32), (rc, kc, vc, wc))
     y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, d)
     y = y * g
-    out = linear_apply(p["wo"], y, col, prefix + "wo")
+    out = linear_apply(p["wo"], y, col, prefix + "wo", ctx)
     out = ctx.constrain(out, "dp", None, None)
     return out, (x[:, -1, :], s_out)
 
@@ -160,10 +160,10 @@ def rwkv_channel_mix(p: Params, x: jnp.ndarray, shift_prev: jnp.ndarray,
     mu = p["mu"]
     xk = _lerp(x, xx, mu[0])
     xr = _lerp(x, xx, mu[1])
-    k = jnp.square(jax.nn.relu(linear_apply(p["wk"], xk, col, prefix + "wk")))
+    k = jnp.square(jax.nn.relu(linear_apply(p["wk"], xk, col, prefix + "wk", ctx)))
     k = ctx.constrain(k, "dp", None, ctx.tp_axis)
-    kv = linear_apply(p["wv"], k, col, prefix + "wv")
-    r = jax.nn.sigmoid(linear_apply(p["wr"], xr, col, prefix + "wr"))
+    kv = linear_apply(p["wv"], k, col, prefix + "wv", ctx)
+    r = jax.nn.sigmoid(linear_apply(p["wr"], xr, col, prefix + "wr", ctx))
     y = r * kv
     return ctx.constrain(y, "dp", None, None), x[:, -1, :]
 

@@ -67,7 +67,8 @@ def _enc_layer_apply(p, x, cfg, ctx, col, prefix, chunk):
     o = o.reshape(b, s, cfg.q_dim)
     from .linears import linear_apply
     x = x + ctx.constrain(linear_apply(p["attn"]["wo"], o, col,
-                                       prefix + "attn/wo"), "dp", None, None)
+                                       prefix + "attn/wo", ctx),
+                          "dp", None, None)
     h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
     return x + mlp_apply(p["mlp"], h, cfg, ctx, col, prefix + "mlp/")
 

@@ -12,6 +12,8 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.policy import ExecPolicy
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardCtx:
@@ -20,6 +22,18 @@ class ShardCtx:
     tp_axis: Optional[str] = "model"
     ep: bool = False                        # expert parallelism via shard_map
     seq_shard_kv: bool = False              # SP for long-context decode KV
+    # execution policy (LUT-matmul backend etc.) — explicit per call tree,
+    # replacing the old models.linears._LUT_BACKEND module global
+    exec_policy: ExecPolicy = ExecPolicy()
+
+    @property
+    def lut_backend(self) -> str:
+        return self.exec_policy.lut_backend
+
+    def with_lut_backend(self, name: str) -> "ShardCtx":
+        return dataclasses.replace(
+            self, exec_policy=dataclasses.replace(self.exec_policy,
+                                                  lut_backend=name))
 
     @property
     def dp(self):

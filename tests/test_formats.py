@@ -1,0 +1,236 @@
+"""WeightFormat registry: encode->dequantize round-trips, packed/unpacked
+equivalence, storage accounting from real dtypes, policy resolution."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ExecPolicy, LayerRule, PrecisionPolicy, QuantConfig,
+                        available_formats, get_format, packed_linear_fmt)
+from repro.core.formats import dtype_bits, outlier_k
+from repro.core.types import QuantizedExperts, QuantizedLinear
+
+
+def _layer(seed, m, n, bits, book_dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 1 << bits, (m, n)).astype(np.uint8))
+    book = jnp.asarray(np.sort(rng.normal(size=(m, 1 << bits)), axis=1)
+                       .astype(book_dtype))
+    return QuantizedLinear(codes=codes, codebook=book, bits=bits)
+
+
+def _experts(seed, e, m, n, bits):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 1 << bits,
+                                     (e, m, n)).astype(np.uint8))
+    book = jnp.asarray(rng.normal(size=(e, m, 1 << bits)).astype(np.float32))
+    return QuantizedExperts(codes=codes, codebook=book, bits=bits, n_cols=n)
+
+
+def test_registry_contents():
+    for fmt in ("dense", "lut", "lut_sparse", "lut4_packed", "lut3_packed",
+                "experts", "experts_packed"):
+        assert fmt in available_formats()
+    with pytest.raises(KeyError):
+        get_format("no_such_format")
+
+
+@pytest.mark.parametrize("bits,fmt", [(4, "lut"), (3, "lut"),
+                                      (4, "lut4_packed"),
+                                      (3, "lut3_packed")])
+@pytest.mark.parametrize("n", [64, 33])
+def test_linear_roundtrip(bits, fmt, n):
+    """encode -> dequantize reproduces the canonical dequantization."""
+    base = _layer(0, 24, n, bits)
+    want = np.asarray(get_format("lut").dequantize(base))
+    enc = get_format(fmt).encode(base)
+    assert enc.fmt == fmt and enc.shape == (24, n)
+    got = np.asarray(get_format(fmt).dequantize(enc))
+    np.testing.assert_array_equal(got, want)
+    # container-level delegation agrees
+    np.testing.assert_array_equal(np.asarray(enc.dequantize()), want)
+
+
+@pytest.mark.parametrize("fmt", ["lut4_packed", "lut3_packed"])
+def test_packed_unpacked_codes_equivalent(fmt):
+    """Packed and unpacked layouts of the same codes produce identical
+    matmuls on both backends."""
+    bits = get_format(fmt).bits
+    base = _layer(1, 40, 56, bits)
+    enc = get_format(fmt).encode(base)
+    assert enc.codes.shape == (40, 28)
+    rng = np.random.default_rng(2)
+    x2 = jnp.asarray(rng.normal(size=(5, 56)).astype(np.float32))
+    y_ref = np.asarray(get_format("lut").apply(base, x2, backend="xla"))
+    for backend in ("xla", "pallas"):
+        y = np.asarray(get_format(fmt).apply(enc, x2, backend=backend))
+        np.testing.assert_allclose(y, y_ref, rtol=1e-5, atol=1e-5)
+    # unpacked pallas too
+    y = np.asarray(get_format("lut").apply(base, x2, backend="pallas"))
+    np.testing.assert_allclose(y, y_ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("fmt", ["experts", "experts_packed"])
+def test_experts_roundtrip(fmt):
+    base = _experts(3, 4, 16, 22, 4)
+    want = np.asarray(get_format("experts").dequantize(base))
+    enc = get_format(fmt).encode(base)
+    assert enc.fmt == fmt
+    got = np.asarray(get_format(fmt).dequantize(enc))
+    np.testing.assert_array_equal(got, want)
+    # einsum-layout container dequantize: (E, n, m) transpose + cast
+    d = np.asarray(enc.dequantize(jnp.float32))
+    np.testing.assert_array_equal(d, np.swapaxes(want, 1, 2))
+
+
+def test_storage_bits_from_real_dtypes():
+    """Codebook entries are counted at their ACTUAL dtype width; codes at
+    the checkpoint bitstream width; experts included."""
+    for book_dtype, want_entry_bits in ((np.float32, 32), (np.float16, 16)):
+        lay = _layer(5, 8, 64, 4, book_dtype)
+        total, count = get_format("lut").storage_bits(lay)
+        assert count == 8 * 64
+        assert total == 4 * count + 8 * 16 * want_entry_bits
+    # packed 3-bit counts true 3 bits/weight, not the in-graph nibble
+    lay3 = get_format("lut3_packed").encode(_layer(6, 8, 64, 3))
+    total, count = get_format("lut3_packed").storage_bits(lay3)
+    assert count == 8 * 64 and total == 3 * count + 8 * 8 * 32
+    # experts
+    ex = _experts(7, 3, 8, 16, 4)
+    total, count = get_format("experts").storage_bits(ex)
+    assert count == 3 * 8 * 16
+    assert total == 4 * count + 3 * 8 * 16 * 32
+    # sparse outliers: value dtype + index dtype per entry
+    rng = np.random.default_rng(8)
+    lay = _layer(9, 8, 32, 4)
+    lay.sparse_idx = jnp.asarray(rng.integers(0, 32, (8, 2)).astype(np.int32))
+    lay.sparse_val = jnp.asarray(rng.normal(size=(8, 2)).astype(np.float32))
+    lay.fmt = "lut_sparse"
+    total, count = get_format("lut_sparse").storage_bits(lay)
+    assert total == 4 * 8 * 32 + 8 * 16 * 32 + 8 * 2 * (32 + 32)
+
+
+def test_unit_stacked_storage_accounting():
+    """Stacked-unit leaves ((U, m, n) codes) count U*m*n weights."""
+    lays = [_layer(s, 8, 32, 4) for s in range(3)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *lays)
+    total, count = get_format("lut").storage_bits(stacked)
+    one_t, one_c = get_format("lut").storage_bits(lays[0])
+    assert count == 3 * one_c and total == 3 * one_t
+
+
+def test_dense_format_and_exec_policy():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(16, 8))
+                    .astype(np.float32))
+    total, count = get_format("dense").storage_bits(w)
+    assert count == 128 and total == 128 * 32
+    x2 = jnp.ones((2, 16), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(get_format("dense").apply(w, x2)), np.asarray(x2 @ w))
+    assert ExecPolicy().lut_backend == "xla"
+    with pytest.raises(AssertionError):
+        ExecPolicy(lut_backend="cuda")
+
+
+def test_policy_first_match_wins_and_expert_mapping():
+    pol = PrecisionPolicy(
+        qcfg=QuantConfig(bits=4),
+        rules=(LayerRule(pattern="*/moe/w_down", keep_fp=True),
+               LayerRule(pattern="*/moe/*", bits=3, fmt="lut3_packed")))
+    assert pol.resolve("layer0/moe/w_down").keep_fp
+    r = pol.resolve("layer0/moe/w_up")
+    assert r.qcfg.bits == 3
+    assert get_format(r.fmt).expert_fmt == "experts_packed"
+    assert get_format("lut").expert_fmt == "experts"
+    assert get_format("lut_sparse").expert_fmt == "experts"
+    assert get_format("dense").expert_fmt is None
+    assert pol.resolve("layer0/attn/wq").qcfg.bits == 4
+    assert packed_linear_fmt(3) == "lut3_packed"
+    assert packed_linear_fmt(4) == "lut4_packed"
+
+
+def test_segment_patterns_do_not_cross_match():
+    """Bare CLI patterns match whole path segments: 'attn' must not
+    capture cross-attention ('xattn') layers."""
+    from repro.core import parse_policy
+    pol = parse_policy("attn=3,xattn=4", QuantConfig(bits=8))
+    assert pol.resolve("dec0/attn/wq").qcfg.bits == 3
+    assert pol.resolve("dec0/xattn/wq").qcfg.bits == 4
+    assert pol.resolve("dec0/mlp/w_up").qcfg.bits == 8
+    # glob-free subpath entries still match as substrings
+    pol2 = parse_policy("mlp/w_down=fp", QuantConfig(bits=4))
+    assert pol2.resolve("layer1/mlp/w_down").keep_fp
+    assert not pol2.resolve("layer1/mlp/w_up").keep_fp
+
+
+def test_experts_sparse_outliers_roundtrip():
+    """GANQ* sparse fields on stacked experts survive pack/unpack and are
+    applied at decode; storage accounts them."""
+    rng = np.random.default_rng(21)
+    base = _experts(20, 2, 6, 10, 4)
+    base.sparse_idx = jnp.asarray(rng.integers(0, 10, (2, 6, 2))
+                                  .astype(np.int32))
+    base.sparse_val = jnp.asarray(rng.normal(size=(2, 6, 2))
+                                  .astype(np.float32))
+    base.full_row_idx = jnp.asarray(rng.integers(0, 6, (2, 1))
+                                    .astype(np.int32))
+    base.full_row_val = jnp.asarray(rng.normal(size=(2, 1, 10))
+                                    .astype(np.float32))
+    want = np.asarray(get_format("experts").dequantize(base))
+    # full rows overwrite, sparse adds elsewhere: spot-check full rows
+    for e in range(2):
+        fi = int(base.full_row_idx[e, 0])
+        np.testing.assert_array_equal(want[e, fi],
+                                      np.asarray(base.full_row_val[e, 0]))
+    enc = get_format("experts_packed").encode(base)
+    got = np.asarray(get_format("experts_packed").dequantize(enc))
+    np.testing.assert_array_equal(got, want)
+    plain_total, count = get_format("experts").storage_bits(
+        _experts(20, 2, 6, 10, 4))
+    total, count2 = get_format("experts").storage_bits(base)
+    assert count2 == count
+    assert total == plain_total + 2 * 6 * 2 * (32 + 32) + 2 * 1 * 32 \
+        + 2 * 1 * 10 * 32
+    assert outlier_k(64, 0.05) == 3
+
+
+def test_experts_encode_no_silent_relabel():
+    """Re-tagging packed expert codes as unpacked must fail loudly, not
+    decode garbage."""
+    base = _experts(11, 2, 4, 8, 4)
+    packed = get_format("experts_packed").encode(base)
+    with pytest.raises(AssertionError):
+        get_format("experts").encode(packed)
+    # same-layout re-encode stays fine
+    again = get_format("experts_packed").encode(packed)
+    np.testing.assert_array_equal(np.asarray(again.codes),
+                                  np.asarray(packed.codes))
+
+
+def test_sparse_layer_survives_packed_policy():
+    """GANQ* sparse-outlier layers fall back to 'lut_sparse' under a packed
+    policy format instead of aborting the PTQ pass."""
+    from repro.core import compute_h
+    from repro.models.quantized import _quantize_one
+    from repro.core.policy import ResolvedQuant
+    rng = np.random.default_rng(12)
+    w = jnp.asarray(rng.standard_t(df=3, size=(16, 32)).astype(np.float32))
+    h = compute_h(jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32)))
+    qcfg = QuantConfig(bits=4, iters=2, precondition="fixed",
+                       outlier_ratio=0.05)
+    r = ResolvedQuant(qcfg=qcfg, method="ganq", fmt="lut4_packed")
+    layer, rep = _quantize_one(w, h, r)        # w is (d_in=16, d_out=32)
+    assert layer.fmt == "lut_sparse" and rep.fmt == "lut_sparse"
+    assert layer.sparse_val is not None
+    # without outliers the packed request is honored
+    r2 = ResolvedQuant(qcfg=QuantConfig(bits=4, iters=2,
+                                        precondition="fixed"),
+                       method="ganq", fmt="lut4_packed")
+    layer2, _ = _quantize_one(w, h, r2)
+    assert layer2.fmt == "lut4_packed"
+
+
+def test_dtype_bits():
+    assert dtype_bits(jnp.float32) == 32
+    assert dtype_bits(jnp.bfloat16) == 16
+    assert dtype_bits(jnp.uint8) == 8

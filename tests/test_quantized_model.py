@@ -1,17 +1,18 @@
-"""End-to-end PTQ: sequential pipeline, LUT serving parity, method ranking."""
+"""End-to-end PTQ: sequential pipeline, LUT serving parity, method ranking,
+mixed-precision policies through the WeightFormat registry."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config, reduce_config
-from repro.core import QuantConfig
+from repro.core import LayerRule, PrecisionPolicy, QuantConfig, parse_policy
 from repro.data.synthetic import MarkovStream
-from repro.models import (decode_step, forward_logits, init_params, prefill,
-                          set_lut_backend)
+from repro.models import decode_step, forward_logits, init_params, prefill
 from repro.models.quantized import (abstract_quantize, model_storage_report,
                                     quantize_model_ptq)
 from repro.models.model import abstract_params
+from repro.sharding.context import LOCAL
 
 KEY = jax.random.PRNGKey(0)
 
@@ -36,9 +37,15 @@ def test_ptq_pipeline_quantizes_and_stays_close(arch):
     qcfg = QuantConfig(bits=4, iters=3, precondition="fixed")
     qparams, report = quantize_model_ptq(params, cfg, batch, qcfg, "ganq")
     assert report, "no layers quantized"
-    rep = model_storage_report(qparams)
+    rep = model_storage_report(qparams, report)
     assert rep["quantized_weights"] > 0
-    assert rep["bits_per_weight"] < 9.0, rep
+    # honest accounting from the REAL dtypes: reduced configs (n=64..128)
+    # pay a large fp32-codebook overhead per row (4 + 32*16/64 = 12 b/w on
+    # the narrowest layers); real-scale layers amortize it to ~bits+eps
+    assert rep["bits_per_weight"] < 13.0, rep
+    # every quantized linear reports bits and error
+    assert all(np.isfinite(r["err"]) and r["bits_per_weight"] > 0
+               for r in rep["per_layer"].values()), rep["per_layer"]
     # quantized model still runs and is finite
     eval_batch = {k: jnp.asarray(v) for k, v in data.batch_at(1).items()}
     ppl_fp = _ppl(params, cfg, eval_batch)
@@ -58,7 +65,7 @@ def test_ptq_method_ranking_layer_errors():
     for method in ("rtn", "gptq", "ganq"):
         qcfg = QuantConfig(bits=3, iters=4, precondition="fixed")
         _, report = quantize_model_ptq(params, cfg, batch, qcfg, method)
-        vals = [v for v in report.values() if np.isfinite(v)]
+        vals = [float(v) for v in report.values() if np.isfinite(float(v))]
         errs[method] = float(np.mean(vals))
     assert errs["ganq"] <= errs["gptq"] * 1.05, errs
     assert errs["ganq"] < errs["rtn"], errs
@@ -84,42 +91,156 @@ def test_quantized_decode_serving_parity():
 
 
 def test_lut_backends_agree_on_model():
-    """xla take_along_axis path vs pallas interpret kernel path."""
+    """xla take_along_axis path vs pallas interpret kernel path; the
+    backend is an explicit ExecPolicy on ShardCtx — no global state."""
     cfg = reduce_config(get_config("deepseek-7b"))
     params = init_params(KEY, cfg)
     data = MarkovStream(cfg.vocab_size, batch=1, seq=16, seed=0)
     batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
     qcfg = QuantConfig(bits=4, iters=2, precondition="fixed")
     qparams, _ = quantize_model_ptq(params, cfg, batch, qcfg, "ganq")
-    set_lut_backend("xla")
-    out_x = forward_logits(qparams, batch, cfg)
-    try:
-        set_lut_backend("pallas")
-        out_p = forward_logits(qparams, batch, cfg)
-    finally:
-        set_lut_backend("xla")
+    out_x = forward_logits(qparams, batch, cfg)            # default: xla
+    out_p = forward_logits(qparams, batch, cfg,
+                           LOCAL.with_lut_backend("pallas"))
     np.testing.assert_allclose(np.asarray(out_x, np.float32),
                                np.asarray(out_p, np.float32),
                                rtol=2e-3, atol=2e-4)
 
 
-def test_abstract_quantize_matches_real_quantize_structure():
-    """Dry-run SDS tree must mirror a real quantized tree (leaf shapes)."""
+def test_mixed_precision_policy_pipeline():
+    """3-bit MLP / 4-bit attention / fp w_down policy: per-layer bits land
+    where the rules say, fp-kept weights stay raw arrays, and the model
+    still forwards finite."""
     cfg = reduce_config(get_config("deepseek-7b"))
-    sds = abstract_quantize(abstract_params(cfg), cfg, bits=4, packed=False)
+    params = init_params(KEY, cfg)
+    data = MarkovStream(cfg.vocab_size, batch=2, seq=32, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    policy = PrecisionPolicy(
+        qcfg=QuantConfig(bits=4, iters=2, precondition="fixed"),
+        rules=(LayerRule(pattern="*/mlp/w_down", keep_fp=True),
+               LayerRule(pattern="*/mlp/*", bits=3)))
+    qparams, report = quantize_model_ptq(params, cfg, batch, policy=policy)
+    for name, r in report.items():
+        if name.endswith("mlp/w_down"):
+            assert r.bits is None and r.fmt == "dense", (name, r)
+        elif "/mlp/" in name:
+            assert r.bits == 3, (name, r)
+        else:
+            assert r.bits == 4, (name, r)
+    # fp-kept weights are untouched raw arrays
+    w_down = qparams["stack"]["units"][0]["mlp"]["w_down"]
+    assert isinstance(w_down, jnp.ndarray)
+    # mixed model serves: greedy decode parity against its own forward
+    toks = batch["tokens"]
+    full = forward_logits(qparams, {"tokens": toks}, cfg)
+    _, cache = prefill(qparams, {"tokens": toks[:, :31]}, cfg, cache_len=40)
+    pos = jnp.full((2,), 31, jnp.int32)
+    logits_d, _ = decode_step(qparams, cache, toks[:, 31], pos, cfg)
+    np.testing.assert_allclose(np.asarray(logits_d), np.asarray(full[:, 31]),
+                               rtol=1e-3, atol=1e-4)
+    # mixed bits/weight sits strictly between uniform 3- and 4-bit
+    rep = model_storage_report(qparams, report)
+    u4, _ = quantize_model_ptq(params, cfg, batch,
+                               QuantConfig(bits=4, iters=2,
+                                           precondition="fixed"))
+    r4 = model_storage_report(u4)
+    assert rep["bits_per_weight"] < r4["bits_per_weight"], (rep, r4)
+
+
+def test_uniform_policy_identical_to_legacy_args():
+    """PrecisionPolicy.uniform(qcfg) must reproduce the legacy
+    (qcfg, method) call bit-for-bit — same codes, same codebooks."""
+    cfg = reduce_config(get_config("deepseek-7b"))
     params = init_params(KEY, cfg)
     data = MarkovStream(cfg.vocab_size, batch=1, seq=16, seed=0)
     batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
-    qparams, _ = quantize_model_ptq(
-        params, cfg, batch, QuantConfig(bits=4, iters=1), "ganq")
-    # codes leaves have identical shapes in both trees
-    def codes_shapes(tree):
-        out = []
-        def visit(p, x):
-            if hasattr(x, "shape") and getattr(x, "dtype", None) == jnp.uint8:
-                out.append((jax.tree_util.keystr(p), tuple(x.shape)))
-        jax.tree_util.tree_map_with_path(visit, tree)
-        return sorted(out)
-    s1 = codes_shapes(sds)
-    s2 = codes_shapes(qparams)
-    assert [s for _, s in s1] == [s for _, s in s2]
+    qcfg = QuantConfig(bits=4, iters=2, precondition="fixed")
+    qp_legacy, _ = quantize_model_ptq(params, cfg, batch, qcfg, "ganq")
+    qp_policy, _ = quantize_model_ptq(
+        params, cfg, batch, policy=PrecisionPolicy.uniform(qcfg, "ganq"))
+    for a, b in zip(jax.tree.leaves(qp_legacy), jax.tree.leaves(qp_policy)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_parse_policy_spec():
+    base = QuantConfig(bits=4, iters=2)
+    pol = parse_policy("mlp=3,attn=4@lut4_packed,head=fp", base)
+    r = pol.resolve("layer0/mlp/w_up")
+    assert r.qcfg.bits == 3 and r.fmt == "lut"
+    r = pol.resolve("layer0/attn/wq")
+    assert r.qcfg.bits == 4 and r.fmt == "lut4_packed"
+    assert pol.resolve("head").keep_fp
+    assert pol.resolve("layer0/tm/wr").qcfg.bits == 4   # default
+
+
+def test_moe_experts_keep_sparse_outliers():
+    """GANQ* outlier fields survive expert stacking: the served expert
+    weights include the sparse correction (not silently dropped)."""
+    cfg = reduce_config(get_config("qwen3-moe-30b-a3b"))
+    params = init_params(KEY, cfg)
+    data = MarkovStream(cfg.vocab_size, batch=2, seq=32, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    qcfg = QuantConfig(bits=4, iters=2, precondition="fixed",
+                       outlier_ratio=0.05)
+    qparams, report = quantize_model_ptq(params, cfg, batch, qcfg, "ganq")
+    moe = qparams["stack"]["units"][0]["moe"]
+    for wname in ("w_gate", "w_up", "w_down"):
+        assert moe[wname].sparse_val is not None, wname
+    # storage accounts the outlier fp payload (> plain 4-bit + codebook)
+    rep = model_storage_report(qparams, report)
+    assert rep["bits_per_weight"] > 4.0
+    out = forward_logits(qparams, batch, cfg)
+    assert bool(jnp.isfinite(out).all())
+
+
+@pytest.mark.parametrize("arch,fmt", [("deepseek-7b", "lut"),
+                                      ("qwen3-moe-30b-a3b", "lut4_packed")])
+def test_abstract_matches_real_with_outliers(arch, fmt):
+    """GANQ* (outlier split + full rows): dry-run SDS still mirrors real
+    output exactly — sparse leaves included, MoE experts included, and a
+    packed policy format falls back identically on both paths."""
+    cfg = reduce_config(get_config(arch))
+    params = init_params(KEY, cfg)
+    data = MarkovStream(cfg.vocab_size, batch=1, seq=16, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    qcfg = QuantConfig(bits=4, iters=1, precondition="fixed",
+                       outlier_ratio=0.05, full_rows=2)
+    policy = PrecisionPolicy(qcfg=qcfg, fmt=fmt)
+    qparams, _ = quantize_model_ptq(params, cfg, batch, policy=policy)
+    sds = abstract_quantize(abstract_params(cfg), cfg, policy=policy,
+                            book_dtype=jnp.float32)
+    real = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        qparams)
+    assert (jax.tree_util.tree_structure(sds)
+            == jax.tree_util.tree_structure(real))
+    for a, b in zip(jax.tree.leaves(sds), jax.tree.leaves(real)):
+        assert (a.shape, a.dtype) == (b.shape, b.dtype), (a, b)
+
+
+def test_abstract_quantize_matches_real_quantize_structure():
+    """Dry-run SDS tree must EXACTLY mirror a real quantized tree —
+    structure, leaf shapes and dtypes — for uniform and mixed policies."""
+    cfg = reduce_config(get_config("deepseek-7b"))
+    params = init_params(KEY, cfg)
+    data = MarkovStream(cfg.vocab_size, batch=1, seq=16, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    policies = [
+        (dict(bits=4, packed=False, book_dtype=jnp.float32), None),
+        (dict(policy=PrecisionPolicy(
+            qcfg=QuantConfig(bits=4, iters=1),
+            rules=(LayerRule(pattern="*/mlp/*", bits=3),)),
+            book_dtype=jnp.float32),
+         PrecisionPolicy(qcfg=QuantConfig(bits=4, iters=1),
+                         rules=(LayerRule(pattern="*/mlp/*", bits=3),))),
+    ]
+    for abs_kwargs, policy in policies:
+        sds = abstract_quantize(abstract_params(cfg), cfg, **abs_kwargs)
+        qparams, _ = quantize_model_ptq(
+            params, cfg, batch, QuantConfig(bits=4, iters=1), "ganq",
+            policy=policy)
+        real = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            qparams)
+        assert (jax.tree_util.tree_structure(sds)
+                == jax.tree_util.tree_structure(real))
+        for a, b in zip(jax.tree.leaves(sds), jax.tree.leaves(real)):
+            assert (a.shape, a.dtype) == (b.shape, b.dtype), (a, b)

@@ -151,6 +151,34 @@ def test_continuous_greedy_equivalence_int8_kv():
         assert c.tokens == ref[0].tokens
 
 
+def test_mixed_precision_policy_serves_continuous():
+    """A 3-bit-MLP / 4-bit-attention / fp-kept `PrecisionPolicy` model
+    serves end-to-end through the slot engine, token-identical to its own
+    static reference path (greedy)."""
+    from repro.core import LayerRule, PrecisionPolicy, QuantConfig
+    from repro.models.quantized import model_storage_report, quantize_model_ptq
+    cfg, params, data = _setup()
+    calib = {"tokens": jnp.asarray(data.batch_at(0)["tokens"])}
+    policy = PrecisionPolicy(
+        qcfg=QuantConfig(bits=4, iters=2, precondition="fixed"),
+        rules=(LayerRule(pattern="*/mlp/w_down", keep_fp=True),
+               LayerRule(pattern="*/mlp/*", bits=3)))
+    qparams, report = quantize_model_ptq(params, cfg, calib, policy=policy)
+    rep = model_storage_report(qparams, report)
+    assert {r["bits"] for r in rep["per_layer"].values()} == {3, 4, None}
+    engine = ServeEngine(qparams, cfg, max_len=64, n_slots=2)
+    toks = data.batch_at(6)["tokens"]
+    reqs = [GenRequest(prompt=toks[0, :8].tolist(), max_new=5),
+            GenRequest(prompt=toks[1, :12].tolist(), max_new=4),
+            GenRequest(prompt=toks[2, :6].tolist(), max_new=4)]
+    cont = engine.serve(reqs)
+    assert all(len(c.tokens) > 0 for c in cont)
+    for r, c in zip(reqs, cont):
+        ref = engine.generate_batch(
+            [GenRequest(prompt=r.prompt, max_new=r.max_new)])
+        assert c.tokens == ref[0].tokens
+
+
 def test_sampled_serve_reproducible_across_fresh_requests():
     """Same seed + same prompts (fresh GenRequest objects) => same sampled
     tokens: PRNG streams key on submission index, not the global uid."""
