@@ -201,6 +201,102 @@ def bench_table6_decode_speedup():
                  f"(paper RTX4090: 2.24x@4b / 2.57x@3b incl. overheads)")
 
 
+def bench_lut_kernels(out_path=None):
+    """LUT-mpGEMM layout sweep: bits x {nibble-packed, true bitstream} x
+    p in {1, 8, 32} decode widths, plus fused grouped-QKV vs its
+    sequential 3-launch baseline. Emits BENCH_kernels.json with the
+    HBM bytes each variant streams (from `vmem_plan`'s layout-aware
+    accounting — the TPU-relevant signal) next to interpret-mode wall
+    time (harness timing only, not TPU perf)."""
+    import json
+    from pathlib import Path
+    from repro.core.formats import get_format
+    from repro.core.packing import pack_bits, pack_nibbles
+    from repro.kernels.ops import lut_linear, lut_linear_grouped, vmem_plan
+    from repro.kernels.tune import BlockPlan
+    from repro.core.types import QuantizedLinear
+
+    rng = np.random.default_rng(0)
+    m, n = 256, 256
+    # pin tile sizes explicitly: the committed numbers must not depend on
+    # whatever tuned plans happen to sit in this machine's on-disk cache
+    blocks = BlockPlan(128, 512, 128)
+    results = {"shape": {"m": m, "n": n}, "blocks": blocks.as_kwargs(),
+               "mpgemm": [], "grouped_qkv": []}
+    for bits in (3, 4):
+        codes = jnp.asarray(rng.integers(0, 1 << bits,
+                                         size=(m, n)).astype(np.uint8))
+        t = jnp.asarray(rng.normal(size=(m, 1 << bits)).astype(np.float32))
+        # nibble container vs true bitstream of the SAME codes; at 4-bit
+        # the two layouts are byte-identical (one row, flagged below) —
+        # the contrast only exists at sub-nibble widths
+        layouts = [("packed", pack_nibbles(codes), "lut4_packed")]
+        if bits != 4:
+            layouts.append(("bitstream", pack_bits(codes, bits),
+                            "lut3_packed"))
+        for p in (1, 8, 32):
+            x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+            for lname, cc, fmt in layouts:
+                us, _ = _t(lambda cc=cc, fmt=fmt: lut_linear(
+                    cc, t, x, bits=bits, fmt=fmt, blocks=blocks))
+                plan = vmem_plan(m, n, p, bits, fmt=fmt,
+                                 x_dtype=jnp.float32, book_dtype=jnp.float32)
+                row = {"bits": bits, "layout": lname, "p": p, "us": us,
+                       "codes_bytes": plan["codes_bytes"],
+                       "total_bytes": plan["total_bytes"]}
+                if bits == 4:
+                    row["layout"] = "packed==bitstream"
+                results["mpgemm"].append(row)
+                _row(f"lut_kernel_b{bits}_{row['layout']}_p{p}", us,
+                     f"codes_bytes={plan['codes_bytes']:.0f} "
+                     f"total_bytes={plan['total_bytes']:.0f}")
+    # fused grouped QKV (GQA 4:1:1) vs three sequential launches
+    for bits, fmt in ((4, "lut4_packed"), (3, "lut3_packed")):
+        f = get_format(fmt)
+        dims = (256, 64, 64)                    # q_dim, kv_dim, kv_dim
+        layers = []
+        for i, mi in enumerate(dims):
+            c = jnp.asarray(rng.integers(0, 1 << bits,
+                                         size=(mi, n)).astype(np.uint8))
+            tb = jnp.asarray(rng.normal(size=(mi, 1 << bits))
+                             .astype(np.float32))
+            layers.append(f.encode(QuantizedLinear(codes=c, codebook=tb,
+                                                   bits=bits)))
+        for p in (1, 8, 32):
+            x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+            us_seq, _ = _t(lambda: [lut_linear(l.codes, l.codebook, x,
+                                               bits=bits, fmt=fmt,
+                                               blocks=blocks)
+                                    for l in layers])
+            us_grp, _ = _t(lambda: lut_linear_grouped(layers, x,
+                                                      blocks=blocks))
+            seq_plans = [vmem_plan(mi, n, p, bits, fmt=fmt,
+                                   x_dtype=jnp.float32) for mi in dims]
+            grp_plan = vmem_plan(sum(dims), n, p, bits, fmt=fmt,
+                                 x_dtype=jnp.float32,
+                                 groups=sum(dims) // 64)
+            row = {"bits": bits, "fmt": fmt, "p": p,
+                   "us_sequential": us_seq, "us_grouped": us_grp,
+                   "codes_bytes_sequential":
+                       sum(pl["codes_bytes"] for pl in seq_plans),
+                   "codes_bytes_grouped": grp_plan["codes_bytes"],
+                   "x_bytes_sequential":
+                       sum(pl["x_bytes"] for pl in seq_plans),
+                   "x_bytes_grouped": grp_plan["x_bytes"],
+                   "total_bytes_sequential":
+                       sum(pl["total_bytes"] for pl in seq_plans),
+                   "total_bytes_grouped": grp_plan["total_bytes"]}
+            results["grouped_qkv"].append(row)
+            _row(f"lut_grouped_qkv_b{bits}_p{p}", us_grp,
+                 f"seq_us={us_seq:.1f} "
+                 f"x_bytes {row['x_bytes_sequential']:.0f}->"
+                 f"{row['x_bytes_grouped']:.0f} "
+                 f"codes_bytes={row['codes_bytes_grouped']:.0f}")
+    path = Path(out_path or Path(__file__).parent / "BENCH_kernels.json")
+    path.write_text(json.dumps(results, indent=1))
+    return results
+
+
 def bench_table6_kernel_walltime():
     """LUT-mpGEMM kernel wall time (interpret mode — harness timing only)."""
     from repro.kernels.ops import lut_linear
@@ -340,19 +436,34 @@ def bench_quant_cost():
         _row(f"quant_cost_{name}_512x512", us, "per-layer wall (CPU)")
 
 
-def main() -> None:
+_ALL_BENCHES = [
+    "bench_table1_storage",
+    "bench_table2_layer_error",
+    "bench_table2_e2e_ppl",
+    "bench_table5_outliers",
+    "bench_table6_decode_speedup",
+    "bench_table6_kernel_walltime",
+    "bench_lut_kernels",
+    "bench_serving_throughput",
+    "bench_mixed_precision_serving",
+    "bench_table7_precondition",
+    "bench_fig1b_weight_stats",
+    "bench_quant_cost",
+]
+
+
+def main(argv=None) -> None:
+    """Run all benches, or only the names passed on the CLI
+    (e.g. `python benchmarks/run.py bench_lut_kernels`)."""
+    import sys
+    names = (argv if argv is not None else sys.argv[1:]) or _ALL_BENCHES
+    unknown = [n for n in names if n not in _ALL_BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown bench(es) {unknown}; "
+                         f"available: {_ALL_BENCHES}")
     print("name,us_per_call,derived")
-    bench_table1_storage()
-    bench_table2_layer_error()
-    bench_table2_e2e_ppl()
-    bench_table5_outliers()
-    bench_table6_decode_speedup()
-    bench_table6_kernel_walltime()
-    bench_serving_throughput()
-    bench_mixed_precision_serving()
-    bench_table7_precondition()
-    bench_fig1b_weight_stats()
-    bench_quant_cost()
+    for name in names:
+        globals()[name]()
 
 
 if __name__ == "__main__":

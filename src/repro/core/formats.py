@@ -17,11 +17,17 @@ layout is a `WeightFormat` registered here and owns the full vertical:
 through this registry, so adding a layout is one class here — no flag
 threading through model code.
 
-Storage accounting counts codes at the true checkpoint bitstream width
-(`bits` per weight — `core.packing.pack_bits_np`); the in-graph nibble
-container of 3-bit codes spends 4 bits/weight for TPU alignment but is
-not what hits the serving checkpoint. Codebook / sparse / full-row bits
-derive from the actual array dtypes.
+Each LUT format also owns its *container layout* — `stream_bits` (bits
+per code in the in-graph byte stream: 8 unpacked, 4 nibble, 3 true
+bitstream), `code_cols`, `pack_codes`/`unpack_codes` — which is what
+`kernels.ops.lut_linear` routes on and `vmem_plan` accounts with.
+'lut3_packed' stores the true ceil(n*3/8)-byte bitstream in-graph
+(`core.packing.pack_bits`), so serving HBM bytes equal checkpoint bytes;
+storage accounting counts the same stream width. Codebook / sparse /
+full-row bits derive from the actual array dtypes. `groupable` marks
+formats whose layers may fuse into one multi-projection kernel launch
+(`kernels.ops.lut_linear_grouped`); dense and sparse-carrying layers
+fall back to sequential applies.
 """
 from __future__ import annotations
 
@@ -32,7 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from .outliers import outlier_k
-from .packing import pack_nibbles, unpack_nibbles
+from .packing import (code_stream_bytes, pack_bits, pack_nibbles,
+                      unpack_bits, unpack_nibbles)
 from .types import QuantizedExperts, QuantizedLinear, put_rows_sparse
 
 _FORMATS: Dict[str, "WeightFormat"] = {}
@@ -69,7 +76,11 @@ def _index_bits(idx) -> int:
 class WeightFormat:
     """Base class; subclasses register with @register_format.
 
-    `packed` marks nibble-packed code layouts. `expert_fmt` names the
+    `packed` marks sub-byte code layouts; `stream_bits` is the container
+    bits-per-code the serving kernel streams (8 = unpacked uint8,
+    4 = nibble, 3 = true bitstream; None = no LUT code stream, e.g.
+    dense). `groupable` allows fusing same-format layers into one
+    multi-projection kernel launch. `expert_fmt` names the
     stacked-experts counterpart a policy maps MoE expert weights to (None
     = this format cannot represent expert stacks — quantizing an MoE
     model under it is a loud error).
@@ -77,7 +88,23 @@ class WeightFormat:
 
     name: str = ""
     packed: bool = False
+    stream_bits: Optional[int] = None
+    groupable: bool = False
     expert_fmt: Optional[str] = None
+
+    # ------------------------------------------------------ container layout
+    def code_cols(self, n: int) -> int:
+        """Container columns (bytes) holding n codes per row."""
+        assert self.stream_bits is not None, self.name
+        return code_stream_bytes(n, self.stream_bits)
+
+    def pack_codes(self, codes: jnp.ndarray) -> jnp.ndarray:
+        """(m, n) uint8 canonical codes -> this container's layout."""
+        raise NotImplementedError(self.name)
+
+    def unpack_codes(self, codes: jnp.ndarray, n: int) -> jnp.ndarray:
+        """Inverse of pack_codes; identity for unpacked layouts."""
+        return codes
 
     # --------------------------------------------------------------- encode
     def encode(self, layer: QuantizedLinear) -> QuantizedLinear:
@@ -149,8 +176,8 @@ def _sparse_full_bits(layer: QuantizedLinear) -> float:
 
 
 class _LUTBase(WeightFormat):
-    """Shared apply/dequantize for per-row LUT layouts; subclasses set
-    `packed` and the encode/abstract layout."""
+    """Shared apply/dequantize/abstract for per-row LUT layouts;
+    subclasses set `stream_bits` and the pack/unpack pair."""
 
     def apply(self, layer: QuantizedLinear, x2, *, backend: str = "xla"):
         from repro.kernels.ops import lut_linear       # lazy: avoids cycle
@@ -194,6 +221,16 @@ class _LUTBase(WeightFormat):
             + _sparse_full_bits(layer)
         return float(total), int(count)
 
+    def abstract(self, shape, bits, book_dtype, code_dtype=jnp.uint8,
+                 qcfg=None):
+        *lead, din, dout = shape
+        return QuantizedLinear(
+            codes=jax.ShapeDtypeStruct((*lead, dout, self.code_cols(din)),
+                                       code_dtype),
+            codebook=jax.ShapeDtypeStruct((*lead, dout, 1 << bits),
+                                          book_dtype),
+            bits=bits, fmt=self.name, n_cols=din)
+
 
 @register_format
 class LUTFormat(_LUTBase):
@@ -202,21 +239,17 @@ class LUTFormat(_LUTBase):
 
     name = "lut"
     packed = False
+    stream_bits = 8
+    groupable = True
     expert_fmt = "experts"
+
+    def pack_codes(self, codes):
+        return codes
 
     def encode(self, layer):
         assert not layer.packed, "already packed; decode first"
         return dataclasses.replace(layer, fmt=self.name,
                                    n_cols=layer.codes.shape[-1])
-
-    def abstract(self, shape, bits, book_dtype, code_dtype=jnp.uint8,
-                 qcfg=None):
-        *lead, din, dout = shape
-        return QuantizedLinear(
-            codes=jax.ShapeDtypeStruct((*lead, dout, din), code_dtype),
-            codebook=jax.ShapeDtypeStruct((*lead, dout, 1 << bits),
-                                          book_dtype),
-            bits=bits, fmt=self.name, n_cols=din)
 
 
 @register_format
@@ -224,9 +257,12 @@ class LUTSparseFormat(LUTFormat):
     """Unpacked LUT + structured sparse outliers / full fp rows (GANQ*,
     Algorithm 2). Same apply/dequantize as `lut` — the sparse fields are
     simply populated — but declared as its own format so policies can
-    request it and storage accounting names it."""
+    request it and storage accounting names it. Not groupable: the sparse
+    correction is a per-layer side payload the fused launch cannot carry.
+    """
 
     name = "lut_sparse"
+    groupable = False
 
     def abstract(self, shape, bits, book_dtype, code_dtype=jnp.uint8,
                  qcfg=None):
@@ -246,12 +282,12 @@ class LUTSparseFormat(LUTFormat):
         return base
 
 
-class _NibblePackedLUT(_LUTBase):
-    """Nibble-packed codes (m, ceil(n/2)): two codes per uint8, the HBM
-    layout the Pallas LUT-mpGEMM kernel streams at 0.5 B/weight."""
+class _PackedLUT(_LUTBase):
+    """Shared encode for sub-byte code containers; subclasses fix
+    `stream_bits` and the pack/unpack pair."""
 
     packed = True
-    expert_fmt = "experts_packed"
+    groupable = True
     bits: int = 4
 
     def encode(self, layer):
@@ -259,36 +295,50 @@ class _NibblePackedLUT(_LUTBase):
         assert layer.sparse_val is None and layer.full_row_val is None, \
             "packed formats carry no sparse/full-row fields; use 'lut_sparse'"
         if layer.packed:
+            assert get_format(layer.fmt).stream_bits == self.stream_bits, \
+                (layer.fmt, self.name, "re-pack via decode first")
             return dataclasses.replace(layer, fmt=self.name)
         n = layer.codes.shape[-1]
-        return dataclasses.replace(layer, codes=pack_nibbles(layer.codes),
+        return dataclasses.replace(layer,
+                                   codes=self.pack_codes(layer.codes),
                                    fmt=self.name, n_cols=n)
 
-    def abstract(self, shape, bits, book_dtype, code_dtype=jnp.uint8,
-                 qcfg=None):
-        *lead, din, dout = shape
-        return QuantizedLinear(
-            codes=jax.ShapeDtypeStruct((*lead, dout, (din + 1) // 2),
-                                       code_dtype),
-            codebook=jax.ShapeDtypeStruct((*lead, dout, 1 << bits),
-                                          book_dtype),
-            bits=bits, fmt=self.name, n_cols=din)
-
 
 @register_format
-class LUT4PackedFormat(_NibblePackedLUT):
+class LUT4PackedFormat(_PackedLUT):
+    """Nibble-packed codes (m, ceil(n/2)): two codes per uint8, streamed
+    at 0.5 B/weight by the Pallas LUT-mpGEMM kernel."""
+
     name = "lut4_packed"
     bits = 4
+    stream_bits = 4
+    expert_fmt = "experts_packed"
+
+    def pack_codes(self, codes):
+        return pack_nibbles(codes)
+
+    def unpack_codes(self, codes, n):
+        return unpack_nibbles(codes, n)
 
 
 @register_format
-class LUT3PackedFormat(_NibblePackedLUT):
-    """3-bit codes riding the nibble container in-graph (TPU alignment;
-    1 wasted bit); checkpoints store the true 3 bits/weight bitstream,
-    which is what `storage_bits` counts."""
+class LUT3PackedFormat(_PackedLUT):
+    """True 3-bit bitstream: codes (m, ceil(n*3/8)) uint8
+    (`core.packing.pack_bits` layout, byte-identical to the checkpoint
+    stream), streamed at 3/8 B/weight by the phase-decomposed Pallas
+    kernel — serving HBM bytes equal checkpoint bytes, no nibble
+    alignment waste."""
 
     name = "lut3_packed"
     bits = 3
+    stream_bits = 3
+    expert_fmt = "experts3_packed"
+
+    def pack_codes(self, codes):
+        return pack_bits(codes, self.stream_bits)
+
+    def unpack_codes(self, codes, n):
+        return unpack_bits(codes, self.stream_bits, n)
 
 
 # ------------------------------------------------------------------ experts
@@ -306,9 +356,10 @@ class _ExpertsBase(WeightFormat):
     def dequantize(self, layer: QuantizedExperts) -> jnp.ndarray:
         codes = layer.codes
         if self.packed:
-            e, m, half = codes.shape
-            codes = unpack_nibbles(codes.reshape(e * m, half),
-                                   layer.n_cols).reshape(e, m, layer.n_cols)
+            e, m, cb = codes.shape
+            codes = self.unpack_codes(codes.reshape(e * m, cb),
+                                      layer.n_cols).reshape(e, m,
+                                                            layer.n_cols)
         w = jnp.take_along_axis(layer.codebook, codes.astype(jnp.int32),
                                 axis=2)                       # (E, m, n)
         if layer.sparse_val is not None:
@@ -322,14 +373,18 @@ class _ExpertsBase(WeightFormat):
 
     def encode(self, layer: QuantizedExperts) -> QuantizedExperts:
         if self.packed and not layer.packed:
-            assert layer.bits <= 4, (layer.bits, "nibble container")
+            assert layer.bits <= (self.stream_bits
+                                  if self.stream_bits < 8 else 8), \
+                (layer.bits, self.name)
             e, m, n = layer.codes.shape
-            packed = pack_nibbles(layer.codes.reshape(e * m, n))
+            packed = self.pack_codes(layer.codes.reshape(e * m, n))
             return dataclasses.replace(layer,
                                        codes=packed.reshape(e, m, -1),
                                        fmt=self.name, n_cols=n)
-        assert layer.packed == self.packed, \
-            "already packed; decode first"          # no silent relabel
+        assert layer.packed == self.packed and (
+            not self.packed
+            or get_format(layer.fmt).stream_bits == self.stream_bits), \
+            "container layout mismatch; decode first"   # no silent relabel
         return dataclasses.replace(layer, fmt=self.name,
                                    n_cols=layer.n_cols
                                    or layer.codes.shape[-1])
@@ -337,7 +392,7 @@ class _ExpertsBase(WeightFormat):
     def abstract(self, shape, bits, book_dtype, code_dtype=jnp.uint8,
                  qcfg=None):
         *lead, e, din, dout = shape
-        nc = (din + 1) // 2 if self.packed else din
+        nc = self.code_cols(din) if self.packed else din
         out = QuantizedExperts(
             codes=jax.ShapeDtypeStruct((*lead, e, dout, nc), code_dtype),
             codebook=jax.ShapeDtypeStruct((*lead, e, dout, 1 << bits),
@@ -373,20 +428,49 @@ class _ExpertsBase(WeightFormat):
 class ExpertsFormat(_ExpertsBase):
     name = "experts"
     packed = False
+    stream_bits = 8
     expert_fmt = "experts"
+
+    def pack_codes(self, codes):
+        return codes
 
 
 @register_format
 class ExpertsPackedFormat(_ExpertsBase):
     name = "experts_packed"
     packed = True
+    stream_bits = 4
     expert_fmt = "experts_packed"
+
+    def pack_codes(self, codes):
+        return pack_nibbles(codes)
+
+    def unpack_codes(self, codes, n):
+        return unpack_nibbles(codes, n)
+
+
+@register_format
+class Experts3PackedFormat(_ExpertsBase):
+    """Stacked per-expert true 3-bit bitstream: codes (E, m, ceil(n*3/8))
+    — the experts counterpart of 'lut3_packed', so MoE expert weights
+    under a 3-bit policy also hold checkpoint bytes in HBM."""
+
+    name = "experts3_packed"
+    packed = True
+    stream_bits = 3
+    expert_fmt = "experts3_packed"
+
+    def pack_codes(self, codes):
+        return pack_bits(codes, self.stream_bits)
+
+    def unpack_codes(self, codes, n):
+        return unpack_bits(codes, self.stream_bits, n)
 
 
 def packed_linear_fmt(bits: int) -> str:
-    """The nibble-packed linear format for a bit width. 3-bit has its own
-    name (true-bitstream storage accounting); other widths <= 4 ride the
-    4-bit nibble container."""
+    """The packed linear format for a bit width. 3-bit has its own true
+    bitstream container; other widths <= 4 ride the 4-bit nibble
+    container."""
     if bits == 3:
         return "lut3_packed"
     if bits <= 4:

@@ -1,14 +1,19 @@
-"""Code packing: in-graph nibble container + true bitstream storage.
+"""Code packing: in-graph nibble + bitstream containers.
 
-In-graph (serving) container: 4-bit nibbles, two codes per uint8 — the
-layout the Pallas LUT-mpGEMM kernel consumes. 3-bit codes also ride the
-nibble container in-graph (TPU alignment; 1 wasted bit), while checkpoints
-store the true 3/8-bytes-per-weight bitstream via numpy packbits.
+In-graph (serving) containers:
+  * 4-bit nibbles, two codes per uint8 ('lut4_packed') — `pack_nibbles`.
+  * true `ceil(n*bits/8)`-byte bitstream ('lut3_packed') — `pack_bits` /
+    `unpack_bits`, the jnp twins of the numpy checkpoint packers below,
+    so serving HBM bytes equal checkpoint bytes.
 
-These are the low-level primitives; which layout a served layer actually
-uses is the `WeightFormat` tag on its container (`core.formats` — e.g.
-'lut4_packed' / 'lut3_packed' call `pack_nibbles` in `encode`, and
-storage accounting counts the bitstream width).
+Both layouts are streamed directly by the Pallas LUT-mpGEMM kernels
+(`kernels.lut_mpgemm`); which one a served layer uses is the
+`WeightFormat` tag on its container (`core.formats`).
+
+Bit order is little-endian within each byte (numpy
+``packbits(bitorder="little")``): code j occupies bits
+[j*bits, (j+1)*bits) of the row bitstream. For bits=4 this coincides
+exactly with the nibble layout (low nibble = even code).
 """
 from __future__ import annotations
 
@@ -36,6 +41,43 @@ def unpack_nibbles(packed: jnp.ndarray, n: int) -> jnp.ndarray:
     return out[:, :n].astype(jnp.uint8)
 
 
+# ----------------------------------------------------------- bitstream (jnp)
+
+def code_stream_bytes(n: int, bits: int) -> int:
+    """Per-row container bytes for n codes at `bits` stream width:
+    ceil(n * bits / 8) — the true checkpoint/serving byte count."""
+    return (n * bits + 7) // 8
+
+
+def pack_bits(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(m, n) uint8 codes < 2**bits -> (m, ceil(n*bits/8)) uint8 bitstream.
+
+    In-graph twin of `pack_bits_np` (little-endian bit order), so the
+    serving container is byte-identical to the checkpoint stream.
+    """
+    m, n = codes.shape
+    shifts = jnp.arange(bits, dtype=jnp.uint8)
+    bitmat = ((codes[..., None] >> shifts) & 1).astype(jnp.uint8)  # (m,n,bits)
+    flat = bitmat.reshape(m, n * bits)
+    pad = (-flat.shape[1]) % 8
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    by = flat.reshape(m, -1, 8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(by * weights, axis=-1).astype(jnp.uint8)
+
+
+def unpack_bits(packed: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """(m, ceil(n*bits/8)) uint8 bitstream -> (m, n) uint8 codes."""
+    m = packed.shape[0]
+    shifts8 = jnp.arange(8, dtype=jnp.uint8)
+    bitmat = ((packed[..., None] >> shifts8) & 1).reshape(m, -1)
+    bitmat = bitmat[:, :n * bits].reshape(m, n, bits)
+    shifts = jnp.arange(bits, dtype=jnp.uint8)
+    return jnp.sum(bitmat.astype(jnp.uint8) << shifts, axis=-1) \
+        .astype(jnp.uint8)
+
+
 # ------------------------------------------------------------ bitstream (np)
 
 def pack_bits_np(codes: np.ndarray, bits: int) -> np.ndarray:
@@ -56,15 +98,20 @@ def unpack_bits_np(packed: np.ndarray, bits: int, n: int) -> np.ndarray:
 
 
 def storage_bytes(m: int, n: int, bits: int, levels: int = None,
-                  sparse_k: int = 0, full_rows: int = 0) -> dict:
+                  sparse_k: int = 0, full_rows: int = 0,
+                  book_bytes: int = 2) -> dict:
     """Theoretical storage accounting (paper Table 1).
 
-    fp16 codebook (m * 2^bits entries), true-packed codes, optional
-    structured sparse (fp16 value + int32 index) and full fp16 rows.
+    Codebook at `book_bytes` per entry (paper assumes fp16; pass 4 for the
+    fp32 codebooks the quantizer actually emits), true-packed codes at the
+    per-row container width `code_stream_bytes` (shared with
+    `kernels.ops.vmem_plan`, so roofline and storage accounting agree),
+    optional structured sparse (fp16 value + int32 index) and full fp16
+    rows.
     """
     levels = levels if levels is not None else (1 << bits)
-    codes = m * n * bits / 8
-    lut = m * levels * 2
+    codes = m * code_stream_bytes(n, bits)
+    lut = m * levels * book_bytes
     sparse = m * sparse_k * (2 + 4)
     full = full_rows * n * 2
     fp16 = m * n * 2

@@ -63,8 +63,10 @@ class QuantizedLinear:
     input features (n = d_in), matching the paper's W (m x n) acting as W @ x.
 
     Fields:
-      codes: (m, n) uint8 codebook indices (or (m, ceil(n/2)) nibble-packed
-        for packed formats), values < 2**bits.
+      codes: (m, n) uint8 codebook indices, or the owning format's packed
+        container — (m, ceil(n/2)) nibble-packed ('lut4_packed') or the
+        true (m, ceil(n*bits/8)) bitstream ('lut3_packed'); values <
+        2**bits.
       codebook: (m, 2**bits) fp values (the per-row LUT T).
       bits: static bit width.
       fmt: name of the owning `WeightFormat` ('lut', 'lut4_packed',
@@ -119,8 +121,7 @@ class QuantizedLinear:
     def unpacked_codes(self) -> jax.Array:
         if not self.packed:
             return self.codes
-        from .packing import unpack_nibbles
-        return unpack_nibbles(self.codes, self.n_cols)
+        return self._format().unpack_codes(self.codes, self.n_cols)
 
     def dequantize(self) -> jax.Array:
         """Materialize W~ (m, n) — reference/debug path."""

@@ -1,4 +1,7 @@
 """Pallas TPU kernels for GANQ: LUT-mpGEMM serving + S-step quantization."""
-from .ops import lut_linear, s_step_blocked, vmem_plan
-from .lut_mpgemm import lut_matmul, lut_matmul_packed
+from .ops import (groupable_layers, lut_linear, lut_linear_grouped,
+                  s_step_blocked, vmem_plan)
+from .lut_mpgemm import (lut_matmul, lut_matmul_bitstream,
+                         lut_matmul_grouped, lut_matmul_packed)
 from .backsub import backsub
+from .tune import BlockPlan, autotune, tune_model

@@ -1,21 +1,38 @@
-"""LUT-based mixed-precision GEMM Pallas TPU kernel (paper Fig. 1a right).
+"""LUT-based mixed-precision GEMM Pallas TPU kernels (paper Fig. 1a right).
 
 Computes Y = W~ @ X where W~[i, j] = T[i, Q[i, j]] without ever
-materializing W~ in HBM: packed 4-bit codes stream HBM->VMEM at
-0.5 bytes/weight and are decoded tile-by-tile inside the matmul.
+materializing W~ in HBM: quantized codes stream HBM->VMEM at their true
+container width (bits/8 bytes per weight for the bitstream layout) and are
+decoded tile-by-tile inside the matmul.
 
 TPU adaptation of the GPU shared-memory LUT (SqueezeLLM kernels): TPUs have
 no efficient per-lane gather, so the per-row table lookup is re-expressed as
-a 2^N-way compare-select accumulation on the VPU — for each codebook slot s,
-`acc += T[:, s] * (codes == s)` — which vectorizes perfectly and feeds the
-decoded tile straight into the MXU. The codebook tile (block_m x 2^N fp32,
-e.g. 128x16 = 8 KiB) plays the role of the GPU shared-memory LUT and stays
-VMEM-resident for the whole K loop.
+a 2^N-way compare-select on the VPU — the accumulator is initialized to
+T[:, 0] and each remaining slot s selects `where(codes == s, T[:, s], acc)`
+— which vectorizes perfectly and feeds the decoded tile straight into the
+MXU. The codebook tile (block_m x 2^N fp32, e.g. 128x16 = 8 KiB) plays the
+role of the GPU shared-memory LUT and stays VMEM-resident for the whole K
+loop.
 
-Packed layout trick: rather than interleaving nibbles inside the kernel
-(an awkward lane shuffle on TPU), the wrapper pre-splits X by row parity and
-the kernel computes  Y = W_lo @ X_even + W_hi @ X_odd  — two clean MXU calls
-per tile, zero shuffles.
+Packed layout trick, generalized: rather than interleaving sub-byte codes
+inside the kernel (an awkward lane shuffle on TPU), the wrapper pre-splits
+X by *residue class* of the code index. For a container stream width of
+`sb` bits per code the layout repeats every g = sb/gcd(sb,8) bytes holding
+ph = 8/gcd(sb,8) codes, so the wrapper passes g byte-plane tiles and ph
+X-phase tiles; decode is then static shifts + one compare-select pass over
+the phase-concatenated codes, and a single MXU call contracts the
+phase-stacked tiles:
+
+    Y = [W_0 | W_1 | ... | W_{ph-1}] @ [X_0; X_1; ...; X_{ph-1}]
+
+For sb=4 (nibble container) this degenerates to the classic parity split
+(g=1, ph=2); sb=3 gives the true 3/8-byte bitstream (g=3, ph=8) with zero
+wasted HBM bandwidth; sb=8 is the unpacked layout (g=1, ph=1).
+
+`lut_matmul_grouped` extends the same kernel over an output-group axis:
+G projections sharing the input stream (Q/K/V, gate/up) ride one launch
+with stacked codes/codebooks, so each X tile is fetched HBM->VMEM once
+and feeds G decoded dots instead of being re-streamed per projection.
 
 Grid: (m_blocks, p_blocks, k_blocks), K innermost/sequential with an f32
 VMEM accumulator (flash-style).
@@ -23,6 +40,7 @@ VMEM accumulator (flash-style).
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -30,12 +48,47 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def phase_split(stream_bits: int):
+    """(bytes per group g, codes per group ph) for a container stream
+    width: the layout repeats every lcm(stream_bits, 8) bits."""
+    d = math.gcd(stream_bits, 8)
+    return stream_bits // d, 8 // d
+
+
 def _decode_tile(codes: jnp.ndarray, t: jnp.ndarray, levels: int) -> jnp.ndarray:
-    """(bm, bk) uint8 codes + (bm, L) table -> (bm, bk) f32 via compare-select."""
-    acc = jnp.zeros(codes.shape, jnp.float32)
-    for s in range(levels):
-        acc += t[:, s][:, None] * (codes == s).astype(jnp.float32)
+    """(bm, bk) int codes + (bm, L) f32 table -> (bm, bk) f32.
+
+    Compare-select decode with slot 0 as the accumulator init: levels-1
+    selects, no multiply-accumulate (code 0 costs nothing). Equality masks
+    for a tile are computed exactly once — callers that feed several MXU
+    operands from one tile (packed lo/hi halves, bitstream phases) decode
+    the phase-concatenated codes in a single pass.
+    """
+    acc = jnp.broadcast_to(t[:, 0][:, None], codes.shape)
+    for s in range(1, levels):
+        acc = jnp.where(codes == s, t[:, s][:, None], acc)
     return acc
+
+
+def _extract_phase_codes(planes: jnp.ndarray, stream_bits: int) -> jnp.ndarray:
+    """(g, bm, bkg) uint8 byte planes -> (bm, ph*bkg) codes.
+
+    Static shifts only (phase q of a group lives at bit offset q*sb, the
+    same place in every group), so decode needs no lane shuffles; codes
+    spanning a byte boundary merge two planes.
+    """
+    g, ph = phase_split(stream_bits)
+    mask = (1 << stream_bits) - 1
+    p32 = [planes[i].astype(jnp.int32) for i in range(g)]
+    phases = []
+    for q in range(ph):
+        off = q * stream_bits
+        lo, sh = off // 8, off % 8
+        c = p32[lo] >> sh
+        if sh + stream_bits > 8:                # code spans two bytes
+            c = c | (p32[lo + 1] << (8 - sh))
+        phases.append(c & mask)
+    return jnp.concatenate(phases, axis=-1)
 
 
 def _lut_kernel_unpacked(codes_ref, t_ref, x_ref, o_ref, acc_ref, *,
@@ -44,7 +97,8 @@ def _lut_kernel_unpacked(codes_ref, t_ref, x_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = _decode_tile(codes_ref[...], t_ref[...].astype(jnp.float32), levels)
+    w = _decode_tile(codes_ref[...].astype(jnp.int32),
+                     t_ref[...].astype(jnp.float32), levels)
     acc_ref[...] += jnp.dot(w, x_ref[...].astype(jnp.float32),
                             preferred_element_type=jnp.float32)
 
@@ -53,20 +107,29 @@ def _lut_kernel_unpacked(codes_ref, t_ref, x_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _lut_kernel_packed(packed_ref, t_ref, xe_ref, xo_ref, o_ref, acc_ref, *,
-                       levels: int, nk: int):
+def _lut_kernel_stream(codes_ref, t_ref, x_ref, o_ref, acc_ref, *,
+                       stream_bits: int, levels: int, groups: int, nk: int):
+    """Bit-parametric bitstream kernel, optionally over G output groups.
+
+    codes_ref (G*g, bm, bkg) byte planes; t_ref (G, bm, L); x_ref
+    (ph, bkg, bp) phase-split activations — fetched once per grid step and
+    shared by all G groups' dots.
+    """
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    packed = packed_ref[...]
-    t = t_ref[...].astype(jnp.float32)
-    w_lo = _decode_tile(packed & 0xF, t, levels)
-    w_hi = _decode_tile(packed >> 4, t, levels)
-    acc_ref[...] += jnp.dot(w_lo, xe_ref[...].astype(jnp.float32),
-                            preferred_element_type=jnp.float32)
-    acc_ref[...] += jnp.dot(w_hi, xo_ref[...].astype(jnp.float32),
-                            preferred_element_type=jnp.float32)
+    g, ph = phase_split(stream_bits)
+    planes = codes_ref[...]
+    bkg = planes.shape[-1]
+    xs = x_ref[...]
+    # phase-major row stack matches the phase-concatenated decode below
+    x2 = xs.reshape(ph * bkg, xs.shape[-1]).astype(jnp.float32)
+    for gi in range(groups):
+        codes = _extract_phase_codes(planes[gi * g:(gi + 1) * g],
+                                     stream_bits)
+        w = _decode_tile(codes, t_ref[gi].astype(jnp.float32), levels)
+        acc_ref[gi] += jnp.dot(w, x2, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
@@ -120,51 +183,115 @@ def lut_matmul(codes: jnp.ndarray, codebook: jnp.ndarray, x: jnp.ndarray, *,
     return out[:m, :p]
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "bits", "block_m", "block_k", "block_p", "interpret"))
 def lut_matmul_packed(packed: jnp.ndarray, codebook: jnp.ndarray,
                       x: jnp.ndarray, *, bits: int = 4, block_m: int = 128,
                       block_k: int = 512, block_p: int = 128,
                       interpret: bool = False) -> jnp.ndarray:
     """Y = decode(packed nibbles) @ x; packed: (m, ceil(n/2)) uint8.
 
-    X is split by row parity outside the kernel so decode needs no
-    interleave: Y = W_lo @ X_even + W_hi @ X_odd.
+    The nibble container IS the sb=4 bitstream (low nibble = even code),
+    so this is the g=1/ph=2 degenerate case of the generic stream kernel:
+    Y = [W_lo | W_hi] @ [X_even; X_odd] — one decode pass, one MXU call
+    per tile, one implementation.
     """
     m, half = packed.shape
     assert x.shape[0] in (2 * half, 2 * half - 1), \
         (f"x rows ({x.shape[0]}) must match the packed K axis "
          f"(2*{half} nibbles, odd n allowed one short)")
-    p = x.shape[1]
-    levels = 1 << bits
-    # split X rows by parity (pad odd n with a zero row first)
-    xq = _pad_to(x, 0, 2)
-    x_even, x_odd = xq[0::2], xq[1::2]
+    return lut_matmul_bitstream(packed, codebook, x, bits=bits,
+                                stream_bits=4, block_m=block_m,
+                                block_k=block_k, block_p=block_p,
+                                interpret=interpret)
 
-    bm = min(block_m, m)
-    bkh = min(block_k // 2, half)          # block over the *packed* axis
+
+@functools.partial(jax.jit, static_argnames=(
+    "stream_bits", "levels", "block_m", "block_k", "block_p", "interpret"))
+def _stream_matmul(codes: jnp.ndarray, books: jnp.ndarray, x: jnp.ndarray, *,
+                   stream_bits: int, levels: int, block_m: int,
+                   block_k: int, block_p: int,
+                   interpret: bool) -> jnp.ndarray:
+    """Grouped bitstream matmul core: codes (G, mu, ceil(n*sb/8)) uint8,
+    books (G, mu, levels), x (n, p) -> (G, mu, p) in x.dtype."""
+    gg, mu, cb = codes.shape
+    n, p = x.shape
+    g, ph = phase_split(stream_bits)
+    assert cb == (n * stream_bits + 7) // 8, (cb, n, stream_bits)
+    n_groups = -(-n // ph)
+
+    # byte planes: group bytes are consecutive in the stream; plane b holds
+    # byte b of every group -> (G*g, mu, n_groups)
+    pad_bytes = n_groups * g - cb
+    if pad_bytes:
+        codes = jnp.pad(codes, ((0, 0), (0, 0), (0, pad_bytes)))
+    planes = codes.reshape(gg, mu, n_groups, g).transpose(0, 3, 1, 2) \
+        .reshape(gg * g, mu, n_groups)
+
+    # X phases: row j = group*ph + q  ->  x_ph[q, group]
+    xq = _pad_to(x, 0, ph * n_groups)
+    x_ph = xq.reshape(n_groups, ph, p).transpose(1, 0, 2)
+
+    bm = min(block_m, mu)
+    bkg = max(1, min(block_k // ph, n_groups))
     bp = min(block_p, p)
 
-    pp_ = _pad_to(_pad_to(packed, 0, bm), 1, bkh)
-    tp = _pad_to(codebook, 0, bm)
-    xe = _pad_to(_pad_to(x_even, 0, bkh), 1, bp)
-    xo = _pad_to(_pad_to(x_odd, 0, bkh), 1, bp)
-    mp, halfp = pp_.shape
-    ppad = xe.shape[1]
-    nm, nk, npb = mp // bm, halfp // bkh, ppad // bp
+    planes = _pad_to(_pad_to(planes, 1, bm), 2, bkg)
+    books = _pad_to(books, 1, bm)
+    x_ph = _pad_to(_pad_to(x_ph, 1, bkg), 2, bp)
+    mup, ngp = planes.shape[1], planes.shape[2]
+    pp = x_ph.shape[2]
+    nm, nk, npb = mup // bm, ngp // bkg, pp // bp
 
     out = pl.pallas_call(
-        functools.partial(_lut_kernel_packed, levels=levels, nk=nk),
+        functools.partial(_lut_kernel_stream, stream_bits=stream_bits,
+                          levels=levels, groups=gg, nk=nk),
         grid=(nm, npb, nk),
         in_specs=[
-            pl.BlockSpec((bm, bkh), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bm, levels), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((bkh, bp), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bkh, bp), lambda i, j, k: (k, j)),
+            pl.BlockSpec((gg * g, bm, bkg), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((gg, bm, levels), lambda i, j, k: (0, i, 0)),
+            pl.BlockSpec((ph, bkg, bp), lambda i, j, k: (0, k, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bp), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, ppad), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bp), jnp.float32)],
+        out_specs=pl.BlockSpec((gg, bm, bp), lambda i, j, k: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((gg, mup, pp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((gg, bm, bp), jnp.float32)],
         interpret=interpret,
-    )(pp_, tp, xe, xo)
-    return out[:m, :p]
+    )(planes, books, x_ph)
+    return out[:, :mu, :p]
+
+
+def lut_matmul_bitstream(packed: jnp.ndarray, codebook: jnp.ndarray,
+                         x: jnp.ndarray, *, bits: int,
+                         stream_bits: int = None,
+                         block_m: int = 128, block_k: int = 512,
+                         block_p: int = 128,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Y = decode(bitstream codes) @ x; packed: (m, ceil(n*sb/8)) uint8
+    true bitstream (`core.packing.pack_bits` layout), where sb =
+    `stream_bits` (container width; defaults to `bits`, but codes narrower
+    than their container — e.g. 2-bit values in a 3-bit stream — pass
+    both). Streams exactly sb/8 bytes per weight — for 3-bit, 33% less
+    HBM than the nibble container."""
+    sb = stream_bits if stream_bits is not None else bits
+    y = _stream_matmul(packed[None], codebook[None], x, stream_bits=sb,
+                       levels=1 << bits, block_m=block_m, block_k=block_k,
+                       block_p=block_p, interpret=interpret)
+    return y[0]
+
+
+def lut_matmul_grouped(codes: jnp.ndarray, books: jnp.ndarray,
+                       x: jnp.ndarray, *, bits: int, stream_bits: int = None,
+                       block_m: int = 128, block_k: int = 512,
+                       block_p: int = 128,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Fused multi-projection LUT matmul: G output groups sharing one X.
+
+    codes: (G, mu, cb) uint8 in the `stream_bits` container layout
+    (8 = unpacked, 4 = nibble, otherwise true bitstream); books
+    (G, mu, 2**bits); x (n, p). Returns (G, mu, p). One kernel launch
+    streams X HBM->VMEM once per tile for all G groups instead of G times
+    across separate launches.
+    """
+    sb = stream_bits if stream_bits is not None else bits
+    return _stream_matmul(codes, books, x, stream_bits=sb,
+                          levels=1 << bits, block_m=block_m,
+                          block_k=block_k, block_p=block_p,
+                          interpret=interpret)

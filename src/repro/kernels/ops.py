@@ -2,54 +2,183 @@
 
 On CPU (this container) kernels run in interpret mode; on TPU they compile
 natively. `lut_linear` is the serving entry point used by
-models/quantized.py: it picks packed/unpacked layout and falls back to the
-pure-XLA reference when Pallas is disabled (e.g. inside the 512-device
-SPMD dry-run, where the jnp path keeps the HLO analyzable).
+models/quantized.py: it routes on the container layout (unpacked / nibble /
+true bitstream, read from the `WeightFormat` registry), picks tuned tile
+sizes from `kernels.tune` when the shape has been autotuned, and falls
+back to the pure-XLA reference when Pallas is disabled (e.g. inside the
+512-device SPMD dry-run, where the jnp path keeps the HLO analyzable).
+`lut_linear_grouped` fuses several projections sharing one activation
+stream (Q/K/V, gate/up) into a single kernel launch.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+import math
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
 from .backsub import backsub
-from .lut_mpgemm import lut_matmul, lut_matmul_packed
+from .lut_mpgemm import (lut_matmul, lut_matmul_bitstream,
+                         lut_matmul_grouped, lut_matmul_packed, phase_split)
+
+# smallest worthwhile per-group row count for the fused projection kernel;
+# below this the grouped tiles degenerate and sequential launches win
+MIN_GROUP_ROWS = 8
+# largest stacked group count: the kernel keeps every group's code tile
+# and f32 accumulator VMEM-resident per grid step and unrolls a Python
+# loop over groups, so extreme row ratios (MQA wq vs a single kv head)
+# must fall back to sequential launches instead of blowing VMEM/compile
+MAX_GROUPS = 16
+
+
+def _group_unit(layers: Sequence) -> Tuple[int, int]:
+    """(row unit mu = gcd of output widths, total group count G) for a
+    fused launch — the single source of truth for group admissibility
+    (groupable_layers) and code stacking (lut_linear_grouped)."""
+    mu = 0
+    for l in layers:
+        mu = math.gcd(mu, l.shape[0])
+    groups = sum(l.shape[0] // mu for l in layers) if mu else 0
+    return mu, groups
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _layout(bits: int, packed: bool, fmt: Optional[str]) -> int:
+    """Container stream width in bits per code: 8 unpacked, 4 nibble,
+    otherwise the true bitstream width from the format registry."""
+    if fmt is not None:
+        from repro.core.formats import get_format
+        sb = get_format(fmt).stream_bits
+        assert sb is not None, f"format {fmt!r} has no LUT code stream"
+        return sb
+    return 4 if packed else 8
+
+
+def _tuned_blocks(m: int, n: int, p: int, bits: int, fmt: Optional[str],
+                  blocks, groups: int = 1):
+    if blocks is not None:
+        return blocks.as_kwargs()
+    if fmt is not None:
+        from . import tune
+        # groups is part of the key: a plan whose VMEM feasibility was
+        # validated for a single launch must never be applied to a fused
+        # launch whose tiles scale by the group count
+        plan = tune.lookup(m, n, p, bits, fmt, groups=groups)
+        if plan is not None:
+            return plan.as_kwargs()
+    return {}                     # kernel defaults (128/512/128)
+
+
 def lut_linear(codes_or_packed: jnp.ndarray, codebook: jnp.ndarray,
                x: jnp.ndarray, *, bits: int = 4, packed: bool = False,
                use_pallas: bool = True,
-               fmt: Optional[str] = None) -> jnp.ndarray:
+               fmt: Optional[str] = None, blocks=None) -> jnp.ndarray:
     """Y = W~ @ X for a LUT-quantized layer.
 
     Args:
-      codes_or_packed: (m, n) uint8 codes, or (m, ceil(n/2)) nibble-packed.
+      codes_or_packed: (m, n) uint8 codes, (m, ceil(n/2)) nibble-packed,
+        or (m, ceil(n*bits/8)) true-bitstream packed.
       codebook: (m, 2**bits).
       x: (n, p) activations.
       fmt: optional `WeightFormat` name — when given, the code layout
-        (packed or not) is read from the registry instead of the `packed`
-        flag, so callers can route by format tag alone.
+        (stream width) is read from the registry instead of the `packed`
+        flag, so callers route by format tag alone; it also keys the
+        autotuned tile-size lookup.
+      blocks: optional `tune.BlockPlan` overriding both the tuned cache
+        and the kernel defaults.
     """
-    if fmt is not None:
-        from repro.core.formats import get_format
-        packed = get_format(fmt).packed
+    sb = _layout(bits, packed, fmt)
+    n, p = x.shape
+    m = codes_or_packed.shape[0]
     if not use_pallas:
-        if packed:
+        if sb == 8:
+            return ref.lut_matmul_ref(codes_or_packed, codebook, x)
+        if sb == 4:
             return ref.lut_matmul_packed_ref(codes_or_packed, codebook, x)
-        return ref.lut_matmul_ref(codes_or_packed, codebook, x)
+        return ref.lut_matmul_bitstream_ref(codes_or_packed, codebook, x,
+                                            bits=sb)
     interpret = not _on_tpu()
-    if packed:
+    bkw = _tuned_blocks(m, n, p, bits, fmt, blocks)
+    if sb == 8:
+        return lut_matmul(codes_or_packed, codebook, x, bits=bits,
+                          interpret=interpret, **bkw)
+    if sb == 4:
         return lut_matmul_packed(codes_or_packed, codebook, x, bits=bits,
-                                 interpret=interpret)
-    return lut_matmul(codes_or_packed, codebook, x, bits=bits,
-                      interpret=interpret)
+                                 interpret=interpret, **bkw)
+    return lut_matmul_bitstream(codes_or_packed, codebook, x, bits=bits,
+                                stream_bits=sb, interpret=interpret, **bkw)
+
+
+def groupable_layers(layers: Sequence, min_rows: int = MIN_GROUP_ROWS
+                     ) -> bool:
+    """True when a list of `QuantizedLinear` can ride one fused launch:
+    same groupable format / bits / input width / codebook dtype, no
+    sparse or full-row side payloads, and a usable common row unit."""
+    from repro.core.formats import get_format
+    if len(layers) < 2:
+        return False
+    fmts = [getattr(l, "fmt", None) for l in layers]
+    if fmts[0] is None or any(f != fmts[0] for f in fmts):
+        return False
+    f = get_format(fmts[0])
+    if not f.groupable:
+        return False
+    l0 = layers[0]
+    for l in layers:
+        if (l.bits != l0.bits or l.codes.ndim != 2
+                or l.shape[1] != l0.shape[1]
+                or l.codebook.dtype != l0.codebook.dtype
+                or l.sparse_val is not None or l.full_row_val is not None):
+            return False
+    mu, groups = _group_unit(layers)
+    return mu >= min_rows and groups <= MAX_GROUPS
+
+
+def lut_linear_grouped(layers: Sequence, x: jnp.ndarray, *,
+                       use_pallas: bool = True,
+                       blocks=None) -> List[jnp.ndarray]:
+    """Fused Y_i = W~_i @ X for projections sharing one activation stream.
+
+    layers: `QuantizedLinear`s passing `groupable_layers`; x: (n, p).
+    Rows are stacked over an output-group axis in units of
+    gcd(m_0, ..., m_{G-1}) so unequal projection widths (GQA Q vs K/V)
+    still fuse; X is streamed HBM->VMEM once per tile for the whole group
+    instead of once per projection. Returns [(m_i, p), ...].
+    """
+    from repro.core.formats import get_format
+    assert groupable_layers(layers), "layers are not groupable; caller " \
+        "must fall back to sequential lut_linear"
+    f = get_format(layers[0].fmt)
+    bits = layers[0].bits
+    n, p = x.shape
+    if not use_pallas:
+        return [lut_linear(l.codes, l.codebook, x, bits=bits, fmt=l.fmt,
+                           use_pallas=False) for l in layers]
+    mu, _ = _group_unit(layers)
+    cb = layers[0].codes.shape[-1]
+    codes = jnp.concatenate(
+        [l.codes.reshape(-1, mu, cb) for l in layers], axis=0)
+    books = jnp.concatenate(
+        [l.codebook.reshape(-1, mu, 1 << bits) for l in layers], axis=0)
+    m_total = sum(l.shape[0] for l in layers)
+    bkw = _tuned_blocks(m_total, n, p, bits, layers[0].fmt, blocks,
+                        groups=codes.shape[0])
+    y = lut_matmul_grouped(codes, books, x, bits=bits,
+                           stream_bits=f.stream_bits,
+                           interpret=not _on_tpu(), **bkw)
+    outs = []
+    start = 0
+    for l in layers:
+        gi = l.shape[0] // mu
+        outs.append(y[start:start + gi].reshape(l.shape[0], p))
+        start += gi
+    return outs
 
 
 def s_step_blocked(w: jnp.ndarray, t: jnp.ndarray, l: jnp.ndarray, *,
@@ -64,25 +193,45 @@ def s_step_blocked(w: jnp.ndarray, t: jnp.ndarray, l: jnp.ndarray, *,
 
 
 def vmem_plan(m: int, n: int, p: int, bits: int, block_m: int = 128,
-              block_k: int = 512, block_p: int = 128) -> dict:
-    """Static VMEM-footprint accounting for the LUT-mpGEMM kernel — used by
-    the roofline analysis (HBM bytes = what the kernel actually streams).
+              block_k: int = 512, block_p: int = 128, *,
+              fmt: str = "lut4_packed", x_dtype=jnp.bfloat16,
+              book_dtype=jnp.float32, out_dtype=None,
+              groups: int = 1) -> dict:
+    """Static VMEM-footprint + HBM-traffic accounting for the LUT-mpGEMM
+    kernels — the feasibility filter for `kernels.tune` and the roofline's
+    HBM-bytes model (what the kernel actually streams).
 
-    Per grid step resident set: packed codes tile, codebook tile, two X
-    parity tiles, f32 accumulator. HBM traffic: packed codes read once
-    (0.5 B/wt), X read m/block_m times, Y written once, LUT once.
+    Bytes derive from the real container layout: codes at the format's
+    stream width (`code_cols` — e.g. exactly ceil(n*3/8) per row for
+    'lut3_packed'), codebooks at `book_dtype` (the quantizer emits fp32,
+    not the fp16 the paper assumes), X/Y at their actual dtypes. For
+    `groups` > 1 (fused Q/K/V / gate/up launch) `m` is the TOTAL stacked
+    row count; X is streamed once per row block of the m/groups-row unit
+    instead of once per projection.
+
+    Per grid step resident set: codes tile(s), codebook tile(s), the
+    phase-split X tiles, f32 accumulator. HBM traffic: codes read once,
+    X read once per row block, Y written once, LUT once.
     """
+    from repro.core.formats import get_format
+    f = get_format(fmt)
     levels = 1 << bits
-    vmem = (block_m * block_k // 2            # packed codes tile (u8)
-            + block_m * levels * 4            # codebook tile (f32)
-            + block_k * block_p * 2           # X tiles (bf16, both parities)
-            + block_m * block_p * 4)          # accumulator
-    n_row_blocks = -(-m // block_m)
+    xb = jnp.dtype(x_dtype).itemsize
+    bb = jnp.dtype(book_dtype).itemsize
+    ob = jnp.dtype(out_dtype).itemsize if out_dtype is not None else xb
+    codes_row_bytes = f.code_cols(n)
+    codes_tile_bytes = f.code_cols(block_k)
+    vmem = (groups * block_m * codes_tile_bytes    # code byte planes (u8)
+            + groups * block_m * levels * bb       # codebook tile(s)
+            + block_k * block_p * xb               # X tiles (all phases)
+            + groups * block_m * block_p * 4)      # f32 accumulator
+    m_unit = m // groups
+    n_row_blocks = -(-m_unit // block_m)
     hbm = {
-        "codes_bytes": m * n * 0.5,
-        "lut_bytes": m * levels * 2,
-        "x_bytes": n * p * 2 * n_row_blocks,   # X re-streamed per row block
-        "y_bytes": m * p * 2,
+        "codes_bytes": m * codes_row_bytes,
+        "lut_bytes": m * levels * bb,
+        "x_bytes": n * p * xb * n_row_blocks,   # X re-streamed per row block
+        "y_bytes": m * p * ob,
     }
     hbm["total_bytes"] = sum(hbm.values())
     return {"vmem_bytes": vmem, **hbm}

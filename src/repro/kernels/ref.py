@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.ganq import s_step as _s_step_core
-from repro.core.packing import unpack_nibbles
+from repro.core.packing import unpack_bits, unpack_nibbles
 
 
 def lut_decode_ref(codes: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
@@ -33,6 +33,15 @@ def lut_matmul_packed_ref(packed: jnp.ndarray, codebook: jnp.ndarray,
     """Same as lut_matmul_ref but codes arrive nibble-packed (m, ceil(n/2))."""
     n = x.shape[0]
     codes = unpack_nibbles(packed, n)
+    return lut_matmul_ref(codes, codebook, x)
+
+
+def lut_matmul_bitstream_ref(packed: jnp.ndarray, codebook: jnp.ndarray,
+                             x: jnp.ndarray, *, bits: int) -> jnp.ndarray:
+    """Same as lut_matmul_ref but codes arrive as the true
+    (m, ceil(n*bits/8)) bitstream (`core.packing.pack_bits` layout)."""
+    n = x.shape[0]
+    codes = unpack_bits(packed, bits, n)
     return lut_matmul_ref(codes, codebook, x)
 
 

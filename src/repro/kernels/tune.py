@@ -1,0 +1,292 @@
+"""Block-size autotuner for the LUT-mpGEMM kernels.
+
+Serving shapes are static per deployment (m, n fixed by the checkpoint,
+p by the slot batch), so tile sizes are a per-shape constant worth
+measuring once instead of hardcoding 128/512/128. `autotune` sweeps
+(block_m, block_k, block_p) candidates for one `(m, n, p, bits, fmt)`
+problem, using `kernels.ops.vmem_plan` as a static feasibility filter
+(tiles must fit the VMEM budget) and timed trials of the real kernel on
+the current backend for the survivors. Results land in an in-process
+dict AND an on-disk JSON cache keyed by shape/backend, so a serving
+process picks tuned tiles via `lookup` with zero startup cost once any
+prior run (or an explicit `--autotune` pass, cf. launch/serve.py) has
+populated the cache.
+
+Off-TPU the kernels run in interpret mode: timings then rank the
+emulation, not the hardware — still useful for wiring tests and for the
+cache plumbing, which is backend-keyed exactly so TPU and CPU entries
+never mix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ~16 MiB VMEM/core on current TPUs; leave headroom for double buffering
+# (the pipeline keeps two copies of every streamed tile in flight).
+VMEM_BUDGET_BYTES = 6 * 2 ** 20
+
+_BM = (64, 128, 256, 512)
+_BK = (128, 256, 512, 1024, 2048)
+_BP = (32, 64, 128, 256)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """Tile sizes for one LUT-mpGEMM problem."""
+
+    block_m: int
+    block_k: int
+    block_p: int
+    us: float = 0.0              # measured microseconds (0 = untimed default)
+
+    def as_kwargs(self) -> Dict[str, int]:
+        return {"block_m": self.block_m, "block_k": self.block_k,
+                "block_p": self.block_p}
+
+
+_MEM_CACHE: Dict[str, BlockPlan] = {}
+_DISK_LOADED: set = set()
+
+
+def cache_path() -> Path:
+    """On-disk cache location; override with REPRO_TUNE_CACHE."""
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return Path(env).expanduser()
+    return Path.home() / ".cache" / "repro" / "lut_blocks.json"
+
+
+def plan_key(m: int, n: int, p: int, bits: int, fmt: str,
+             backend: Optional[str] = None, groups: int = 1) -> str:
+    backend = backend or jax.default_backend()
+    gtag = f"|g{groups}" if groups != 1 else ""
+    return f"{backend}|{fmt}|b{bits}|{m}x{n}x{p}{gtag}"
+
+
+def _load_disk(path: Path) -> None:
+    if str(path) in _DISK_LOADED:
+        return
+    _DISK_LOADED.add(str(path))
+    try:
+        raw = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return
+    for k, v in raw.items():
+        if k not in _MEM_CACHE:
+            _MEM_CACHE[k] = BlockPlan(v["block_m"], v["block_k"],
+                                      v["block_p"], v.get("us", 0.0))
+
+
+def _save_disk(path: Path) -> None:
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {k: dataclasses.asdict(v) for k, v in _MEM_CACHE.items()}
+        path.write_text(json.dumps(payload, indent=1, sort_keys=True))
+    except OSError:
+        pass                      # cache is an optimization, never a failure
+
+
+def clear_cache() -> None:
+    """Drop the in-process cache (tests; disk entries reload on demand)."""
+    _MEM_CACHE.clear()
+    _DISK_LOADED.clear()
+
+
+def lookup(m: int, n: int, p: int, bits: int, fmt: str,
+           groups: int = 1) -> Optional[BlockPlan]:
+    """Cached plan for a problem, or None (callers keep their defaults).
+    Checks the in-process dict first, then lazily loads the disk cache."""
+    key = plan_key(m, n, p, bits, fmt, groups=groups)
+    if key not in _MEM_CACHE:
+        _load_disk(cache_path())
+    return _MEM_CACHE.get(key)
+
+
+def candidate_plans(m: int, n: int, p: int, bits: int, fmt: str,
+                    groups: int = 1,
+                    vmem_budget: int = VMEM_BUDGET_BYTES
+                    ) -> List[BlockPlan]:
+    """Deduplicated (block_m, block_k, block_p) candidates that pass the
+    static `vmem_plan` feasibility filter for this problem."""
+    from .ops import vmem_plan               # late: ops imports this module
+    seen = set()
+    out = []
+    for bm in _BM:
+        for bk in _BK:
+            for bp in _BP:
+                cand = (min(bm, m), min(bk, n), min(bp, p))
+                if cand in seen:
+                    continue
+                seen.add(cand)
+                plan = vmem_plan(m, n, p, bits, *cand, fmt=fmt,
+                                 groups=groups)
+                if plan["vmem_bytes"] <= vmem_budget:
+                    out.append(BlockPlan(*cand))
+    return out
+
+
+def _synthetic_problem(m: int, n: int, p: int, bits: int, fmt: str):
+    """Random container + activations in the format's real layout."""
+    from repro.core.formats import get_format
+    f = get_format(fmt)
+    rng = np.random.default_rng(0)
+    cols = f.code_cols(n) if f.packed else n
+    codes = jnp.asarray(rng.integers(0, 256 if f.packed else (1 << bits),
+                                     size=(m, cols)).astype(np.uint8))
+    book = jnp.asarray(rng.normal(size=(m, 1 << bits)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    return codes, book, x
+
+
+def _time_plan(run, reps: int) -> float:
+    assert reps >= 1, reps
+    jax.block_until_ready(run())              # compile / warm, drained
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = run()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def autotune(m: int, n: int, p: int, bits: int, fmt: str, *,
+             reps: int = 3, max_candidates: int = 8,
+             save: bool = True) -> BlockPlan:
+    """Measure feasible tile candidates for one problem and cache the
+    winner. Returns the cached plan immediately when one exists."""
+    cached = lookup(m, n, p, bits, fmt)
+    if cached is not None:
+        return cached
+    from .ops import lut_linear
+    codes, book, x = _synthetic_problem(m, n, p, bits, fmt)
+    cands = candidate_plans(m, n, p, bits, fmt)
+    if not cands:                             # nothing fits: smallest tiles
+        cands = [BlockPlan(min(64, m), min(128, n), min(32, p))]
+    # prefer large-tile candidates first, keep the sweep bounded
+    cands = sorted(cands, key=lambda c: -(c.block_m * c.block_k
+                                          * c.block_p))[:max_candidates]
+    best = None
+    for cand in cands:
+        us = _time_plan(
+            lambda c=cand: lut_linear(codes, book, x, bits=bits, fmt=fmt,
+                                      blocks=c), reps)
+        if best is None or us < best.us:
+            best = dataclasses.replace(cand, us=us)
+    key = plan_key(m, n, p, bits, fmt)
+    _MEM_CACHE[key] = best
+    if save:
+        _save_disk(cache_path())
+    return best
+
+
+def autotune_grouped(layers, p: int, *, reps: int = 3,
+                     max_candidates: int = 8,
+                     save: bool = True) -> Optional[BlockPlan]:
+    """Tune the fused multi-projection launch for a sibling set (Q/K/V,
+    gate/up) that passes `groupable_layers`. Plans are cached under the
+    group-tagged key the grouped serving path looks up — distinct from
+    the groups=1 keys, since the fused kernel's VMEM scales with the
+    group count. Returns None for non-groupable input."""
+    from .ops import _group_unit, groupable_layers, lut_linear_grouped
+    if not groupable_layers(layers):
+        return None
+    _, groups = _group_unit(layers)
+    m_total = sum(l.shape[0] for l in layers)
+    n = layers[0].shape[1]
+    bits, fmt = layers[0].bits, layers[0].fmt
+    key = plan_key(m_total, n, p, bits, fmt, groups=groups)
+    if key not in _MEM_CACHE:
+        _load_disk(cache_path())
+    if key in _MEM_CACHE:
+        return _MEM_CACHE[key]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    cands = candidate_plans(m_total, n, p, bits, fmt, groups=groups)
+    if not cands:
+        cands = [BlockPlan(min(64, m_total), min(128, n), min(32, p))]
+    cands = sorted(cands, key=lambda c: -(c.block_m * c.block_k
+                                          * c.block_p))[:max_candidates]
+    best = None
+    for cand in cands:
+        us = _time_plan(
+            lambda c=cand: lut_linear_grouped(layers, x, blocks=c), reps)
+        if best is None or us < best.us:
+            best = dataclasses.replace(cand, us=us)
+    _MEM_CACHE[key] = best
+    if save:
+        _save_disk(cache_path())
+    return best
+
+
+# sibling projections the models fuse (attention.project_qkv, mlp_apply)
+_GROUP_SIBLINGS = (("wq", "wk", "wv"), ("w_gate", "w_up"))
+
+
+def _unit_view(leaf):
+    """2-D view of a possibly stacked-unit (U, m, nc) container — the
+    shape the per-unit apply actually serves."""
+    if leaf.codes.ndim == 2:
+        return leaf
+    return dataclasses.replace(
+        leaf, codes=leaf.codes[0], codebook=leaf.codebook[0],
+        sparse_idx=None if leaf.sparse_idx is None else leaf.sparse_idx[0],
+        sparse_val=None if leaf.sparse_val is None else leaf.sparse_val[0],
+        full_row_idx=None, full_row_val=None, bias=None)
+
+
+def tune_model(qparams, p: int, *, reps: int = 3,
+               save: bool = True) -> Dict[str, BlockPlan]:
+    """Autotune every distinct quantized-linear problem in a param tree
+    for decode width `p` (the slot batch) — per-layer launches AND the
+    fused Q/K/V / gate/up sibling groups the grouped serving path keys
+    on. Returns {key: plan}. The disk cache is written once at the end."""
+    from repro.core.formats import get_format
+    from repro.core.types import QuantizedLinear
+    problems: Dict[Tuple, None] = {}
+    group_problems: Dict[str, list] = {}
+
+    def visit(node):
+        if isinstance(node, dict):
+            for sibs in _GROUP_SIBLINGS:
+                if all(isinstance(node.get(k), QuantizedLinear)
+                       for k in sibs):
+                    views = [_unit_view(node[k]) for k in sibs]
+                    gkey = "|".join(f"{v.fmt}:{v.bits}:{v.shape}"
+                                    for v in views)
+                    group_problems.setdefault(gkey, views)
+            for v in node.values():
+                visit(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                visit(v)
+        elif isinstance(node, QuantizedLinear):
+            fmt = get_format(node.fmt)
+            if fmt.stream_bits is not None:
+                # stacked-unit leaves are (U, m, nc); apply sees 2-D slices
+                mm = node.codes.shape[-2]
+                nn = node.n_cols if fmt.packed else node.codes.shape[-1]
+                problems[(mm, nn, p, node.bits, node.fmt)] = None
+    visit(qparams)
+    out = {}
+    for (mm, nn, pp, bits, fmt) in problems:
+        plan = autotune(mm, nn, pp, bits, fmt, reps=reps, save=False)
+        out[plan_key(mm, nn, pp, bits, fmt)] = plan
+    for views in group_problems.values():
+        plan = autotune_grouped(views, p, reps=reps, save=False)
+        if plan is not None:
+            from .ops import _group_unit
+            _, groups = _group_unit(views)
+            m_total = sum(v.shape[0] for v in views)
+            out[plan_key(m_total, views[0].shape[1], p, views[0].bits,
+                         views[0].fmt, groups=groups)] = plan
+    if save:
+        _save_disk(cache_path())
+    return out

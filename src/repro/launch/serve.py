@@ -34,6 +34,11 @@ def main(argv=None) -> int:
                     choices=["xla", "pallas"],
                     help="LUT-matmul backend (ExecPolicy threaded through "
                          "ShardCtx; no global state)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep LUT-mpGEMM tile sizes for every quantized "
+                         "layer shape at the decode width before serving "
+                         "(kernels.tune; cached on disk per shape/backend, "
+                         "so later runs start tuned)")
     ap.add_argument("--kv8", action="store_true",
                     help="int8 KV cache (beyond-paper)")
     ap.add_argument("--requests", type=int, default=8)
@@ -93,6 +98,13 @@ def main(argv=None) -> int:
         print(f"quantized with {args.method} @{args.bits}-bit{pol_str}: "
               f"{rep['bits_per_weight']:.2f} bits/weight over "
               f"{rep['quantized_weights']} weights")
+        if args.autotune:
+            from repro.kernels.tune import cache_path, tune_model
+            plans = tune_model(params, p=args.slots)
+            for key, plan in sorted(plans.items()):
+                print(f"  tuned {key}: ({plan.block_m}, {plan.block_k}, "
+                      f"{plan.block_p}) {plan.us:.0f}us")
+            print(f"tile plans cached at {cache_path()}")
     engine = ServeEngine(params, cfg, ctx=ctx, max_len=128,
                          n_slots=args.slots)
     # mixed-length traffic: continuous batching needs no length grouping

@@ -16,7 +16,7 @@ from repro.configs.base import ModelConfig
 from repro.sharding.context import ShardCtx, LOCAL
 from .common import apply_mrope, apply_rope, dense_init, init_norm, \
     rms_norm_headwise
-from .linears import linear_apply
+from .linears import linear_apply, linear_apply_grouped
 
 NEG_INF = -2.0 ** 30
 Params = Dict
@@ -41,9 +41,8 @@ def _heads(x: jnp.ndarray, n: int, hd: int) -> jnp.ndarray:
     return x.reshape(*x.shape[:-1], n, hd)
 
 
-def project_q(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col, prefix,
+def _finish_q(q, p, positions, cfg: ModelConfig, ctx: ShardCtx,
               rope: bool = True):
-    q = linear_apply(p["wq"], x, col, prefix + "wq", ctx)
     q = ctx.constrain(q, "dp", None, ctx.tp_axis)
     q = _heads(q, cfg.n_heads, cfg.head_dim)
     if "q_norm" in p:
@@ -56,10 +55,8 @@ def project_q(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col, prefix,
     return q
 
 
-def project_kv(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col, prefix,
+def _finish_kv(k, v, p, positions, cfg: ModelConfig, ctx: ShardCtx,
                rope: bool = True):
-    k = linear_apply(p["wk"], x, col, prefix + "wk", ctx)
-    v = linear_apply(p["wv"], x, col, prefix + "wv", ctx)
     k = ctx.constrain(k, "dp", None, ctx.tp_axis)
     v = ctx.constrain(v, "dp", None, ctx.tp_axis)
     k = _heads(k, cfg.n_kv_heads, cfg.head_dim)
@@ -72,6 +69,32 @@ def project_kv(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col, prefix,
         else:
             k = apply_rope(k, positions, cfg.rope_theta)
     return k, v
+
+
+def project_q(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col, prefix,
+              rope: bool = True):
+    q = linear_apply(p["wq"], x, col, prefix + "wq", ctx)
+    return _finish_q(q, p, positions, cfg, ctx, rope)
+
+
+def project_kv(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col, prefix,
+               rope: bool = True):
+    k = linear_apply(p["wk"], x, col, prefix + "wk", ctx)
+    v = linear_apply(p["wv"], x, col, prefix + "wv", ctx)
+    return _finish_kv(k, v, p, positions, cfg, ctx, rope)
+
+
+def project_qkv(p, x, positions, cfg: ModelConfig, ctx: ShardCtx, col,
+                prefix, rope: bool = True):
+    """Q/K/V projections from one x: a single fused LUT-mpGEMM launch when
+    wq/wk/wv share a groupable quantized format (X streamed once instead
+    of 3x), falling back to per-projection matmuls otherwise."""
+    q, k, v = linear_apply_grouped(
+        [p["wq"], p["wk"], p["wv"]], x, col,
+        (prefix + "wq", prefix + "wk", prefix + "wv"), ctx)
+    q = _finish_q(q, p, positions, cfg, ctx, rope)
+    k, v = _finish_kv(k, v, p, positions, cfg, ctx, rope)
+    return q, k, v
 
 
 def _grouped_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
@@ -245,8 +268,7 @@ def attention_block(p, x, positions, cfg: ModelConfig, kind: str,
                     ctx: ShardCtx = LOCAL, col=None, prefix: str = "",
                     chunk: Optional[int] = 4096 * 2):
     """Training/prefill self-attention (returns output + fresh cache K/V)."""
-    q = project_q(p, x, positions, cfg, ctx, col, prefix)
-    k, v = project_kv(p, x, positions, cfg, ctx, col, prefix)
+    q, k, v = project_qkv(p, x, positions, cfg, ctx, col, prefix)
     pos1 = positions if positions.ndim == 2 else positions[0]
     o = attend_full(q, k, v, pos1[0], pos1[0],
                     "causal" if kind == "attn" else "sliding",
@@ -264,8 +286,7 @@ def attention_decode_block(p, x, pos, cache: Params, cfg: ModelConfig,
         positions = jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
     else:
         positions = pos[:, None]
-    q = project_q(p, x, positions, cfg, ctx, None, "")
-    k, v = project_kv(p, x, positions, cfg, ctx, None, "")
+    q, k, v = project_qkv(p, x, positions, cfg, ctx, None, "")
     cache = cache_write(cache, k, v, pos, active)
     o = attend_decode(q, cache, pos,
                       "causal" if kind == "attn" else "sliding",

@@ -12,10 +12,17 @@ module-global backend switch. Migration from the old API:
 
     set_lut_backend("pallas"); linear_apply(w, x)          # removed
     linear_apply(w, x, ctx=ctx.with_lut_backend("pallas"))  # now
+
+`linear_apply_grouped` applies several projections that share one input
+(Q/K/V, gate/up) in a single fused kernel launch when every weight is
+LUT-quantized in the same groupable `WeightFormat` and the backend is
+'pallas'; any dense / sparse / mixed-format member makes the whole group
+fall back to per-layer `linear_apply` — bit-identical to the unfused
+path.
 """
 from __future__ import annotations
 
-from typing import Union
+from typing import List, Sequence, Union
 
 import jax.numpy as jnp
 
@@ -48,6 +55,35 @@ def linear_apply(w: Union[jnp.ndarray, QuantizedLinear], x: jnp.ndarray,
     if w.bias is not None:
         y = y + w.bias.astype(y.dtype)
     return y.reshape(*lead, -1)
+
+
+def linear_apply_grouped(ws: Sequence[Union[jnp.ndarray, QuantizedLinear]],
+                         x: jnp.ndarray, col=None,
+                         names: Sequence[str] = (),
+                         ctx: ShardCtx = LOCAL) -> List[jnp.ndarray]:
+    """[y_i = x @ W~_i^T] for projections sharing the input x.
+
+    One fused LUT-mpGEMM launch (X streamed HBM->VMEM once for the whole
+    group) when `kernels.ops.groupable_layers` holds and the backend is
+    'pallas'; otherwise per-layer `linear_apply`. Output list matches
+    `ws` order.
+    """
+    from repro.kernels.ops import groupable_layers, lut_linear_grouped
+    names = list(names) or [""] * len(ws)
+    for name in names:
+        cap(col, name, x)
+    if ctx.lut_backend != "pallas" or not groupable_layers(ws):
+        return [linear_apply(w, x, None, "", ctx) for w in ws]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    ys = lut_linear_grouped(ws, x2.T)            # [(m_i, N), ...]
+    outs = []
+    for w, y in zip(ws, ys):
+        y = y.T.astype(x.dtype)                  # (N, m_i)
+        if w.bias is not None:
+            y = y + w.bias.astype(y.dtype)
+        outs.append(y.reshape(*lead, -1))
+    return outs
 
 
 def linear_out_dim(w: Union[jnp.ndarray, QuantizedLinear]) -> int:

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.sharding.context import ShardCtx, LOCAL
 from .common import activation, dense_init
-from .linears import linear_apply
+from .linears import linear_apply, linear_apply_grouped
 
 
 def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int = 0):
@@ -31,8 +31,11 @@ def mlp_apply(p, x, cfg: ModelConfig, ctx: ShardCtx = LOCAL, col=None,
         h = ctx.constrain(h, "dp", None, ctx.tp_axis)
         y = linear_apply(p["w_down"], h, col, prefix + "w_down", ctx)
         return ctx.constrain(y, "dp", None, None)
-    g = linear_apply(p["w_gate"], x, col, prefix + "w_gate", ctx)
-    u = linear_apply(p["w_up"], x, col, prefix + "w_up", ctx)
+    # gate/up share x: one fused LUT-mpGEMM launch when both are quantized
+    # in the same groupable format (falls back to two matmuls otherwise)
+    g, u = linear_apply_grouped(
+        [p["w_gate"], p["w_up"]], x, col,
+        (prefix + "w_gate", prefix + "w_up"), ctx)
     h = act(g) * u
     h = ctx.constrain(h, "dp", None, ctx.tp_axis)
     y = linear_apply(p["w_down"], h, col, prefix + "w_down", ctx)

@@ -58,11 +58,9 @@ def _enc_layer_apply(p, x, cfg, ctx, col, prefix, chunk):
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
-    from .attention import project_q, project_kv  # bidirectional attention
-    q = project_q(p["attn"], h, positions, cfg, ctx, col, prefix + "attn/",
-                  rope=False)
-    k, v = project_kv(p["attn"], h, positions, cfg, ctx, col,
-                      prefix + "attn/", rope=False)
+    from .attention import project_qkv  # bidirectional attention
+    q, k, v = project_qkv(p["attn"], h, positions, cfg, ctx, col,
+                          prefix + "attn/", rope=False)
     o = attend_full(q, k, v, jnp.arange(s), jnp.arange(s), "none", 0, chunk)
     o = o.reshape(b, s, cfg.q_dim)
     from .linears import linear_apply

@@ -51,14 +51,16 @@ def test_linear_roundtrip(bits, fmt, n):
     np.testing.assert_array_equal(np.asarray(enc.dequantize()), want)
 
 
-@pytest.mark.parametrize("fmt", ["lut4_packed", "lut3_packed"])
-def test_packed_unpacked_codes_equivalent(fmt):
+@pytest.mark.parametrize("fmt,cols", [("lut4_packed", 28),
+                                      ("lut3_packed", 21)])
+def test_packed_unpacked_codes_equivalent(fmt, cols):
     """Packed and unpacked layouts of the same codes produce identical
-    matmuls on both backends."""
+    matmuls on both backends. lut3_packed holds the TRUE bitstream:
+    ceil(56*3/8) = 21 bytes per row, not the 28-byte nibble container."""
     bits = get_format(fmt).bits
     base = _layer(1, 40, 56, bits)
     enc = get_format(fmt).encode(base)
-    assert enc.codes.shape == (40, 28)
+    assert enc.codes.shape == (40, cols)
     rng = np.random.default_rng(2)
     x2 = jnp.asarray(rng.normal(size=(5, 56)).astype(np.float32))
     y_ref = np.asarray(get_format("lut").apply(base, x2, backend="xla"))
@@ -140,7 +142,8 @@ def test_policy_first_match_wins_and_expert_mapping():
     assert pol.resolve("layer0/moe/w_down").keep_fp
     r = pol.resolve("layer0/moe/w_up")
     assert r.qcfg.bits == 3
-    assert get_format(r.fmt).expert_fmt == "experts_packed"
+    assert get_format(r.fmt).expert_fmt == "experts3_packed"
+    assert get_format("lut4_packed").expert_fmt == "experts_packed"
     assert get_format("lut").expert_fmt == "experts"
     assert get_format("lut_sparse").expert_fmt == "experts"
     assert get_format("dense").expert_fmt is None

@@ -1,0 +1,268 @@
+"""Bitstream LUT-mpGEMM kernel, grouped-projection fusion and block-size
+autotuner (interpret mode — kernel bodies execute in Python on CPU)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.formats import get_format
+from repro.core.packing import (code_stream_bytes, pack_bits, pack_bits_np,
+                                unpack_bits)
+from repro.core.types import QuantizedLinear
+from repro.kernels import ref
+from repro.kernels.lut_mpgemm import (lut_matmul_bitstream,
+                                      lut_matmul_grouped, phase_split)
+from repro.kernels.ops import (groupable_layers, lut_linear,
+                               lut_linear_grouped, vmem_plan)
+from repro.kernels import tune
+
+
+def _mk(seed, m, n, p, bits):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << bits, size=(m, n)).astype(np.uint8)
+    t = (rng.normal(size=(m, 1 << bits)) * 0.05).astype(np.float32)
+    x = rng.normal(size=(n, p)).astype(np.float32)
+    return jnp.asarray(codes), jnp.asarray(t), jnp.asarray(x)
+
+
+def _q(seed, m, n, bits, fmt):
+    codes, t, _ = _mk(seed, m, n, 1, bits)
+    lay = QuantizedLinear(codes=codes, codebook=t, bits=bits)
+    return get_format(fmt).encode(lay)
+
+
+# n not divisible by the phase count (8 for 3-bit, 4 for 2-bit) and ragged
+# m/p exercise the zero-padded partial-group tail of the byte stream
+SHAPES = [(128, 256, 64), (96, 130, 33), (8, 16, 4), (64, 512, 128),
+          (130, 96, 17), (1, 64, 1), (33, 7, 5), (16, 9, 3)]
+
+
+@pytest.mark.parametrize("m,n,p", SHAPES)
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_bitstream_matches_ref(m, n, p, bits):
+    codes, t, x = _mk(0, m, n, p, bits)
+    packed = jnp.asarray(pack_bits_np(np.asarray(codes), bits))
+    assert packed.shape == (m, code_stream_bytes(n, bits))
+    y = lut_matmul_bitstream(packed, t, x, bits=bits, interpret=True)
+    yref = ref.lut_matmul_ref(codes, t, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_pack_bits_jnp_matches_np(bits):
+    rng = np.random.default_rng(1)
+    codes = rng.integers(0, 1 << bits, size=(9, 37)).astype(np.uint8)
+    want = pack_bits_np(codes, bits)
+    got = np.asarray(pack_bits(jnp.asarray(codes), bits))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits(jnp.asarray(want), bits, 37)), codes)
+
+
+@pytest.mark.parametrize("bm,bk,bp", [(32, 64, 16), (128, 512, 128),
+                                      (16, 32, 8)])
+def test_bitstream_block_invariance(bm, bk, bp):
+    codes, t, x = _mk(3, 70, 150, 40, 3)
+    packed = jnp.asarray(pack_bits_np(np.asarray(codes), 3))
+    y = lut_matmul_bitstream(packed, t, x, bits=3, block_m=bm, block_k=bk,
+                             block_p=bp, interpret=True)
+    yref = ref.lut_matmul_ref(codes, t, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_phase_split():
+    assert phase_split(3) == (3, 8)
+    assert phase_split(4) == (1, 2)
+    assert phase_split(2) == (1, 4)
+    assert phase_split(8) == (1, 1)
+
+
+def test_lut3_packed_streams_checkpoint_bytes():
+    """Acceptance: a lut3_packed layer holds EXACTLY ceil(n*3/8) code
+    bytes per row in-graph, and vmem_plan/roofline accounting agrees."""
+    m, n = 48, 100
+    lay = _q(5, m, n, 3, "lut3_packed")
+    assert lay.codes.shape == (m, code_stream_bytes(n, 3)) == (m, 38)
+    plan = vmem_plan(m, n, 8, 3, fmt="lut3_packed")
+    assert plan["codes_bytes"] == m * code_stream_bytes(n, 3)
+    # the nibble container would stream 33% more on the same layer
+    plan4 = vmem_plan(m, n, 8, 3, fmt="lut4_packed")
+    assert plan["codes_bytes"] < plan4["codes_bytes"]
+    # serving matmul on the bitstream matches the unpacked reference
+    codes, t, x = _mk(5, m, n, 8, 3)
+    y = lut_linear(lay.codes, lay.codebook, x, bits=3, fmt="lut3_packed")
+    yref = ref.lut_matmul_ref(lay.unpacked_codes(), lay.codebook, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_narrow_codes_in_wider_stream():
+    """2-bit codes riding the 3-bit container ('lut3_packed' accepts
+    bits <= 3): the pallas route must decode at the container's stream
+    width, not the code width, and agree with the xla reference."""
+    m, n, p = 16, 40, 5
+    rng = np.random.default_rng(9)
+    codes = jnp.asarray(rng.integers(0, 4, size=(m, n)).astype(np.uint8))
+    t = jnp.asarray(rng.normal(size=(m, 4)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    lay = get_format("lut3_packed").encode(
+        QuantizedLinear(codes=codes, codebook=t, bits=2))
+    yref = ref.lut_matmul_ref(codes, t, x)
+    for use_pallas in (True, False):
+        y = lut_linear(lay.codes, t, x, bits=2, fmt="lut3_packed",
+                       use_pallas=use_pallas)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- grouped
+
+@pytest.mark.parametrize("fmt,bits", [("lut", 4), ("lut4_packed", 4),
+                                      ("lut3_packed", 3)])
+def test_grouped_matches_sequential(fmt, bits):
+    """Fused multi-projection launch == per-layer kernels to fp32
+    tolerance, including unequal output widths (GQA-style Q vs K/V)."""
+    n, p = 96, 11
+    layers = [_q(s, m, n, bits, fmt) for s, m in ((0, 64), (1, 16), (2, 16))]
+    x = jnp.asarray(np.random.default_rng(3)
+                    .normal(size=(n, p)).astype(np.float32))
+    assert groupable_layers(layers)
+    ys = lut_linear_grouped(layers, x)
+    for lay, y in zip(layers, ys):
+        yref = ref.lut_matmul_ref(lay.unpacked_codes(), lay.codebook, x)
+        assert y.shape == (lay.shape[0], p)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_fallback_conditions():
+    a = _q(0, 32, 64, 4, "lut4_packed")
+    b = _q(1, 16, 64, 4, "lut4_packed")
+    assert groupable_layers([a, b])
+    assert not groupable_layers([a])                       # singleton
+    assert not groupable_layers([a, _q(2, 16, 64, 3, "lut3_packed")])
+    assert not groupable_layers([a, _q(3, 16, 32, 4, "lut4_packed")])
+    assert not groupable_layers([a, jnp.zeros((64, 16))])  # dense member
+    sparse = QuantizedLinear(codes=a.codes, codebook=a.codebook, bits=4,
+                             fmt="lut", n_cols=64,
+                             sparse_idx=jnp.zeros((32, 1), jnp.int32),
+                             sparse_val=jnp.zeros((32, 1), jnp.float32))
+    assert not groupable_layers([sparse, sparse])          # side payload
+    assert not groupable_layers([a, _q(5, 9, 64, 4, "lut4_packed")])  # gcd<8
+    # extreme row ratios (MQA-style 256:8) exceed MAX_GROUPS: the kernel
+    # would keep 33 code tiles + accumulators VMEM-resident -> sequential
+    wide = _q(6, 256, 64, 4, "lut4_packed")
+    assert not groupable_layers([wide, _q(7, 8, 64, 4, "lut4_packed")])
+
+
+def test_grouped_linear_apply_matches_unfused():
+    """models.linears.linear_apply_grouped: fused pallas path equals the
+    per-layer xla path on a shared input, bias included."""
+    from repro.models.linears import linear_apply, linear_apply_grouped
+    from repro.sharding.context import LOCAL
+    rng = np.random.default_rng(7)
+    n = 48
+    layers = []
+    for s, m in ((0, 32), (1, 8), (2, 8)):
+        lay = _q(s, m, n, 3, "lut3_packed")
+        lay.bias = jnp.asarray(rng.normal(size=(m,)).astype(np.float32))
+        layers.append(lay)
+    x = jnp.asarray(rng.normal(size=(2, 5, n)).astype(np.float32))
+    ctx = LOCAL.with_lut_backend("pallas")
+    ys = linear_apply_grouped(layers, x, ctx=ctx)
+    for lay, y in zip(layers, ys):
+        want = linear_apply(lay, x, ctx=LOCAL)             # xla reference
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- tuner
+
+def test_tuner_cache_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "blocks.json"))
+    tune.clear_cache()
+    plan = tune.autotune(16, 32, 4, 4, "lut4_packed", reps=1,
+                         max_candidates=2)
+    assert plan.us > 0
+    assert tune.lookup(16, 32, 4, 4, "lut4_packed") == plan
+    # a fresh process (cleared memory cache) reloads from disk
+    tune.clear_cache()
+    loaded = tune.lookup(16, 32, 4, 4, "lut4_packed")
+    assert loaded is not None
+    assert loaded.as_kwargs() == plan.as_kwargs()
+    # lut_linear consumes the tuned plan without error
+    codes, t, x = _mk(0, 16, 32, 4, 4)
+    packed = get_format("lut4_packed").encode(
+        QuantizedLinear(codes=codes, codebook=t, bits=4))
+    y = lut_linear(packed.codes, t, x, bits=4, fmt="lut4_packed")
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.lut_matmul_ref(codes, t, x)),
+                               rtol=1e-4, atol=1e-4)
+    tune.clear_cache()
+
+
+def test_tune_model_covers_grouped_launches(tmp_path, monkeypatch):
+    """serve --autotune must populate the group-tagged keys the fused
+    Q/K/V / gate/up serving path looks up, not just per-layer keys."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "blocks.json"))
+    tune.clear_cache()
+    params = {"attn": {"wq": _q(0, 32, 64, 4, "lut4_packed"),
+                       "wk": _q(1, 16, 64, 4, "lut4_packed"),
+                       "wv": _q(2, 16, 64, 4, "lut4_packed")},
+              "mlp": {"w_gate": _q(3, 24, 64, 4, "lut4_packed"),
+                      "w_up": _q(4, 24, 64, 4, "lut4_packed"),
+                      "w_down": _q(5, 64, 24, 4, "lut4_packed")}}
+    plans = tune.tune_model(params, p=4, reps=1)
+    # grouped keys: QKV (m_total=64, G=4) and gate/up (m_total=48, G=2)
+    qkv_key = tune.plan_key(64, 64, 4, 4, "lut4_packed", groups=4)
+    glu_key = tune.plan_key(48, 64, 4, 4, "lut4_packed", groups=2)
+    assert qkv_key in plans and glu_key in plans
+    assert tune.lookup(64, 64, 4, 4, "lut4_packed", groups=4) is not None
+    # per-layer keys are tuned too (w_down serves unfused)
+    assert tune.plan_key(64, 24, 4, 4, "lut4_packed") in plans
+    # the grouped serving entry runs with the tuned plan
+    x = jnp.asarray(np.random.default_rng(6)
+                    .normal(size=(64, 4)).astype(np.float32))
+    ys = lut_linear_grouped([params["attn"][k] for k in ("wq", "wk", "wv")],
+                            x)
+    for lay, y in zip((params["attn"][k] for k in ("wq", "wk", "wv")), ys):
+        yref = ref.lut_matmul_ref(lay.unpacked_codes(), lay.codebook, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                                   rtol=1e-4, atol=1e-4)
+    tune.clear_cache()
+
+
+def test_tuner_feasibility_filter():
+    """Every candidate must fit the VMEM budget; a tiny budget collapses
+    the candidate set."""
+    cands = tune.candidate_plans(4096, 4096, 256, 4, "lut4_packed")
+    assert cands
+    for c in cands:
+        plan = vmem_plan(4096, 4096, 256, 4, c.block_m, c.block_k,
+                         c.block_p, fmt="lut4_packed")
+        assert plan["vmem_bytes"] <= tune.VMEM_BUDGET_BYTES
+    tight = tune.candidate_plans(4096, 4096, 256, 4, "lut4_packed",
+                                 vmem_budget=64 * 1024)
+    assert len(tight) < len(cands)
+
+
+def test_vmem_plan_layout_aware():
+    """Satellite: vmem_plan derives bytes from the actual container
+    layout and dtypes instead of hardcoding 4-bit/fp16."""
+    m, n, p = 512, 512, 8
+    p3 = vmem_plan(m, n, p, 3, fmt="lut3_packed")
+    p4 = vmem_plan(m, n, p, 4, fmt="lut4_packed")
+    pu = vmem_plan(m, n, p, 4, fmt="lut")
+    assert p3["codes_bytes"] == m * code_stream_bytes(n, 3)
+    assert p4["codes_bytes"] == m * n // 2
+    assert pu["codes_bytes"] == m * n
+    # fp32 codebooks are 4 bytes/entry (not the fp16 the paper assumes)
+    assert p4["lut_bytes"] == m * 16 * 4
+    assert vmem_plan(m, n, p, 4, fmt="lut4_packed",
+                     book_dtype=jnp.float16)["lut_bytes"] == m * 16 * 2
+    # grouped: codes bytes unchanged, X streamed once per unit row-block
+    g = vmem_plan(3 * m, n, p, 4, groups=3, fmt="lut4_packed")
+    s = vmem_plan(m, n, p, 4, fmt="lut4_packed")
+    assert g["codes_bytes"] == 3 * s["codes_bytes"]
+    assert g["x_bytes"] == s["x_bytes"]

@@ -173,6 +173,44 @@ def test_parse_policy_spec():
     assert pol.resolve("layer0/tm/wr").qcfg.bits == 4   # default
 
 
+@pytest.mark.parametrize("arch", ["deepseek-7b", "qwen3-moe-30b-a3b"])
+def test_bitstream_policy_serves_and_mirrors_abstract(arch):
+    """Uniform 3-bit 'lut3_packed' policy: every quantized linear holds
+    the TRUE ceil(n*3/8)-byte bitstream (MoE experts included via
+    'experts3_packed'), the dry-run SDS mirrors it exactly, and the
+    pallas bitstream + grouped-projection serving path agrees with the
+    xla reference on whole-model logits."""
+    from repro.core.packing import code_stream_bytes
+    from repro.core.types import QuantizedExperts, QuantizedLinear
+    cfg = reduce_config(get_config(arch))
+    params = init_params(KEY, cfg)
+    data = MarkovStream(cfg.vocab_size, batch=1, seq=16, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    policy = PrecisionPolicy(
+        qcfg=QuantConfig(bits=3, iters=1, precondition="fixed"),
+        fmt="lut3_packed")
+    qp, report = quantize_model_ptq(params, cfg, batch, policy=policy)
+
+    def check(leaf):
+        if isinstance(leaf, (QuantizedLinear, QuantizedExperts)):
+            assert leaf.fmt in ("lut3_packed", "experts3_packed"), leaf.fmt
+            assert leaf.codes.shape[-1] == code_stream_bytes(leaf.n_cols, 3)
+    jax.tree.map(check, qp, is_leaf=lambda l: isinstance(
+        l, (QuantizedLinear, QuantizedExperts)))
+    sds = abstract_quantize(abstract_params(cfg), cfg, policy=policy,
+                            book_dtype=jnp.float32)
+    real = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), qp)
+    assert (jax.tree_util.tree_structure(sds)
+            == jax.tree_util.tree_structure(real))
+    for a, b in zip(jax.tree.leaves(sds), jax.tree.leaves(real)):
+        assert (a.shape, a.dtype) == (b.shape, b.dtype), (a, b)
+    out_x = forward_logits(qp, batch, cfg)
+    out_p = forward_logits(qp, batch, cfg, LOCAL.with_lut_backend("pallas"))
+    np.testing.assert_allclose(np.asarray(out_x, np.float32),
+                               np.asarray(out_p, np.float32),
+                               rtol=2e-3, atol=2e-4)
+
+
 def test_moe_experts_keep_sparse_outliers():
     """GANQ* outlier fields survive expert stacking: the served expert
     weights include the sparse correction (not silently dropped)."""
