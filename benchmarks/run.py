@@ -350,6 +350,68 @@ def bench_serving_throughput():
              f"slot_reuses={st['slot_reuses']} rate={rate}/s")
 
 
+def bench_paged_serving(out_path=None):
+    """Paged vs contiguous KV cache on a mixed 32–2048-token workload
+    (page_size=64): the paged pool is sized well below the dense
+    n_slots x max_len equivalent, so the committed BENCH_serving.json
+    tracks the serving memory/throughput trajectory — KV bytes allocated,
+    decode tok/s, pool occupancy — like BENCH_kernels.json does for the
+    kernels. Greedy tokens must be identical across the two layouts (the
+    same check the tier-1 equivalence tests enforce)."""
+    import dataclasses
+    import json
+    from pathlib import Path
+    from repro.serve.engine import GenRequest, ServeEngine
+    cfg, params, _ = _trained_small_lm()
+    page_size, max_new, n_slots = 64, 8, 4
+    max_len = 2048 + page_size
+    long_data = MarkovStream(cfg.vocab_size, batch=1, seq=2048, seed=5)
+    toks = long_data.batch_at(0)["tokens"][0]
+    # mixed lengths, few distinct values (one prefill compile per length)
+    lengths = [32, 128, 2048, 32, 128, 32, 128, 32]
+    reqs = [GenRequest(prompt=toks[:l].tolist(), max_new=max_new)
+            for l in lengths]
+    # pool sized to the workload's concurrent peak + margin — well under
+    # the dense equivalent n_slots * ceil(max_len / page_size)
+    kv_pages = 56
+    dense_pages = n_slots * (-(-max_len // page_size))
+    cfg_paged = dataclasses.replace(cfg, kv_format="paged",
+                                    kv_page_size=page_size,
+                                    kv_pages=kv_pages)
+    results = {"scenario": {
+        "prompt_lengths": lengths, "max_new": max_new, "n_slots": n_slots,
+        "max_len": max_len, "page_size": page_size, "kv_pages": kv_pages,
+        "dense_equivalent_pages": dense_pages}}
+    tokens = {}
+    for name, c in (("contiguous", cfg), ("paged", cfg_paged)):
+        engine = ServeEngine(params, c, max_len=max_len, n_slots=n_slots)
+        engine.serve(reqs)          # warm: prefill jit per distinct length
+        res = engine.serve(reqs)
+        st = engine.last_stats
+        tokens[name] = [r.tokens for r in res]
+        row = {"kv_cache_bytes": st["kv_cache_bytes"],
+               "decode_tok_per_s": round(st["decode_tok_per_s"], 2),
+               "decode_steps": st["decode_steps"],
+               "evictions": st.get("evictions", 0)}
+        if name == "paged":
+            row["peak_pages_in_use"] = st["peak_pages_in_use"]
+        results[name] = row
+        _row(f"paged_serving_{name}", st["wall_s"] * 1e6,
+             f"kv_bytes={st['kv_cache_bytes']} "
+             f"decode_tok_s={st['decode_tok_per_s']:.1f}")
+    results["tokens_identical"] = tokens["contiguous"] == tokens["paged"]
+    results["kv_bytes_ratio"] = round(
+        results["paged"]["kv_cache_bytes"]
+        / results["contiguous"]["kv_cache_bytes"], 4)
+    assert results["tokens_identical"], "paged decode diverged!"
+    _row("paged_serving_kv_ratio", 0.0,
+         f"paged/contiguous={results['kv_bytes_ratio']:.3f} "
+         f"tokens_identical={results['tokens_identical']}")
+    path = Path(out_path or Path(__file__).parent / "BENCH_serving.json")
+    path.write_text(json.dumps(results, indent=1))
+    return results
+
+
 # -------------------------------------------- mixed-precision policy
 
 
@@ -445,6 +507,7 @@ _ALL_BENCHES = [
     "bench_table6_kernel_walltime",
     "bench_lut_kernels",
     "bench_serving_throughput",
+    "bench_paged_serving",
     "bench_mixed_precision_serving",
     "bench_table7_precondition",
     "bench_fig1b_weight_stats",

@@ -59,6 +59,16 @@ class ModelConfig:
     # scales) — beyond-paper extension of weight-only quantization to the
     # decode-dominant KV traffic (EXPERIMENTS.md §Perf cell A)
     kv_quant_bits: int = 0
+    # serve-time KV-cache layout: a `core.cache_formats.CacheFormat` name
+    # ('full' / 'int8' / 'paged' / 'paged_int8'); "" resolves from
+    # kv_quant_bits ('int8' when 8, else 'full')
+    kv_format: str = ""
+    # paged-cache pool geometry (used when kv_format is a paged format):
+    # tokens per page, and total pool pages per layer (0 = the dense
+    # equivalent n_slots * ceil(max_len / page_size) — no HBM saving, but
+    # always sufficient)
+    kv_page_size: int = 64
+    kv_pages: int = 0
 
     # whether GANQ's long_500k cell applies (sub-quadratic decode path)
     subquadratic: bool = False

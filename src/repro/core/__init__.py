@@ -3,6 +3,11 @@ from .types import (QuantConfig, QuantizedLinear, QuantizedExperts,
                     QuantResult)
 from .formats import (WeightFormat, register_format, get_format,
                       available_formats, packed_linear_fmt)
+from .cache_formats import (CacheFormat, CacheState, register_cache_format,
+                            get_cache_format, available_cache_formats,
+                            kv_format_of, layer_cache_format, contiguous_cfg,
+                            pages_for, kv_cache_bytes, insert_slot,
+                            quantize_kv, dequantize_kv)
 from .policy import (ExecPolicy, LayerRule, LayerQuantReport,
                      PrecisionPolicy, parse_policy)
 from .precondition import precondition, safe_cholesky
@@ -22,6 +27,10 @@ __all__ = [
     "QuantConfig", "QuantizedLinear", "QuantizedExperts", "QuantResult",
     "WeightFormat", "register_format", "get_format", "available_formats",
     "packed_linear_fmt",
+    "CacheFormat", "CacheState", "register_cache_format", "get_cache_format",
+    "available_cache_formats", "kv_format_of", "layer_cache_format",
+    "contiguous_cfg", "pages_for", "kv_cache_bytes", "insert_slot",
+    "quantize_kv", "dequantize_kv",
     "ExecPolicy", "LayerRule", "LayerQuantReport", "PrecisionPolicy",
     "parse_policy",
     "precondition", "safe_cholesky",

@@ -1,0 +1,644 @@
+"""CacheFormat registry: every KV/state cache layout as one object.
+
+The serving twin of `core.formats.WeightFormat`: a decode step mixes several
+*cache* layouts — full fp K/V rings, int8 KV with per-(token, head) scales,
+sliding-window rings, RWKV-6 / RG-LRU recurrent state, whisper's precomputed
+cross-attention K/V, and a paged K/V pool whose slot count is decoupled from
+`max_len`. Each layout is a `CacheFormat` registered here and owns the full
+vertical:
+
+  init(batch, width, cfg, dtype)  allocate one layer's cache container
+  write(cache, k, v, pos, ...)    one decode step's K/V write
+  read(cache, dtype, ...)         dense (B, W, K, hd) K/V view (dequantized)
+  visible(cache, pos, kind, ...)  (B, W) attendable-entry mask
+  from_prefill(k, v, width, ...)  fresh prompt K/V -> this layout (batch 1)
+  insert(big, small, slot, ...)   slot-row insertion for continuous batching
+  partition_spec(name, shape, ..) sharding rule for each container leaf
+  storage_bits(cache)             honest bits from the real dtypes
+
+Model code (`models/{attention,transformer,model,whisper}.py`) and the serve
+engine route through this registry only — there is no `"k_scale" in cache`
+key-presence dispatch or isinstance branching outside `core/`. Containers
+are `CacheState` pytrees tagged with the format name, mirroring how
+`QuantizedLinear.fmt` tags weight containers.
+
+Paged formats ('paged', 'paged_int8') store `(num_pages + 1, page_size, K,
+hd)` pools (the +1 row is a scratch page absorbing writes from inactive /
+unmapped slots) and read/write through a per-slot page table passed down the
+decode step (`pages` argument) — the table itself is host-side state owned
+by `serve.scheduler.PageAllocator`, so the jitted step stays fixed-shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .formats import dtype_bits
+
+_CACHE_FORMATS: Dict[str, "CacheFormat"] = {}
+
+
+def register_cache_format(cls):
+    """Class decorator: instantiate and register under cls.name."""
+    inst = cls()
+    assert inst.name and inst.name not in _CACHE_FORMATS, inst.name
+    _CACHE_FORMATS[inst.name] = inst
+    return cls
+
+
+def get_cache_format(name: str) -> "CacheFormat":
+    try:
+        return _CACHE_FORMATS[name]
+    except KeyError:
+        raise KeyError(f"unknown cache format {name!r}; "
+                       f"available: {available_cache_formats()}") from None
+
+
+def available_cache_formats():
+    return sorted(_CACHE_FORMATS)
+
+
+# ------------------------------------------------------------------ carrier
+
+@jax.tree_util.register_pytree_with_keys_class
+class CacheState:
+    """Thin pytree carrier: one layer's cache arrays + a static `fmt` tag.
+
+    The tag is what model code dispatches on (via `get_cache_format`), the
+    way `QuantizedLinear.fmt` routes `linear_apply` — no key-presence or
+    isinstance probing of the array dict. Dict keys ride the pytree paths
+    (register_pytree_with_keys) so sharding rules and tree surgery keep
+    seeing names.
+    """
+
+    def __init__(self, fmt: str, data: Dict[str, jnp.ndarray]):
+        self.fmt = fmt
+        self.data = dict(data)
+
+    def __getitem__(self, key: str):
+        return self.data[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.data
+
+    def replace(self, **kw) -> "CacheState":
+        return CacheState(self.fmt, {**self.data, **kw})
+
+    def __repr__(self):
+        return f"CacheState({self.fmt!r}, {sorted(self.data)})"
+
+    def tree_flatten_with_keys(self):
+        keys = tuple(sorted(self.data))
+        children = [(jax.tree_util.DictKey(k), self.data[k]) for k in keys]
+        return children, (self.fmt, keys)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fmt, keys = aux
+        return cls(fmt, dict(zip(keys, children)))
+
+
+# ------------------------------------------------------------- cfg routing
+
+def kv_format_of(cfg) -> str:
+    """Resolve a ModelConfig to its attention-cache format name.
+
+    `cfg.kv_format` wins when set; the legacy `kv_quant_bits == 8` knob maps
+    to 'int8'; default 'full'.
+    """
+    name = getattr(cfg, "kv_format", "") or ""
+    if name:
+        f = get_cache_format(name)     # loud on typos
+        assert f.kv and f.selectable, \
+            f"{name!r} cannot serve as the attention-cache format"
+        return name
+    return "int8" if getattr(cfg, "kv_quant_bits", 0) == 8 else "full"
+
+
+def layer_cache_format(kind: str, cfg) -> str:
+    """Cache format for one layer kind ('attn'/'local'/'rwkv'/'rglru')."""
+    if kind in ("attn", "local"):
+        return kv_format_of(cfg)
+    if kind == "rwkv":
+        return "rwkv_state"
+    if kind == "rglru":
+        return "rglru_state"
+    raise ValueError(kind)
+
+
+def contiguous_cfg(cfg):
+    """The contiguous-cache twin of a (possibly paged) config — the layout
+    the reference decode path and paged prefill sub-caches use."""
+    f = get_cache_format(kv_format_of(cfg))
+    if not f.paged:
+        return cfg
+    return dataclasses.replace(cfg, kv_format=f.backing)
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold positions 0..n_tokens-1."""
+    return -(-max(n_tokens, 0) // page_size)
+
+
+# ----------------------------------------------------------- kv quant math
+
+def quantize_kv(x: jnp.ndarray):
+    """(…, hd) -> (int8 codes, bf16 scale over the last dim)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+            ).astype(dtype)
+
+
+def cache_slot_positions(pos: jnp.ndarray, w: int) -> jnp.ndarray:
+    """(B, W) absolute position held by each ring slot (negative = empty)."""
+    slots = jnp.arange(w)[None, :]
+    cur = (pos % w)[:, None]
+    diff = (cur - slots) % w
+    return pos[:, None] - diff
+
+
+def _window_mask(logical_pos: jnp.ndarray, pos: jnp.ndarray, kind: str,
+                 window: int) -> jnp.ndarray:
+    """(B, W) attendable mask from (B, W) logical positions."""
+    ok = (logical_pos >= 0) & (logical_pos <= pos[:, None])
+    if kind == "sliding":
+        ok &= logical_pos > (pos[:, None] - window)
+    return ok
+
+
+# -------------------------------------------------------------- base class
+
+class CacheFormat:
+    """Base class; subclasses register with @register_cache_format.
+
+    `kv` marks attention K/V layouts (counted by `kv_cache_bytes`, served by
+    read/visible/write); recurrent-state formats only use init / insert /
+    partition_spec — their per-step update lives in the model blocks and the
+    inactive-slot freeze is tree-generic. `paged` formats read/write through
+    a page table; `backing` names the contiguous format their prefill
+    sub-caches are built in.
+    """
+
+    name: str = ""
+    kv: bool = True
+    paged: bool = False
+    backing: Optional[str] = None
+    # may a config/policy select this as THE attention-cache layout?
+    # (cross_kv is internal: read-only, allocated by the whisper path)
+    selectable: bool = True
+
+    # ------------------------------------------------------------ lifecycle
+    def init(self, batch: int, width: int, cfg, dtype) -> CacheState:
+        raise NotImplementedError(self.name)
+
+    def blank(self, batch: int, width: int, cfg, dtype) -> CacheState:
+        """A zero container in the layout `insert` consumes (slot reset)."""
+        return self.init(batch, width, cfg, dtype)
+
+    # ----------------------------------------------------------- decode ops
+    def write(self, cache: CacheState, k_new, v_new, pos,
+              active=None, pages=None) -> CacheState:
+        """Write one step; k_new/v_new (B, 1, K, hd), pos (B,)."""
+        raise NotImplementedError(self.name)
+
+    def read(self, cache: CacheState, dtype,
+             pages=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Dense (B, W, K, hd) K/V views (dequantized / page-gathered)."""
+        raise NotImplementedError(self.name)
+
+    def visible(self, cache: CacheState, pos, kind: str, window: int,
+                pages=None) -> jnp.ndarray:
+        """(B, W) bool: which entries of the `read` view may be attended."""
+        raise NotImplementedError(self.name)
+
+    # -------------------------------------------------------- prefill paths
+    def from_prefill(self, k, v, width: int, cfg, dtype) -> CacheState:
+        """Fresh prompt K/V (B, S, K, hd) -> this layout, positioned after
+        the prompt."""
+        raise NotImplementedError(self.name)
+
+    def insert(self, big: CacheState, small: CacheState, slot,
+               pages=None, stacked: bool = False) -> CacheState:
+        """Insert batch-1 `small` into row `slot` of slot-batched `big`.
+
+        `stacked` marks unit-stacked leaves (U, B, ...) whose batch rides
+        axis 1. Default: pure tree surgery (layouts match); paged formats
+        scatter `small`'s sequence layout into the slot's pages.
+        """
+        def put(b, s_):
+            if stacked:
+                return b.at[:, slot].set(s_[:, 0].astype(b.dtype))
+            return b.at[slot].set(s_[0].astype(b.dtype))
+
+        return CacheState(big.fmt, {key: put(big.data[key], small.data[key])
+                                    for key in big.data})
+
+    # ------------------------------------------------------------- sharding
+    def partition_spec(self, name: str, shape, dp, tp, size_of) -> P:
+        """PartitionSpec for one container leaf; `dp` is the DP axis (or
+        tuple), `tp` the TP axis name, `size_of(axes)` the mesh size of an
+        axis (or tuple of axes). Default: replicate."""
+        return P()
+
+    # ------------------------------------------------------------- storage
+    def storage_bits(self, cache: CacheState) -> float:
+        return float(sum(leaf.size * dtype_bits(leaf.dtype)
+                         for leaf in cache.data.values()))
+
+
+def insert_slot(big: CacheState, small: CacheState, slot,
+                pages=None, stacked: bool = False) -> CacheState:
+    """Registry-dispatched slot insertion (the continuous-batching admission
+    primitive `models.transformer.cache_insert` maps over layer entries)."""
+    return get_cache_format(big.fmt).insert(big, small, slot, pages=pages,
+                                            stacked=stacked)
+
+
+def kv_cache_bytes(cache_tree) -> int:
+    """Total bytes held by attention-KV containers in a cache tree (paged
+    pools count their allocation incl. the scratch page; recurrent state is
+    excluded — it does not scale with max_len)."""
+    total = 0.0
+    for st in _iter_states(cache_tree):
+        f = get_cache_format(st.fmt)
+        if f.kv:
+            total += f.storage_bits(st)
+    return int(total // 8)
+
+
+def _iter_states(tree):
+    is_state = lambda x: isinstance(x, CacheState)
+    return [s for s in jax.tree.leaves(tree, is_leaf=is_state)
+            if isinstance(s, CacheState)]
+
+
+# ------------------------------------------------------- contiguous K/V
+
+def _kv_spec(name, shape, dp, tp, size_of):
+    """Contiguous K/V + scale sharding rules (moved verbatim from
+    launch/steps.cache_shardings): batch over DP when batch > 1; at batch 1
+    the *sequence* dim of attention caches shards over DP (context
+    parallelism for long decode); kv-heads over TP when divisible."""
+    rank = len(shape)
+    tp_size = size_of(tp)
+    if name in ("k", "v"):
+        lead = (None,) * (rank - 4)
+        b_, w_, kh, hd = shape[-4:]
+        k_div = kh % tp_size == 0
+        if b_ == 1:
+            w_axes = dp if k_div else (tuple(dp) if isinstance(dp, tuple)
+                                       else (dp,)) + (tp,)
+            w_spec = w_axes if w_ % size_of(w_axes) == 0 else None
+            return P(*lead, None, w_spec, tp if k_div else None, None)
+        if k_div:
+            return P(*lead, dp, None, tp, None)
+        w_spec = tp if w_ % tp_size == 0 else None
+        return P(*lead, dp, w_spec, None, None)
+    if name in ("k_scale", "v_scale"):
+        # (…, B, W, K) — mirror the k/v rule minus the head_dim axis
+        lead = (None,) * (rank - 3)
+        b_, w_, kh = shape[-3:]
+        k_div = kh % tp_size == 0
+        if b_ == 1:
+            return P(*lead, None, dp, tp if k_div else None)
+        if k_div:
+            return P(*lead, dp, None, tp)
+        w_spec = tp if w_ % tp_size == 0 else None
+        return P(*lead, dp, w_spec, None)
+    return P()
+
+
+@register_cache_format
+class FullKVFormat(CacheFormat):
+    """Full-precision K/V ring buffer (B, W, K, hd); 'attn' layers size W =
+    cache_len, 'local' layers W = min(cache_len, window) — ring writes at
+    pos % W make the same container serve both."""
+
+    name = "full"
+
+    def init(self, batch, width, cfg, dtype):
+        shape = (batch, width, cfg.n_kv_heads, cfg.head_dim)
+        return CacheState(self.name, {"k": jnp.zeros(shape, dtype),
+                                      "v": jnp.zeros(shape, dtype)})
+
+    def _rows(self, k1, v1, cfg, dtype):
+        """One-step (B, K, hd) K/V -> container rows dict."""
+        return {"k": k1, "v": v1}
+
+    def write(self, cache, k_new, v_new, pos, active=None, pages=None):
+        w = cache["k"].shape[1]
+        slot = pos % w
+        b = jnp.arange(k_new.shape[0])
+
+        def put(buf, row):
+            row = row.astype(buf.dtype)
+            if active is not None:
+                a = active.reshape((-1,) + (1,) * (row.ndim - 1))
+                row = jnp.where(a, row, buf[b, slot])
+            return buf.at[b, slot].set(row)
+
+        rows = self._rows(k_new[:, 0], v_new[:, 0], None, None)
+        return CacheState(self.name, {key: put(cache.data[key], rows[key])
+                                      for key in cache.data})
+
+    def read(self, cache, dtype, pages=None):
+        return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+    def visible(self, cache, pos, kind, window, pages=None):
+        w = cache["k"].shape[1]
+        return _window_mask(cache_slot_positions(pos, w), pos, kind, window)
+
+    def from_prefill(self, k, v, width, cfg, dtype):
+        b, s = k.shape[:2]
+        cache = self.init(b, width, cfg, dtype)
+        keep = min(s, width)
+        slots = jnp.arange(s - keep, s) % width
+        rows = self._rows(k[:, s - keep:], v[:, s - keep:], cfg, dtype)
+        return CacheState(self.name, {
+            key: cache.data[key].at[:, slots].set(
+                rows[key].astype(cache.data[key].dtype))
+            for key in cache.data})
+
+    def partition_spec(self, name, shape, dp, tp, size_of):
+        return _kv_spec(name, shape, dp, tp, size_of)
+
+
+@register_cache_format
+class Int8KVFormat(FullKVFormat):
+    """int8 K/V ring with per-(token, head) bf16 scales — halves decode HBM
+    traffic vs bf16 (beyond-paper; EXPERIMENTS.md §Perf cell A)."""
+
+    name = "int8"
+
+    def init(self, batch, width, cfg, dtype):
+        shape = (batch, width, cfg.n_kv_heads, cfg.head_dim)
+        sshape = shape[:-1]
+        return CacheState(self.name, {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(sshape, jnp.bfloat16),
+            "v_scale": jnp.zeros(sshape, jnp.bfloat16)})
+
+    def _rows(self, k1, v1, cfg, dtype):
+        kq, ks = quantize_kv(k1)
+        vq, vs = quantize_kv(v1)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+
+    def read(self, cache, dtype, pages=None):
+        return (dequantize_kv(cache["k"], cache["k_scale"], dtype),
+                dequantize_kv(cache["v"], cache["v_scale"], dtype))
+
+
+# ------------------------------------------------------------ paged K/V
+
+class _PagedBase(CacheFormat):
+    """Paged K/V pool: (num_pages + 1, page_size, K, hd) per layer, indexed
+    through a per-slot page table (B, max_pages) int32 with -1 = unmapped.
+    The +1 row is a scratch page: writes from inactive slots or unmapped
+    positions land there instead of corrupting a live page. Slot count is
+    decoupled from max_len — long and short requests share the pool, pages
+    allocate lazily as sequences grow (serve/scheduler.PageAllocator owns
+    the free list on the host).
+
+    Sliding-window ('local') layers share the pool and page table; the
+    window is enforced by `visible`'s position mask rather than a shorter
+    ring, trading some pool generosity for one page-id space per slot."""
+
+    paged = True
+
+    def _pool_geometry(self, batch, width, cfg):
+        ps = cfg.kv_page_size
+        n_pages = cfg.kv_pages or batch * pages_for(width, ps)
+        return n_pages, ps
+
+    def init(self, batch, width, cfg, dtype):
+        n_pages, ps = self._pool_geometry(batch, width, cfg)
+        back = get_cache_format(self.backing)
+        sub = back.init(1, ps, cfg, dtype)          # dtype template per key
+        return CacheState(self.name, {
+            key + "_pages": jnp.zeros((n_pages + 1, ps) + leaf.shape[2:],
+                                      leaf.dtype)
+            for key, leaf in sub.data.items()})
+
+    def blank(self, batch, width, cfg, dtype):
+        # insert-layout zeros: the backing format's sequence-form rows
+        back = get_cache_format(self.backing)
+        rows = back._rows(
+            jnp.zeros((batch, width, cfg.n_kv_heads, cfg.head_dim), dtype),
+            jnp.zeros((batch, width, cfg.n_kv_heads, cfg.head_dim), dtype),
+            cfg, dtype)
+        return CacheState(self.name, rows)
+
+    def _safe_pages(self, cache, pages):
+        scratch = cache["k_pages"].shape[0] - 1
+        return jnp.where(pages >= 0, pages, scratch), scratch
+
+    def write(self, cache, k_new, v_new, pos, active=None, pages=None):
+        assert pages is not None, "paged cache write needs a page table"
+        ps = cache["k_pages"].shape[1]
+        pg = jnp.take_along_axis(pages, (pos // ps)[:, None], axis=1)[:, 0]
+        pg, scratch = self._safe_pages(cache, pg)
+        if active is not None:
+            pg = jnp.where(active, pg, scratch)
+        off = pos % ps
+        rows = get_cache_format(self.backing)._rows(
+            k_new[:, 0], v_new[:, 0], None, None)
+        return CacheState(self.name, {
+            key + "_pages": cache.data[key + "_pages"].at[pg, off].set(
+                rows[key].astype(cache.data[key + "_pages"].dtype))
+            for key in rows})
+
+    def visible(self, cache, pos, kind, window, pages=None):
+        assert pages is not None, "paged cache read needs a page table"
+        ps = cache["k_pages"].shape[1]
+        wv = pages.shape[1] * ps
+        logical = jnp.broadcast_to(jnp.arange(wv)[None],
+                                   (pos.shape[0], wv))
+        mapped = jnp.repeat(pages >= 0, ps, axis=1)
+        return _window_mask(jnp.where(mapped, logical, -1), pos, kind,
+                            window)
+
+    def from_prefill(self, k, v, width, cfg, dtype):
+        # keep the raw (quantized) sequence layout; `insert` scatters it
+        # into the slot's pages by logical position
+        rows = get_cache_format(self.backing)._rows(k, v, cfg, dtype)
+        return CacheState(self.name, rows)
+
+    def insert(self, big, small, slot, pages=None, stacked=False):
+        """Scatter `small`'s sequence layout (logical positions 0..S-1) into
+        the pages mapped for this slot; `pages` is the slot's (max_pages,)
+        table row. Unmapped positions land on the scratch page."""
+        assert pages is not None, "paged slot insertion needs a page table"
+        ps = big["k_pages"].shape[-3]
+        s = small["k"].shape[-3]
+        j = jnp.arange(s)
+        scratch = big["k_pages"].shape[-4] - 1
+        pg = jnp.where(pages[j // ps] >= 0, pages[j // ps], scratch)
+        off = j % ps
+
+        def put(pool, rows):
+            rows = rows[:, 0] if stacked else rows[0]       # drop batch 1
+            if stacked:
+                return pool.at[:, pg, off].set(rows.astype(pool.dtype))
+            return pool.at[pg, off].set(rows.astype(pool.dtype))
+
+        return CacheState(big.fmt, {
+            key + "_pages": put(big.data[key + "_pages"], small.data[key])
+            for key in small.data})
+
+    def read(self, cache, dtype, pages=None):
+        assert pages is not None, "paged cache read needs a page table"
+        pg, _ = self._safe_pages(cache, pages)          # (B, MP)
+        b, mp = pg.shape
+        ps = cache["k_pages"].shape[1]
+
+        def gather(pool):
+            g = pool[pg]                                 # (B, MP, ps, ...)
+            return g.reshape((b, mp * ps) + pool.shape[2:])
+
+        return self._dequant(cache, gather, dtype)
+
+    def _dequant(self, cache, gather, dtype):
+        return (gather(cache["k_pages"]).astype(dtype),
+                gather(cache["v_pages"]).astype(dtype))
+
+    def partition_spec(self, name, shape, dp, tp, size_of):
+        # pool: pages replicated (the table is host-side), kv-heads over TP
+        tp_size = size_of(tp)
+        if name in ("k_pages", "v_pages"):
+            lead = (None,) * (len(shape) - 4)
+            kh = shape[-2]
+            return P(*lead, None, None, tp if kh % tp_size == 0 else None,
+                     None)
+        if name in ("k_scale_pages", "v_scale_pages"):
+            lead = (None,) * (len(shape) - 3)
+            kh = shape[-1]
+            return P(*lead, None, None, tp if kh % tp_size == 0 else None)
+        return P()
+
+
+@register_cache_format
+class PagedKVFormat(_PagedBase):
+    name = "paged"
+    backing = "full"
+
+
+@register_cache_format
+class PagedInt8KVFormat(_PagedBase):
+    name = "paged_int8"
+    backing = "int8"
+
+    def _dequant(self, cache, gather, dtype):
+        return (dequantize_kv(gather(cache["k_pages"]),
+                              gather(cache["k_scale_pages"]), dtype),
+                dequantize_kv(gather(cache["v_pages"]),
+                              gather(cache["v_scale_pages"]), dtype))
+
+
+# -------------------------------------------------------- recurrent state
+
+class _StateFormat(CacheFormat):
+    """Recurrent-state containers: no K/V read/write — the model block
+    advances the state and `transformer._freeze_inactive` gates inactive
+    slots; the registry owns allocation, slot insertion, and sharding."""
+
+    kv = False
+
+
+@register_cache_format
+class RWKVStateFormat(_StateFormat):
+    """RWKV-6 per-layer state: token-shift vectors + (H, hs, hs) wkv."""
+
+    name = "rwkv_state"
+
+    def init(self, batch, width, cfg, dtype):
+        d = cfg.d_model
+        hs = cfg.rwkv_head_size
+        h = d // hs
+        return CacheState(self.name, {
+            "tm_shift": jnp.zeros((batch, d), dtype),
+            "wkv": jnp.zeros((batch, h, hs, hs), jnp.float32),
+            "cm_shift": jnp.zeros((batch, d), dtype)})
+
+    def partition_spec(self, name, shape, dp, tp, size_of):
+        tp_size = size_of(tp)
+        rank = len(shape)
+        if name == "wkv":
+            lead = (None,) * (rank - 4)
+            b_, h_, _, _ = shape[-4:]
+            h_spec = tp if h_ % tp_size == 0 else None
+            return P(*lead, dp if b_ > 1 else None, h_spec, None, None)
+        if name in ("tm_shift", "cm_shift"):
+            lead = (None,) * (rank - 2)
+            b_, d_ = shape[-2:]
+            return P(*lead, dp if b_ > 1 else None,
+                     tp if d_ % tp_size == 0 else None)
+        return P()
+
+
+@register_cache_format
+class RGLRUStateFormat(_StateFormat):
+    """RG-LRU per-layer state: conv tail (B, cw-1, r) + hidden (B, r)."""
+
+    name = "rglru_state"
+
+    def init(self, batch, width, cfg, dtype):
+        r = cfg.lru_width
+        return CacheState(self.name, {
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+            "h": jnp.zeros((batch, r), jnp.float32)})
+
+    def partition_spec(self, name, shape, dp, tp, size_of):
+        tp_size = size_of(tp)
+        rank = len(shape)
+        if name == "h":
+            lead = (None,) * (rank - 2)
+            b_, d_ = shape[-2:]
+            return P(*lead, dp if b_ > 1 else None,
+                     tp if d_ % tp_size == 0 else None)
+        if name == "conv":
+            lead = (None,) * (rank - 3)
+            b_, _, r_ = shape[-3:]
+            return P(*lead, dp if b_ > 1 else None, None,
+                     tp if r_ % tp_size == 0 else None)
+        return P()
+
+
+@register_cache_format
+class CrossKVFormat(CacheFormat):
+    """Whisper cross-attention K/V: precomputed from the encoder output at
+    admission, read-only during decode (write is identity). Not a
+    selectable serving layout — a policy/config picking it would decode
+    against a never-written cache."""
+
+    name = "cross_kv"
+    selectable = False
+
+    def init(self, batch, width, cfg, dtype):       # pragma: no cover
+        shape = (batch, width, cfg.n_kv_heads, cfg.head_dim)
+        return CacheState(self.name, {"k": jnp.zeros(shape, dtype),
+                                      "v": jnp.zeros(shape, dtype)})
+
+    def write(self, cache, k_new, v_new, pos, active=None, pages=None):
+        return cache
+
+    def read(self, cache, dtype, pages=None):
+        return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+    def visible(self, cache, pos, kind, window, pages=None):
+        b, w = cache["k"].shape[:2]
+        return jnp.ones((b, w), bool)
+
+    def partition_spec(self, name, shape, dp, tp, size_of):
+        return _kv_spec(name, shape, dp, tp, size_of)

@@ -98,11 +98,23 @@ class PrecisionPolicy:
     method: str = "ganq"
     fmt: str = "lut"
     rules: Tuple[LayerRule, ...] = ()
+    # KV-cache layout ('full' / 'int8' / 'paged' / 'paged_int8' — a
+    # `core.cache_formats.CacheFormat` name); None = leave the config's
+    # cache format alone. Weight and cache layouts compose in ONE policy:
+    # `parse_policy("mlp=3,attn=4,kv=int8", ...)`.
+    kv_fmt: Optional[str] = None
 
     @classmethod
     def uniform(cls, qcfg: QuantConfig, method: str = "ganq",
                 fmt: str = "lut") -> "PrecisionPolicy":
         return cls(qcfg=qcfg, method=method, fmt=fmt)
+
+    def apply_kv_format(self, cfg):
+        """Return cfg with this policy's cache format applied (no-op when
+        the policy does not pin one)."""
+        if self.kv_fmt is None:
+            return cfg
+        return dataclasses.replace(cfg, kv_format=self.kv_fmt)
 
     def resolve(self, name: str) -> ResolvedQuant:
         for r in self.rules:
@@ -131,14 +143,27 @@ def parse_policy(spec: str, qcfg: QuantConfig, method: str = "ganq",
     ('attn' hits 'layer0/attn/wq' but not 'dec0/xattn/wq'); glob
     patterns fnmatch the full layer name.
 
-    Example: "mlp=3,attn=4,w_down=fp"  — 3-bit MLPs, 4-bit attention,
-    fp w_down; everything else uses the default `qcfg`.
+    The reserved pattern `kv` selects the KV-*cache* format instead of a
+    weight rule: `kv=int8`, `kv=paged`, `kv=paged_int8`, `kv=full`
+    (`core.cache_formats` registry) — so one spec string carries the whole
+    serving memory layout.
+
+    Example: "mlp=3,attn=4,kv=int8"  — 3-bit MLPs, 4-bit attention,
+    int8 KV cache; everything else uses the default `qcfg`.
     """
     rules = []
+    kv_fmt = None
     for entry in filter(None, (e.strip() for e in spec.split(","))):
         if "=" not in entry:
             raise ValueError(f"policy entry {entry!r} is not pattern=value")
         pat, val = (s.strip() for s in entry.split("=", 1))
+        if pat == "kv":
+            from .cache_formats import get_cache_format
+            f = get_cache_format(val)           # loud on typos
+            assert f.kv and f.selectable, \
+                f"{val!r} is not a selectable attention-cache format"
+            kv_fmt = val
+            continue
         segment = not any(c in pat for c in "*?[/")
         if not segment and "/" in pat and not any(c in pat for c in "*?["):
             pat = f"*{pat}*"           # glob-free subpath: substring match
@@ -152,7 +177,7 @@ def parse_policy(spec: str, qcfg: QuantConfig, method: str = "ganq",
         rules.append(LayerRule(pattern=pat, bits=int(val), fmt=rule_fmt,
                                segment=segment))
     return PrecisionPolicy(qcfg=qcfg, method=method, fmt=fmt,
-                           rules=tuple(rules))
+                           rules=tuple(rules), kv_fmt=kv_fmt)
 
 
 @dataclasses.dataclass

@@ -115,6 +115,47 @@ def lut_linear(codes_or_packed: jnp.ndarray, codebook: jnp.ndarray,
                                 stream_bits=sb, interpret=interpret, **bkw)
 
 
+def split_format_groups(layers: Sequence) -> List[List[int]]:
+    """Partition projection indices into fusable sub-groups by format key.
+
+    Mixed-format projection lists (e.g. a policy that packs wq at 4-bit
+    but wk/wv at 3-bit) used to fall all the way back to sequential
+    launches; instead, indices sharing (fmt, bits, input width, codebook
+    dtype) and carrying no sparse side payloads group together — each
+    group of >= 2 that passes `groupable_layers` rides one fused launch,
+    the rest stay sequential. Returns index groups covering every layer
+    exactly once, singletons included.
+    """
+    from repro.core.formats import get_format
+    buckets: dict = {}
+    order: List[List[int]] = []
+    for i, l in enumerate(layers):
+        fmt = getattr(l, "fmt", None)
+        key = None
+        if fmt is not None and get_format(fmt).groupable \
+                and getattr(l, "codes", None) is not None \
+                and l.codes.ndim == 2 \
+                and l.sparse_val is None and l.full_row_val is None:
+            key = (fmt, l.bits, l.shape[1], str(l.codebook.dtype))
+        if key is None:
+            order.append([i])          # ungroupable: always a singleton
+            continue
+        if key in buckets:
+            buckets[key].append(i)
+        else:
+            buckets[key] = [i]
+            order.append(buckets[key])
+    # groups that fail the row-unit / group-count admissibility check are
+    # exploded back to singletons (sequential launches)
+    out: List[List[int]] = []
+    for g in order:
+        if len(g) >= 2 and groupable_layers([layers[i] for i in g]):
+            out.append(g)
+        else:
+            out.extend([i] for i in g)
+    return out
+
+
 def groupable_layers(layers: Sequence, min_rows: int = MIN_GROUP_ROWS
                      ) -> bool:
     """True when a list of `QuantizedLinear` can ride one fused launch:

@@ -8,6 +8,10 @@ Mixed-precision policy (3-bit MLPs, 4-bit attention, fp-kept w_down):
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
       --policy "mlp=3,attn=4" --requests 8
 
+Paged KV cache (slot count decoupled from max_len; pool sized in pages):
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
+      --method none --kv-format paged --page-size 16 --requests 8
+
 Production decode-step compile check (the paper's deployment on a pod):
   python -m repro.launch.serve --arch granite-3-8b --dry-run-only \\
       --bits 4 --kv8
@@ -40,7 +44,17 @@ def main(argv=None) -> int:
                          "(kernels.tune; cached on disk per shape/backend, "
                          "so later runs start tuned)")
     ap.add_argument("--kv8", action="store_true",
-                    help="int8 KV cache (beyond-paper)")
+                    help="int8 KV cache (beyond-paper; alias for "
+                         "--kv-format int8)")
+    ap.add_argument("--kv-format", default=None,
+                    choices=["full", "int8", "paged", "paged_int8"],
+                    help="KV-cache layout (core.cache_formats registry); "
+                         "overrides --kv8 and a policy's kv= rule")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="tokens per KV page (paged formats)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="KV page-pool size per layer (paged formats); "
+                         "0 = dense equivalent slots*ceil(max_len/page)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--slots", type=int, default=4,
@@ -83,14 +97,18 @@ def main(argv=None) -> int:
         cfg = reduce_config(cfg)
     if args.kv8:
         cfg = dataclasses.replace(cfg, kv_quant_bits=8)
+    cfg = dataclasses.replace(cfg, kv_page_size=args.page_size,
+                              kv_pages=args.kv_pages)
     ctx = LOCAL.with_lut_backend(args.lut_backend)
     params = init_params(jax.random.PRNGKey(0), cfg)
     data = MarkovStream(cfg.vocab_size, batch=4, seq=32, seed=0)
+    qcfg = QuantConfig(bits=args.bits, iters=4, precondition="fixed")
+    # parse the policy unconditionally: its kv= cache rule applies even to
+    # fp serving (--method none)
+    policy = parse_policy(args.policy, qcfg, args.method) \
+        if args.policy else None
     if args.method != "none":
         calib = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
-        qcfg = QuantConfig(bits=args.bits, iters=4, precondition="fixed")
-        policy = (parse_policy(args.policy, qcfg, args.method)
-                  if args.policy else None)
         params, report = quantize_model_ptq(
             params, cfg, calib, qcfg, args.method, policy=policy)
         rep = model_storage_report(params, report)
@@ -105,6 +123,12 @@ def main(argv=None) -> int:
                 print(f"  tuned {key}: ({plan.block_m}, {plan.block_k}, "
                       f"{plan.block_p}) {plan.us:.0f}us")
             print(f"tile plans cached at {cache_path()}")
+    # cache-format precedence: explicit --kv-format > policy kv= rule >
+    # --kv8 / config default — weight and cache layouts compose in one spec
+    if policy is not None:
+        cfg = policy.apply_kv_format(cfg)
+    if args.kv_format:
+        cfg = dataclasses.replace(cfg, kv_format=args.kv_format)
     engine = ServeEngine(params, cfg, ctx=ctx, max_len=128,
                          n_slots=args.slots)
     # mixed-length traffic: continuous batching needs no length grouping
@@ -123,10 +147,16 @@ def main(argv=None) -> int:
     dt = time.time() - t0
     n_tok = sum(len(r.tokens) for r in results)
     st = engine.last_stats
+    extra = ""
+    if engine.paged:
+        extra = (f", paged KV: {st['peak_pages_in_use']}/{st['n_pages']} "
+                 f"pages x {st['page_size']} tok peak, "
+                 f"{st['evictions']} evictions")
     print(f"served {len(reqs)} requests / {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s wall, "
           f"{st['decode_tok_per_s']:.1f} decode tok/s, "
-          f"{st['slot_reuses']} slot reuses, 1 CPU core)")
+          f"{st['slot_reuses']} slot reuses, "
+          f"{st['kv_cache_bytes'] / 1e6:.2f} MB KV{extra}, 1 CPU core)")
     return 0
 
 

@@ -157,71 +157,14 @@ def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
 
 
 def cache_shardings(cache_sds, cfg: ModelConfig, mesh: Mesh, batch: int):
-    """Sharding rules for serve caches (DESIGN.md §4): batch over DP when
-    batch > 1; at batch 1 the *sequence* dim of attention caches shards over
-    DP (context parallelism for long decode); heads/width over TP when
-    divisible."""
-    dp = dp_axes_of(mesh)
-    tp = "model"
-    tp_size = mesh.shape[tp]
-
-    def rule(path, leaf):
-        name = None
-        for k in reversed(path):
-            if hasattr(k, "key"):
-                name = str(k.key)
-                break
-        shape = leaf.shape
-        rank = len(shape)
-        if name in ("k", "v"):
-            # batch over DP; kv-heads over TP when divisible, else the cache
-            # SEQUENCE dim shards over TP (flash-decode style); at batch 1
-            # the sequence dim takes every available axis.
-            lead = (None,) * (rank - 4)
-            b_, w_, kh, hd = shape[-4:]
-            k_div = kh % tp_size == 0
-            if b_ == 1:
-                w_axes = dp if k_div else (tuple(dp) if isinstance(dp, tuple)
-                                           else (dp,)) + (tp,)
-                wsz = 1
-                for a in (w_axes if isinstance(w_axes, tuple) else (w_axes,)):
-                    wsz *= mesh.shape[a]
-                w_spec = w_axes if w_ % wsz == 0 else None
-                return P(*lead, None, w_spec, tp if k_div else None, None)
-            if k_div:
-                return P(*lead, dp, None, tp, None)
-            w_spec = tp if w_ % tp_size == 0 else None
-            return P(*lead, dp, w_spec, None, None)
-        if name in ("k_scale", "v_scale"):
-            # (…, B, W, K) — mirror the k/v rule minus the head_dim axis
-            lead = (None,) * (rank - 3)
-            b_, w_, kh = shape[-3:]
-            k_div = kh % tp_size == 0
-            if b_ == 1:
-                return P(*lead, None, dp, tp if k_div else None)
-            if k_div:
-                return P(*lead, dp, None, tp)
-            w_spec = tp if w_ % tp_size == 0 else None
-            return P(*lead, dp, w_spec, None)
-        if name == "wkv":
-            lead = (None,) * (rank - 4)
-            b_, h_, _, _ = shape[-4:]
-            h_spec = tp if h_ % tp_size == 0 else None
-            return P(*lead, dp if b_ > 1 else None, h_spec, None, None)
-        if name in ("tm_shift", "cm_shift", "h"):
-            lead = (None,) * (rank - 2)
-            b_, d_ = shape[-2:]
-            return P(*lead, dp if b_ > 1 else None,
-                     tp if d_ % tp_size == 0 else None)
-        if name == "conv":
-            lead = (None,) * (rank - 3)
-            b_, _, r_ = shape[-3:]
-            return P(*lead, dp if b_ > 1 else None, None,
-                     tp if r_ % tp_size == 0 else None)
-        return P()
-
-    return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: NamedSharding(mesh, rule(path, leaf)), cache_sds)
+    """Sharding rules for serve caches (DESIGN.md §4): each cache entry's
+    `CacheFormat` owns its leaf layout — the per-name rules live on the
+    formats (`core.cache_formats`), `sharding.partition.cache_specs` maps
+    them over the tree; this wraps the specs in NamedShardings."""
+    from repro.sharding.partition import cache_specs
+    specs = cache_specs(cache_sds, mesh, dp_axes_of(mesh), tp_axis="model")
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec), specs,
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 def opt_state_struct(params_sds) -> OptState:

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.cache_formats import (CacheState, get_cache_format,
+                                      kv_format_of)
 from repro.sharding.context import ShardCtx, LOCAL
 from .common import apply_mrope, apply_rope, dense_init, init_norm, \
     rms_norm_headwise
@@ -163,98 +165,49 @@ def attend_full(q, k, v, qpos, kpos, kind: str, window: int,
 
 
 # ------------------------------------------------------------------ KV cache
+#
+# Container layout lives in `core.cache_formats` (the CacheFormat registry);
+# the functions here are the attention-math side: they dispatch on the
+# cache's `fmt` tag only and never probe keys or dtypes.
 
-def init_cache(batch: int, cache_len: int, cfg: ModelConfig, dtype
-               ) -> Params:
-    shape = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
-    if cfg.kv_quant_bits == 8:
-        # int8 KV with per-(token, head) scales — halves decode HBM traffic
-        sshape = shape[:-1]
-        return {"k": jnp.zeros(shape, jnp.int8),
-                "v": jnp.zeros(shape, jnp.int8),
-                "k_scale": jnp.zeros(sshape, jnp.bfloat16),
-                "v_scale": jnp.zeros(sshape, jnp.bfloat16)}
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+def init_cache(batch: int, cache_len: int, cfg: ModelConfig,
+               dtype) -> CacheState:
+    """Allocate one layer's attention cache in the config's KV format."""
+    return get_cache_format(kv_format_of(cfg)).init(batch, cache_len, cfg,
+                                                    dtype)
 
 
-def quantize_kv(x: jnp.ndarray):
-    """(…, hd) -> (int8 codes, bf16 scale over the last dim)."""
-    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
-                        1e-6) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.bfloat16)
-
-
-def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
-    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
-            ).astype(dtype)
-
-
-def cache_write(cache: Params, k_new: jnp.ndarray, v_new: jnp.ndarray,
+def cache_write(cache: CacheState, k_new: jnp.ndarray, v_new: jnp.ndarray,
                 pos: jnp.ndarray,
-                active: Optional[jnp.ndarray] = None) -> Params:
-    """Write one step (B, 1, K, hd) at ring slot pos % W; pos (B,) int32.
+                active: Optional[jnp.ndarray] = None,
+                pages: Optional[jnp.ndarray] = None) -> CacheState:
+    """Write one step (B, 1, K, hd) at position pos; pos (B,) int32.
 
-    `active` (B,) bool gates the write per sequence: an inactive slot's ring
-    row is written back unchanged, so draining/free slots in a continuous-
-    batching engine never corrupt their cache between requests.
+    `active` (B,) bool gates the write per sequence: an inactive slot's
+    row is left unchanged (paged formats park it on the scratch page), so
+    draining/free slots in a continuous-batching engine never corrupt
+    their cache between requests. `pages` (B, max_pages) is the page
+    table for paged formats.
     """
-    w = cache["k"].shape[1]
-    slot = pos % w
-    b = jnp.arange(k_new.shape[0])
-
-    def put(buf, row):
-        row = row.astype(buf.dtype)
-        if active is not None:
-            a = active.reshape((-1,) + (1,) * (row.ndim - 1))
-            row = jnp.where(a, row, buf[b, slot])
-        return buf.at[b, slot].set(row)
-
-    if "k_scale" in cache:
-        kq, ks = quantize_kv(k_new[:, 0])
-        vq, vs = quantize_kv(v_new[:, 0])
-        return {
-            "k": put(cache["k"], kq),
-            "v": put(cache["v"], vq),
-            "k_scale": put(cache["k_scale"], ks),
-            "v_scale": put(cache["v_scale"], vs),
-        }
-    return {
-        "k": put(cache["k"], k_new[:, 0]),
-        "v": put(cache["v"], v_new[:, 0]),
-    }
+    return get_cache_format(cache.fmt).write(cache, k_new, v_new, pos,
+                                             active=active, pages=pages)
 
 
-def cache_slot_positions(pos: jnp.ndarray, w: int) -> jnp.ndarray:
-    """(B, W) absolute position held by each ring slot (negative = empty)."""
-    slots = jnp.arange(w)[None, :]
-    cur = (pos % w)[:, None]
-    diff = (cur - slots) % w
-    return pos[:, None] - diff
-
-
-def attend_decode(q, cache: Params, pos: jnp.ndarray, kind: str,
+def attend_decode(q, cache: CacheState, pos: jnp.ndarray, kind: str,
                   window: int,
-                  active: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """q (B,1,H,hd) against ring cache; pos (B,) position of the new token
+                  active: Optional[jnp.ndarray] = None,
+                  pages: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q (B,1,H,hd) against the cache; pos (B,) position of the new token
     (already written to the cache).
 
     `active` (B,) bool masks whole sequences: an inactive slot attends to
     nothing (its softmax degrades to a uniform read — finite garbage the
     caller discards), so free slots in a slot-batched decode step cost no
-    correctness.
+    correctness. Paged caches gather K/V through `pages`.
     """
-    if "k_scale" in cache:
-        k = dequantize_kv(cache["k"], cache["k_scale"], q.dtype)
-        v = dequantize_kv(cache["v"], cache["v_scale"], q.dtype)
-    else:
-        k, v = cache["k"], cache["v"]
-    b, w = k.shape[0], k.shape[1]
-    slot_pos = cache_slot_positions(pos, w)              # (B, W)
-    allowed = (slot_pos >= 0) & (slot_pos <= pos[:, None])
-    if kind == "sliding":
-        allowed &= slot_pos > (pos[:, None] - window)
+    f = get_cache_format(cache.fmt)
+    k, v = f.read(cache, q.dtype, pages=pages)           # (B, W, K, hd)
+    allowed = f.visible(cache, pos, kind, window, pages=pages)
     if active is not None:
         allowed &= active[:, None]
     bias = jnp.where(allowed, 0.0, NEG_INF)[:, None, None, None, :]
@@ -278,19 +231,20 @@ def attention_block(p, x, positions, cfg: ModelConfig, kind: str,
     return ctx.constrain(y, "dp", None, None), (k, v)
 
 
-def attention_decode_block(p, x, pos, cache: Params, cfg: ModelConfig,
+def attention_decode_block(p, x, pos, cache: CacheState, cfg: ModelConfig,
                            kind: str, ctx: ShardCtx = LOCAL,
-                           active: Optional[jnp.ndarray] = None):
+                           active: Optional[jnp.ndarray] = None,
+                           pages: Optional[jnp.ndarray] = None):
     """One-token decode; x (B,1,d), pos (B,). Returns (y, new_cache)."""
     if cfg.mrope_sections:
         positions = jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
     else:
         positions = pos[:, None]
     q, k, v = project_qkv(p, x, positions, cfg, ctx, None, "")
-    cache = cache_write(cache, k, v, pos, active)
+    cache = cache_write(cache, k, v, pos, active, pages)
     o = attend_decode(q, cache, pos,
                       "causal" if kind == "attn" else "sliding",
-                      cfg.sliding_window, active)
+                      cfg.sliding_window, active, pages)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
     y = linear_apply(p["wo"], o, None, "", ctx)
     return ctx.constrain(y, "dp", None, None), cache

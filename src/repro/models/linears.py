@@ -63,26 +63,37 @@ def linear_apply_grouped(ws: Sequence[Union[jnp.ndarray, QuantizedLinear]],
                          ctx: ShardCtx = LOCAL) -> List[jnp.ndarray]:
     """[y_i = x @ W~_i^T] for projections sharing the input x.
 
-    One fused LUT-mpGEMM launch (X streamed HBM->VMEM once for the whole
-    group) when `kernels.ops.groupable_layers` holds and the backend is
-    'pallas'; otherwise per-layer `linear_apply`. Output list matches
-    `ws` order.
+    Projections are split into per-format sub-groups
+    (`kernels.ops.split_format_groups`): each sub-group of same-format
+    groupable LUT layers rides one fused LUT-mpGEMM launch (X streamed
+    HBM->VMEM once for the whole sub-group), everything else — dense,
+    sparse-carrying, or lone-format members — falls back to per-layer
+    `linear_apply`. A mixed 4-bit-wq / 3-bit-wk/wv policy therefore still
+    fuses the k/v pair instead of launching all three sequentially.
+    Output list matches `ws` order; bit-identical to the unfused path.
     """
-    from repro.kernels.ops import groupable_layers, lut_linear_grouped
+    from repro.kernels.ops import lut_linear_grouped, split_format_groups
     names = list(names) or [""] * len(ws)
     for name in names:
         cap(col, name, x)
-    if ctx.lut_backend != "pallas" or not groupable_layers(ws):
+    if ctx.lut_backend != "pallas":
         return [linear_apply(w, x, None, "", ctx) for w in ws]
     lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    ys = lut_linear_grouped(ws, x2.T)            # [(m_i, N), ...]
-    outs = []
-    for w, y in zip(ws, ys):
-        y = y.T.astype(x.dtype)                  # (N, m_i)
-        if w.bias is not None:
-            y = y + w.bias.astype(y.dtype)
-        outs.append(y.reshape(*lead, -1))
+    x2 = None
+    outs: List = [None] * len(ws)
+    for group in split_format_groups(ws):
+        if len(group) < 2:
+            i = group[0]
+            outs[i] = linear_apply(ws[i], x, None, "", ctx)
+            continue
+        if x2 is None:
+            x2 = x.reshape(-1, x.shape[-1])
+        ys = lut_linear_grouped([ws[i] for i in group], x2.T)  # [(m_i, N)]
+        for i, y in zip(group, ys):
+            y = y.T.astype(x.dtype)              # (N, m_i)
+            if ws[i].bias is not None:
+                y = y + ws[i].bias.astype(y.dtype)
+            outs[i] = y.reshape(*lead, -1)
     return outs
 
 

@@ -17,12 +17,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.cache_formats import get_cache_format, layer_cache_format
 from repro.sharding.context import ShardCtx, LOCAL
 from .common import apply_norm, embed_init, init_norm
 from .linears import linear_apply
 from .transformer import (cache_insert, init_stack, init_stack_cache,
-                          stack_apply, stack_decode, block_apply,
-                          pattern_split)
+                          layer_cache_width, stack_apply, stack_decode,
+                          block_apply, pattern_split)
 from . import whisper as W
 
 Params = Dict
@@ -136,37 +137,42 @@ def forward_logits(p: Params, batch: Dict, cfg: ModelConfig,
 
 def init_serve_cache(p: Params, batch: Dict, batch_size: int, cache_len: int,
                      cfg: ModelConfig, ctx: ShardCtx = LOCAL,
-                     cache=None, slot: Optional[jnp.ndarray] = None):
+                     cache=None, slot: Optional[jnp.ndarray] = None,
+                     pages: Optional[jnp.ndarray] = None):
     """Allocate a serve cache — or, given `cache` + `slot`, reset just that
-    slot row to zeros (admission hygiene for continuous batching)."""
+    slot row to zeros (admission hygiene for continuous batching; paged
+    formats need the slot's `pages` table row)."""
     cd = _dtype(cfg.compute_dtype)
     if cfg.is_encoder_decoder:
         enc_out = W.encode(p["stacks"], batch["frames"].astype(cd), cfg, ctx)
         return W.init_whisper_cache(p["stacks"], batch_size, cache_len,
                                     enc_out, cfg, cd)
     if cache is not None and slot is not None:
-        blank = init_stack_cache(1, cache_len, cfg, cd)
-        return cache_insert(cache, blank, slot)
+        blank = init_stack_cache(1, cache_len, cfg, cd, sub=True)
+        return cache_insert(cache, blank, slot, pages=pages)
     return init_stack_cache(batch_size, cache_len, cfg, cd)
 
 
 def decode_step(p: Params, cache, tokens: jnp.ndarray, pos: jnp.ndarray,
                 cfg: ModelConfig, ctx: ShardCtx = LOCAL,
-                active: Optional[jnp.ndarray] = None):
+                active: Optional[jnp.ndarray] = None,
+                pages: Optional[jnp.ndarray] = None):
     """One token for every sequence: tokens (B,) i32, pos (B,) i32.
     Returns (logits (B,V), new_cache).
 
     `active` (B,) bool marks live slots in a slot-batched decode step:
     inactive rows neither write their cache nor advance recurrent state, so
     a continuous-batching engine can run one fixed-shape jitted step over a
-    partially occupied slot batch."""
+    partially occupied slot batch. `pages` (B, max_pages) i32 is the page
+    table for paged KV formats (-1 = unmapped)."""
     cd = _dtype(cfg.compute_dtype)
     x = _embed(p, tokens[:, None], cfg, cd)
     x = ctx.constrain(x, "dp", None, None)
     if cfg.is_encoder_decoder:
         h, cache = W.decode_step_whisper(p["stacks"], cache, x, pos, cfg, ctx)
     else:
-        h, cache = stack_decode(p["stack"], cache, x, pos, cfg, ctx, active)
+        h, cache = stack_decode(p["stack"], cache, x, pos, cfg, ctx, active,
+                                pages)
         h = apply_norm(p["final_ln"], h, cfg.norm, cfg.norm_eps)
     logits = _logits_head(p, h[:, 0, :], cfg, ctx)
     return logits, cache
@@ -174,7 +180,8 @@ def decode_step(p: Params, cache, tokens: jnp.ndarray, pos: jnp.ndarray,
 
 def prefill(p: Params, batch: Dict, cfg: ModelConfig, ctx: ShardCtx = LOCAL,
             cache_len: Optional[int] = None, cache=None,
-            slot: Optional[jnp.ndarray] = None):
+            slot: Optional[jnp.ndarray] = None,
+            pages: Optional[jnp.ndarray] = None):
     """Run the prompt, build a cache positioned after the prompt.
 
     Implementation: forward pass for logits + per-layer recompute of K/V via
@@ -220,33 +227,18 @@ def prefill(p: Params, batch: Dict, cfg: ModelConfig, ctx: ShardCtx = LOCAL,
     logits = _logits_head(p, h[:, -1, :], cfg, ctx)
     if cache is not None and slot is not None:
         assert b == 1, "slot insertion prefills one sequence at a time"
-        return logits, cache_insert(cache, caches, slot)
+        return logits, cache_insert(cache, caches, slot, pages=pages)
     return logits, caches
 
 
 def _state_to_cache(kind: str, st, s: int, cache_len: int, cfg: ModelConfig,
                     dtype):
-    """Convert prefill block state into the decode cache layout."""
+    """Convert prefill block state into the decode cache layout (via the
+    CacheFormat registry; paged formats emit their backing sequence layout
+    for `cache_insert` to scatter into the slot's pages)."""
     if kind in ("attn", "local"):
-        from .attention import init_cache, quantize_kv
         k, v = st
-        w = cache_len if kind == "attn" else min(cache_len,
-                                                 cfg.sliding_window)
-        b = k.shape[0]
-        cache = init_cache(b, w, cfg, dtype)
-        keep = min(s, w)
-        slots = jnp.arange(s - keep, s) % w
-        if "k_scale" in cache:
-            kq, ks = quantize_kv(k[:, s - keep:])
-            vq, vs = quantize_kv(v[:, s - keep:])
-            cache["k"] = cache["k"].at[:, slots].set(kq)
-            cache["v"] = cache["v"].at[:, slots].set(vq)
-            cache["k_scale"] = cache["k_scale"].at[:, slots].set(ks)
-            cache["v_scale"] = cache["v_scale"].at[:, slots].set(vs)
-        else:
-            cache["k"] = cache["k"].at[:, slots].set(
-                k[:, s - keep:].astype(dtype))
-            cache["v"] = cache["v"].at[:, slots].set(
-                v[:, s - keep:].astype(dtype))
-        return cache
+        f = get_cache_format(layer_cache_format(kind, cfg))
+        return f.from_prefill(k, v, layer_cache_width(kind, cache_len, cfg),
+                              cfg, dtype)
     return st  # rwkv / rglru states already carry everything

@@ -111,10 +111,11 @@ def rglru_block(p: Params, x: jnp.ndarray, state: Dict, cfg: ModelConfig,
     y = h_seq * gate
     out = linear_apply(p["w_out"], y, col, prefix + "w_out", ctx)
     out = ctx.constrain(out, "dp", None, None)
-    return out, {"conv": conv_state, "h": h_last}
+    from repro.core.cache_formats import CacheState
+    return out, CacheState("rglru_state", {"conv": conv_state, "h": h_last})
 
 
-def init_rglru_state(batch: int, cfg: ModelConfig, dtype) -> Dict:
-    r = cfg.lru_width
-    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
-            "h": jnp.zeros((batch, r), jnp.float32)}
+def init_rglru_state(batch: int, cfg: ModelConfig, dtype):
+    """Per-layer RG-LRU state container ('rglru_state' CacheFormat)."""
+    from repro.core.cache_formats import get_cache_format
+    return get_cache_format("rglru_state").init(batch, 0, cfg, dtype)

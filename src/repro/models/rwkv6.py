@@ -168,12 +168,7 @@ def rwkv_channel_mix(p: Params, x: jnp.ndarray, shift_prev: jnp.ndarray,
     return ctx.constrain(y, "dp", None, None), x[:, -1, :]
 
 
-def init_rwkv_state(batch: int, cfg: ModelConfig, dtype) -> Tuple:
-    d = cfg.d_model
-    hs = cfg.rwkv_head_size
-    h = d // hs
-    return {
-        "tm_shift": jnp.zeros((batch, d), dtype),
-        "wkv": jnp.zeros((batch, h, hs, hs), jnp.float32),
-        "cm_shift": jnp.zeros((batch, d), dtype),
-    }
+def init_rwkv_state(batch: int, cfg: ModelConfig, dtype):
+    """Per-layer RWKV-6 state container ('rwkv_state' CacheFormat)."""
+    from repro.core.cache_formats import get_cache_format
+    return get_cache_format("rwkv_state").init(batch, 0, cfg, dtype)

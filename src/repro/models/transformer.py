@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.cache_formats import (CacheState, get_cache_format,
+                                      insert_slot, layer_cache_format)
 from repro.sharding.context import ShardCtx, LOCAL
 from .attention import (attention_block, attention_decode_block, init_attention,
                         init_cache)
@@ -87,8 +89,9 @@ def block_apply(kind: str, p: Params, x, positions, cfg: ModelConfig,
         h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
         c, cm_shift = rwkv_channel_mix(p["cm"], h, st["cm_shift"], cfg, ctx,
                                        col, prefix + "cm/")
-        return x + c, aux, {"tm_shift": tm_shift, "wkv": wkv,
-                            "cm_shift": cm_shift}
+        return x + c, aux, CacheState("rwkv_state",
+                                      {"tm_shift": tm_shift, "wkv": wkv,
+                                       "cm_shift": cm_shift})
     if kind == "rglru":
         b = x.shape[0]
         st = init_rglru_state(b, cfg, x.dtype)
@@ -116,17 +119,18 @@ def _freeze_inactive(active, new_state, old_state):
 
 
 def block_decode(kind: str, p: Params, x, pos, cache, cfg: ModelConfig,
-                 ctx: ShardCtx = LOCAL, active=None):
+                 ctx: ShardCtx = LOCAL, active=None, pages=None):
     """One-token decode. cache is this layer's state; returns (x, cache).
 
     `active` (B,) bool marks live slots in a slot-batched decode: attention
     gates its cache write and attends-to-nothing on inactive rows; recurrent
-    (rwkv / rglru) state is frozen for inactive rows.
+    (rwkv / rglru) state is frozen for inactive rows. `pages` (B, max_pages)
+    is the page table threaded to paged attention caches.
     """
     if kind in ("attn", "local"):
         h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
         a, cache = attention_decode_block(p["attn"], h, pos, cache, cfg, kind,
-                                          ctx, active)
+                                          ctx, active, pages)
         x = x + a
         h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
         f, _ = _ffn(p, h, cfg, ctx, None, "")
@@ -138,7 +142,8 @@ def block_decode(kind: str, p: Params, x, pos, cache, cfg: ModelConfig,
         x = x + a
         h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
         c, cm_shift = rwkv_channel_mix(p["cm"], h, cache["cm_shift"], cfg, ctx)
-        new = {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
+        new = CacheState("rwkv_state", {"tm_shift": tm_shift, "wkv": wkv,
+                                        "cm_shift": cm_shift})
         return x + c, _freeze_inactive(active, new, cache)
     if kind == "rglru":
         h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
@@ -150,18 +155,25 @@ def block_decode(kind: str, p: Params, x, pos, cache, cfg: ModelConfig,
     raise ValueError(kind)
 
 
+def layer_cache_width(kind: str, cache_len: int, cfg: ModelConfig) -> int:
+    """Token capacity of one layer's attention cache: 'local' layers ring
+    over the sliding window — except under paged formats, which share one
+    page-id space across all layers and enforce the window by masking."""
+    f = get_cache_format(layer_cache_format(kind, cfg))
+    if kind == "local" and not f.paged:
+        return min(cache_len, cfg.sliding_window)
+    return cache_len
+
+
 def init_layer_cache(kind: str, batch: int, cache_len: int, cfg: ModelConfig,
-                     dtype):
-    if kind == "attn":
-        return init_cache(batch, cache_len, cfg, dtype)
-    if kind == "local":
-        return init_cache(batch, min(cache_len, cfg.sliding_window), cfg,
-                          dtype)
-    if kind == "rwkv":
-        return init_rwkv_state(batch, cfg, dtype)
-    if kind == "rglru":
-        return init_rglru_state(batch, cfg, dtype)
-    raise ValueError(kind)
+                     dtype, sub: bool = False):
+    """One layer's cache/state container via the CacheFormat registry.
+    `sub=True` builds the insert-layout blank instead (slot reset)."""
+    f = get_cache_format(layer_cache_format(kind, cfg))
+    width = layer_cache_width(kind, cache_len, cfg)
+    if sub:
+        return f.blank(batch, width, cfg, dtype)
+    return f.init(batch, width, cfg, dtype)
 
 
 # -------------------------------------------------------------------- stacks
@@ -251,21 +263,23 @@ def stack_apply(params: Params, x, positions, cfg: ModelConfig,
     return x, aux
 
 
-def init_stack_cache(batch: int, cache_len: int, cfg: ModelConfig, dtype):
+def init_stack_cache(batch: int, cache_len: int, cfg: ModelConfig, dtype,
+                     sub: bool = False):
     pattern, n_units, n_tail = pattern_split(cfg)
     units = []
     for pos, kind in enumerate(pattern):
-        per = [init_layer_cache(kind, batch, cache_len, cfg, dtype)
+        per = [init_layer_cache(kind, batch, cache_len, cfg, dtype, sub=sub)
                for _ in range(n_units)]
         units.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per)
                      if n_units else None)
-    tail = [init_layer_cache(pattern[i], batch, cache_len, cfg, dtype)
+    tail = [init_layer_cache(pattern[i], batch, cache_len, cfg, dtype,
+                             sub=sub)
             for i in range(n_tail)]
     return {"units": units, "tail": tail}
 
 
 def stack_decode(params: Params, cache: Params, x, pos, cfg: ModelConfig,
-                 ctx: ShardCtx = LOCAL, active=None):
+                 ctx: ShardCtx = LOCAL, active=None, pages=None):
     """One-token decode through all layers. Returns (x, new_cache)."""
     pattern, n_units, _ = pattern_split(cfg)
     new_units = []
@@ -275,7 +289,7 @@ def stack_decode(params: Params, cache: Params, x, pos, cfg: ModelConfig,
             new_caches = []
             for p_i, kind in enumerate(pattern):
                 h, c = block_decode(kind, unit_params[p_i], h, pos,
-                                    unit_cache[p_i], cfg, ctx, active)
+                                    unit_cache[p_i], cfg, ctx, active, pages)
                 new_caches.append(c)
             return h, tuple(new_caches)
 
@@ -285,27 +299,27 @@ def stack_decode(params: Params, cache: Params, x, pos, cfg: ModelConfig,
     new_tail = []
     for i, p in enumerate(params["tail"]):
         x, c = block_decode(pattern[i], p, x, pos, cache["tail"][i], cfg, ctx,
-                            active)
+                            active, pages)
         new_tail.append(c)
     return x, {"units": new_units, "tail": new_tail}
 
 
-def cache_insert(cache: Params, sub: Params, slot) -> Params:
+def cache_insert(cache: Params, sub: Params, slot, pages=None) -> Params:
     """Insert a single-sequence stack cache into row `slot` of a slot-batched
     stack cache (the continuous-batching admission path).
 
-    `cache` leaves are slot-batched: unit-stacked leaves (U, B, ...) carry the
-    batch on axis 1, tail leaves (B, ...) on axis 0. `sub` is the same
-    structure built with batch 1 (e.g. by `prefill`); `slot` may be a traced
-    int32 so one jitted insert serves every slot. Works unchanged for every
-    cache variant (full + ring attention, int8 KV with scales, rwkv / rglru
-    recurrent state) because it is pure tree surgery.
+    `cache` entries are slot-batched `CacheState`s: unit-stacked leaves
+    (U, B, ...) carry the batch on axis 1, tail leaves (B, ...) on axis 0.
+    `sub` is the same structure built with batch 1 (e.g. by `prefill`);
+    `slot` may be a traced int32 so one jitted insert serves every slot.
+    Each entry routes through its `CacheFormat.insert` — pure tree surgery
+    for contiguous layouts (full + ring attention, int8 KV with scales,
+    rwkv / rglru recurrent state), a page-table scatter for paged layouts
+    (`pages` is the slot's (max_pages,) table row).
     """
     units = [None if cu is None else
-             jax.tree.map(lambda big, small: big.at[:, slot].set(
-                 small[:, 0].astype(big.dtype)), cu, su)
+             insert_slot(cu, su, slot, pages=pages, stacked=True)
              for cu, su in zip(cache["units"], sub["units"])]
-    tail = [jax.tree.map(lambda big, small: big.at[slot].set(
-                small[0].astype(big.dtype)), ct, st)
+    tail = [insert_slot(ct, st, slot, pages=pages, stacked=False)
             for ct, st in zip(cache["tail"], sub["tail"])]
     return {"units": units, "tail": tail}

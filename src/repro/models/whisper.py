@@ -128,13 +128,16 @@ def init_whisper_cache(params, batch: int, cache_len: int, enc_out,
                        cfg: ModelConfig, dtype):
     """Self-attn ring caches + precomputed cross K/V per decoder layer.
 
-    Cross K/V is stored under "k"/"v" dict keys so the serve sharding rules
-    (launch/steps.py) shard it like every other cache (batch over DP, heads
-    over TP) — as a bare tuple it silently replicated 400+ GB/device.
+    Cross K/V rides the 'cross_kv' CacheFormat (read-only during decode) so
+    the serve sharding rules shard it like every other cache (batch over
+    DP, heads over TP) — as a bare tuple it silently replicated 400+
+    GB/device.
     """
+    from repro.core.cache_formats import CacheState
+
     def per_layer(p):
         k, v = encode_cross_kv(p["xattn"], enc_out, cfg)
-        return {"k": k, "v": v}
+        return CacheState("cross_kv", {"k": k, "v": v})
     cross = jax.vmap(per_layer, in_axes=(0,))(params["dec"]) \
         if cfg.n_layers else None
     self_caches = [init_cache(batch, cache_len, cfg, dtype)
@@ -150,6 +153,8 @@ def decode_step_whisper(params, cache, tok_emb: jnp.ndarray, pos: jnp.ndarray,
     pe = sinusoidal_positions(int(2 ** 15), d)
     x = tok_emb + pe[pos][:, None, :].astype(tok_emb.dtype)
 
+    from repro.core.cache_formats import get_cache_format
+
     def body(h, xs):
         p, self_c, cross_kv = xs
         hh = apply_norm(p["ln1"], h, cfg.norm, cfg.norm_eps)
@@ -157,9 +162,8 @@ def decode_step_whisper(params, cache, tok_emb: jnp.ndarray, pos: jnp.ndarray,
                                            "attn", ctx)
         h = h + a
         hh = apply_norm(p["ln_x"], h, cfg.norm, cfg.norm_eps)
-        h = h + cross_attention_block(p["xattn"], hh,
-                                      (cross_kv["k"], cross_kv["v"]),
-                                      cfg, ctx)
+        enc_kv = get_cache_format(cross_kv.fmt).read(cross_kv, h.dtype)
+        h = h + cross_attention_block(p["xattn"], hh, enc_kv, cfg, ctx)
         hh = apply_norm(p["ln2"], h, cfg.norm, cfg.norm_eps)
         h = h + mlp_apply(p["mlp"], hh, cfg, ctx)
         return h, self_c

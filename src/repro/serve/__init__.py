@@ -1,4 +1,4 @@
 """Continuous-batching serving subsystem (scheduler / sampler / engine)."""
 from .engine import ServeEngine
 from .sampler import sample_token, sample_tokens
-from .scheduler import GenRequest, GenResult, SlotScheduler
+from .scheduler import GenRequest, GenResult, PageAllocator, SlotScheduler

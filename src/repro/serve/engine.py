@@ -10,13 +10,23 @@ subsystem is split three ways:
   sampler.py   — per-sequence temperature / top-k sampling with stable
       per-request PRNG streams (results independent of co-scheduling).
   engine.py    — this file: owns the slot-batched cache (one row per
-      scheduler slot, every cache variant: full + ring attention, int8 KV,
+      scheduler slot, every cache variant behind the CacheFormat registry:
+      full + ring attention, int8 KV, paged / paged_int8 K/V pools,
       RWKV / RG-LRU recurrent state) and drives ONE jitted fixed-shape
       decode step with an active mask. New requests are prefilled into free
       slots mid-flight (`prefill(..., cache=, slot=)` inserts the prompt's
       per-layer states into the slot row) while other slots keep decoding —
       no drain barrier, which is what keeps the LUT-mpGEMM decode path busy
       under mixed-length Poisson traffic.
+
+Paged serving (`cfg.kv_format` in {'paged', 'paged_int8'}): the cache is a
+per-layer page *pool* sized by `kv_pages` x `kv_page_size` tokens instead
+of n_slots x max_len, a host-side `PageAllocator` hands pages to slots
+lazily as sequences grow, and the (n_slots, max_pages) page table rides
+into the jitted step as a plain array argument — slot count decouples from
+max_len, so long and short requests share HBM and the pool can be sized
+below the dense equivalent (under pressure the scheduler preempts the
+lowest-priority slot by recompute).
 
 `generate_batch` keeps the seed engine's static equal-length group path as
 a reference implementation; greedy continuous batching is token-identical
@@ -33,10 +43,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.cache_formats import (contiguous_cfg, get_cache_format,
+                                      kv_cache_bytes, kv_format_of,
+                                      pages_for)
 from repro.models import decode_step, init_serve_cache, prefill
 from repro.sharding.context import ShardCtx, LOCAL
 from .sampler import request_key, sample_tokens
-from .scheduler import GenRequest, GenResult, SlotScheduler
+from .scheduler import GenRequest, GenResult, PageAllocator, SlotScheduler
 
 __all__ = ["GenRequest", "GenResult", "ServeEngine"]
 
@@ -47,18 +60,38 @@ class ServeEngine:
         if cfg.is_encoder_decoder:
             raise NotImplementedError("serving is decoder-only")
         self.params = params
-        self.cfg = cfg
         self.ctx = ctx
         self.max_len = max_len
         self.n_slots = n_slots
+        fmt = get_cache_format(kv_format_of(cfg))
+        self.paged = fmt.paged
+        if self.paged:
+            ps = cfg.kv_page_size
+            self.page_size = ps
+            self.max_pages_per_slot = pages_for(max_len, ps)
+            self.n_pages = cfg.kv_pages or n_slots * self.max_pages_per_slot
+            # pin the pool geometry the cache init reads off the config
+            cfg = dataclasses.replace(cfg, kv_pages=self.n_pages)
+        self.cfg = cfg
+        # the static reference path (generate_batch) always decodes on the
+        # contiguous twin of the cache format — it IS the token-equivalence
+        # oracle the paged path is tested against
+        self.ref_cfg = contiguous_cfg(cfg)
         # the cache is donated: each step/admission rebinds it, and without
         # donation XLA copies the whole slot-batched KV cache per call
-        self._decode = jax.jit(
-            lambda p, c, t, pos, act: decode_step(p, c, t, pos, cfg, ctx,
-                                                  act),
-            donate_argnums=(1,))
+        if self.paged:
+            self._decode = jax.jit(
+                lambda p, c, t, pos, act, pg: decode_step(
+                    p, c, t, pos, cfg, ctx, act, pg),
+                donate_argnums=(1,))
+        else:
+            self._decode = jax.jit(
+                lambda p, c, t, pos, act: decode_step(p, c, t, pos, cfg, ctx,
+                                                      act),
+                donate_argnums=(1,))
         self._decode_legacy = jax.jit(
-            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, ctx),
+            lambda p, c, t, pos: decode_step(p, c, t, pos, self.ref_cfg,
+                                             ctx),
             donate_argnums=(1,))
 
         def _sample(logits, temps, top_ks, base_keys, nsamp):
@@ -71,16 +104,27 @@ class ServeEngine:
 
     # -------------------------------------------------- continuous batching
 
-    def _prefill_insert(self, cache, tokens: jnp.ndarray, slot: int):
-        """Jitted per prompt length: prefill one sequence into a slot row."""
+    def _prefill_insert(self, cache, tokens: jnp.ndarray, slot: int,
+                        pages=None):
+        """Jitted per prompt length: prefill one sequence into a slot row
+        (paged formats additionally take the slot's page-table row)."""
         plen = tokens.shape[1]
         fn = self._prefill_jits.get(plen)
         if fn is None:
-            fn = jax.jit(lambda p, c, t, s: prefill(
-                p, {"tokens": t}, self.cfg, self.ctx,
-                cache_len=self.max_len, cache=c, slot=s),
-                donate_argnums=(1,))
+            if self.paged:
+                fn = jax.jit(lambda p, c, t, s, pg: prefill(
+                    p, {"tokens": t}, self.cfg, self.ctx,
+                    cache_len=self.max_len, cache=c, slot=s, pages=pg),
+                    donate_argnums=(1,))
+            else:
+                fn = jax.jit(lambda p, c, t, s: prefill(
+                    p, {"tokens": t}, self.cfg, self.ctx,
+                    cache_len=self.max_len, cache=c, slot=s),
+                    donate_argnums=(1,))
             self._prefill_jits[plen] = fn
+        if self.paged:
+            return fn(self.params, cache, tokens, jnp.int32(slot),
+                      jnp.asarray(pages))
         return fn(self.params, cache, tokens, jnp.int32(slot))
 
     def serve(self, requests: List[GenRequest], seed: int = 0,
@@ -94,7 +138,11 @@ class ServeEngine:
         arrival. Without it, everything is admittable immediately.
         """
         ns = n_slots or self.n_slots
-        sched = SlotScheduler(ns, self.max_len)
+        alloc = None
+        if self.paged:
+            alloc = PageAllocator(self.n_pages, self.page_size, ns,
+                                  self.max_pages_per_slot)
+        sched = SlotScheduler(ns, self.max_len, alloc=alloc)
         submitted = []
         for i, r in enumerate(requests):
             if arrival_times is not None:
@@ -118,14 +166,17 @@ class ServeEngine:
         decode_tokens = 0
         prefills = 0
 
+        peak_pages = 0
         while not sched.done():
             for slot in sched.free_slots():
-                req = sched.next_ready(now())
+                req = sched.next_ready(now(), slot=slot)
                 if req is None:
                     break
                 t0 = time.perf_counter()
                 toks = jnp.asarray([req.prompt], jnp.int32)
-                logits, cache = self._prefill_insert(cache, toks, slot)
+                pages_row = None if alloc is None else alloc.table()[slot]
+                logits, cache = self._prefill_insert(cache, toks, slot,
+                                                     pages_row)
                 bkey = np.asarray(
                     request_key(seed, stream_ids[req.uid]), np.uint32)
                 first = self._sample(
@@ -145,11 +196,18 @@ class ServeEngine:
                 time.sleep(max(0.0, min(nxt - now(), 0.05)))
                 continue
 
+            sched.grow_pages(now())     # map next-token pages, evict if dry
             toks, pos, act, temps, top_ks, nsamp = sched.batch_arrays()
             t0 = time.perf_counter()
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(toks), jnp.asarray(pos),
-                                         jnp.asarray(act))
+            if alloc is not None:
+                peak_pages = max(peak_pages, alloc.in_use)
+                logits, cache = self._decode(
+                    self.params, cache, jnp.asarray(toks), jnp.asarray(pos),
+                    jnp.asarray(act), jnp.asarray(sched.page_table()))
+            else:
+                logits, cache = self._decode(
+                    self.params, cache, jnp.asarray(toks), jnp.asarray(pos),
+                    jnp.asarray(act))
             samp = self._sample(logits, jnp.asarray(temps),
                                 jnp.asarray(top_ks), jnp.asarray(base_keys),
                                 jnp.asarray(nsamp))
@@ -165,7 +223,14 @@ class ServeEngine:
             "decode_steps": decode_steps, "decode_tokens": decode_tokens,
             "decode_tok_per_s": decode_tokens / decode_s if decode_s else 0.0,
             "prefills": prefills, "slot_reuses": sched.slot_reuses,
+            "kv_cache_bytes": kv_cache_bytes(cache),
+            "evictions": sched.evictions,
         }
+        if alloc is not None:
+            self.last_stats.update(
+                n_pages=self.n_pages, page_size=self.page_size,
+                peak_pages_in_use=peak_pages)
+            alloc.check()
         return [sched.results[u] for u in uids]
 
     def serve_queue(self, requests: List[GenRequest],
@@ -181,7 +246,9 @@ class ServeEngine:
                        seed: int = 0) -> List[GenResult]:
         """Seed engine's static group path (equal-length prompts, drain the
         whole batch): kept as the equivalence reference for the continuous
-        path and for offline batch jobs. Sampling is per-sequence."""
+        path and for offline batch jobs. Sampling is per-sequence. Always
+        decodes on the contiguous twin of the cache format — which makes it
+        the token-equivalence oracle for the paged path."""
         assert len({len(r.prompt) for r in requests}) == 1, \
             "static path processes equal-length prompt groups"
         b = len(requests)
@@ -194,7 +261,7 @@ class ServeEngine:
                                for j in range(len(requests))])
 
         t0 = time.perf_counter()
-        logits, cache = prefill(self.params, {"tokens": toks}, self.cfg,
+        logits, cache = prefill(self.params, {"tokens": toks}, self.ref_cfg,
                                 self.ctx, cache_len=self.max_len)
         jax.block_until_ready(logits)
         prefill_s = time.perf_counter() - t0

@@ -7,9 +7,20 @@ here. Admission is per-slot: whenever a slot frees (eos / length budget /
 deadline), the next arrived request is prefillable into it mid-flight —
 no barrier on the rest of the batch.
 
+Admission order is EDF (earliest deadline first) over the *arrived* part of
+the queue — requests without a deadline sort last, ties break by arrival
+then submission order, so pure-FIFO workloads behave exactly as before.
+
+For paged KV caches the scheduler also owns the `PageAllocator`: a
+host-side free list over the device page pool. Admission reserves pages
+for the prompt, decode grows a slot's page list lazily as its sequence
+crosses page boundaries, and when the pool runs dry the lowest-priority
+(then least-progress) slot is evicted — its pages return to the pool and
+its request requeues for a fresh prefill (preemption by recompute).
+
 All bookkeeping is numpy/python (one dict lookup per slot per step); the
 dense per-slot arrays handed to the jitted decode step are assembled in
-`batch_arrays`.
+`batch_arrays` / `page_table`.
 """
 from __future__ import annotations
 
@@ -32,6 +43,7 @@ class GenRequest:
     top_k: int = 0                     # 0 = no truncation
     deadline_s: Optional[float] = None  # decode wall-clock budget, None = off
     arrival_s: float = 0.0             # offset from serve() start (Poisson)
+    priority: int = 0                  # higher = evicted later under pressure
     uid: int = dataclasses.field(default_factory=lambda: next(_UID))
 
 
@@ -43,6 +55,7 @@ class GenResult:
     steps: int = 0
     finish_reason: str = "length"      # length | eos | deadline
     done_s: float = 0.0                # completion time, offset from serve()
+    evictions: int = 0                 # page-pressure preemptions (restarts)
 
 
 @dataclasses.dataclass
@@ -54,19 +67,104 @@ class _Slot:
     started_s: float
     prefill_s: float
     steps: int = 0
+    evictions: int = 0                 # times this request was preempted
+
+
+class PageAllocator:
+    """Host-side free list over the device KV page pool.
+
+    Page ids index the per-layer `(n_pages + 1, page_size, ...)` pools of
+    the paged CacheFormats (id `n_pages` is the device-side scratch page
+    and is never handed out). Every slot owns a prefix-contiguous list of
+    *logical* pages — entry j of a slot's list holds token positions
+    [j*page_size, (j+1)*page_size) — mapped to arbitrary physical ids.
+
+    Invariants (property-tested): the free list and the per-slot owned
+    lists are always a disjoint partition of range(n_pages) — no page is
+    leaked or double-owned across admit/grow/release churn.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 max_pages_per_slot: int):
+        assert n_pages >= 1 and page_size >= 1
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_slots = n_slots
+        self.max_pages_per_slot = max_pages_per_slot
+        self.free: List[int] = list(range(n_pages))
+        self.owned: List[List[int]] = [[] for _ in range(n_slots)]
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    @property
+    def available(self) -> int:
+        return len(self.free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self.free)
+
+    def alloc(self, slot: int, n: int) -> bool:
+        """Grow slot's page list by n pages; False (no change) if the free
+        list cannot cover it or the slot would exceed max_pages_per_slot."""
+        if n > len(self.free) or \
+                len(self.owned[slot]) + n > self.max_pages_per_slot:
+            return False
+        for _ in range(n):
+            self.owned[slot].append(self.free.pop())
+        return True
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Ensure the page holding token position `pos` is mapped."""
+        need = pos // self.page_size + 1 - len(self.owned[slot])
+        return True if need <= 0 else self.alloc(slot, need)
+
+    def release(self, slot: int) -> int:
+        """Return all of a slot's pages to the pool; returns the count."""
+        n = len(self.owned[slot])
+        self.free.extend(self.owned[slot])
+        self.owned[slot] = []
+        return n
+
+    def table(self) -> np.ndarray:
+        """(n_slots, max_pages_per_slot) int32 page table; -1 = unmapped."""
+        t = np.full((self.n_slots, self.max_pages_per_slot), -1, np.int32)
+        for i, pages in enumerate(self.owned):
+            t[i, :len(pages)] = pages
+        return t
+
+    def check(self) -> None:
+        """Assert the no-leak / no-double-own invariant."""
+        seen = list(self.free)
+        for pages in self.owned:
+            seen.extend(pages)
+        assert sorted(seen) == list(range(self.n_pages)), \
+            (sorted(seen), self.n_pages)
 
 
 class SlotScheduler:
-    """Request queue + slot table; the engine drives it step by step."""
+    """Request queue + slot table; the engine drives it step by step.
 
-    def __init__(self, n_slots: int, max_len: int):
+    `alloc` (a PageAllocator) switches on paged-cache bookkeeping: EDF
+    admission only hands out a request once its prompt's pages are
+    reserved (evicting strictly-lower-priority slots to make room), and
+    `grow_pages` extends each live slot's mapping ahead of every decode
+    step.
+    """
+
+    def __init__(self, n_slots: int, max_len: int,
+                 alloc: Optional[PageAllocator] = None):
         assert n_slots >= 1
         self.n_slots = n_slots
         self.max_len = max_len
+        self.alloc = alloc
         self.queue: deque = deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.results: Dict[int, GenResult] = {}
         self.slot_reuses = 0           # admissions into a previously used slot
+        self.evictions = 0             # page-pressure preemptions
+        self._evicted: Dict[int, int] = {}   # uid -> times preempted
         self._used = [False] * n_slots
 
     # ------------------------------------------------------------ queue side
@@ -75,6 +173,13 @@ class SlotScheduler:
         assert len(req.prompt) >= 1, "empty prompt"
         assert len(req.prompt) < self.max_len, \
             f"prompt ({len(req.prompt)}) must fit the cache ({self.max_len})"
+        if self.alloc is not None:
+            # a request whose full trajectory cannot fit the pool would
+            # evict-thrash forever; refuse it up front
+            worst = min(len(req.prompt) + req.max_new, self.max_len)
+            assert self.alloc.pages_for(worst) <= self.alloc.n_pages, \
+                (f"request needs {self.alloc.pages_for(worst)} pages, pool "
+                 f"holds {self.alloc.n_pages}")
         self.queue.append(req)
 
     @property
@@ -88,14 +193,55 @@ class SlotScheduler:
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    def next_ready(self, now_s: float) -> Optional[GenRequest]:
-        """Pop the next request whose arrival time has passed (FIFO)."""
-        if self.queue and self.queue[0].arrival_s <= now_s:
-            return self.queue.popleft()
+    def _edf_order(self, now_s: float) -> List[int]:
+        """Arrived-request indices in admission order (EDF): earliest
+        deadline first, deadline-free requests last, ties FIFO by
+        arrival then submission order."""
+        arrived = [i for i, r in enumerate(self.queue)
+                   if r.arrival_s <= now_s]
+        return sorted(arrived, key=lambda i: (
+            self.queue[i].deadline_s if self.queue[i].deadline_s is not None
+            else float("inf"), self.queue[i].arrival_s, i))
+
+    def _evictable_pages(self, below: int) -> int:
+        """Pages reclaimable by evicting every active slot with priority
+        strictly below `below`."""
+        return sum(len(self.alloc.owned[i]) for i, st in
+                   enumerate(self.slots)
+                   if st is not None and st.req.priority < below)
+
+    def next_ready(self, now_s: float,
+                   slot: Optional[int] = None) -> Optional[GenRequest]:
+        """Pop the next admittable request (EDF over arrived requests).
+
+        With a PageAllocator, the pop also reserves the prompt's pages for
+        `slot`, evicting strictly-lower-priority active slots when the
+        free list falls short. A candidate whose pages cannot be covered
+        even by eviction is skipped (stays queued) and the next EDF
+        candidate is tried — a page-starved head must not block a
+        higher-priority request that can make its own room.
+        """
+        for i in self._edf_order(now_s):
+            req = self.queue[i]
+            if self.alloc is not None:
+                assert slot is not None, \
+                    "paged admission needs the target slot"
+                need = self.alloc.pages_for(len(req.prompt) + 1)
+                if self.alloc.available + \
+                        self._evictable_pages(req.priority) < need:
+                    continue           # infeasible now; try next candidate
+                while self.alloc.available < need:
+                    victim = self._eviction_candidate(below=req.priority)
+                    assert victim is not None   # feasibility checked above
+                    self.evict(victim, now_s)
+                if not self.alloc.alloc(slot, need):
+                    continue           # per-slot page cap; try next
+            del self.queue[i]
+            return req
         return None
 
     def next_arrival(self) -> Optional[float]:
-        return self.queue[0].arrival_s if self.queue else None
+        return min(r.arrival_s for r in self.queue) if self.queue else None
 
     # ------------------------------------------------------------- slot side
 
@@ -109,9 +255,63 @@ class SlotScheduler:
             self.slot_reuses += 1
         self._used[slot] = True
         st = _Slot(req=req, pos=len(req.prompt) - 1, cur_token=first_token,
-                   tokens=[first_token], started_s=now_s, prefill_s=prefill_s)
+                   tokens=[first_token], started_s=now_s, prefill_s=prefill_s,
+                   evictions=self._evicted.get(req.uid, 0))
         self.slots[slot] = st
         return self._maybe_finish(slot, now_s)
+
+    # ------------------------------------------------------ paged eviction
+
+    def _eviction_candidate(self, below: Optional[int] = None
+                            ) -> Optional[int]:
+        """Active slot to preempt: lowest priority, then least decode
+        progress (least recompute wasted). `below` restricts to slots with
+        priority strictly below it (admission never evicts peers)."""
+        best, best_key = None, None
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            if below is not None and st.req.priority >= below:
+                continue
+            key = (st.req.priority, len(st.tokens))
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+    def evict(self, slot: int, now_s: float) -> None:
+        """Preempt a slot: release its pages and requeue its request for a
+        fresh prefill (preemption by recompute — generated tokens are
+        discarded and regenerated after re-admission; greedy and seeded
+        sampling replay identically because PRNG streams key on the
+        submission index)."""
+        st = self.slots[slot]
+        assert st is not None
+        if self.alloc is not None:
+            self.alloc.release(slot)
+        self.slots[slot] = None
+        self.evictions += 1
+        self._evicted[st.req.uid] = self._evicted.get(st.req.uid, 0) + 1
+        self.queue.append(st.req)
+
+    def grow_pages(self, now_s: float) -> None:
+        """Map the page each active slot's next token will land on,
+        processing high-priority slots first and evicting under pressure
+        (a slot that is itself the lowest-priority one self-evicts)."""
+        if self.alloc is None:
+            return
+        order = sorted((i for i, st in enumerate(self.slots)
+                        if st is not None),
+                       key=lambda i: -self.slots[i].req.priority)
+        for i in order:
+            st = self.slots[i]
+            if st is None:              # evicted by an earlier iteration
+                continue
+            while not self.alloc.ensure(i, st.pos + 1):
+                victim = self._eviction_candidate()
+                assert victim is not None, "no active slot to evict"
+                self.evict(victim, now_s)
+                if victim == i:
+                    break
 
     def _maybe_finish(self, slot: int, now_s: float) -> bool:
         st = self.slots[slot]
@@ -130,7 +330,9 @@ class SlotScheduler:
         self.results[st.req.uid] = GenResult(
             tokens=st.tokens, prefill_s=st.prefill_s,
             decode_s=now_s - st.started_s, steps=st.steps,
-            finish_reason=reason, done_s=now_s)
+            finish_reason=reason, done_s=now_s, evictions=st.evictions)
+        if self.alloc is not None:
+            self.alloc.release(slot)
         self.slots[slot] = None
         return True
 
@@ -171,6 +373,10 @@ class SlotScheduler:
             top_ks[i] = st.req.top_k
             nsamp[i] = len(st.tokens)
         return toks, pos, act, temps, top_ks, nsamp
+
+    def page_table(self) -> Optional[np.ndarray]:
+        """(n_slots, max_pages) int32 device page table (None if unpaged)."""
+        return None if self.alloc is None else self.alloc.table()
 
     def done(self) -> bool:
         return not self.queue and self.n_active == 0

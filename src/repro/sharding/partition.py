@@ -133,3 +133,32 @@ def param_shardings(params, mesh: Mesh, tp_axis: Optional[str] = "model"):
 def param_specs(params, tp_axis: Optional[str] = "model"):
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: spec_for_param(path, leaf, tp_axis), params)
+
+
+# ------------------------------------------------------------ serve caches
+
+def cache_specs(cache_sds, mesh: Mesh, dp_axes, tp_axis: str = "model"):
+    """PartitionSpec tree for a serve cache: each `CacheState` entry asks
+    its own `CacheFormat.partition_spec` for the per-leaf rule — the format
+    owns its layout, there is no name-based special-casing here (mirrors
+    how quantized weight leaves defer to the WeightFormat layout above).
+    """
+    from repro.core.cache_formats import CacheState, get_cache_format
+
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def size_of(axes):
+        names = axes if isinstance(axes, tuple) else (axes,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        return size
+
+    def per_state(st: CacheState) -> CacheState:
+        f = get_cache_format(st.fmt)
+        return CacheState(st.fmt, {
+            name: f.partition_spec(name, leaf.shape, dp, tp_axis, size_of)
+            for name, leaf in st.data.items()})
+
+    return jax.tree.map(per_state, cache_sds,
+                        is_leaf=lambda x: isinstance(x, CacheState))

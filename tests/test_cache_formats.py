@@ -1,0 +1,345 @@
+"""CacheFormat registry + paged KV cache: layouts, allocator, scheduler.
+
+Token-equivalence tests drive the full continuous-batching engine on the
+paged formats and compare greedy outputs request-by-request against the
+contiguous reference path — across every cache variant (full fp, int8 KV,
+sliding-window ring + RG-LRU state, RWKV-6 state).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import (CacheState, available_cache_formats, contiguous_cfg,
+                        get_cache_format, kv_cache_bytes, kv_format_of,
+                        parse_policy, QuantConfig)
+from repro.data.synthetic import MarkovStream
+from repro.models import init_params
+from repro.serve.engine import GenRequest, ServeEngine
+from repro.serve.scheduler import GenRequest as SchedRequest
+from repro.serve.scheduler import PageAllocator, SlotScheduler
+
+
+def _setup(arch="deepseek-7b"):
+    cfg = reduce_config(get_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    data = MarkovStream(cfg.vocab_size, batch=4, seq=32, seed=0)
+    return cfg, params, data
+
+
+# ----------------------------------------------------------------- registry
+
+def test_registry_has_all_variants():
+    for name in ("full", "int8", "paged", "paged_int8", "rwkv_state",
+                 "rglru_state", "cross_kv"):
+        assert name in available_cache_formats()
+    assert get_cache_format("paged").backing == "full"
+    assert get_cache_format("paged_int8").backing == "int8"
+    with pytest.raises(KeyError):
+        get_cache_format("nope")
+
+
+def test_kv_format_resolution_and_policy_spec():
+    cfg, _, _ = _setup()
+    assert kv_format_of(cfg) == "full"
+    assert kv_format_of(dataclasses.replace(cfg, kv_quant_bits=8)) == "int8"
+    assert kv_format_of(dataclasses.replace(cfg, kv_format="paged")) \
+        == "paged"
+    # one policy spec carries weights AND cache layout
+    pol = parse_policy("mlp=3,attn=4,kv=paged_int8", QuantConfig(bits=4))
+    assert pol.kv_fmt == "paged_int8"
+    assert len(pol.rules) == 2
+    cfg2 = pol.apply_kv_format(cfg)
+    assert kv_format_of(cfg2) == "paged_int8"
+    assert contiguous_cfg(cfg2).kv_format == "int8"
+    with pytest.raises(KeyError):
+        parse_policy("kv=bogus", QuantConfig())
+    with pytest.raises(AssertionError):
+        parse_policy("kv=rwkv_state", QuantConfig())   # not an attn cache
+    with pytest.raises(AssertionError):
+        parse_policy("kv=cross_kv", QuantConfig())     # not selectable
+    with pytest.raises(AssertionError):                # config path too
+        kv_format_of(dataclasses.replace(cfg, kv_format="cross_kv"))
+
+
+def test_paged_write_read_matches_contiguous():
+    """Single-layer oracle: the paged container's gathered view must hold
+    exactly what the contiguous ring holds for the same writes."""
+    cfg, _, _ = _setup()
+    ps, n_pages, b, steps = 4, 6, 2, 9
+    cfgp = dataclasses.replace(cfg, kv_format="paged", kv_page_size=ps,
+                               kv_pages=n_pages)
+    full = get_cache_format("full")
+    paged = get_cache_format("paged")
+    c_full = full.init(b, 16, cfg, jnp.float32)
+    c_paged = paged.init(b, 16, cfgp, jnp.float32)
+    # slot 0 owns pages [5,3,1], slot 1 owns [0,2,4] (deliberately shuffled)
+    pages = jnp.asarray([[5, 3, 1, -1], [0, 2, 4, -1]], jnp.int32)
+    rng = np.random.default_rng(0)
+    for t in range(steps):
+        k = jnp.asarray(rng.normal(size=(b, 1, cfg.n_kv_heads,
+                                         cfg.head_dim)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=k.shape).astype(np.float32))
+        pos = jnp.full((b,), t, jnp.int32)
+        c_full = full.write(c_full, k, v, pos)
+        c_paged = paged.write(c_paged, k, v, pos, pages=pages)
+    kf, vf = full.read(c_full, jnp.float32)
+    kp, vp = paged.read(c_paged, jnp.float32, pages=pages)
+    np.testing.assert_allclose(np.asarray(kp[:, :steps]),
+                               np.asarray(kf[:, :steps]))
+    np.testing.assert_allclose(np.asarray(vp[:, :steps]),
+                               np.asarray(vf[:, :steps]))
+    pos = jnp.full((b,), steps - 1, jnp.int32)
+    visf = full.visible(c_full, pos, "causal", 0)
+    visp = paged.visible(c_paged, pos, "causal", 0, pages=pages)
+    np.testing.assert_array_equal(np.asarray(visp[:, :steps]),
+                                  np.asarray(visf[:, :steps]))
+    assert not np.asarray(visp[:, steps:]).any()   # unwritten/unmapped
+
+
+def test_inactive_paged_write_lands_on_scratch():
+    cfg, _, _ = _setup()
+    cfgp = dataclasses.replace(cfg, kv_format="paged", kv_page_size=4,
+                               kv_pages=2)
+    paged = get_cache_format("paged")
+    c = paged.init(2, 8, cfgp, jnp.float32)
+    pages = jnp.asarray([[0, -1], [1, -1]], jnp.int32)
+    k = jnp.ones((2, 1, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    active = jnp.asarray([True, False])
+    c = paged.write(c, k, k, jnp.zeros((2,), jnp.int32), active=active,
+                    pages=pages)
+    pool = np.asarray(c["k_pages"])
+    assert pool[0, 0].any()            # active slot wrote its page
+    assert not pool[1].any()           # inactive slot's page untouched
+    assert pool[2, 0].any()            # ... the write went to scratch
+
+
+# ------------------------------------------------------------ page allocator
+
+def test_page_allocator_property_churn():
+    """No page leaked or double-owned across random admit/grow/release
+    churn; table rows mirror ownership."""
+    rng = np.random.default_rng(7)
+    alloc = PageAllocator(n_pages=13, page_size=4, n_slots=3,
+                          max_pages_per_slot=5)
+    for step in range(500):
+        op = rng.integers(0, 3)
+        slot = int(rng.integers(0, 3))
+        if op == 0:
+            alloc.alloc(slot, int(rng.integers(1, 4)))
+        elif op == 1:
+            alloc.ensure(slot, int(rng.integers(0, 20)))
+        else:
+            alloc.release(slot)
+        alloc.check()                  # the invariant
+        t = alloc.table()
+        for i in range(3):
+            owned = alloc.owned[i]
+            assert list(t[i, :len(owned)]) == owned
+            assert (t[i, len(owned):] == -1).all()
+    assert alloc.available + alloc.in_use == 13
+
+
+def test_page_allocator_bounds():
+    alloc = PageAllocator(n_pages=4, page_size=8, n_slots=2,
+                          max_pages_per_slot=3)
+    assert alloc.alloc(0, 3)
+    assert not alloc.alloc(0, 1)       # per-slot cap
+    assert not alloc.alloc(1, 2)       # pool exhausted (1 free)
+    assert alloc.alloc(1, 1)
+    assert alloc.available == 0
+    assert alloc.release(0) == 3
+    assert alloc.available == 3
+    assert alloc.ensure(1, 15)         # pos 15 -> 2 pages total
+    assert len(alloc.owned[1]) == 2
+    alloc.check()
+
+
+# ------------------------------------------------------------ EDF scheduler
+
+def test_edf_admission_orders_by_deadline():
+    s = SlotScheduler(n_slots=1, max_len=32)
+    r_none = SchedRequest(prompt=[1], max_new=1)
+    r_late = SchedRequest(prompt=[2], max_new=1, deadline_s=9.0)
+    r_soon = SchedRequest(prompt=[3], max_new=1, deadline_s=1.0)
+    for r in (r_none, r_late, r_soon):
+        s.submit(r)
+    assert s.next_ready(0.0) is r_soon     # earliest deadline first
+    assert s.next_ready(0.0) is r_late
+    assert s.next_ready(0.0) is r_none     # deadline-free sorts last
+
+
+def test_edf_respects_arrival_times():
+    s = SlotScheduler(n_slots=1, max_len=32)
+    r_future = SchedRequest(prompt=[1], max_new=1, deadline_s=0.5,
+                            arrival_s=10.0)
+    r_now = SchedRequest(prompt=[2], max_new=1, deadline_s=5.0)
+    s.submit(r_future)
+    s.submit(r_now)
+    assert s.next_ready(0.0) is r_now      # unarrived EDF winner waits
+    assert s.next_ready(0.0) is None
+    assert s.next_ready(11.0) is r_future
+
+
+def test_paged_admission_reserves_and_evicts_lower_priority():
+    alloc = PageAllocator(n_pages=4, page_size=8, n_slots=2,
+                          max_pages_per_slot=4)
+    s = SlotScheduler(n_slots=2, max_len=32, alloc=alloc)
+    low = SchedRequest(prompt=[1] * 20, max_new=4, priority=0)
+    s.submit(low)
+    req = s.next_ready(0.0, slot=0)
+    assert req is low and len(alloc.owned[0]) == 3   # 21 tokens -> 3 pages
+    s.admit(0, req, first_token=5, now_s=0.0, prefill_s=0.0)
+    # equal priority cannot evict: stays queued
+    peer = SchedRequest(prompt=[2] * 20, max_new=4, priority=0)
+    s.submit(peer)
+    assert s.next_ready(0.0, slot=1) is None
+    # higher priority evicts the active low-priority slot
+    vip = SchedRequest(prompt=[3] * 20, max_new=4, priority=1)
+    s.submit(vip)
+    got = s.next_ready(0.0, slot=1)
+    assert got is vip
+    assert s.slots[0] is None and s.evictions == 1
+    assert low in s.queue                  # preempted request requeued
+    alloc.check()
+
+
+# ---------------------------------------- paged vs contiguous equivalence
+
+def _paged_equiv(arch, base_cfg_tf, paged_fmt, page_size=8, kv_pages=0,
+                 batch_at=3):
+    cfg, params, data = _setup(arch)
+    cfg = base_cfg_tf(cfg)
+    cfgp = dataclasses.replace(cfg, kv_format=paged_fmt,
+                               kv_page_size=page_size, kv_pages=kv_pages)
+    toks = data.batch_at(batch_at)["tokens"]
+    reqs = [GenRequest(prompt=toks[i, :l].tolist(), max_new=m)
+            for i, (l, m) in enumerate([(8, 4), (12, 3), (6, 4)])]
+    eng_p = ServeEngine(params, cfgp, max_len=48, n_slots=2)
+    eng_c = ServeEngine(params, cfg, max_len=48, n_slots=2)
+    res_p = eng_p.serve(reqs)
+    res_c = eng_c.serve(reqs)
+    for a, b in zip(res_p, res_c):
+        assert a.tokens == b.tokens, (a.tokens, b.tokens)
+    return eng_p
+
+
+def test_paged_equivalence_full():
+    eng = _paged_equiv("deepseek-7b", lambda c: c, "paged")
+    assert eng.last_stats["peak_pages_in_use"] >= 1
+    assert eng.last_stats["evictions"] == 0
+
+
+def test_paged_equivalence_int8():
+    _paged_equiv("deepseek-7b",
+                 lambda c: dataclasses.replace(c, kv_quant_bits=8),
+                 "paged_int8")
+
+
+def test_paged_equivalence_ring_and_rglru():
+    """recurrentgemma: sliding-window ('local') attention + RG-LRU state —
+    the paged window is mask-enforced, state formats ride along."""
+    _paged_equiv("recurrentgemma-2b", lambda c: c, "paged", batch_at=6)
+
+
+def test_paged_equivalence_rwkv_state():
+    """rwkv6: attention-free — the paged config must be a no-op for pure
+    recurrent-state caches."""
+    _paged_equiv("rwkv6-7b", lambda c: c, "paged", batch_at=9)
+
+
+def test_paged_pressure_eviction_token_identical():
+    """A pool far below the dense equivalent forces preemption by
+    recompute; greedy tokens must still match the contiguous reference and
+    no page may leak."""
+    cfg, params, data = _setup()
+    cfgp = dataclasses.replace(cfg, kv_format="paged", kv_page_size=4,
+                               kv_pages=7)
+    toks = data.batch_at(5)["tokens"]
+    reqs = [GenRequest(prompt=toks[0, :8].tolist(), max_new=10),
+            GenRequest(prompt=toks[1, :9].tolist(), max_new=10, priority=1),
+            GenRequest(prompt=toks[2, :8].tolist(), max_new=6)]
+    eng_p = ServeEngine(params, cfgp, max_len=64, n_slots=2)
+    res_p = eng_p.serve(reqs)
+    assert eng_p.last_stats["evictions"] >= 1
+    assert res_p[1].evictions == 0        # priority-1 request never evicted
+    eng_c = ServeEngine(params, cfg, max_len=64, n_slots=2)
+    for a, b in zip(res_p, eng_c.serve(reqs)):
+        assert a.tokens == b.tokens, (a.tokens, b.tokens)
+
+
+def test_paged_pool_smaller_than_dense():
+    """kv_pages below the dense equivalent must shrink reported KV bytes."""
+    cfg, params, data = _setup()
+    toks = data.batch_at(2)["tokens"]
+    reqs = [GenRequest(prompt=toks[i, :8].tolist(), max_new=3)
+            for i in range(2)]
+    dense = ServeEngine(params, cfg, max_len=64, n_slots=4)
+    dense.serve(reqs)
+    cfgp = dataclasses.replace(cfg, kv_format="paged", kv_page_size=8,
+                               kv_pages=8)     # 64 tokens vs 4*64 dense
+    paged = ServeEngine(params, cfgp, max_len=64, n_slots=4)
+    paged.serve(reqs)
+    assert paged.last_stats["kv_cache_bytes"] \
+        < dense.last_stats["kv_cache_bytes"] / 2
+
+
+# --------------------------------------------------- grouped format splits
+
+def test_split_format_groups_mixed():
+    from repro.core.formats import get_format
+    from repro.core.types import QuantizedLinear
+    from repro.kernels.ops import split_format_groups
+    from repro.models.linears import linear_apply, linear_apply_grouped
+    from repro.sharding.context import LOCAL
+    rng = np.random.default_rng(0)
+    n = 64
+
+    def mk(m, bits, fmt):
+        c = jnp.asarray(rng.integers(0, 1 << bits,
+                                     size=(m, n)).astype(np.uint8))
+        t = jnp.asarray(rng.normal(size=(m, 1 << bits)).astype(np.float32))
+        return get_format(fmt).encode(
+            QuantizedLinear(codes=c, codebook=t, bits=bits))
+
+    # mixed 4-bit wq / 3-bit wk+wv: the k/v pair must still fuse
+    ws = [mk(128, 4, "lut4_packed"), mk(32, 3, "lut3_packed"),
+          mk(32, 3, "lut3_packed")]
+    groups = split_format_groups(ws)
+    assert sorted(sum(groups, [])) == [0, 1, 2]
+    assert [1, 2] in groups
+    # uniform formats: one fused group; dense members stay singletons
+    ws_u = [mk(128, 4, "lut4_packed"), mk(32, 4, "lut4_packed"),
+            mk(32, 4, "lut4_packed")]
+    assert split_format_groups(ws_u) == [[0, 1, 2]]
+    ws_d = [jnp.zeros((n, 16)), mk(32, 4, "lut4_packed"),
+            mk(32, 4, "lut4_packed")]
+    assert split_format_groups(ws_d) == [[0], [1, 2]]
+    # numerics: sub-grouped fused == fully sequential
+    x = jnp.asarray(rng.normal(size=(2, 5, n)).astype(np.float32))
+    ctx = LOCAL.with_lut_backend("pallas")
+    fused = linear_apply_grouped(ws, x, ctx=ctx)
+    for a, b in zip(fused, (linear_apply(w, x, ctx=ctx) for w in ws)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------------- bookkeeping
+
+def test_kv_cache_bytes_counts_kv_only():
+    from repro.models.transformer import init_stack_cache
+    cfg, _, _ = _setup("recurrentgemma-2b")    # local attn + rglru state
+    cache = init_stack_cache(2, 16, cfg, jnp.bfloat16)
+    total = kv_cache_bytes(cache)
+    states = [s for s in jax.tree.leaves(
+        cache, is_leaf=lambda x: isinstance(x, CacheState))
+        if isinstance(s, CacheState)]
+    kv_leaf_bytes = sum(
+        leaf.size * leaf.dtype.itemsize
+        for st in states if get_cache_format(st.fmt).kv
+        for leaf in st.data.values())
+    assert total == kv_leaf_bytes
+    assert total > 0
