@@ -408,7 +408,90 @@ def bench_paged_serving(out_path=None):
          f"paged/contiguous={results['kv_bytes_ratio']:.3f} "
          f"tokens_identical={results['tokens_identical']}")
     path = Path(out_path or Path(__file__).parent / "BENCH_serving.json")
-    path.write_text(json.dumps(results, indent=1))
+    _merge_bench_json(path, results)
+    return results
+
+
+def _merge_bench_json(path, updates):
+    """BENCH_serving.json carries several scenarios; each bench refreshes
+    only its own keys."""
+    import json
+    data = {}
+    if path.exists():
+        try:
+            data = json.loads(path.read_text())
+        except ValueError:
+            data = {}
+    data.update(updates)
+    path.write_text(json.dumps(data, indent=1))
+
+
+def bench_chunked_prefill_ttft(out_path=None):
+    """TTFT / stall scenario: a 2048-token prompt arrives while 8 slots
+    are mid-decode. Legacy whole-prompt-prefill admission
+    (prefill_chunk=0) freezes every in-flight stream for the entire
+    prefill; the unified token-budget step (prefill_chunk=64) interleaves
+    the prompt's chunks with the decode lanes, so no stream ever waits
+    more than one budget step. Greedy tokens must be identical across the
+    two admission modes. Records each mode's long-prompt TTFT, the
+    in-flight streams' p50/p99/max inter-token latency, and the scheduler
+    gap counter into BENCH_serving.json (wall numbers benchmark this CPU
+    harness; the *ratio* between modes is the signal)."""
+    from pathlib import Path
+    from repro.serve.engine import GenRequest, ServeEngine
+    cfg, params, data = _trained_small_lm()
+    n_slots, max_new_short = 9, 32
+    plen_long, chunk = 2048, 64
+    max_len = plen_long + 64
+    long_toks = MarkovStream(cfg.vocab_size, batch=1, seq=plen_long,
+                             seed=9).batch_at(0)["tokens"][0]
+    short_toks = data.batch_at(802)["tokens"]
+    rng = np.random.default_rng(7)
+    reqs = [GenRequest(prompt=short_toks[i % short_toks.shape[0],
+                                         :int(rng.integers(10, 22))].tolist(),
+                       max_new=max_new_short) for i in range(8)]
+    reqs.append(GenRequest(prompt=long_toks.tolist(), max_new=8))
+    arrivals = [0.0] * 8 + [0.3]          # the long prompt lands mid-decode
+    results = {"ttft_scenario": {
+        "n_decoding_slots": 8, "long_prompt": plen_long,
+        "prefill_chunk": chunk, "short_max_new": max_new_short}}
+    tokens = {}
+    for mode, pc in (("whole_prefill", 0), ("chunked", chunk)):
+        engine = ServeEngine(params, cfg, max_len=max_len, n_slots=n_slots,
+                             prefill_chunk=pc)
+        engine.serve(reqs, arrival_times=arrivals)   # warm jits off-clock
+        res = engine.serve(reqs, arrival_times=arrivals)
+        gaps = [b - a for r in res[:8]
+                for a, b in zip(r.token_times, r.token_times[1:])]
+        gaps.sort()
+        st = engine.last_stats
+        tokens[mode] = [r.tokens for r in res]
+        row = {
+            "ttft_long_s": round(res[8].prefill_s, 4),
+            "short_intertoken_p50_s": round(gaps[len(gaps) // 2], 4),
+            "short_intertoken_p99_s": round(gaps[int(len(gaps) * 0.99)], 4),
+            "short_intertoken_max_s": round(gaps[-1], 4),
+            "max_decode_gap_steps": st["max_decode_gap_steps"],
+            "chunk_tokens": st["chunk_tokens"],
+            "prefill_jit_shapes": len(engine._prefill_jits),
+        }
+        results[mode] = row
+        _row(f"chunked_ttft_{mode}", st["wall_s"] * 1e6,
+             f"ttft_long={row['ttft_long_s']:.3f}s "
+             f"p99_intertoken={row['short_intertoken_p99_s']:.3f}s "
+             f"max_stall={row['short_intertoken_max_s']:.3f}s")
+    results["tokens_identical"] = \
+        tokens["whole_prefill"] == tokens["chunked"]
+    assert results["tokens_identical"], "chunked admission diverged!"
+    results["stall_ratio_whole_over_chunked"] = round(
+        results["whole_prefill"]["short_intertoken_max_s"]
+        / max(results["chunked"]["short_intertoken_max_s"], 1e-9), 2)
+    _row("chunked_ttft_stall_ratio", 0.0,
+         f"whole/chunked max-stall="
+         f"{results['stall_ratio_whole_over_chunked']:.2f}x "
+         f"tokens_identical={results['tokens_identical']}")
+    path = Path(out_path or Path(__file__).parent / "BENCH_serving.json")
+    _merge_bench_json(path, {"chunked_prefill_ttft": results})
     return results
 
 
@@ -508,6 +591,7 @@ _ALL_BENCHES = [
     "bench_lut_kernels",
     "bench_serving_throughput",
     "bench_paged_serving",
+    "bench_chunked_prefill_ttft",
     "bench_mixed_precision_serving",
     "bench_table7_precondition",
     "bench_fig1b_weight_stats",

@@ -9,12 +9,23 @@ vertical:
 
   init(batch, width, cfg, dtype)  allocate one layer's cache container
   write(cache, k, v, pos, ...)    one decode step's K/V write
+  write_at(cache, rows, ...)      scatter n>1 tokens at arbitrary (slot, pos)
+  step_rows(k1, v1)               one step's K/V in this layout's row form
+  gather_rows(cache, slots, ...)  per-token slot-row view (backing layout)
   read(cache, dtype, ...)         dense (B, W, K, hd) K/V view (dequantized)
   visible(cache, pos, kind, ...)  (B, W) attendable-entry mask
   from_prefill(k, v, width, ...)  fresh prompt K/V -> this layout (batch 1)
   insert(big, small, slot, ...)   slot-row insertion for continuous batching
   partition_spec(name, shape, ..) sharding rule for each container leaf
   storage_bits(cache)             honest bits from the real dtypes
+
+The token-budget serving step (`models.model.mixed_step`) drives the
+multi-token vertical: `token_write_view` below builds, for a flat batch of
+tokens at arbitrary (slot, position) pairs, each token's attention view —
+the cache as that token's sequence sees it after every same-slot write at a
+position <= its own — and persists the step's K/V with `write_at`. For
+single-token runs (pure decode) the view is bitwise identical to the
+write-then-read decode path.
 
 Model code (`models/{attention,transformer,model,whisper}.py`) and the serve
 engine route through this registry only — there is no `"k_scale" in cache`
@@ -217,6 +228,34 @@ class CacheFormat:
         """Dense (B, W, K, hd) K/V views (dequantized / page-gathered)."""
         raise NotImplementedError(self.name)
 
+    # ------------------------------------------------------ token-batch ops
+    def step_rows(self, k1: jnp.ndarray, v1: jnp.ndarray) -> Dict:
+        """One step's K/V (T, K, hd) in this layout's row form (quantized
+        formats emit codes + scales) — the unit `write_at` scatters and
+        `token_write_view` overlays."""
+        raise NotImplementedError(self.name)
+
+    def gather_rows(self, cache: CacheState, slots: jnp.ndarray,
+                    pages=None) -> CacheState:
+        """Per-token view rows: a CacheState in the *contiguous* layout
+        whose batch axis is the flat token axis — entry t is slot
+        `slots[t]`'s row (paged formats gather the slot's pages into their
+        backing sequence layout). `view_width` positions per row."""
+        raise NotImplementedError(self.name)
+
+    def view_index(self, pos: jnp.ndarray, width: int) -> jnp.ndarray:
+        """Where position `pos` lands on the `gather_rows` width axis."""
+        return pos % width
+
+    def write_at(self, cache: CacheState, rows: Dict, slots: jnp.ndarray,
+                 pos: jnp.ndarray, keep: jnp.ndarray,
+                 pages=None) -> CacheState:
+        """Scatter a flat token batch (rows from `step_rows`) at arbitrary
+        (slots[t], pos[t]); tokens with keep[t] == False are dropped
+        (inactive lanes, or ring writes superseded by a later same-step
+        token at the same ring slot)."""
+        raise NotImplementedError(self.name)
+
     def visible(self, cache: CacheState, pos, kind: str, window: int,
                 pages=None) -> jnp.ndarray:
         """(B, W) bool: which entries of the `read` view may be attended."""
@@ -263,6 +302,61 @@ def insert_slot(big: CacheState, small: CacheState, slot,
     primitive `models.transformer.cache_insert` maps over layer entries)."""
     return get_cache_format(big.fmt).insert(big, small, slot, pages=pages,
                                             stacked=stacked)
+
+
+def token_write_view(cache: CacheState, k_new: jnp.ndarray,
+                     v_new: jnp.ndarray, slots: jnp.ndarray,
+                     pos: jnp.ndarray, active: jnp.ndarray, kind: str,
+                     window: int, pages=None):
+    """Multi-token write + per-token attention view over one cache layer.
+
+    `k_new`/`v_new` (T, K, hd) are the fresh K/V of a flat token batch at
+    arbitrary (slots[t], pos[t]) — decode lanes and prompt-chunk lanes
+    alike, any number of tokens per slot (contiguous position runs).
+    Returns (new_cache, view, visible): `view` is a contiguous-layout
+    CacheState whose batch axis is the token axis, holding for token t the
+    cache as its sequence sees it once every same-slot write at a position
+    <= pos[t] is applied — so intra-chunk causal attention needs no second
+    score path and a single-token run reproduces the write-then-read decode
+    view bitwise. `visible` is the (T, Wv) attendable mask. The returned
+    cache persists every kept lane; a ring cell written twice in one step
+    keeps only the final (highest-position) write, inactive lanes are
+    dropped.
+    """
+    f = get_cache_format(cache.fmt)
+    rows = f.step_rows(k_new, v_new)
+    view = f.gather_rows(cache, slots, pages=pages)
+    wv = view["k"].shape[1]
+    widx = f.view_index(pos, wv)
+    t = pos.shape[0]
+    ti = jnp.arange(t)
+    same = active[None, :] & (slots[None, :] == slots[:, None])
+    ov = same & (pos[None, :] <= pos[:, None])
+    # latest same-step writer of each view cell, per query token: scatter-max
+    # of the lane index (within a slot, a later lane is a later position)
+    sel = jnp.full((t, wv), -1, jnp.int32).at[
+        jnp.broadcast_to(ti[:, None], (t, t)),
+        jnp.broadcast_to(widx[None, :], (t, t))].max(
+        jnp.where(ov, ti[None, :], -1))
+    hit = sel >= 0
+    selc = jnp.maximum(sel, 0)
+    data = {}
+    for key, leaf in view.data.items():
+        fresh = rows[key][selc]
+        m = hit.reshape(hit.shape + (1,) * (leaf.ndim - 2))
+        data[key] = jnp.where(m, fresh.astype(leaf.dtype), leaf)
+    view = CacheState(view.fmt, data)
+    if f.paged:
+        keep = active                      # distinct (page, offset) per lane
+        tok_pages = pages[slots]
+    else:
+        clobbered = (same & (pos[None, :] > pos[:, None])
+                     & (widx[None, :] == widx[:, None])).any(axis=1)
+        keep = active & ~clobbered
+        tok_pages = None
+    visible = f.visible(cache, pos, kind, window, pages=tok_pages)
+    cache = f.write_at(cache, rows, slots, pos, keep, pages=pages)
+    return cache, view, visible
 
 
 def kv_cache_bytes(cache_tree) -> int:
@@ -351,6 +445,21 @@ class FullKVFormat(CacheFormat):
         rows = self._rows(k_new[:, 0], v_new[:, 0], None, None)
         return CacheState(self.name, {key: put(cache.data[key], rows[key])
                                       for key in cache.data})
+
+    def step_rows(self, k1, v1):
+        return self._rows(k1, v1, None, None)
+
+    def gather_rows(self, cache, slots, pages=None):
+        return CacheState(self.name, {key: leaf[slots]
+                                      for key, leaf in cache.data.items()})
+
+    def write_at(self, cache, rows, slots, pos, keep, pages=None):
+        w = cache["k"].shape[1]
+        b = jnp.where(keep, slots, cache["k"].shape[0])   # OOB row: dropped
+        return CacheState(self.name, {
+            key: cache.data[key].at[b, pos % w].set(
+                rows[key].astype(cache.data[key].dtype), mode="drop")
+            for key in cache.data})
 
     def read(self, cache, dtype, pages=None):
         return cache["k"].astype(dtype), cache["v"].astype(dtype)
@@ -454,6 +563,35 @@ class _PagedBase(CacheFormat):
         off = pos % ps
         rows = get_cache_format(self.backing)._rows(
             k_new[:, 0], v_new[:, 0], None, None)
+        return CacheState(self.name, {
+            key + "_pages": cache.data[key + "_pages"].at[pg, off].set(
+                rows[key].astype(cache.data[key + "_pages"].dtype))
+            for key in rows})
+
+    def step_rows(self, k1, v1):
+        return get_cache_format(self.backing)._rows(k1, v1, None, None)
+
+    def gather_rows(self, cache, slots, pages=None):
+        assert pages is not None, "paged row gather needs a page table"
+        pg, _ = self._safe_pages(cache, pages[slots])     # (T, MP)
+        t, mp = pg.shape
+        ps = cache["k_pages"].shape[1]
+        return CacheState(self.backing, {
+            key[:-len("_pages")]: cache.data[key][pg].reshape(
+                (t, mp * ps) + cache.data[key].shape[2:])
+            for key in cache.data})
+
+    def view_index(self, pos, width):
+        return pos                          # logical positions; pages never wrap
+
+    def write_at(self, cache, rows, slots, pos, keep, pages=None):
+        assert pages is not None, "paged cache write needs a page table"
+        ps = cache["k_pages"].shape[1]
+        pt = pages[slots]                                 # (T, MP)
+        pg = jnp.take_along_axis(pt, (pos // ps)[:, None], axis=1)[:, 0]
+        pg, scratch = self._safe_pages(cache, pg)
+        pg = jnp.where(keep, pg, scratch)
+        off = pos % ps
         return CacheState(self.name, {
             key + "_pages": cache.data[key + "_pages"].at[pg, off].set(
                 rows[key].astype(cache.data[key + "_pages"].dtype))

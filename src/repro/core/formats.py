@@ -69,6 +69,18 @@ def dtype_bits(dtype) -> int:
     return jnp.dtype(dtype).itemsize * 8
 
 
+def pad_spec(base, rank: int):
+    """PartitionSpec from a base-rank rule tuple: leading dims of a
+    higher-rank leaf (stacked pattern units) pad with None; a leaf too
+    small for the rule replicates. The one padding/clamping rule for dense
+    leaves (`sharding.partition.spec_for_param`) and quantized-container
+    children (`WeightFormat.partition_spec`) alike."""
+    from jax.sharding import PartitionSpec as P
+    if base is None or rank < len(base):
+        return P()
+    return P(*((None,) * (rank - len(base)) + tuple(base)))
+
+
 def _index_bits(idx) -> int:
     return dtype_bits(idx.dtype) if idx is not None else 32
 
@@ -135,6 +147,20 @@ class WeightFormat:
         """(total storage bits, number of represented weights)."""
         raise NotImplementedError(self.name)
 
+    # ------------------------------------------------------------- sharding
+    def partition_spec(self, child: str, base, rank: int):
+        """PartitionSpec for one container leaf, given the dense rule.
+
+        `child` names the container field ('codes', 'codebook',
+        'sparse_idx', ...), `base` is the dense parameter's rule spec tuple
+        (None replicates everything) and `rank` the leaf's actual rank
+        (stacked pattern-unit leaves carry extra leading dims, padded with
+        None). The format owns its layout, so it owns how the dense rule
+        maps onto each leaf — mirroring `CacheFormat.partition_spec` for
+        serve caches. Default: apply the dense rule as-is (the layout
+        matches the dense parameter)."""
+        return pad_spec(base, rank)
+
 
 # ---------------------------------------------------------------- dense fp
 
@@ -178,6 +204,31 @@ def _sparse_full_bits(layer: QuantizedLinear) -> float:
 class _LUTBase(WeightFormat):
     """Shared apply/dequantize/abstract for per-row LUT layouts;
     subclasses set `stream_bits` and the pack/unpack pair."""
+
+    def partition_spec(self, child: str, base, rank: int):
+        """GANQ containers store (m=out, n=in) — TRANSPOSED vs the dense
+        (in, out) weight — so the 2-D rule swaps for the code stream; the
+        codebook / sparse-outlier / bias leaves carry the out (row) dim
+        first and shard on it only; full fp rows replicate. Specs are
+        written at the container's base rank; stacked pattern-unit leaves
+        pad with leading Nones (the old path-index switch in
+        `sharding.partition` silently never fired — FlattenedIndexKey
+        carries `.key`, not `.idx` — so quantized leaves fell through to
+        the dense-orientation rule; this is the fixed, format-owned
+        mapping)."""
+        from jax.sharding import PartitionSpec as P
+        if base is None or len(base) != 2:
+            return P()
+        in_spec, out_spec = base
+        if child == "codes":
+            spec = (out_spec, in_spec)
+        elif child in ("codebook", "sparse_idx", "sparse_val"):
+            spec = (out_spec, None)
+        elif child == "bias":
+            spec = (out_spec,)
+        else:                               # full_row_idx / full_row_val
+            return P()
+        return pad_spec(spec, rank)
 
     def apply(self, layer: QuantizedLinear, x2, *, backend: str = "xla"):
         from repro.kernels.ops import lut_linear       # lazy: avoids cycle

@@ -91,19 +91,20 @@ class QuantizedLinear:
     full_row_val: Optional[jax.Array] = None
     bias: Optional[jax.Array] = None
 
+    # pytree child order — the single source consumers that pair children
+    # with field names positionally (sharding.partition) must read
+    CHILDREN = ("codes", "codebook", "sparse_idx", "sparse_val",
+                "full_row_idx", "full_row_val", "bias")
+
     def tree_flatten(self):
-        children = (self.codes, self.codebook, self.sparse_idx, self.sparse_val,
-                    self.full_row_idx, self.full_row_val, self.bias)
-        return children, (self.bits, self.fmt, self.n_cols)
+        return tuple(getattr(self, f) for f in self.CHILDREN), \
+            (self.bits, self.fmt, self.n_cols)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         bits, fmt, n_cols = aux
-        codes, codebook, sidx, sval, fidx, fval, bias = children
-        return cls(codes=codes, codebook=codebook, bits=bits, fmt=fmt,
-                   n_cols=n_cols, sparse_idx=sidx,
-                   sparse_val=sval, full_row_idx=fidx, full_row_val=fval,
-                   bias=bias)
+        return cls(bits=bits, fmt=fmt, n_cols=n_cols,
+                   **dict(zip(cls.CHILDREN, children)))
 
     def _format(self):
         from .formats import get_format   # lazy: formats imports this module
@@ -154,17 +155,18 @@ class QuantizedExperts:
     full_row_idx: Optional[jax.Array] = None
     full_row_val: Optional[jax.Array] = None
 
+    CHILDREN = ("codes", "codebook", "sparse_idx", "sparse_val",
+                "full_row_idx", "full_row_val")
+
     def tree_flatten(self):
-        children = (self.codes, self.codebook, self.sparse_idx,
-                    self.sparse_val, self.full_row_idx, self.full_row_val)
-        return children, (self.bits, self.fmt, self.n_cols)
+        return tuple(getattr(self, f) for f in self.CHILDREN), \
+            (self.bits, self.fmt, self.n_cols)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         bits, fmt, n_cols = aux
-        codes, codebook, sidx, sval, fidx, fval = children
-        return cls(codes, codebook, bits, fmt, n_cols, sparse_idx=sidx,
-                   sparse_val=sval, full_row_idx=fidx, full_row_val=fval)
+        return cls(bits=bits, fmt=fmt, n_cols=n_cols,
+                   **dict(zip(cls.CHILDREN, children)))
 
     def _format(self):
         from .formats import get_format

@@ -12,6 +12,13 @@ Paged KV cache (slot count decoupled from max_len; pool sized in pages):
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
       --method none --kv-format paged --page-size 16 --requests 8
 
+Chunked prefill on the token-budget step (a 2048-token arrival never
+stalls in-flight decode for more than one step; one jit, no per-length
+prefill compiles):
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
+      --method none --max-len 2112 --prompt-lens 32,2048,128 \\
+      --prefill-chunk 64 --requests 6 --slots 2
+
 Production decode-step compile check (the paper's deployment on a pod):
   python -m repro.launch.serve --arch granite-3-8b --dry-run-only \\
       --bits 4 --kv8
@@ -57,8 +64,23 @@ def main(argv=None) -> int:
                          "0 = dense equivalent slots*ceil(max_len/page)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="per-slot cache length (prompt + generation)")
+    ap.add_argument("--prompt-lens", default=None,
+                    help="comma-separated prompt lengths cycled over "
+                         "requests (e.g. '32,2048,128'); default: random "
+                         "8..24")
     ap.add_argument("--slots", type=int, default=4,
                     help="decode slots for continuous batching")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens admitted per token-budget step "
+                         "(chunked prefill piggybacked on decode; 0 = "
+                         "legacy whole-prompt prefill with per-length "
+                         "jits and decode stalls)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="lanes per unified serving step (0 = slots + "
+                         "prefill-chunk); one static shape bounds the "
+                         "compile count regardless of prompt lengths")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate (req/s); 0 = all at once")
     ap.add_argument("--dry-run-only", action="store_true")
@@ -129,13 +151,23 @@ def main(argv=None) -> int:
         cfg = policy.apply_kv_format(cfg)
     if args.kv_format:
         cfg = dataclasses.replace(cfg, kv_format=args.kv_format)
-    engine = ServeEngine(params, cfg, ctx=ctx, max_len=128,
-                         n_slots=args.slots)
-    # mixed-length traffic: continuous batching needs no length grouping
+    engine = ServeEngine(params, cfg, ctx=ctx, max_len=args.max_len,
+                         n_slots=args.slots,
+                         prefill_chunk=args.prefill_chunk,
+                         token_budget=args.token_budget)
+    # mixed-length traffic: continuous batching needs no length grouping,
+    # and chunked admission needs no length bucketing either — prompts of
+    # any mix of lengths ride the one fixed-shape token-budget step
     rng = np.random.default_rng(0)
-    toks = data.batch_at(1)["tokens"]
-    reqs = [GenRequest(prompt=toks[i % toks.shape[0],
-                                   :int(rng.integers(8, 24))].tolist(),
+    if args.prompt_lens:
+        lens = [int(v) for v in args.prompt_lens.split(",")]
+    else:
+        lens = [int(rng.integers(8, 24)) for _ in range(args.requests)]
+    assert max(lens) < args.max_len, (max(lens), args.max_len)
+    long_seq = max(32, max(lens))
+    data_long = MarkovStream(cfg.vocab_size, batch=1, seq=long_seq, seed=2)
+    toks = data_long.batch_at(1)["tokens"]
+    reqs = [GenRequest(prompt=toks[0, :lens[i % len(lens)]].tolist(),
                        max_new=args.max_new)
             for i in range(args.requests)]
     arrivals = None
@@ -152,9 +184,12 @@ def main(argv=None) -> int:
         extra = (f", paged KV: {st['peak_pages_in_use']}/{st['n_pages']} "
                  f"pages x {st['page_size']} tok peak, "
                  f"{st['evictions']} evictions")
+    gap = st.get("max_decode_gap_steps", 0)
     print(f"served {len(reqs)} requests / {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s wall, "
           f"{st['decode_tok_per_s']:.1f} decode tok/s, "
+          f"{st.get('chunk_tokens', 0)} chunked prefill tokens, "
+          f"max decode gap {gap} step(s), "
           f"{st['slot_reuses']} slot reuses, "
           f"{st['kv_cache_bytes'] / 1e6:.2f} MB KV{extra}, 1 CPU core)")
     return 0

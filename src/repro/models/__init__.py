@@ -1,4 +1,5 @@
 """Model zoo: 10 assigned architectures on a shared functional substrate."""
 from .model import (init_params, abstract_params, train_loss, forward_logits,
-                    prefill, decode_step, init_serve_cache)
+                    prefill, decode_step, init_serve_cache, mixed_step,
+                    TokenBatch)
 from .linears import linear_apply, linear_out_dim

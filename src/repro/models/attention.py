@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.cache_formats import (CacheState, get_cache_format,
-                                      kv_format_of)
+                                      kv_format_of, token_write_view)
 from repro.sharding.context import ShardCtx, LOCAL
 from .common import apply_mrope, apply_rope, dense_init, init_norm, \
     rms_norm_headwise
@@ -245,6 +245,35 @@ def attention_decode_block(p, x, pos, cache: CacheState, cfg: ModelConfig,
     o = attend_decode(q, cache, pos,
                       "causal" if kind == "attn" else "sliding",
                       cfg.sliding_window, active, pages)
+    o = o.reshape(*x.shape[:-1], cfg.q_dim)
+    y = linear_apply(p["wo"], o, None, "", ctx)
+    return ctx.constrain(y, "dp", None, None), cache
+
+
+def attention_mixed_block(p, x, tb, cache: CacheState, cfg: ModelConfig,
+                          kind: str, ctx: ShardCtx = LOCAL):
+    """Token-budget step self-attention: x (T, 1, d) is a flat token batch
+    (`tb` a `models.model.TokenBatch`) mixing decode lanes (one token per
+    live slot) with prompt-chunk lanes (several consecutive positions of
+    one slot). All lanes' K/V are scattered into the slot cache and each
+    lane attends against its own per-token view — intra-chunk causality
+    rides the same visibility mask as the cache, so there is no separate
+    prefill score path. Returns (y, new_cache)."""
+    pos = tb.positions
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
+    else:
+        positions = pos[:, None]
+    q, k, v = project_qkv(p, x, positions, cfg, ctx, None, "")
+    cache, view, allowed = token_write_view(
+        cache, k[:, 0], v[:, 0], tb.slots, pos, tb.active,
+        "causal" if kind == "attn" else "sliding", cfg.sliding_window,
+        pages=tb.pages)
+    k_all, v_all = get_cache_format(view.fmt).read(view, q.dtype)
+    allowed &= tb.active[:, None]
+    bias = jnp.where(allowed, 0.0, NEG_INF)[:, None, None, None, :]
+    scores = _grouped_scores(q, k_all).astype(jnp.float32) + bias
+    o = _grouped_context(_softmax(scores).astype(v_all.dtype), v_all)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
     y = linear_apply(p["wo"], o, None, "", ctx)
     return ctx.constrain(y, "dp", None, None), cache

@@ -1,4 +1,11 @@
-"""Model facade: init / train_loss / prefill / decode for every arch.
+"""Model facade: init / train_loss / prefill / decode / mixed_step.
+
+Serving runs on ONE fixed-shape entrypoint, `mixed_step(params, cache,
+TokenBatch)` — a per-step token budget of flat lanes mixing decode tokens
+with chunked prompt admissions. `prefill` + `decode_step` remain the
+whole-prompt two-entrypoint path: training/offline use them directly and
+`ServeEngine.generate_batch` keeps them as the greedy-equivalence oracle
+for the chunked path.
 
 Batch formats by frontend:
   tokens : {"tokens": (B,S) i32, "labels": (B,S) i32}
@@ -10,6 +17,7 @@ tensor is never materialized — with 262k vocabs it would dominate HBM).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Dict, Optional, Tuple
 
@@ -23,11 +31,57 @@ from .common import apply_norm, embed_init, init_norm
 from .linears import linear_apply
 from .transformer import (cache_insert, init_stack, init_stack_cache,
                           layer_cache_width, stack_apply, stack_decode,
-                          block_apply, pattern_split)
+                          stack_mixed, block_apply, pattern_split)
 from . import whisper as W
 
 Params = Dict
 AUX_COEF = 0.01
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TokenBatch:
+    """One token-budget serving step's flat token lanes.
+
+    A fixed number of lanes T (the step's token budget) carries any mix of
+    decode tokens (one lane per live slot) and prompt-chunk tokens (several
+    consecutive positions of one slot), so a single jitted `mixed_step`
+    shape serves every prompt-length / traffic mix — there are no
+    per-length prefill compiles. A slot's lanes within a step are
+    contiguous and position-ordered; pad lanes sit at the end with
+    `active` False.
+
+    Fields (all (T,) unless noted):
+      tokens    int32 token ids
+      slots     int32 cache row (slot) each lane belongs to
+      positions int32 absolute sequence position of each lane
+      horizon   int32 position of the lane's slot's FIRST lane this step
+                (run start: decode lanes have horizon == position)
+      emit      bool  sample logits at this lane (each slot's last
+                *scheduled* generation point: its decode lane, or the
+                final prompt token when a chunk completes the prompt)
+      active    bool  real lane vs padding
+      reset     (n_slots,) bool — slot rows admitted this step: their
+                recurrent state is zeroed in-graph before use
+      pages     optional (n_slots, max_pages) int32 page table (paged KV)
+    """
+
+    tokens: jax.Array
+    slots: jax.Array
+    positions: jax.Array
+    horizon: jax.Array
+    emit: jax.Array
+    active: jax.Array
+    reset: jax.Array
+    pages: Optional[jax.Array] = None
+
+    def tree_flatten(self):
+        return (self.tokens, self.slots, self.positions, self.horizon,
+                self.emit, self.active, self.reset, self.pages), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
 
 
 def _dtype(name: str):
@@ -175,6 +229,36 @@ def decode_step(p: Params, cache, tokens: jnp.ndarray, pos: jnp.ndarray,
                                 pages)
         h = apply_norm(p["final_ln"], h, cfg.norm, cfg.norm_eps)
     logits = _logits_head(p, h[:, 0, :], cfg, ctx)
+    return logits, cache
+
+
+def mixed_step(p: Params, cache, tb: TokenBatch, cfg: ModelConfig,
+               ctx: ShardCtx = LOCAL):
+    """THE serving execution surface: one fixed-shape token-budget step.
+
+    Consumes a flat `TokenBatch` of up to T tokens drawn from live decode
+    slots (one lane each) plus chunked prompt admissions (the remaining
+    lanes), writes every lane's K/V / recurrent state into its slot's cache
+    rows, and returns `(logits (n_slots, V), new_cache)` where each slot's
+    logits row is gathered only at its `emit` lane (rows of slots with no
+    emit lane this step are zeros — the host ignores them). Decode lanes
+    reproduce the classic one-token `decode_step` bitwise; chunk lanes are
+    chunked prefill riding the same kernels, so admitting a long prompt
+    never stalls in-flight decode for more than one step.
+    """
+    cd = _dtype(cfg.compute_dtype)
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError("token-budget serving is decoder-only")
+    x = _embed(p, tb.tokens[:, None], cfg, cd)             # (T, 1, d)
+    x = ctx.constrain(x, "dp", None, None)
+    h, cache = stack_mixed(p["stack"], cache, x, tb, cfg, ctx)
+    h = apply_norm(p["final_ln"], h, cfg.norm, cfg.norm_eps)
+    hs = h[:, 0, :]                                        # (T, d)
+    ns = tb.reset.shape[0]
+    idx = jnp.where(tb.emit & tb.active, tb.slots, ns)     # OOB: dropped
+    emit_h = jnp.zeros((ns, hs.shape[-1]), hs.dtype).at[idx].set(
+        hs, mode="drop")
+    logits = _logits_head(p, emit_h, cfg, ctx)
     return logits, cache
 
 

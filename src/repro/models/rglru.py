@@ -115,6 +115,60 @@ def rglru_block(p: Params, x: jnp.ndarray, state: Dict, cfg: ModelConfig,
     return out, CacheState("rglru_state", {"conv": conv_state, "h": h_last})
 
 
+def rglru_block_tokens(p: Params, x: jnp.ndarray, state, cfg: ModelConfig,
+                       tb, ctx: ShardCtx = LOCAL):
+    """Flat-token recurrent block for the token-budget serving step:
+    x (T, 1, d), `tb` a `models.model.TokenBatch` whose per-slot runs are
+    contiguous and position-ordered; state holds (B, cw-1, r) conv tails
+    and (B, r) hidden slot tables. Projections, conv taps and the gate
+    nonlinearities evaluate in parallel over lanes (conv inputs that fall
+    before a run's start are gathered from the slot's conv tail); only the
+    h_t = a_t h_{t-1} + b_t recurrence scans lane by lane. A single-lane
+    run reproduces the `decode=True` path of `rglru_block` bitwise."""
+    gate = jax.nn.gelu(linear_apply(p["w_gate"], x, ctx=ctx))
+    u = linear_apply(p["w_in"], x, ctx=ctx)
+    u = ctx.constrain(u, "dp", None, ctx.tp_axis)
+    u2 = u[:, 0]                                           # (T, r)
+    cw = p["conv_w"].shape[0]
+    w = p["conv_w"].astype(u2.dtype)
+    b = p["conv_b"].astype(u2.dtype)
+    off = tb.positions - tb.horizon                        # run offset
+    conv_tab = state["conv"]                               # (B, cw-1, r)
+    # input at each lane's position p - lag: from the flat batch when the
+    # run covers it, else from the slot's conv tail (same gather decode's
+    # concat([state, x]) performs); taps accumulate in _causal_conv order
+    inps = [u2]                                            # lag 0
+    for lag in range(1, cw):
+        idx = jnp.clip(cw - 1 - lag + off, 0, cw - 2)
+        from_tail = conv_tab[tb.slots, idx].astype(u2.dtype)
+        inps.append(jnp.where((off >= lag)[:, None],
+                              jnp.roll(u2, lag, axis=0), from_tail))
+    y = sum(inps[cw - 1 - j] * w[j][None, :] for j in range(cw))
+    u_conv = (y + b[None, :])[:, None, :]                  # (T, 1, r)
+    a, bb = _rglru_gates(p, u_conv)
+
+    def body(htab, lane):
+        a_i, b_i, slot, act = lane
+        h = a_i[0] * htab[slot] + b_i[0]
+        htab = jnp.where(act, htab.at[slot].set(h), htab)
+        return htab, h
+
+    htab, hs = jax.lax.scan(body, state["h"],
+                            (a, bb, tb.slots, tb.active))
+    h_seq = hs[:, None, :].astype(x.dtype)
+    out = linear_apply(p["w_out"], h_seq * gate, ctx=ctx)
+    out = ctx.constrain(out, "dp", None, None)
+    # new conv tail per slot: the last cw-1 inputs as of each slot's final
+    # lane, scattered from that lane (drop the rest)
+    from repro.models.rwkv6 import _last_lane_scatter
+    new_tail = jnp.stack([inps[cw - 2 - i] for i in range(cw - 1)], axis=1) \
+        if cw > 1 else conv_tab[tb.slots]
+    conv_tab = _last_lane_scatter(conv_tab, new_tail, tb) if cw > 1 \
+        else conv_tab
+    from repro.core.cache_formats import CacheState
+    return out, CacheState("rglru_state", {"conv": conv_tab, "h": htab})
+
+
 def init_rglru_state(batch: int, cfg: ModelConfig, dtype):
     """Per-layer RG-LRU state container ('rglru_state' CacheFormat)."""
     from repro.core.cache_formats import get_cache_format

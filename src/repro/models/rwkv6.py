@@ -153,6 +153,88 @@ def rwkv_time_mix(p: Params, x: jnp.ndarray, state: Tuple, cfg: ModelConfig,
     return out, (x[:, -1, :], s_out)
 
 
+def _token_shift_flat(x: jnp.ndarray, shift_tab: jnp.ndarray, tb):
+    """Previous-token stream for a flat token batch x (T, d): inside a
+    slot's contiguous run the predecessor is the previous lane; a run's
+    first token reads the slot's carried shift state."""
+    run_start = (tb.positions == tb.horizon)[:, None]
+    return jnp.where(run_start, shift_tab[tb.slots].astype(x.dtype),
+                     jnp.roll(x, 1, axis=0))
+
+
+def _last_lane_scatter(tab: jnp.ndarray, values: jnp.ndarray, tb):
+    """Write each slot's final-lane value into its state-table row (lanes
+    that are not their slot's last, and inactive lanes, are dropped)."""
+    ns = tab.shape[0]
+    slot_max = jnp.full((ns,), -1, jnp.int32).at[
+        jnp.where(tb.active, tb.slots, ns)].max(tb.positions, mode="drop")
+    last = tb.active & (tb.positions == slot_max[tb.slots])
+    idx = jnp.where(last, tb.slots, ns)                    # OOB: dropped
+    return tab.at[idx].set(values.astype(tab.dtype), mode="drop")
+
+
+def rwkv_time_mix_tokens(p: Params, x: jnp.ndarray, state: Tuple, tb,
+                         cfg: ModelConfig, ctx: ShardCtx = LOCAL):
+    """Flat-token time-mix for the token-budget serving step: x (T, 1, d),
+    `tb` a `models.model.TokenBatch` whose per-slot runs are contiguous and
+    position-ordered; state = (shift_tab (B, d), wkv_tab (B, H, hs, hs))
+    slot tables. Token shift and the r/k/v/g/decay projections evaluate in
+    parallel over the batch; only the wkv recurrence scans lane by lane,
+    gathering/scattering each lane's slot row — a single-lane run (pure
+    decode) reproduces `rwkv_time_mix`'s one-step path bitwise, a multi-
+    lane run is the chunk-stepped prompt prefill."""
+    t, _, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    shift_tab, wkv_tab = state
+    x2 = x[:, 0]
+    xx = _token_shift_flat(x2, shift_tab, tb)
+    mu = p["mu"]
+    xr, xk, xv, xg = (_lerp(x2, xx, mu[i]) for i in range(4))
+    r = linear_apply(p["wr"], xr, ctx=ctx)
+    k = linear_apply(p["wk"], xk, ctx=ctx)
+    v = linear_apply(p["wv"], xv, ctx=ctx)
+    g = jax.nn.silu(linear_apply(p["wg"], xg, ctx=ctx))
+    w = _decay(p, xk)
+    to_h = lambda a: a.reshape(t, 1, h, hs)
+    u = p["bonus_u"].reshape(h, hs)
+
+    def body(tab, lane):
+        ri, ki, vi, wi, slot, act = lane
+        y_i, s1 = _wkv_chunk(ri[None], ki[None], vi[None], wi[None], u,
+                             tab[slot][None])
+        tab = jnp.where(act, tab.at[slot].set(s1[0]), tab)
+        return tab, y_i[0, 0]
+
+    wkv_tab, ys = jax.lax.scan(
+        body, wkv_tab, (to_h(r), to_h(k), to_h(v), to_h(w),
+                        tb.slots, tb.active))
+    y = ys.reshape(t, d) * g
+    out = linear_apply(p["wo"], y, ctx=ctx)[:, None, :]
+    out = ctx.constrain(out, "dp", None, None)
+    shift_tab = _last_lane_scatter(shift_tab, x2, tb)
+    return out, (shift_tab, wkv_tab)
+
+
+def rwkv_channel_mix_tokens(p: Params, x: jnp.ndarray,
+                            shift_tab: jnp.ndarray, tb,
+                            cfg: ModelConfig, ctx: ShardCtx = LOCAL):
+    """Flat-token channel-mix (no recurrent state beyond the shift): fully
+    parallel over lanes."""
+    x2 = x[:, 0]
+    xx = _token_shift_flat(x2, shift_tab, tb)
+    mu = p["mu"]
+    xk = _lerp(x2, xx, mu[0])
+    xr = _lerp(x2, xx, mu[1])
+    k = jnp.square(jax.nn.relu(linear_apply(p["wk"], xk, ctx=ctx)))
+    k = ctx.constrain(k[:, None, :], "dp", None, ctx.tp_axis)[:, 0]
+    kv = linear_apply(p["wv"], k, ctx=ctx)
+    r = jax.nn.sigmoid(linear_apply(p["wr"], xr, ctx=ctx))
+    y = (r * kv)[:, None, :]
+    shift_tab = _last_lane_scatter(shift_tab, x2, tb)
+    return ctx.constrain(y, "dp", None, None), shift_tab
+
+
 def rwkv_channel_mix(p: Params, x: jnp.ndarray, shift_prev: jnp.ndarray,
                      cfg: ModelConfig, ctx: ShardCtx = LOCAL, col=None,
                      prefix: str = ""):

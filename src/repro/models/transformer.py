@@ -20,14 +20,16 @@ from repro.configs.base import ModelConfig
 from repro.core.cache_formats import (CacheState, get_cache_format,
                                       insert_slot, layer_cache_format)
 from repro.sharding.context import ShardCtx, LOCAL
-from .attention import (attention_block, attention_decode_block, init_attention,
-                        init_cache)
+from .attention import (attention_block, attention_decode_block,
+                        attention_mixed_block, init_attention, init_cache)
 from .common import init_norm, apply_norm
 from .mlp import init_mlp, mlp_apply
 from .moe import init_moe, moe_apply
-from .rglru import init_rglru, init_rglru_state, rglru_block
+from .rglru import (init_rglru, init_rglru_state, rglru_block,
+                    rglru_block_tokens)
 from .rwkv6 import (init_rwkv_channel_mix, init_rwkv_state, init_rwkv_time_mix,
-                    rwkv_channel_mix, rwkv_time_mix)
+                    rwkv_channel_mix, rwkv_channel_mix_tokens, rwkv_time_mix,
+                    rwkv_time_mix_tokens)
 
 Params = Dict
 
@@ -152,6 +154,59 @@ def block_decode(kind: str, p: Params, x, pos, cache, cfg: ModelConfig,
         h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
         f, _ = _ffn(p, h, cfg, ctx, None, "")
         return x + f, _freeze_inactive(active, rec_state, cache)
+    raise ValueError(kind)
+
+
+def _reset_rows(state: CacheState, reset) -> CacheState:
+    """Zero the state rows of freshly admitted slots (leaves are slot
+    tables, batch-major): the recurrent-state analogue of a prompt starting
+    from blank prefill state. KV caches need no reset — their visibility
+    masks never reach a new occupant's unwritten positions."""
+    if reset is None:
+        return state
+
+    def zero(leaf):
+        r = reset.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(r, jnp.zeros_like(leaf), leaf)
+
+    return CacheState(state.fmt, {k: zero(v) for k, v in state.data.items()})
+
+
+def block_mixed(kind: str, p: Params, x, tb, cache, cfg: ModelConfig,
+                ctx: ShardCtx = LOCAL):
+    """Token-budget step through one block: x (T, 1, d) flat token lanes,
+    `tb` a `models.model.TokenBatch`. One path serves any mix of decode
+    lanes and prompt-chunk lanes; recurrent state rows of freshly admitted
+    slots are zeroed in-graph (tb.reset) before the step touches them.
+    Returns (x, new_cache)."""
+    if kind in ("attn", "local"):
+        h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, cache = attention_mixed_block(p["attn"], h, tb, cache, cfg, kind,
+                                         ctx)
+        x = x + a
+        h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        f, _ = _ffn(p, h, cfg, ctx, None, "")
+        return x + f, cache
+    if kind == "rwkv":
+        st = _reset_rows(cache, tb.reset)
+        h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, (tm_shift, wkv) = rwkv_time_mix_tokens(
+            p["tm"], h, (st["tm_shift"], st["wkv"]), tb, cfg, ctx)
+        x = x + a
+        h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        c, cm_shift = rwkv_channel_mix_tokens(p["cm"], h, st["cm_shift"], tb,
+                                              cfg, ctx)
+        return x + c, CacheState("rwkv_state",
+                                 {"tm_shift": tm_shift, "wkv": wkv,
+                                  "cm_shift": cm_shift})
+    if kind == "rglru":
+        st = _reset_rows(cache, tb.reset)
+        h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, rec_state = rglru_block_tokens(p["rec"], h, st, cfg, tb, ctx)
+        x = x + a
+        h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        f, _ = _ffn(p, h, cfg, ctx, None, "")
+        return x + f, rec_state
     raise ValueError(kind)
 
 
@@ -300,6 +355,32 @@ def stack_decode(params: Params, cache: Params, x, pos, cfg: ModelConfig,
     for i, p in enumerate(params["tail"]):
         x, c = block_decode(pattern[i], p, x, pos, cache["tail"][i], cfg, ctx,
                             active, pages)
+        new_tail.append(c)
+    return x, {"units": new_units, "tail": new_tail}
+
+
+def stack_mixed(params: Params, cache: Params, x, tb, cfg: ModelConfig,
+                ctx: ShardCtx = LOCAL):
+    """Token-budget step through all layers: the mixed-lane twin of
+    `stack_decode` (same unit scan / tail split). Returns (x, new_cache)."""
+    pattern, n_units, _ = pattern_split(cfg)
+    new_units = []
+    if n_units:
+        def body(h, xs):
+            unit_params, unit_cache = xs
+            new_caches = []
+            for p_i, kind in enumerate(pattern):
+                h, c = block_mixed(kind, unit_params[p_i], h, tb,
+                                   unit_cache[p_i], cfg, ctx)
+                new_caches.append(c)
+            return h, tuple(new_caches)
+
+        x, caches = jax.lax.scan(
+            body, x, (tuple(params["units"]), tuple(cache["units"])))
+        new_units = list(caches)
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        x, c = block_mixed(pattern[i], p, x, tb, cache["tail"][i], cfg, ctx)
         new_tail.append(c)
     return x, {"units": new_units, "tail": new_tail}
 

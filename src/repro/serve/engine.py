@@ -1,36 +1,48 @@
-"""Continuous-batching serving engine over a slot-addressed KV cache.
+"""Continuous-batching serving engine on ONE token-budget mixed step.
 
 This is the paper's deployment scenario (§4.3 profiling) made traffic-
 shaped: weight-only LUT-quantized model, memory-bound batched decode. The
 subsystem is split three ways:
 
   scheduler.py — host-side request queue + slot table (`SlotScheduler`):
-      admission into any free slot, per-request eos / length / deadline
-      finish tracking, dense per-slot arrays for the device step.
+      EDF admission into any free slot, chunk scheduling into token-budget
+      lanes, per-request eos / length / deadline finish tracking.
   sampler.py   — per-sequence temperature / top-k sampling with stable
       per-request PRNG streams (results independent of co-scheduling).
   engine.py    — this file: owns the slot-batched cache (one row per
       scheduler slot, every cache variant behind the CacheFormat registry:
       full + ring attention, int8 KV, paged / paged_int8 K/V pools,
       RWKV / RG-LRU recurrent state) and drives ONE jitted fixed-shape
-      decode step with an active mask. New requests are prefilled into free
-      slots mid-flight (`prefill(..., cache=, slot=)` inserts the prompt's
-      per-layer states into the slot row) while other slots keep decoding —
-      no drain barrier, which is what keeps the LUT-mpGEMM decode path busy
-      under mixed-length Poisson traffic.
+      `models.mixed_step`.
+
+The execution surface is a single jit: each step consumes up to
+`token_budget` lanes — one decode token per live slot plus prompt chunks
+of at most `prefill_chunk` tokens for admissions — described by a flat
+`TokenBatch` (LUT-GEMM-style kernels stay efficient as the token dimension
+grows, so prompt chunks and decode tokens share the very same quantized-
+kernel launches). Admitting a 2048-token prompt therefore never stalls
+in-flight decode for more than one budget step, and the compile count is
+bounded by the one static lane shape — there are no per-prompt-length
+prefill compiles. `prefill_chunk=0` keeps the legacy whole-prompt-prefill
+admission (a separate jit per prompt length, decode frozen for the whole
+prefill) as the measured "before" of benchmarks/run.py's TTFT scenario.
 
 Paged serving (`cfg.kv_format` in {'paged', 'paged_int8'}): the cache is a
 per-layer page *pool* sized by `kv_pages` x `kv_page_size` tokens instead
 of n_slots x max_len, a host-side `PageAllocator` hands pages to slots
-lazily as sequences grow, and the (n_slots, max_pages) page table rides
-into the jitted step as a plain array argument — slot count decouples from
-max_len, so long and short requests share HBM and the pool can be sized
-below the dense equivalent (under pressure the scheduler preempts the
-lowest-priority slot by recompute).
+chunk by chunk as prompts feed and sequences grow, and the (n_slots,
+max_pages) page table rides inside the TokenBatch — slot count decouples
+from max_len, so long and short requests share HBM and the pool can be
+sized below the dense equivalent (under pressure the scheduler preempts
+the lowest-priority slot by recompute). Models whose attention is all
+sliding-window additionally release pages that slid fully out of the
+window back to the pool mid-flight.
 
 `generate_batch` keeps the seed engine's static equal-length group path as
 a reference implementation; greedy continuous batching is token-identical
-to it per request (see tests/test_serve_scheduler.py).
+to it per request (see tests/test_serve_scheduler.py and
+tests/test_mixed_step.py) — it IS the whole-prompt-prefill equivalence
+oracle for the chunked path.
 """
 from __future__ import annotations
 
@@ -46,7 +58,8 @@ from repro.configs.base import ModelConfig
 from repro.core.cache_formats import (contiguous_cfg, get_cache_format,
                                       kv_cache_bytes, kv_format_of,
                                       pages_for)
-from repro.models import decode_step, init_serve_cache, prefill
+from repro.models import (TokenBatch, decode_step, init_serve_cache,
+                          mixed_step, prefill)
 from repro.sharding.context import ShardCtx, LOCAL
 from .sampler import request_key, sample_tokens
 from .scheduler import GenRequest, GenResult, PageAllocator, SlotScheduler
@@ -56,15 +69,30 @@ __all__ = ["GenRequest", "GenResult", "ServeEngine"]
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, ctx: ShardCtx = LOCAL,
-                 max_len: int = 512, n_slots: int = 4):
+                 max_len: int = 512, n_slots: int = 4,
+                 prefill_chunk: int = 32, token_budget: int = 0):
         if cfg.is_encoder_decoder:
             raise NotImplementedError("serving is decoder-only")
         self.params = params
         self.ctx = ctx
         self.max_len = max_len
         self.n_slots = n_slots
+        # per-step token budget: every live slot's decode token plus up to
+        # `prefill_chunk` prompt-chunk lanes. 0 restores the legacy
+        # whole-prompt-prefill admission (per-length jits, decode stalls).
+        self.prefill_chunk = prefill_chunk
+        self.token_budget = token_budget or \
+            n_slots + max(prefill_chunk, 0 if prefill_chunk else 1)
+        assert self.token_budget >= n_slots + min(prefill_chunk, 1), \
+            "token budget must cover every slot's decode lane + a chunk"
         fmt = get_cache_format(kv_format_of(cfg))
         self.paged = fmt.paged
+        if self.paged and prefill_chunk == 0:
+            raise ValueError(
+                "prefill_chunk=0 (legacy whole-prompt admission) is the "
+                "contiguous stall baseline only; paged serving admits "
+                "through the chunked token-budget step — pass a chunk "
+                "size >= 1 or a contiguous --kv-format")
         if self.paged:
             ps = cfg.kv_page_size
             self.page_size = ps
@@ -73,22 +101,21 @@ class ServeEngine:
             # pin the pool geometry the cache init reads off the config
             cfg = dataclasses.replace(cfg, kv_pages=self.n_pages)
         self.cfg = cfg
+        # sliding-window page release is sound only when NO attention layer
+        # keeps whole-history reach (every attn layer is 'local')
+        kinds = {k for k in cfg.layer_kinds if k in ("attn", "local")}
+        self.release_window = cfg.sliding_window \
+            if self.paged and kinds == {"local"} else None
         # the static reference path (generate_batch) always decodes on the
         # contiguous twin of the cache format — it IS the token-equivalence
         # oracle the paged path is tested against
         self.ref_cfg = contiguous_cfg(cfg)
-        # the cache is donated: each step/admission rebinds it, and without
-        # donation XLA copies the whole slot-batched KV cache per call
-        if self.paged:
-            self._decode = jax.jit(
-                lambda p, c, t, pos, act, pg: decode_step(
-                    p, c, t, pos, cfg, ctx, act, pg),
-                donate_argnums=(1,))
-        else:
-            self._decode = jax.jit(
-                lambda p, c, t, pos, act: decode_step(p, c, t, pos, cfg, ctx,
-                                                      act),
-                donate_argnums=(1,))
+        # THE serving jit: one fixed-shape token-budget step for decode AND
+        # chunked prefill; the cache is donated — each step rebinds it, and
+        # without donation XLA copies the whole slot-batched KV per call
+        self._mixed = jax.jit(
+            lambda p, c, tb: mixed_step(p, c, tb, cfg, ctx),
+            donate_argnums=(1,))
         self._decode_legacy = jax.jit(
             lambda p, c, t, pos: decode_step(p, c, t, pos, self.ref_cfg,
                                              ctx),
@@ -99,50 +126,50 @@ class ServeEngine:
             return sample_tokens(logits, temps, top_ks, keys)
 
         self._sample = jax.jit(_sample)
-        self._prefill_jits: Dict[int, object] = {}
+        self._prefill_jits: Dict[int, object] = {}   # legacy admission only
         self.last_stats: Dict[str, float] = {}
 
     # -------------------------------------------------- continuous batching
 
-    def _prefill_insert(self, cache, tokens: jnp.ndarray, slot: int,
-                        pages=None):
-        """Jitted per prompt length: prefill one sequence into a slot row
-        (paged formats additionally take the slot's page-table row)."""
+    def _prefill_insert(self, cache, tokens: jnp.ndarray, slot: int):
+        """Legacy admission only (`prefill_chunk=0`): jitted per prompt
+        length — the compile-count and stall profile the unified
+        token-budget step exists to remove."""
         plen = tokens.shape[1]
         fn = self._prefill_jits.get(plen)
         if fn is None:
-            if self.paged:
-                fn = jax.jit(lambda p, c, t, s, pg: prefill(
-                    p, {"tokens": t}, self.cfg, self.ctx,
-                    cache_len=self.max_len, cache=c, slot=s, pages=pg),
-                    donate_argnums=(1,))
-            else:
-                fn = jax.jit(lambda p, c, t, s: prefill(
-                    p, {"tokens": t}, self.cfg, self.ctx,
-                    cache_len=self.max_len, cache=c, slot=s),
-                    donate_argnums=(1,))
+            fn = jax.jit(lambda p, c, t, s: prefill(
+                p, {"tokens": t}, self.cfg, self.ctx,
+                cache_len=self.max_len, cache=c, slot=s),
+                donate_argnums=(1,))
             self._prefill_jits[plen] = fn
-        if self.paged:
-            return fn(self.params, cache, tokens, jnp.int32(slot),
-                      jnp.asarray(pages))
         return fn(self.params, cache, tokens, jnp.int32(slot))
 
     def serve(self, requests: List[GenRequest], seed: int = 0,
               arrival_times: Optional[List[float]] = None,
               n_slots: Optional[int] = None) -> List[GenResult]:
-        """Continuous batching: admit on any free slot, decode a fixed slot
-        batch with an active mask, results in submission order.
+        """Continuous batching on the unified token-budget step: admit on
+        any free slot, lane decode tokens + prompt chunks into ONE jitted
+        fixed-shape `mixed_step`, results in submission order.
 
         `arrival_times` (seconds from call start, per request) simulates an
         open-loop arrival process; requests are not admitted before their
         arrival. Without it, everything is admittable immediately.
         """
         ns = n_slots or self.n_slots
+        legacy = self.prefill_chunk == 0
+        budget = max(self.token_budget, ns + (0 if legacy else 1))
+        # chunks must fit the lanes left after every decode slot's token —
+        # clamped once per serve call so a prompt's chunk boundaries (and
+        # therefore its greedy output) never depend on co-scheduling
+        chunk_cap = self.max_len if legacy \
+            else min(self.prefill_chunk, budget - ns)
         alloc = None
         if self.paged:
             alloc = PageAllocator(self.n_pages, self.page_size, ns,
                                   self.max_pages_per_slot)
-        sched = SlotScheduler(ns, self.max_len, alloc=alloc)
+        sched = SlotScheduler(ns, self.max_len, alloc=alloc,
+                              window=self.release_window)
         submitted = []
         for i, r in enumerate(requests):
             if arrival_times is not None:
@@ -161,9 +188,12 @@ class ServeEngine:
         base_keys = np.zeros((ns, 2), np.uint32)
         t_start = time.perf_counter()
         now = lambda: time.perf_counter() - t_start
-        decode_s = 0.0
-        decode_steps = 0
+        step_s = 0.0
+        steps = 0
         decode_tokens = 0
+        chunk_tokens = 0
+        pure_decode_s = 0.0             # steps carrying no chunk lanes
+        pure_decode_tokens = 0
         prefills = 0
 
         peak_pages = 0
@@ -172,22 +202,26 @@ class ServeEngine:
                 req = sched.next_ready(now(), slot=slot)
                 if req is None:
                     break
-                t0 = time.perf_counter()
-                toks = jnp.asarray([req.prompt], jnp.int32)
-                pages_row = None if alloc is None else alloc.table()[slot]
-                logits, cache = self._prefill_insert(cache, toks, slot,
-                                                     pages_row)
                 bkey = np.asarray(
                     request_key(seed, stream_ids[req.uid]), np.uint32)
-                first = self._sample(
-                    logits, jnp.asarray([req.temperature], jnp.float32),
-                    jnp.asarray([req.top_k], jnp.int32),
-                    jnp.asarray(bkey[None]), jnp.zeros((1,), jnp.int32))
-                first = int(jax.block_until_ready(first)[0])
+                if legacy:
+                    # whole-prompt prefill: one jit per prompt length, the
+                    # entire decode stream frozen while it runs (the stall
+                    # the chunked path exists to remove)
+                    t0 = time.perf_counter()
+                    toks = jnp.asarray([req.prompt], jnp.int32)
+                    logits, cache = self._prefill_insert(cache, toks, slot)
+                    first = self._sample(
+                        logits, jnp.asarray([req.temperature], jnp.float32),
+                        jnp.asarray([req.top_k], jnp.int32),
+                        jnp.asarray(bkey[None]), jnp.zeros((1,), jnp.int32))
+                    first = int(jax.block_until_ready(first)[0])
+                    sched.admit(slot, req, first, now(),
+                                time.perf_counter() - t0)
+                else:
+                    sched.admit_chunked(slot, req, now())
                 base_keys[slot] = bkey
                 prefills += 1
-                sched.admit(slot, req, first, now(),
-                            time.perf_counter() - t0)
 
             if sched.n_active == 0:
                 nxt = sched.next_arrival()
@@ -197,31 +231,51 @@ class ServeEngine:
                 continue
 
             sched.grow_pages(now())     # map next-token pages, evict if dry
-            toks, pos, act, temps, top_ks, nsamp = sched.batch_arrays()
+            lanes = sched.schedule_step(budget, chunk_cap, now())
+            if lanes is None:           # transiently page-starved
+                continue
+            tb = TokenBatch(
+                tokens=jnp.asarray(lanes["tokens"]),
+                slots=jnp.asarray(lanes["slots"]),
+                positions=jnp.asarray(lanes["positions"]),
+                horizon=jnp.asarray(lanes["horizon"]),
+                emit=jnp.asarray(lanes["emit"]),
+                active=jnp.asarray(lanes["active"]),
+                reset=jnp.asarray(lanes["reset"]),
+                pages=None if alloc is None
+                else jnp.asarray(sched.page_table()))
+            temps, top_ks, nsamp = sched.slot_sample_arrays()
             t0 = time.perf_counter()
             if alloc is not None:
                 peak_pages = max(peak_pages, alloc.in_use)
-                logits, cache = self._decode(
-                    self.params, cache, jnp.asarray(toks), jnp.asarray(pos),
-                    jnp.asarray(act), jnp.asarray(sched.page_table()))
-            else:
-                logits, cache = self._decode(
-                    self.params, cache, jnp.asarray(toks), jnp.asarray(pos),
-                    jnp.asarray(act))
+            logits, cache = self._mixed(self.params, cache, tb)
             samp = self._sample(logits, jnp.asarray(temps),
                                 jnp.asarray(top_ks), jnp.asarray(base_keys),
                                 jnp.asarray(nsamp))
             samp = np.asarray(jax.block_until_ready(samp))
-            decode_s += time.perf_counter() - t0
-            decode_steps += 1
-            decode_tokens += int(act.sum())
-            sched.record_step(samp, now())
+            dt = time.perf_counter() - t0
+            step_s += dt
+            steps += 1
+            decode_tokens += int(lanes["n_decode"])
+            chunk_tokens += int(lanes["n_chunk"])
+            if lanes["n_chunk"] == 0:
+                pure_decode_s += dt
+                pure_decode_tokens += int(lanes["n_decode"])
+            sched.record_scheduled(samp, now())
 
         wall = now()
+        # decode_tok_per_s is measured over chunk-free steps only, so it
+        # stays comparable with the pre-chunking engine's decode-only
+        # stepping; step_tok_per_s is the mixed-lane throughput
         self.last_stats = {
-            "wall_s": wall, "decode_s": decode_s,
-            "decode_steps": decode_steps, "decode_tokens": decode_tokens,
-            "decode_tok_per_s": decode_tokens / decode_s if decode_s else 0.0,
+            "wall_s": wall, "decode_s": step_s,
+            "decode_steps": steps, "decode_tokens": decode_tokens,
+            "decode_tok_per_s": pure_decode_tokens / pure_decode_s
+            if pure_decode_s else 0.0,
+            "step_tok_per_s": (decode_tokens + chunk_tokens) / step_s
+            if step_s else 0.0,
+            "chunk_tokens": chunk_tokens, "token_budget": budget,
+            "max_decode_gap_steps": sched.max_decode_gap,
             "prefills": prefills, "slot_reuses": sched.slot_reuses,
             "kv_cache_bytes": kv_cache_bytes(cache),
             "evictions": sched.evictions,
@@ -229,7 +283,8 @@ class ServeEngine:
         if alloc is not None:
             self.last_stats.update(
                 n_pages=self.n_pages, page_size=self.page_size,
-                peak_pages_in_use=peak_pages)
+                peak_pages_in_use=peak_pages,
+                pages_released_by_window=sched.pages_released_by_window)
             alloc.check()
         return [sched.results[u] for u in uids]
 

@@ -1,26 +1,39 @@
-"""Slot scheduler for continuous batching: queue, admission, completion.
+"""Slot scheduler for continuous batching: queue, chunk scheduling, completion.
 
 The scheduler is the host-side half of the serving engine. It owns the
 request queue and a fixed table of `n_slots` decode slots; the device-side
 half (engine.py) owns the slot-batched KV cache whose row i mirrors slot i
 here. Admission is per-slot: whenever a slot frees (eos / length budget /
-deadline), the next arrived request is prefillable into it mid-flight —
-no barrier on the rest of the batch.
+deadline), the next arrived request binds to it mid-flight — no barrier on
+the rest of the batch.
 
 Admission order is EDF (earliest deadline first) over the *arrived* part of
 the queue — requests without a deadline sort last, ties break by arrival
 then submission order, so pure-FIFO workloads behave exactly as before.
 
+Chunk scheduling (`schedule_step`) fills each token-budget step's lanes:
+every decoding slot gets exactly one lane first (an in-flight stream never
+skips a step while the budget covers the slot count), then the remaining
+lanes carry prompt chunks of prefilling slots in EDF order. Chunk
+boundaries are fixed multiples of the chunk cap counted from position 0 —
+never "whatever budget is left" — so a prompt's chunk split (and therefore
+its greedy output) is deterministic regardless of what it is co-scheduled
+with, including after an eviction replay.
+
 For paged KV caches the scheduler also owns the `PageAllocator`: a
-host-side free list over the device page pool. Admission reserves pages
-for the prompt, decode grows a slot's page list lazily as its sequence
-crosses page boundaries, and when the pool runs dry the lowest-priority
-(then least-progress) slot is evicted — its pages return to the pool and
-its request requeues for a fresh prefill (preemption by recompute).
+host-side free list over the device page pool. Pages are reserved per
+CHUNK (not per prompt) as chunks are scheduled, decode grows a slot's page
+list lazily as its sequence crosses page boundaries, and when the pool
+runs dry the lowest-priority (then least-progress) slot is evicted — its
+pages return to the pool and its request requeues for a fresh chunked
+prefill (preemption by recompute). When every attention layer is sliding-
+window ('local'), pages that slide fully out of the window are released
+back to the pool mid-flight (`window=`).
 
 All bookkeeping is numpy/python (one dict lookup per slot per step); the
-dense per-slot arrays handed to the jitted decode step are assembled in
-`batch_arrays` / `page_table`.
+dense per-lane arrays handed to the jitted token-budget step are assembled
+in `schedule_step` / `page_table` (`batch_arrays` serves the legacy
+one-token-per-slot step).
 """
 from __future__ import annotations
 
@@ -50,24 +63,32 @@ class GenRequest:
 @dataclasses.dataclass
 class GenResult:
     tokens: List[int]
-    prefill_s: float = 0.0
+    prefill_s: float = 0.0             # admission -> first token (TTFT)
     decode_s: float = 0.0
     steps: int = 0
     finish_reason: str = "length"      # length | eos | deadline
     done_s: float = 0.0                # completion time, offset from serve()
     evictions: int = 0                 # page-pressure preemptions (restarts)
+    token_times: Optional[List[float]] = None  # per-token sample times
 
 
 @dataclasses.dataclass
 class _Slot:
     req: GenRequest
-    pos: int                           # position of the latest token
+    pos: int                           # position of the latest written token
     cur_token: int                     # latest sampled token (next step input)
     tokens: List[int]
     started_s: float
     prefill_s: float
     steps: int = 0
     evictions: int = 0                 # times this request was preempted
+    fed: int = 0                       # prompt tokens scheduled so far
+    gap: int = 0                       # steps since this stream last sampled
+    times: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.fed < len(self.req.prompt)
 
 
 class PageAllocator:
@@ -75,13 +96,17 @@ class PageAllocator:
 
     Page ids index the per-layer `(n_pages + 1, page_size, ...)` pools of
     the paged CacheFormats (id `n_pages` is the device-side scratch page
-    and is never handed out). Every slot owns a prefix-contiguous list of
-    *logical* pages — entry j of a slot's list holds token positions
-    [j*page_size, (j+1)*page_size) — mapped to arbitrary physical ids.
+    and is never handed out). Every slot owns a list of *logical* pages —
+    entry j of a slot's list holds token positions [j*page_size,
+    (j+1)*page_size) — mapped to arbitrary physical ids. A leading run of
+    entries may be `None`: pages released mid-flight by `release_window`
+    once they slid fully out of a sliding-window model's reach (the table
+    maps them to -1, so reads route to the scratch page and the window
+    mask hides them).
 
     Invariants (property-tested): the free list and the per-slot owned
-    lists are always a disjoint partition of range(n_pages) — no page is
-    leaked or double-owned across admit/grow/release churn.
+    (non-None) entries are always a disjoint partition of range(n_pages) —
+    no page is leaked or double-owned across admit/grow/release churn.
     """
 
     def __init__(self, n_pages: int, page_size: int, n_slots: int,
@@ -105,6 +130,23 @@ class PageAllocator:
     def in_use(self) -> int:
         return self.n_pages - len(self.free)
 
+    def release_window(self, slot: int, pos: int, window: int) -> int:
+        """Free this slot's pages that slid fully out of the sliding window
+        of every present-or-future query (positions <= pos - window can
+        never be attended again once the next token sits at `pos`). Only
+        valid when ALL attention layers are windowed — a single global
+        layer keeps whole-history pages live. Returns pages freed."""
+        freed = 0
+        for j, pg in enumerate(self.owned[slot]):
+            if pg is None:
+                continue
+            if (j + 1) * self.page_size - 1 > pos - window:
+                break                   # logical pages are position-ordered
+            self.free.append(pg)
+            self.owned[slot][j] = None
+            freed += 1
+        return freed
+
     def alloc(self, slot: int, n: int) -> bool:
         """Grow slot's page list by n pages; False (no change) if the free
         list cannot cover it or the slot would exceed max_pages_per_slot."""
@@ -122,23 +164,25 @@ class PageAllocator:
 
     def release(self, slot: int) -> int:
         """Return all of a slot's pages to the pool; returns the count."""
-        n = len(self.owned[slot])
-        self.free.extend(self.owned[slot])
+        live = [p for p in self.owned[slot] if p is not None]
+        self.free.extend(live)
         self.owned[slot] = []
-        return n
+        return len(live)
 
     def table(self) -> np.ndarray:
         """(n_slots, max_pages_per_slot) int32 page table; -1 = unmapped."""
         t = np.full((self.n_slots, self.max_pages_per_slot), -1, np.int32)
         for i, pages in enumerate(self.owned):
-            t[i, :len(pages)] = pages
+            for j, p in enumerate(pages):
+                if p is not None:
+                    t[i, j] = p
         return t
 
     def check(self) -> None:
         """Assert the no-leak / no-double-own invariant."""
         seen = list(self.free)
         for pages in self.owned:
-            seen.extend(pages)
+            seen.extend(p for p in pages if p is not None)
         assert sorted(seen) == list(range(self.n_pages)), \
             (sorted(seen), self.n_pages)
 
@@ -146,26 +190,33 @@ class PageAllocator:
 class SlotScheduler:
     """Request queue + slot table; the engine drives it step by step.
 
-    `alloc` (a PageAllocator) switches on paged-cache bookkeeping: EDF
-    admission only hands out a request once its prompt's pages are
-    reserved (evicting strictly-lower-priority slots to make room), and
-    `grow_pages` extends each live slot's mapping ahead of every decode
-    step.
+    `alloc` (a PageAllocator) switches on paged-cache bookkeeping: chunk
+    scheduling reserves each chunk's pages as it is laned (evicting
+    strictly-lower-priority slots to make room), and `grow_pages` extends
+    each live slot's mapping ahead of every step. `window` (token count)
+    enables mid-flight release of pages that slid fully out of a sliding
+    window — only pass it when every attention layer is 'local'.
     """
 
     def __init__(self, n_slots: int, max_len: int,
-                 alloc: Optional[PageAllocator] = None):
+                 alloc: Optional[PageAllocator] = None,
+                 window: Optional[int] = None):
         assert n_slots >= 1
         self.n_slots = n_slots
         self.max_len = max_len
         self.alloc = alloc
+        self.window = window
         self.queue: deque = deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.results: Dict[int, GenResult] = {}
         self.slot_reuses = 0           # admissions into a previously used slot
         self.evictions = 0             # page-pressure preemptions
+        self.max_decode_gap = 0        # worst steps-between-samples, any stream
+        self.pages_released_by_window = 0
         self._evicted: Dict[int, int] = {}   # uid -> times preempted
         self._used = [False] * n_slots
+        self._step_emits: List[int] = []
+        self._step_reset: List[int] = []
 
     # ------------------------------------------------------------ queue side
 
@@ -193,15 +244,19 @@ class SlotScheduler:
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
+    @staticmethod
+    def _edf_key(req: GenRequest, tie: int) -> Tuple:
+        """EDF ordering key shared by queue admission and chunk-lane
+        scheduling: earliest deadline first, deadline-free last, ties FIFO
+        by arrival then a caller-supplied index."""
+        return (req.deadline_s if req.deadline_s is not None
+                else float("inf"), req.arrival_s, tie)
+
     def _edf_order(self, now_s: float) -> List[int]:
-        """Arrived-request indices in admission order (EDF): earliest
-        deadline first, deadline-free requests last, ties FIFO by
-        arrival then submission order."""
+        """Arrived-request indices in admission order (EDF)."""
         arrived = [i for i, r in enumerate(self.queue)
                    if r.arrival_s <= now_s]
-        return sorted(arrived, key=lambda i: (
-            self.queue[i].deadline_s if self.queue[i].deadline_s is not None
-            else float("inf"), self.queue[i].arrival_s, i))
+        return sorted(arrived, key=lambda i: self._edf_key(self.queue[i], i))
 
     def _evictable_pages(self, below: int) -> int:
         """Pages reclaimable by evicting every active slot with priority
@@ -214,28 +269,16 @@ class SlotScheduler:
                    slot: Optional[int] = None) -> Optional[GenRequest]:
         """Pop the next admittable request (EDF over arrived requests).
 
-        With a PageAllocator, the pop also reserves the prompt's pages for
-        `slot`, evicting strictly-lower-priority active slots when the
-        free list falls short. A candidate whose pages cannot be covered
-        even by eviction is skipped (stays queued) and the next EDF
-        candidate is tried — a page-starved head must not block a
-        higher-priority request that can make its own room.
+        Admission binds a request to a slot without touching the page
+        pool: pages are reserved chunk by chunk as `schedule_step` lanes
+        the prompt (evicting strictly-lower-priority slots under
+        pressure), so a page-starved request occupies a slot but never
+        blocks co-scheduled streams. `slot` is accepted for API
+        compatibility and unused.
         """
+        del slot
         for i in self._edf_order(now_s):
             req = self.queue[i]
-            if self.alloc is not None:
-                assert slot is not None, \
-                    "paged admission needs the target slot"
-                need = self.alloc.pages_for(len(req.prompt) + 1)
-                if self.alloc.available + \
-                        self._evictable_pages(req.priority) < need:
-                    continue           # infeasible now; try next candidate
-                while self.alloc.available < need:
-                    victim = self._eviction_candidate(below=req.priority)
-                    assert victim is not None   # feasibility checked above
-                    self.evict(victim, now_s)
-                if not self.alloc.alloc(slot, need):
-                    continue           # per-slot page cap; try next
             del self.queue[i]
             return req
         return None
@@ -247,33 +290,50 @@ class SlotScheduler:
 
     def admit(self, slot: int, req: GenRequest, first_token: int,
               now_s: float, prefill_s: float) -> bool:
-        """Bind req to slot with its prefill-sampled first token.
-        Returns True if the request finished immediately (it still occupied
-        the slot for zero decode steps)."""
+        """Bind req to slot with its prefill-sampled first token (the
+        legacy whole-prompt-prefill admission). Returns True if the
+        request finished immediately (it still occupied the slot for zero
+        decode steps)."""
         assert self.slots[slot] is None
         if self._used[slot]:
             self.slot_reuses += 1
         self._used[slot] = True
         st = _Slot(req=req, pos=len(req.prompt) - 1, cur_token=first_token,
                    tokens=[first_token], started_s=now_s, prefill_s=prefill_s,
-                   evictions=self._evicted.get(req.uid, 0))
+                   evictions=self._evicted.get(req.uid, 0),
+                   fed=len(req.prompt), times=[now_s])
         self.slots[slot] = st
         return self._maybe_finish(slot, now_s)
+
+    def admit_chunked(self, slot: int, req: GenRequest, now_s: float) -> None:
+        """Bind req to slot for chunked prefill: its prompt will be laned
+        into the token-budget steps by `schedule_step`; the first token
+        samples when the final prompt chunk emits."""
+        assert self.slots[slot] is None
+        if self._used[slot]:
+            self.slot_reuses += 1
+        self._used[slot] = True
+        self.slots[slot] = _Slot(
+            req=req, pos=-1, cur_token=-1, tokens=[], started_s=now_s,
+            prefill_s=0.0, evictions=self._evicted.get(req.uid, 0), fed=0)
 
     # ------------------------------------------------------ paged eviction
 
     def _eviction_candidate(self, below: Optional[int] = None
                             ) -> Optional[int]:
-        """Active slot to preempt: lowest priority, then least decode
-        progress (least recompute wasted). `below` restricts to slots with
-        priority strictly below it (admission never evicts peers)."""
+        """Active slot to preempt: lowest priority, then least computed
+        work (fed prompt tokens + decoded tokens — the recompute an
+        eviction throws away; a nearly-chunked-in long prompt is NOT the
+        cheap victim its empty token list would suggest). `below`
+        restricts to slots with priority strictly below it (chunk
+        reservation never evicts peers)."""
         best, best_key = None, None
         for i, st in enumerate(self.slots):
             if st is None:
                 continue
             if below is not None and st.req.priority >= below:
                 continue
-            key = (st.req.priority, len(st.tokens))
+            key = (st.req.priority, st.fed + len(st.tokens))
             if best_key is None or key < best_key:
                 best, best_key = i, key
         return best
@@ -296,7 +356,10 @@ class SlotScheduler:
     def grow_pages(self, now_s: float) -> None:
         """Map the page each active slot's next token will land on,
         processing high-priority slots first and evicting under pressure
-        (a slot that is itself the lowest-priority one self-evicts)."""
+        (a slot that is itself the lowest-priority one self-evicts).
+        Prefilling slots are skipped — their pages reserve per chunk in
+        `schedule_step`. With `window` set, pages that slid fully out of
+        the sliding window are released back to the pool first."""
         if self.alloc is None:
             return
         order = sorted((i for i, st in enumerate(self.slots)
@@ -306,12 +369,154 @@ class SlotScheduler:
             st = self.slots[i]
             if st is None:              # evicted by an earlier iteration
                 continue
+            if st.prefilling:
+                continue
+            if self.window is not None:
+                self.pages_released_by_window += \
+                    self.alloc.release_window(i, st.pos + 1, self.window)
             while not self.alloc.ensure(i, st.pos + 1):
                 victim = self._eviction_candidate()
                 assert victim is not None, "no active slot to evict"
                 self.evict(victim, now_s)
                 if victim == i:
                     break
+
+    def _reserve_chunk(self, slot: int, st: _Slot, last_pos: int,
+                       now_s: float) -> bool:
+        """Reserve the pages covering a chunk ending at `last_pos`,
+        evicting strictly-lower-priority slots under pressure. Chunks are
+        all-or-nothing (a partial chunk would make the prompt's chunk
+        split, and so its greedy tokens, depend on co-scheduling)."""
+        if self.alloc is None:
+            return True
+        if self.window is not None and st.fed > 0:
+            self.pages_released_by_window += \
+                self.alloc.release_window(slot, st.fed, self.window)
+        while not self.alloc.ensure(slot, last_pos):
+            victim = self._eviction_candidate(below=st.req.priority)
+            if victim is None:
+                return False            # stall this slot; others proceed
+            self.evict(victim, now_s)
+        return True
+
+    # ------------------------------------------------ token-budget stepping
+
+    def schedule_step(self, budget: int, chunk_cap: int,
+                      now_s: float) -> Optional[Dict[str, np.ndarray]]:
+        """Fill one token-budget step's lanes.
+
+        Every decoding slot gets exactly one lane first — an in-flight
+        stream never skips a step while `budget >= n_slots` (asserted in
+        `max_decode_gap`). Remaining lanes carry prompt chunks of
+        prefilling slots in EDF order, in fixed `chunk_cap`-aligned pieces
+        reserved page-by-chunk. Returns dense (budget,) arrays for the
+        jitted `mixed_step` (`None` when nothing could be laned) plus the
+        (n_slots,) reset mask; emit bookkeeping is held until
+        `record_scheduled` folds the step's samples back in.
+        """
+        assert chunk_cap >= 1
+        lanes: List[Tuple[int, int, int, int, bool]] = []
+        reset = np.zeros(self.n_slots, bool)
+        self._step_emits = []
+        for i, st in enumerate(self.slots):     # decode lanes
+            if st is None or st.prefilling or not st.tokens:
+                continue
+            st.gap += 1
+            if len(lanes) >= budget:
+                continue                        # budget-starved stream
+            self.max_decode_gap = max(self.max_decode_gap, st.gap)
+            st.gap = 0
+            lanes.append((i, st.cur_token, st.pos + 1, st.pos + 1, True))
+            self._step_emits.append(i)
+        n_decode = len(lanes)
+        prefilling = [i for i, st in enumerate(self.slots)
+                      if st is not None and st.prefilling]
+        prefilling.sort(key=lambda i: self._edf_key(self.slots[i].req, i))
+        for i in prefilling:                    # chunk lanes
+            st = self.slots[i]
+            if st is None:                      # evicted reserving a peer
+                continue
+            plen = len(st.req.prompt)
+            c = min(chunk_cap, plen - st.fed)
+            if budget - len(lanes) < c:
+                continue                        # whole chunk or nothing
+            if not self._reserve_chunk(i, st, st.fed + c - 1, now_s):
+                continue
+            if self.slots[i] is not st:         # evicted itself? (paranoia)
+                continue
+            if st.fed == 0:
+                reset[i] = True
+            for j in range(st.fed, st.fed + c):
+                lanes.append((i, st.req.prompt[j], j, st.fed,
+                              j == plen - 1))
+            if c and lanes[-1][4]:
+                self._step_emits.append(i)
+            st.fed += c
+            st.pos = st.fed - 1
+        if not lanes:
+            # every lane-less slot is page-starved mid-prefill: force the
+            # standard pressure valve so the system cannot livelock
+            if self.alloc is not None and self.n_active > 0:
+                victim = self._eviction_candidate()
+                if victim is not None:
+                    self.evict(victim, now_s)
+                    if self.n_active > 0:
+                        return self.schedule_step(budget, chunk_cap, now_s)
+            return None
+        out = {k: np.zeros(budget, dt) for k, dt in (
+            ("tokens", np.int32), ("slots", np.int32),
+            ("positions", np.int32), ("horizon", np.int32),
+            ("emit", bool), ("active", bool))}
+        for lane, (slot, tok, pos, hor, emit) in enumerate(lanes):
+            out["tokens"][lane] = tok
+            out["slots"][lane] = slot
+            out["positions"][lane] = pos
+            out["horizon"][lane] = hor
+            out["emit"][lane] = emit
+            out["active"][lane] = True
+        out["reset"] = reset
+        out["n_decode"] = n_decode
+        out["n_chunk"] = len(lanes) - n_decode
+        return out
+
+    def record_scheduled(self, sampled: np.ndarray,
+                         now_s: float) -> List[int]:
+        """Fold the step's per-slot samples back in: decode lanes append
+        their next token, a slot whose final prompt chunk emitted records
+        its FIRST token (TTFT). Returns slots freed this step."""
+        freed = []
+        emits, self._step_emits = self._step_emits, []
+        for i in emits:
+            st = self.slots[i]
+            if st is None:
+                continue
+            tok = int(sampled[i])
+            if not st.tokens:                   # prefill completed
+                st.prefill_s = now_s - st.started_s
+            else:
+                st.pos += 1
+                st.steps += 1
+            st.cur_token = tok
+            st.tokens.append(tok)
+            st.times.append(now_s)
+            if self._maybe_finish(i, now_s):
+                freed.append(i)
+        return freed
+
+    def slot_sample_arrays(self) -> Tuple[np.ndarray, ...]:
+        """(temps, top_ks, n_sampled) dense (n_slots,) for the sampler;
+        n_sampled feeds each request's PRNG stream index (0 = the prompt's
+        first token, exactly as the legacy prefill-time sample)."""
+        temps = np.zeros(self.n_slots, np.float32)
+        top_ks = np.zeros(self.n_slots, np.int32)
+        nsamp = np.zeros(self.n_slots, np.int32)
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            temps[i] = st.req.temperature
+            top_ks[i] = st.req.top_k
+            nsamp[i] = len(st.tokens)
+        return temps, top_ks, nsamp
 
     def _maybe_finish(self, slot: int, now_s: float) -> bool:
         st = self.slots[slot]
@@ -330,7 +535,8 @@ class SlotScheduler:
         self.results[st.req.uid] = GenResult(
             tokens=st.tokens, prefill_s=st.prefill_s,
             decode_s=now_s - st.started_s, steps=st.steps,
-            finish_reason=reason, done_s=now_s, evictions=st.evictions)
+            finish_reason=reason, done_s=now_s, evictions=st.evictions,
+            token_times=st.times)
         if self.alloc is not None:
             self.alloc.release(slot)
         self.slots[slot] = None

@@ -4,6 +4,13 @@ Megatron-style TP over the `model` axis: column-parallel in-projections,
 row-parallel out-projections, vocab-sharded embedding/head, EP expert
 weights sharded on the expert dim. Stacked pattern-unit parameters get
 leading `None`s automatically (rules are written for the base rank).
+
+Quantized containers (QuantizedLinear / QuantizedExperts) are mapped as
+whole leaves: the dense rule resolves from the path once and each child
+leaf's layout mapping lives on the owning `WeightFormat.partition_spec`
+(codes transposed to (out, in), codebook/sparse on the out dim, full fp
+rows replicated) — the format owns its layout here exactly as
+`CacheFormat.partition_spec` owns serve-cache layouts in `cache_specs`.
 """
 from __future__ import annotations
 
@@ -66,37 +73,51 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def spec_for_param(path, leaf, tp_axis: Optional[str]) -> P:
-    """PartitionSpec for one parameter leaf (stacked dims get None).
+def _base_rule(path, tp_axis) -> Optional[Tuple]:
+    """The dense rule spec tuple matching a parameter path (None: no rule,
+    replicate)."""
+    pstr = _path_str(path)
+    for needle, _, builder in _RULES:
+        if needle in pstr:
+            return tuple(builder(tp_axis))
+    return None
 
-    Quantized leaves (children of QuantizedLinear, reached through a
-    FlattenedIndexKey) are TRANSPOSED vs. the dense weight — GANQ stores
-    (m=out, n=in) — so the 2-D rules swap; the codebook/sparse/bias leaves
-    shard on the out (row) dim only.
-    """
+
+def spec_for_param(path, leaf, tp_axis: Optional[str]) -> P:
+    """PartitionSpec for one plain (dense) parameter leaf — stacked
+    pattern-unit dims get leading Nones. Quantized containers
+    (QuantizedLinear / QuantizedExperts) are handled as whole leaves by
+    `quantized_param_specs`: each child's layout rule lives on the owning
+    `WeightFormat.partition_spec`, the way serve-cache rules live on
+    `CacheFormat.partition_spec`."""
     if tp_axis is None:
         return P()
-    pstr = _path_str(path)
-    rank = len(leaf.shape)
-    q_idx = None
-    if path and hasattr(path[-1], "idx") and not hasattr(path[-1], "key"):
-        q_idx = path[-1].idx     # index within QuantizedLinear children
-    for needle, base_rank, builder in _RULES:
-        if needle in pstr:
-            base = tuple(builder(tp_axis))
-            if q_idx is not None and base_rank == 2:
-                in_spec, out_spec = base
-                if q_idx == 0:                       # codes (m, n[/2])
-                    base = (out_spec, in_spec)
-                elif q_idx in (1, 2, 3, 6):          # codebook/sparse/bias
-                    base = ((out_spec,) + (None,) * (rank - 1))[:rank]
-                else:                                # full rows: replicate
-                    return P()
-            if rank < len(base):
-                return P()
-            pad = (None,) * (rank - len(base))
-            return P(*(pad + base))
-    return P()  # norms, gates, biases, small vectors: replicated
+    from repro.core.formats import pad_spec
+    # no matching rule (norms, gates, small vectors) replicates via pad_spec
+    return pad_spec(_base_rule(path, tp_axis), len(leaf.shape))
+
+
+def quantized_param_specs(path, layer, tp_axis: Optional[str]):
+    """A container of PartitionSpecs matching one QuantizedLinear /
+    QuantizedExperts leaf: the dense rule is resolved from the path once,
+    then each child leaf asks the owning `WeightFormat.partition_spec` for
+    its layout's mapping (codes transposed, codebook on the out dim, ...).
+    Returns the same container type with specs in the array slots, so the
+    flattened tree aligns leaf-for-leaf with the parameter tree."""
+    from repro.core.formats import get_format
+
+    base = _base_rule(path, tp_axis) if tp_axis is not None else None
+    fmt = get_format(layer.fmt)
+    children, aux = layer.tree_flatten()
+    specs = [None if c is None
+             else fmt.partition_spec(name, base, len(c.shape))
+             for name, c in zip(type(layer).CHILDREN, children)]
+    return type(layer).tree_unflatten(aux, specs)
+
+
+def _is_container(x) -> bool:
+    from repro.core.types import QuantizedExperts, QuantizedLinear
+    return isinstance(x, (QuantizedLinear, QuantizedExperts))
 
 
 def _drop_nondividing(spec: P, shape, mesh: Mesh) -> P:
@@ -125,14 +146,27 @@ def _drop_nondividing(spec: P, shape, mesh: Mesh) -> P:
 def param_shardings(params, mesh: Mesh, tp_axis: Optional[str] = "model"):
     """NamedSharding tree matching `params` (works on ShapeDtypeStructs)."""
     def one(path, leaf):
+        if _is_container(leaf):
+            specs = quantized_param_specs(path, leaf, tp_axis)
+            spec_children, aux = specs.tree_flatten()
+            children, _ = leaf.tree_flatten()
+            out = [None if c is None else NamedSharding(
+                mesh, _drop_nondividing(s, c.shape, mesh))
+                for c, s in zip(children, spec_children)]
+            return type(leaf).tree_unflatten(aux, out)
         spec = spec_for_param(path, leaf, tp_axis)
         return NamedSharding(mesh, _drop_nondividing(spec, leaf.shape, mesh))
-    return jax.tree_util.tree_map_with_path(one, params)
+    return jax.tree_util.tree_map_with_path(one, params,
+                                            is_leaf=_is_container)
 
 
 def param_specs(params, tp_axis: Optional[str] = "model"):
-    return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: spec_for_param(path, leaf, tp_axis), params)
+    def one(path, leaf):
+        if _is_container(leaf):
+            return quantized_param_specs(path, leaf, tp_axis)
+        return spec_for_param(path, leaf, tp_axis)
+    return jax.tree_util.tree_map_with_path(one, params,
+                                            is_leaf=_is_container)
 
 
 # ------------------------------------------------------------ serve caches

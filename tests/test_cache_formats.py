@@ -184,26 +184,45 @@ def test_edf_respects_arrival_times():
     assert s.next_ready(11.0) is r_future
 
 
-def test_paged_admission_reserves_and_evicts_lower_priority():
+def test_paged_chunk_scheduling_reserves_and_evicts_lower_priority():
+    """Pages reserve per CHUNK as prompts are laned (not per prompt at
+    admission); a higher-priority slot's chunk evicts a strictly-lower-
+    priority active slot when the pool runs dry, an equal-priority one
+    stalls without starving co-scheduled streams."""
     alloc = PageAllocator(n_pages=4, page_size=8, n_slots=2,
                           max_pages_per_slot=4)
     s = SlotScheduler(n_slots=2, max_len=32, alloc=alloc)
     low = SchedRequest(prompt=[1] * 20, max_new=4, priority=0)
     s.submit(low)
     req = s.next_ready(0.0, slot=0)
-    assert req is low and len(alloc.owned[0]) == 3   # 21 tokens -> 3 pages
-    s.admit(0, req, first_token=5, now_s=0.0, prefill_s=0.0)
-    # equal priority cannot evict: stays queued
+    assert req is low and len(alloc.owned[0]) == 0   # admission: no pages
+    s.admit_chunked(0, req, now_s=0.0)
+    lanes = s.schedule_step(budget=32, chunk_cap=32, now_s=0.0)
+    assert lanes["n_chunk"] == 20                    # whole prompt laned
+    assert len(alloc.owned[0]) == 3                  # chunk reserved 3 pages
+    s.record_scheduled(np.asarray([5, 0]), now_s=0.0)
+    assert s.slots[0].tokens == [5]
+    # an equal-priority peer cannot evict: it binds but its chunk stalls
+    # while slot 0's decode lane keeps running every step
     peer = SchedRequest(prompt=[2] * 20, max_new=4, priority=0)
     s.submit(peer)
-    assert s.next_ready(0.0, slot=1) is None
-    # higher priority evicts the active low-priority slot
-    vip = SchedRequest(prompt=[3] * 20, max_new=4, priority=1)
+    s.admit_chunked(1, s.next_ready(0.0, slot=1), now_s=0.0)
+    lanes = s.schedule_step(budget=32, chunk_cap=32, now_s=0.1)
+    assert lanes["n_decode"] == 1 and lanes["n_chunk"] == 0
+    assert len(alloc.owned[1]) == 0
+    s.record_scheduled(np.asarray([6, 0]), now_s=0.1)
+    # a higher-priority request's chunk evicts the low-priority decoder
+    s.evict(1, now_s=0.2)                            # free the peer's slot
+    vip = SchedRequest(prompt=[3] * 20, max_new=4, priority=1,
+                       deadline_s=1.0)
     s.submit(vip)
-    got = s.next_ready(0.0, slot=1)
-    assert got is vip
-    assert s.slots[0] is None and s.evictions == 1
-    assert low in s.queue                  # preempted request requeued
+    assert s.next_ready(0.2, slot=1) is vip          # EDF: deadline first
+    s.admit_chunked(1, vip, now_s=0.2)
+    lanes = s.schedule_step(budget=32, chunk_cap=32, now_s=0.2)
+    assert lanes["n_chunk"] == 20                    # vip's chunk laned
+    assert s.slots[0] is None and s.evictions >= 2   # low evicted for pages
+    assert low in s.queue                            # preempted: requeued
+    assert len(alloc.owned[1]) == 3
     alloc.check()
 
 

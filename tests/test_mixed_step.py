@@ -1,0 +1,272 @@
+"""Unified token-budget step: chunked prefill piggybacked on decode.
+
+Chunked-vs-whole prefill greedy token-equivalence across every cache
+format (full / int8 / paged / paged_int8 / rwkv_state / rglru_state) via
+the slot engine, the one-compile property of the fixed-shape step, the
+no-decode-gap guarantee while long prompts admit, sliding-window page
+release under churn, and the WeightFormat-owned quantized sharding rules.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.data.synthetic import MarkovStream
+from repro.models import init_params
+from repro.serve.engine import GenRequest, ServeEngine
+from repro.serve.scheduler import PageAllocator, SlotScheduler
+from repro.serve.scheduler import GenRequest as SchedRequest
+
+
+def _setup(arch="deepseek-7b"):
+    cfg = reduce_config(get_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    data = MarkovStream(cfg.vocab_size, batch=4, seq=32, seed=0)
+    return cfg, params, data
+
+
+# ----------------------------------- chunked == whole-prompt, every format
+
+def _chunked_equiv(arch, cfg_tf, batch_at=3, prefill_chunk=4, max_len=48):
+    """Engine with a small prefill chunk (prompts span several steps) must
+    emit greedy tokens identical to the whole-prompt-prefill oracle
+    (`generate_batch`), request by request."""
+    cfg, params, data = _setup(arch)
+    cfg = cfg_tf(cfg)
+    toks = data.batch_at(batch_at)["tokens"]
+    reqs = [GenRequest(prompt=toks[i, :l].tolist(), max_new=m)
+            for i, (l, m) in enumerate([(9, 4), (12, 3), (6, 4)])]
+    eng = ServeEngine(params, cfg, max_len=max_len, n_slots=2,
+                      prefill_chunk=prefill_chunk)
+    cont = eng.serve(reqs)
+    for r, c in zip(reqs, cont):
+        ref = eng.generate_batch(
+            [GenRequest(prompt=r.prompt, max_new=r.max_new)])
+        assert c.tokens == ref[0].tokens, (c.tokens, ref[0].tokens)
+    return eng
+
+
+def test_chunked_equivalence_full():
+    eng = _chunked_equiv("deepseek-7b", lambda c: c)
+    assert eng.last_stats["chunk_tokens"] > 0
+    assert eng.last_stats["max_decode_gap_steps"] <= 1
+
+
+def test_chunked_equivalence_int8():
+    _chunked_equiv("deepseek-7b",
+                   lambda c: dataclasses.replace(c, kv_quant_bits=8))
+
+
+def test_chunked_equivalence_paged():
+    _chunked_equiv("deepseek-7b", lambda c: dataclasses.replace(
+        c, kv_format="paged", kv_page_size=8))
+
+
+def test_chunked_equivalence_paged_int8():
+    _chunked_equiv("deepseek-7b", lambda c: dataclasses.replace(
+        c, kv_format="paged_int8", kv_page_size=8))
+
+
+def test_chunked_equivalence_ring_and_rglru():
+    """recurrentgemma: sliding-window ring + RG-LRU state — recurrent
+    chunk-stepped prefill and the windowed ring share the step."""
+    _chunked_equiv("recurrentgemma-2b", lambda c: c, batch_at=6)
+
+
+def test_chunked_equivalence_rglru_paged():
+    _chunked_equiv("recurrentgemma-2b", lambda c: dataclasses.replace(
+        c, kv_format="paged", kv_page_size=4), batch_at=6)
+
+
+def test_chunked_equivalence_rwkv():
+    _chunked_equiv("rwkv6-7b", lambda c: c, batch_at=9)
+
+
+def test_chunked_matches_legacy_whole_prefill_admission():
+    """prefill_chunk=0 keeps the legacy per-length-jit whole-prompt
+    admission (the stall baseline): same requests, same greedy tokens."""
+    cfg, params, data = _setup()
+    toks = data.batch_at(4)["tokens"]
+    reqs = [GenRequest(prompt=toks[i, :l].tolist(), max_new=3)
+            for i, l in enumerate([8, 12, 6])]
+    legacy = ServeEngine(params, cfg, max_len=48, n_slots=2, prefill_chunk=0)
+    chunked = ServeEngine(params, cfg, max_len=48, n_slots=2,
+                          prefill_chunk=4)
+    a = legacy.serve(reqs)
+    b = chunked.serve(reqs)
+    for x, y in zip(a, b):
+        assert x.tokens == y.tokens, (x.tokens, y.tokens)
+    assert legacy.last_stats["chunk_tokens"] == 0
+    assert len(legacy._prefill_jits) > 0       # the compile cost chunking kills
+    assert len(chunked._prefill_jits) == 0
+
+
+# --------------------------------------------- one compile, any length mix
+
+def test_unified_step_compiles_once_across_prompt_lengths():
+    """The token-budget step is ONE static shape: serving wildly different
+    prompt-length mixes must not add compiles (no per-length buckets)."""
+    cfg, params, data = _setup()
+    eng = ServeEngine(params, cfg, max_len=64, n_slots=2, prefill_chunk=8)
+    toks = data.batch_at(5)["tokens"]
+    eng.serve([GenRequest(prompt=toks[0, :6].tolist(), max_new=2)])
+    if not hasattr(eng._mixed, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    assert eng._mixed._cache_size() == 1
+    eng.serve([GenRequest(prompt=toks[i % 4, :l].tolist(), max_new=2)
+               for i, l in enumerate([5, 11, 17, 23, 9])])
+    eng.serve([GenRequest(prompt=toks[0, :31].tolist(), max_new=2)])
+    assert eng._mixed._cache_size() == 1       # still the one signature
+    assert len(eng._prefill_jits) == 0
+
+
+# ------------------------------------------------- admission never stalls
+
+def test_long_admission_no_decode_gap_and_token_identical():
+    """A long prompt admitted while other slots decode: every in-flight
+    stream still samples every step (gap == 1 budget step) and greedy
+    tokens equal the whole-prompt oracle."""
+    cfg, params, data = _setup()
+    long_data = MarkovStream(cfg.vocab_size, batch=1, seq=96, seed=3)
+    long_prompt = long_data.batch_at(0)["tokens"][0, :80].tolist()
+    toks = data.batch_at(7)["tokens"]
+    reqs = [GenRequest(prompt=toks[0, :8].tolist(), max_new=12),
+            GenRequest(prompt=toks[1, :6].tolist(), max_new=12),
+            GenRequest(prompt=long_prompt, max_new=4)]
+    eng = ServeEngine(params, cfg, max_len=128, n_slots=3, prefill_chunk=16)
+    # the long prompt arrives once the short ones are mid-decode
+    eng.serve(reqs)                            # warm the jit off the clock
+    res = eng.serve(reqs, arrival_times=[0.0, 0.0, 0.25])
+    assert eng.last_stats["max_decode_gap_steps"] <= 1
+    assert eng.last_stats["chunk_tokens"] >= len(long_prompt)
+    for r, c in zip(reqs, res):
+        ref = eng.generate_batch(
+            [GenRequest(prompt=r.prompt, max_new=r.max_new)])
+        assert c.tokens == ref[0].tokens, (c.tokens, ref[0].tokens)
+
+
+def test_scheduler_decode_lanes_every_step():
+    """Scheduler-level gap guarantee: with budget >= n_slots, every
+    decoding slot lanes exactly once per step while a prompt chunks."""
+    s = SlotScheduler(n_slots=3, max_len=256)
+    s.admit(0, SchedRequest(prompt=[1, 2], max_new=50), first_token=7,
+            now_s=0.0, prefill_s=0.0)
+    s.admit(1, SchedRequest(prompt=[3], max_new=50), first_token=8,
+            now_s=0.0, prefill_s=0.0)
+    s.admit_chunked(2, SchedRequest(prompt=list(range(100)), max_new=4),
+                    now_s=0.0)
+    for step in range(10):
+        lanes = s.schedule_step(budget=3 + 16, chunk_cap=16, now_s=0.1)
+        nd = lanes["n_decode"]
+        # slots 0/1 decode every step; slot 2 joins them once its 100-token
+        # prompt finishes chunking (6 x 16 + 4 after step 6)
+        assert nd == (2 if step <= 6 else 3)
+        assert sorted(lanes["slots"][:nd].tolist()) == [0, 1, 2][:nd]
+        chunk = int(lanes["active"].sum()) - nd
+        assert chunk == (16 if step < 6 else (4 if step == 6 else 0))
+        sampled = np.asarray([11 + step, 12 + step, 13 + step])
+        s.record_scheduled(sampled, now_s=0.1 * (step + 1))
+    assert s.max_decode_gap == 1
+    # slot 2 sampled its first token the step its last chunk emitted, then
+    # decoded to max_new=4 and finished
+    done = [r for r in s.results.values() if len(r.tokens) == 4]
+    assert len(done) == 1 and done[0].prefill_s > 0
+
+
+# ------------------------------------------- sliding-window page release
+
+def test_window_page_release_paged_local_only():
+    """recurrentgemma (all attention is sliding-window): paged serving
+    releases pages that slid out of the window, stays token-identical to
+    the contiguous twin, and the allocator invariant holds."""
+    cfg, params, _ = _setup("recurrentgemma-2b")
+    long_data = MarkovStream(cfg.vocab_size, batch=1, seq=64, seed=4)
+    toks = long_data.batch_at(0)["tokens"][0]
+    reqs = [GenRequest(prompt=toks[:40].tolist(), max_new=8),
+            GenRequest(prompt=toks[:25].tolist(), max_new=8)]
+    cfgp = dataclasses.replace(cfg, kv_format="paged", kv_page_size=4)
+    eng_p = ServeEngine(params, cfgp, max_len=64, n_slots=2,
+                        prefill_chunk=8)
+    assert eng_p.release_window == cfg.sliding_window
+    res_p = eng_p.serve(reqs)
+    assert eng_p.last_stats["pages_released_by_window"] > 0
+    eng_c = ServeEngine(params, cfg, max_len=64, n_slots=2, prefill_chunk=8)
+    for a, b in zip(res_p, eng_c.serve(reqs)):
+        assert a.tokens == b.tokens, (a.tokens, b.tokens)
+    # a model with any global-attention layer must NOT release
+    cfg_g, params_g, _ = _setup("deepseek-7b")
+    cfg_gp = dataclasses.replace(cfg_g, kv_format="paged", kv_page_size=8)
+    assert ServeEngine(params_g, cfg_gp, max_len=64).release_window is None
+
+
+def test_page_allocator_window_release_churn():
+    """Invariant under admit/grow/window-release/release churn: no page
+    leaked or double-owned, released holes map to -1 in the table."""
+    rng = np.random.default_rng(11)
+    alloc = PageAllocator(n_pages=17, page_size=4, n_slots=3,
+                          max_pages_per_slot=8)
+    pos = [0, 0, 0]
+    for _ in range(600):
+        op = rng.integers(0, 4)
+        slot = int(rng.integers(0, 3))
+        if op == 0:
+            alloc.alloc(slot, int(rng.integers(1, 3)))
+        elif op == 1:
+            pos[slot] = int(rng.integers(0, 32))
+            alloc.ensure(slot, pos[slot])
+        elif op == 2:
+            alloc.release_window(slot, pos[slot], window=8)
+        else:
+            alloc.release(slot)
+            pos[slot] = 0
+        alloc.check()
+        t = alloc.table()
+        for i in range(3):
+            for j, p in enumerate(alloc.owned[i]):
+                assert t[i, j] == (-1 if p is None else p)
+    assert alloc.available + alloc.in_use == 17
+
+
+# ------------------------------- WeightFormat-owned quantized sharding
+
+def test_quantized_partition_specs_live_on_weight_format():
+    """`spec_for_param`'s FlattenedIndexKey switch moved onto
+    `WeightFormat.partition_spec`: codes are transposed vs the dense rule,
+    codebook/sparse shard the out dim, full fp rows replicate — and the
+    spec tree flattens leaf-for-leaf with the parameter tree."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import QuantConfig
+    from repro.models.quantized import quantize_model_ptq
+    from repro.sharding.partition import param_specs
+
+    cfg, params, data = _setup()
+    calib = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    qp, _ = quantize_model_ptq(
+        params, cfg, calib,
+        QuantConfig(bits=4, iters=2, precondition="fixed",
+                    outlier_ratio=0.01, full_rows=1), "ganq")
+    specs = param_specs(qp, "model")
+    flat_p = jax.tree_util.tree_flatten_with_path(qp)[0]
+    flat_s = jax.tree.leaves(specs)
+    assert len(flat_p) == len(flat_s)
+    by_path = {"/".join(str(getattr(k, "key", getattr(k, "idx", "")))
+                        for k in path): (leaf, spec)
+               for (path, leaf), spec in zip(flat_p, flat_s)}
+    # wq: dense rule (None, tp); container children are unit-stacked
+    codes, s_codes = by_path["stack/units/0/attn/wq/0"]
+    assert s_codes == P(None, "model", None)       # (U, m, n): out first
+    book, s_book = by_path["stack/units/0/attn/wq/1"]
+    assert book.shape[-1] == 16 and s_book == P(None, "model", None)
+    # w_down: dense rule (tp, None) -> codes shard the in (column) dim
+    _, s_down = by_path["stack/units/0/mlp/w_down/0"]
+    assert s_down == P(None, None, "model")
+    _, s_down_book = by_path["stack/units/0/mlp/w_down/1"]
+    assert s_down_book == P(None, None, None)      # out replicated
+    # sparse outliers follow the out dim; full rows replicate
+    _, s_sp = by_path["stack/units/0/attn/wq/2"]
+    assert s_sp == P(None, "model", None)
+    _, s_fr = by_path["stack/units/0/attn/wq/4"]
+    assert s_fr == P()
