@@ -495,6 +495,92 @@ def bench_chunked_prefill_ttft(out_path=None):
     return results
 
 
+def bench_speculative(out_path=None):
+    """Self-speculative serving on nested-bitstream draft weights: the
+    trained small LM is quantized to the 4-bit `lut4_nested` layout and
+    served at spec_k in {0, 2, 4} with 3-bit drafts on a mixed-length
+    greedy workload. Tracks accepted tok/s and step tok/s against the
+    spec_k=0 baseline (PR 5's unified token-budget step), the measured
+    accept rate, and the code-bytes-read ratio of a draft pass vs a full
+    pass (ceil(n*3/8) / ceil(n*4/8) per row — the nested format's whole
+    point). Greedy tokens must be identical at every spec_k."""
+    from pathlib import Path
+    from repro.core import QuantConfig
+    from repro.core.policy import PrecisionPolicy
+    from repro.core.packing import code_stream_bytes
+    from repro.core.types import QuantizedExperts, QuantizedLinear
+    from repro.core.formats import get_format
+    from repro.models.quantized import quantize_model_ptq
+    from repro.serve.engine import GenRequest, ServeEngine
+    cfg, params, data = _trained_small_lm()
+    pol = PrecisionPolicy(qcfg=QuantConfig(bits=4), fmt="lut4_nested",
+                          method="rtn")
+    qp, _ = quantize_model_ptq(params, cfg,
+                               {k: jnp.asarray(v)
+                                for k, v in data.batch_at(0).items()},
+                               policy=pol)
+
+    # weight-stream bytes a draft pass reads vs a full pass, over every
+    # nested container (the shared-bitstream prefix property)
+    full_b = draft_b = 0
+
+    def visit(node):
+        nonlocal full_b, draft_b
+        if isinstance(node, (QuantizedLinear, QuantizedExperts)):
+            f = get_format(node.fmt)
+            if not f.draft_bits:
+                return
+            n = node.n_cols
+            rows = int(np.prod(node.codes.shape[:-1]))
+            full_b += rows * code_stream_bytes(n, 4)
+            draft_b += rows * code_stream_bytes(n, f.draft_bits)
+    jax.tree.map(visit, qp,
+                 is_leaf=lambda x: isinstance(x, (QuantizedLinear,
+                                                  QuantizedExperts)))
+    bytes_ratio = draft_b / max(full_b, 1)
+
+    n_slots, max_new, max_len = 4, 24, 192
+    lengths = [16, 48, 96, 16, 48, 16]
+    toks = MarkovStream(cfg.vocab_size, batch=1, seq=96,
+                        seed=5).batch_at(0)["tokens"][0]
+    reqs = [GenRequest(prompt=toks[:l].tolist(), max_new=max_new)
+            for l in lengths]
+    results = {"scenario": {
+        "prompt_lengths": lengths, "max_new": max_new, "n_slots": n_slots,
+        "draft_bits": 3, "quant": "rtn@4bit lut4_nested",
+        "draft_code_bytes_over_full": round(bytes_ratio, 4)}}
+    tokens = {}
+    for k in (0, 2, 4):
+        engine = ServeEngine(qp, cfg, max_len=max_len, n_slots=n_slots,
+                             spec_k=k, draft_bits=3 if k else 0)
+        engine.serve(reqs)                         # warm the jits
+        res = engine.serve(reqs)
+        st = engine.last_stats
+        tokens[k] = [r.tokens for r in res]
+        # per speculative round the weight reads are k draft passes at
+        # the prefix width + 1 verify at full width, vs k+1 full passes
+        round_ratio = (k * bytes_ratio + 1) / (k + 1)
+        row = {"step_tok_per_s": round(st["step_tok_per_s"], 2),
+               "accepted_tok_per_s": round(st["accepted_tok_per_s"], 2),
+               "accept_rate": round(st["accept_rate"], 4),
+               "spec_rounds": st["spec_rounds"],
+               "drafted_tokens": st["drafted_tokens"],
+               "weight_bytes_read_vs_baseline": round(round_ratio, 4)}
+        results[f"spec_k_{k}"] = row
+        _row(f"speculative_k{k}", st["wall_s"] * 1e6,
+             f"step_tok_s={row['step_tok_per_s']:.1f} "
+             f"accepted_tok_s={row['accepted_tok_per_s']:.1f} "
+             f"accept_rate={row['accept_rate']:.2f}")
+    results["tokens_identical"] = (tokens[0] == tokens[2] == tokens[4])
+    assert results["tokens_identical"], "speculative decode diverged!"
+    _row("speculative_bytes_ratio", 0.0,
+         f"draft/full={bytes_ratio:.3f} "
+         f"tokens_identical={results['tokens_identical']}")
+    path = Path(out_path or Path(__file__).parent / "BENCH_serving.json")
+    _merge_bench_json(path, {"speculative": results})
+    return results
+
+
 # -------------------------------------------- mixed-precision policy
 
 
@@ -592,6 +678,7 @@ _ALL_BENCHES = [
     "bench_serving_throughput",
     "bench_paged_serving",
     "bench_chunked_prefill_ttft",
+    "bench_speculative",
     "bench_mixed_precision_serving",
     "bench_table7_precondition",
     "bench_fig1b_weight_stats",

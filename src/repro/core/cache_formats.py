@@ -256,6 +256,16 @@ class CacheFormat:
         token at the same ring slot)."""
         raise NotImplementedError(self.name)
 
+    def read_rows(self, cache: CacheState, slots: jnp.ndarray,
+                  pos: jnp.ndarray, pages=None) -> Dict:
+        """Inverse of `write_at`: the container rows currently stored at
+        (slots[t], pos[t]) — bitwise, in `step_rows` form, so
+        `write_at(cache, read_rows(...), slots, pos, keep)` restores those
+        cells exactly. The speculative engine snapshots the cells its draft
+        lanes will clobber and rolls rejected writes back through this
+        round trip."""
+        raise NotImplementedError(self.name)
+
     def visible(self, cache: CacheState, pos, kind: str, window: int,
                 pages=None) -> jnp.ndarray:
         """(B, W) bool: which entries of the `read` view may be attended."""
@@ -359,6 +369,60 @@ def token_write_view(cache: CacheState, k_new: jnp.ndarray,
     return cache, view, visible
 
 
+def _state_cells(st: CacheState, slots, pos, pages, stacked: bool):
+    """Snapshot one layer entry's cells at (slots[t], pos[t]) in step_rows
+    form; None for recurrent state (no addressable cells to roll back)."""
+    f = get_cache_format(st.fmt)
+    if not f.kv:
+        return None
+    if stacked:                       # unit-stacked leaves (U, B/P, ...)
+        return jax.vmap(lambda data: f.read_rows(
+            CacheState(st.fmt, data), slots, pos, pages=pages))(st.data)
+    return f.read_rows(st, slots, pos, pages=pages)
+
+
+def _state_restore(st: CacheState, rows, slots, pos, keep, pages,
+                   stacked: bool) -> CacheState:
+    if rows is None:
+        return st
+    f = get_cache_format(st.fmt)
+    if stacked:
+        return CacheState(st.fmt, jax.vmap(
+            lambda data, r: f.write_at(CacheState(st.fmt, data), r, slots,
+                                       pos, keep, pages=pages).data)(
+            st.data, rows))
+    return f.write_at(st, rows, slots, pos, keep, pages=pages)
+
+
+def snapshot_cells(cache_tree, slots: jnp.ndarray, pos: jnp.ndarray,
+                   pages=None):
+    """Bitwise snapshot of every attention-KV cell a flat (slots[t],
+    pos[t]) token batch would write, across a whole stack cache tree
+    ({"units": [...], "tail": [...]}). Paired with `restore_cells` this is
+    the speculative-decoding rollback primitive: snapshot before the
+    draft/verify round, restore the rejected lanes after — the cache ends
+    bitwise identical to having only ever written the accepted tokens.
+    Entries for recurrent-state layers are None (not rollback-capable; the
+    engine refuses to speculate on such stacks)."""
+    units = [None if st is None else _state_cells(st, slots, pos, pages, True)
+             for st in cache_tree["units"]]
+    tail = [_state_cells(st, slots, pos, pages, False)
+            for st in cache_tree["tail"]]
+    return {"units": units, "tail": tail}
+
+
+def restore_cells(cache_tree, snap, slots: jnp.ndarray, pos: jnp.ndarray,
+                  keep: jnp.ndarray, pages=None):
+    """Write snapshot rows back at (slots[t], pos[t]) where keep[t] — the
+    inverse of the speculative round's writes for rejected lanes."""
+    units = [st if st is None else
+             _state_restore(st, rows, slots, pos, keep, pages, True)
+             for st, rows in zip(cache_tree["units"], snap["units"])]
+    tail = [_state_restore(st, rows, slots, pos, keep, pages, False)
+            for st, rows in zip(cache_tree["tail"], snap["tail"])]
+    return {"units": units, "tail": tail}
+
+
 def kv_cache_bytes(cache_tree) -> int:
     """Total bytes held by attention-KV containers in a cache tree (paged
     pools count their allocation incl. the scratch page; recurrent state is
@@ -460,6 +524,11 @@ class FullKVFormat(CacheFormat):
             key: cache.data[key].at[b, pos % w].set(
                 rows[key].astype(cache.data[key].dtype), mode="drop")
             for key in cache.data})
+
+    def read_rows(self, cache, slots, pos, pages=None):
+        w = cache["k"].shape[1]
+        return {key: cache.data[key][slots, pos % w]
+                for key in cache.data}
 
     def read(self, cache, dtype, pages=None):
         return cache["k"].astype(dtype), cache["v"].astype(dtype)
@@ -596,6 +665,16 @@ class _PagedBase(CacheFormat):
             key + "_pages": cache.data[key + "_pages"].at[pg, off].set(
                 rows[key].astype(cache.data[key + "_pages"].dtype))
             for key in rows})
+
+    def read_rows(self, cache, slots, pos, pages=None):
+        assert pages is not None, "paged cache read needs a page table"
+        ps = cache["k_pages"].shape[1]
+        pt = pages[slots]                                 # (T, MP)
+        pg = jnp.take_along_axis(pt, (pos // ps)[:, None], axis=1)[:, 0]
+        pg, _ = self._safe_pages(cache, pg)
+        off = pos % ps
+        return {key[:-len("_pages")]: cache.data[key][pg, off]
+                for key in cache.data}
 
     def visible(self, cache, pos, kind, window, pages=None):
         assert pages is not None, "paged cache read needs a page table"

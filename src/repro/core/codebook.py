@@ -101,6 +101,45 @@ def weighted_kmeans(w: jnp.ndarray, weights: jnp.ndarray, bits: int,
     return t
 
 
+# ------------------------------------------------- nested (prefix) codebooks
+
+def nested_order(codebook: jnp.ndarray, codes: jnp.ndarray):
+    """Reorder a per-row codebook ascending and remap codes to match.
+
+    Sorting is what makes bit-prefix nesting valid (Any-Precision LLM):
+    after it, the high `db` bits of a code index one of 2**db groups of
+    2**rb *consecutive* codebook entries — a contiguous value range — so
+    dropping the low bits degrades each weight to its group's
+    representative instead of an arbitrary entry. Dequantization is
+    unchanged (same (entry, weight) pairing, permuted indices).
+
+    codebook: (..., m, L); codes: (..., m, n) uint8 indices into the last
+    codebook axis. Returns (sorted_codebook, remapped_codes).
+    """
+    order = jnp.argsort(codebook, axis=-1)
+    rank = jnp.argsort(order, axis=-1)          # rank[s] = new index of s
+    new_codes = jnp.take_along_axis(rank, codes.astype(jnp.int32), axis=-1)
+    return jnp.sort(codebook, axis=-1), new_codes.astype(jnp.uint8)
+
+
+def nested_codebooks(codebook: jnp.ndarray, draft_bits: int) -> jnp.ndarray:
+    """Coarse 2**draft_bits-entry codebook nested in a sorted fine one.
+
+    Entry d of the draft book represents the group of consecutive sorted
+    entries whose codes share high bits d — its mean, i.e. the centroid a
+    draft pass decodes when it streams only the code prefix. Derived
+    in-graph from the full codebook: the draft model costs zero extra HBM.
+
+    codebook: (..., L) sorted ascending (nested_order / nested encode);
+    returns (..., 2**draft_bits).
+    """
+    levels = codebook.shape[-1]
+    rest = levels >> draft_bits
+    assert rest << draft_bits == levels, (levels, draft_bits)
+    grouped = codebook.reshape(*codebook.shape[:-1], 1 << draft_bits, rest)
+    return jnp.mean(grouped, axis=-1)
+
+
 def init_codebook(w: jnp.ndarray, bits: int, method: str = "quantile",
                   kmeans_iters: int = 10) -> jnp.ndarray:
     if method == "quantile":

@@ -37,9 +37,11 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .codebook import nested_codebooks, nested_order
 from .outliers import outlier_k
-from .packing import (code_stream_bytes, pack_bits, pack_nibbles,
-                      unpack_bits, unpack_nibbles)
+from .packing import (code_stream_bytes, nested_stream_cols,
+                      pack_bits, pack_bits_nested, pack_nibbles,
+                      unpack_bits, unpack_bits_nested, unpack_nibbles)
 from .types import QuantizedExperts, QuantizedLinear, put_rows_sparse
 
 _FORMATS: Dict[str, "WeightFormat"] = {}
@@ -103,6 +105,9 @@ class WeightFormat:
     stream_bits: Optional[int] = None
     groupable: bool = False
     expert_fmt: Optional[str] = None
+    # nested (self-speculative) formats: width of the bit-prefix draft
+    # sub-stream (0 = not nested — a draft pass serves full precision)
+    draft_bits: int = 0
 
     # ------------------------------------------------------ container layout
     def code_cols(self, n: int) -> int:
@@ -124,9 +129,15 @@ class WeightFormat:
         raise NotImplementedError(self.name)
 
     # ---------------------------------------------------------------- apply
-    def apply(self, layer, x2: jnp.ndarray, *,
-              backend: str = "xla") -> jnp.ndarray:
-        """y = x2 @ W~^T for x2 (N, d_in); returns (N, d_out), no bias."""
+    def apply(self, layer, x2: jnp.ndarray, *, backend: str = "xla",
+              draft_bits: int = 0) -> jnp.ndarray:
+        """y = x2 @ W~^T for x2 (N, d_in); returns (N, d_out), no bias.
+
+        `draft_bits` > 0 requests the speculative draft read: nested
+        formats stream only their bit-prefix sub-stream and decode with
+        the in-graph coarse codebook; every other format serves full
+        precision (the draft is then exact — still a valid draft).
+        """
         raise NotImplementedError(self.name)
 
     # ----------------------------------------------------------- dequantize
@@ -174,7 +185,7 @@ class DenseFormat(WeightFormat):
     def encode(self, layer):
         return layer
 
-    def apply(self, w, x2, *, backend: str = "xla"):
+    def apply(self, w, x2, *, backend: str = "xla", draft_bits: int = 0):
         return x2 @ w.astype(x2.dtype)
 
     def dequantize(self, w):
@@ -230,11 +241,31 @@ class _LUTBase(WeightFormat):
             return P()
         return pad_spec(spec, rank)
 
-    def apply(self, layer: QuantizedLinear, x2, *, backend: str = "xla"):
+    def draft_view(self, layer: QuantizedLinear):
+        """(prefix codes (m, n) uint8, draft codebook (m, 2**db)) — the
+        coarse model nested in this layer. Only meaningful for formats
+        with `draft_bits` > 0."""
+        db = self.draft_bits
+        assert db > 0, self.name
+        hi_cols = code_stream_bytes(layer.n_cols, db)
+        codes = unpack_bits(layer.codes[..., :hi_cols], db, layer.n_cols)
+        return codes, nested_codebooks(layer.codebook, db)
+
+    def apply(self, layer: QuantizedLinear, x2, *, backend: str = "xla",
+              draft_bits: int = 0):
         from repro.kernels.ops import lut_linear       # lazy: avoids cycle
+        # non-nested layouts have no coarser prefix: their draft pass IS
+        # the full-width read (an exact draft — correct, just not cheaper)
+        db = draft_bits if self.draft_bits else 0
+        assert db in (0, self.draft_bits), (db, self.draft_bits, self.name)
         if backend == "pallas":
             y = lut_linear(layer.codes, layer.codebook.astype(x2.dtype),
-                           x2.T, bits=layer.bits, fmt=layer.fmt).T
+                           x2.T, bits=layer.bits, fmt=layer.fmt,
+                           draft_bits=db).T
+        elif db:
+            codes, dbook = self.draft_view(layer)
+            wd = jnp.take_along_axis(dbook, codes.astype(jnp.int32), axis=1)
+            y = x2 @ wd.astype(x2.dtype).T
         else:
             wd = jnp.take_along_axis(layer.codebook,
                                      layer.unpacked_codes().astype(jnp.int32),
@@ -392,6 +423,80 @@ class LUT3PackedFormat(_PackedLUT):
         return unpack_bits(codes, self.stream_bits, n)
 
 
+# ----------------------------------------------------------------- nested
+
+class _NestedLUT(_LUTBase):
+    """4-bit nested bitstream — the self-speculative weight layout.
+
+    Codes are stored as TWO concatenated `pack_bits` sub-streams per row:
+    the high `draft_bits` of every (sorted-codebook) code as a contiguous
+    prefix stream, then the low (4 - draft_bits) bits as the remainder:
+
+        row = [ pack_bits(code >> rb, db) | pack_bits(code & mask, rb) ]
+
+    so the db-bit draft model IS the leading ceil(n*db/8) bytes of the
+    ONE weight buffer — a draft pass streams db/4 of the full read's code
+    bytes through the existing bitstream kernel, and the verify pass
+    reads both sub-streams and recombines (`lut_matmul_nested`). `encode`
+    is the in-graph re-encoder: it sorts each row's codebook ascending
+    (`nested_order`) so bit-prefix truncation yields a valid coarse
+    codebook (Any-Precision LLM nesting), remaps codes, and dual-packs.
+    Not groupable: the dual-stream layout has no fused multi-projection
+    kernel (nested layers fall back to per-layer launches).
+    """
+
+    packed = True
+    groupable = False
+    bits = 4
+    stream_bits = 4            # total bits/weight; code_cols is exact below
+
+    def code_cols(self, n: int) -> int:
+        hi, lo = nested_stream_cols(n, self.bits, self.draft_bits)
+        return hi + lo
+
+    def pack_codes(self, codes):
+        return pack_bits_nested(codes, self.bits, self.draft_bits)
+
+    def unpack_codes(self, codes, n):
+        return unpack_bits_nested(codes, self.bits, self.draft_bits, n)
+
+    def encode(self, layer):
+        assert layer.bits == self.bits, (layer.bits, self.bits)
+        assert layer.sparse_val is None and layer.full_row_val is None, \
+            "nested formats carry no sparse/full-row fields"
+        if layer.packed:
+            if get_format(layer.fmt).draft_bits:
+                assert layer.fmt == self.name, \
+                    (layer.fmt, self.name, "re-encode via decode first")
+                return layer
+            # existing packed checkpoint: unpack in-graph, then nest
+            layer = dataclasses.replace(
+                layer, codes=get_format(layer.fmt).unpack_codes(
+                    layer.codes, layer.n_cols), fmt="lut")
+        n = layer.codes.shape[-1]
+        book, codes = nested_order(layer.codebook, layer.codes)
+        return dataclasses.replace(layer, codes=self.pack_codes(codes),
+                                   codebook=book, fmt=self.name, n_cols=n)
+
+
+@register_format
+class Lut4NestedFormat(_NestedLUT):
+    """4-bit nested, 3-bit draft prefix (draft reads 0.75x code bytes)."""
+
+    name = "lut4_nested"
+    draft_bits = 3
+    expert_fmt = "experts4_nested"
+
+
+@register_format
+class Lut4NestedD2Format(_NestedLUT):
+    """4-bit nested, 2-bit draft prefix (draft reads 0.5x code bytes)."""
+
+    name = "lut4_nested_d2"
+    draft_bits = 2
+    expert_fmt = "experts4_nested_d2"
+
+
 # ------------------------------------------------------------------ experts
 
 class _ExpertsBase(WeightFormat):
@@ -400,7 +505,8 @@ class _ExpertsBase(WeightFormat):
     Applied via dequantize + batched einsum in models.moe (dispatch is
     token-routed; there is no single (N, d_in) matmul to intercept)."""
 
-    def apply(self, layer, x2, *, backend: str = "xla"):
+    def apply(self, layer, x2, *, backend: str = "xla",
+              draft_bits: int = 0):
         raise NotImplementedError(
             "expert weights apply inside moe_apply via dequantize()")
 
@@ -516,6 +622,77 @@ class Experts3PackedFormat(_ExpertsBase):
 
     def unpack_codes(self, codes, n):
         return unpack_bits(codes, self.stream_bits, n)
+
+
+class _NestedExperts(_ExpertsBase):
+    """Stacked per-expert nested bitstream — `lut4_nested`'s MoE
+    counterpart: codes (E, m, hi+lo cols), per-expert sorted codebooks.
+    Decode routes through the shared `_ExpertsBase.dequantize`; the
+    coarse books for a draft decode derive in-graph (`draft_books`)."""
+
+    packed = True
+    bits = 4
+    stream_bits = 4
+
+    def code_cols(self, n: int) -> int:
+        hi, lo = nested_stream_cols(n, self.bits, self.draft_bits)
+        return hi + lo
+
+    def pack_codes(self, codes):
+        return pack_bits_nested(codes, self.bits, self.draft_bits)
+
+    def unpack_codes(self, codes, n):
+        return unpack_bits_nested(codes, self.bits, self.draft_bits, n)
+
+    def encode(self, layer: QuantizedExperts) -> QuantizedExperts:
+        if layer.packed:
+            assert layer.fmt == self.name, \
+                (layer.fmt, self.name, "re-encode nested experts from "
+                                       "unpacked; decode first")
+            return layer
+        assert layer.bits == self.bits, (layer.bits, self.bits)
+        assert layer.sparse_val is None and layer.full_row_val is None, \
+            "nested formats carry no sparse/full-row fields"
+        book, codes = nested_order(layer.codebook, layer.codes)
+        e, m, n = codes.shape
+        packed = self.pack_codes(codes.reshape(e * m, n))
+        return dataclasses.replace(layer, codes=packed.reshape(e, m, -1),
+                                   codebook=book, fmt=self.name, n_cols=n)
+
+    def draft_dequantize(self, layer: QuantizedExperts) -> jnp.ndarray:
+        """(E, m, n) coarse weights from the prefix sub-stream only."""
+        db = self.draft_bits
+        e, m, cb = layer.codes.shape
+        hi_cols = code_stream_bytes(layer.n_cols, db)
+        codes = unpack_bits(layer.codes.reshape(e * m, cb)[:, :hi_cols],
+                            db, layer.n_cols).reshape(e, m, layer.n_cols)
+        books = nested_codebooks(layer.codebook, db)
+        return jnp.take_along_axis(books, codes.astype(jnp.int32), axis=2)
+
+
+@register_format
+class Experts4NestedFormat(_NestedExperts):
+    name = "experts4_nested"
+    draft_bits = 3
+    expert_fmt = "experts4_nested"
+
+
+@register_format
+class Experts4NestedD2Format(_NestedExperts):
+    name = "experts4_nested_d2"
+    draft_bits = 2
+    expert_fmt = "experts4_nested_d2"
+
+
+def nested_linear_fmt(draft_bits: int) -> str:
+    """The nested (self-speculative) 4-bit linear format for a draft
+    prefix width."""
+    if draft_bits == 3:
+        return "lut4_nested"
+    if draft_bits == 2:
+        return "lut4_nested_d2"
+    raise ValueError(f"nested formats support draft_bits in {{2, 3}}, "
+                     f"got {draft_bits}")
 
 
 def packed_linear_fmt(bits: int) -> str:

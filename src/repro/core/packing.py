@@ -78,6 +78,44 @@ def unpack_bits(packed: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
         .astype(jnp.uint8)
 
 
+# ------------------------------------------------------ nested bitstream (jnp)
+
+def nested_stream_cols(n: int, bits: int, draft_bits: int):
+    """(hi_cols, lo_cols) byte widths of the two sub-streams of a nested
+    row: the `draft_bits`-wide prefix stream holding the high bits of each
+    code, then the (bits - draft_bits)-wide remainder stream. A draft pass
+    reads only the leading hi_cols = ceil(n * draft_bits / 8) bytes."""
+    assert 0 < draft_bits < bits, (draft_bits, bits)
+    return (code_stream_bytes(n, draft_bits),
+            code_stream_bytes(n, bits - draft_bits))
+
+
+def pack_bits_nested(codes: jnp.ndarray, bits: int,
+                     draft_bits: int) -> jnp.ndarray:
+    """(m, n) uint8 codes -> (m, hi_cols + lo_cols) nested bitstream.
+
+    Row layout = [pack_bits(codes >> rb, db) | pack_bits(codes & mask, rb)]
+    with db = draft_bits, rb = bits - db: the high db bits of every code
+    form a contiguous plain `pack_bits` prefix sub-stream, so a b-bit
+    draft pass streams exactly the leading ceil(n*db/8) bytes through the
+    existing bitstream kernel — no second weight buffer in HBM.
+    """
+    rb = bits - draft_bits
+    hi = pack_bits((codes >> rb).astype(jnp.uint8), draft_bits)
+    lo = pack_bits((codes & ((1 << rb) - 1)).astype(jnp.uint8), rb)
+    return jnp.concatenate([hi, lo], axis=1)
+
+
+def unpack_bits_nested(packed: jnp.ndarray, bits: int, draft_bits: int,
+                       n: int) -> jnp.ndarray:
+    """Inverse of pack_bits_nested: (m, hi+lo cols) -> (m, n) full codes."""
+    rb = bits - draft_bits
+    hi_cols, _ = nested_stream_cols(n, bits, draft_bits)
+    hi = unpack_bits(packed[:, :hi_cols], draft_bits, n)
+    lo = unpack_bits(packed[:, hi_cols:], rb, n)
+    return ((hi << rb) | lo).astype(jnp.uint8)
+
+
 # ------------------------------------------------------------ bitstream (np)
 
 def pack_bits_np(codes: np.ndarray, bits: int) -> np.ndarray:

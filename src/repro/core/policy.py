@@ -34,12 +34,19 @@ class ExecPolicy:
 
     lut_backend: 'xla' (take_along_axis dequant + dot; dry-run / SPMD path)
       or 'pallas' (fused LUT-mpGEMM kernel; interpret mode off-TPU).
+    draft_bits: > 0 runs every quantized linear at the speculative prefix
+      width — nested formats stream only the leading ceil(n*db/8) code
+      bytes; all other formats serve full width (an exact draft). The
+      engine flips this per forward pass: draft passes set it, the verify
+      pass leaves it 0.
     """
 
     lut_backend: str = "xla"
+    draft_bits: int = 0
 
     def __post_init__(self):
         assert self.lut_backend in ("xla", "pallas"), self.lut_backend
+        assert self.draft_bits in (0, 2, 3), self.draft_bits
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +110,10 @@ class PrecisionPolicy:
     # cache format alone. Weight and cache layouts compose in ONE policy:
     # `parse_policy("mlp=3,attn=4,kv=int8", ...)`.
     kv_fmt: Optional[str] = None
+    # speculative draft width (0 = off). Set via the reserved `draft=b`
+    # policy entry; it defaults the weight format to the nested layout so
+    # the draft pass actually reads fewer bytes.
+    draft_bits: int = 0
 
     @classmethod
     def uniform(cls, qcfg: QuantConfig, method: str = "ganq",
@@ -146,13 +157,16 @@ def parse_policy(spec: str, qcfg: QuantConfig, method: str = "ganq",
     The reserved pattern `kv` selects the KV-*cache* format instead of a
     weight rule: `kv=int8`, `kv=paged`, `kv=paged_int8`, `kv=full`
     (`core.cache_formats` registry) — so one spec string carries the whole
-    serving memory layout.
+    serving memory layout. The reserved pattern `draft` sets the
+    speculative prefix width (`draft=3` / `draft=2`) and, when the caller
+    left the default format, switches it to the matching nested layout.
 
     Example: "mlp=3,attn=4,kv=int8"  — 3-bit MLPs, 4-bit attention,
     int8 KV cache; everything else uses the default `qcfg`.
     """
     rules = []
     kv_fmt = None
+    draft_bits = 0
     for entry in filter(None, (e.strip() for e in spec.split(","))):
         if "=" not in entry:
             raise ValueError(f"policy entry {entry!r} is not pattern=value")
@@ -163,6 +177,12 @@ def parse_policy(spec: str, qcfg: QuantConfig, method: str = "ganq",
             assert f.kv and f.selectable, \
                 f"{val!r} is not a selectable attention-cache format"
             kv_fmt = val
+            continue
+        if pat == "draft":
+            from .formats import nested_linear_fmt
+            draft_bits = int(val)
+            if fmt in ("lut", "lut4_packed"):   # caller kept the default:
+                fmt = nested_linear_fmt(draft_bits)   # nest it
             continue
         segment = not any(c in pat for c in "*?[/")
         if not segment and "/" in pat and not any(c in pat for c in "*?["):
@@ -177,7 +197,8 @@ def parse_policy(spec: str, qcfg: QuantConfig, method: str = "ganq",
         rules.append(LayerRule(pattern=pat, bits=int(val), fmt=rule_fmt,
                                segment=segment))
     return PrecisionPolicy(qcfg=qcfg, method=method, fmt=fmt,
-                           rules=tuple(rules), kv_fmt=kv_fmt)
+                           rules=tuple(rules), kv_fmt=kv_fmt,
+                           draft_bits=draft_bits)
 
 
 @dataclasses.dataclass

@@ -277,6 +277,104 @@ def lut_matmul_bitstream(packed: jnp.ndarray, codebook: jnp.ndarray,
     return y[0]
 
 
+def _lut_kernel_nested(codes_ref, t_ref, x_ref, o_ref, acc_ref, *,
+                       bits: int, draft_bits: int, nk: int):
+    """Dual sub-stream kernel for the nested layout: codes_ref holds the
+    prefix stream's g_hi byte planes then the remainder stream's g_lo
+    planes ((g_hi + g_lo, bm, bkg)); both streams share one phase count
+    (every 4-bit split has ph_hi == ph_lo), so the recombined full-width
+    codes decode in a single compare-select pass and feed one MXU call —
+    same shape discipline as `_lut_kernel_stream`, two plane sets."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rb = bits - draft_bits
+    g_hi, _ = phase_split(draft_bits)
+    planes = codes_ref[...]
+    bkg = planes.shape[-1]
+    hi = _extract_phase_codes(planes[:g_hi], draft_bits)
+    lo = _extract_phase_codes(planes[g_hi:], rb)
+    codes = (hi << rb) | lo
+    w = _decode_tile(codes, t_ref[...].astype(jnp.float32), 1 << bits)
+    xs = x_ref[...]
+    x2 = xs.reshape(xs.shape[0] * bkg, xs.shape[-1]).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(w, x2, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "draft_bits", "block_m", "block_k", "block_p", "interpret"))
+def lut_matmul_nested(packed: jnp.ndarray, codebook: jnp.ndarray,
+                      x: jnp.ndarray, *, bits: int, draft_bits: int,
+                      block_m: int = 128, block_k: int = 512,
+                      block_p: int = 128,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Full-width Y = decode(nested codes) @ x.
+
+    packed: (m, hi_cols + lo_cols) uint8 — `core.packing.pack_bits_nested`
+    layout (draft prefix stream, then remainder stream); codebook
+    (m, 2**bits) sorted ascending per row; x (n, p). The DRAFT pass never
+    lands here: it slices the prefix and rides `lut_matmul_bitstream` at
+    stream width draft_bits (`kernels.ops.lut_linear`).
+    """
+    m, cb = packed.shape
+    n, p = x.shape
+    rb = bits - draft_bits
+    g_hi, ph = phase_split(draft_bits)
+    g_lo, ph_lo = phase_split(rb)
+    assert ph == ph_lo, (draft_bits, rb, "sub-streams must share a phase "
+                         "count — all 4-bit splits do")
+    hi_cols = (n * draft_bits + 7) // 8
+    lo_cols = (n * rb + 7) // 8
+    assert cb == hi_cols + lo_cols, (cb, hi_cols, lo_cols)
+    n_groups = -(-n // ph)
+
+    def to_planes(stream, g):
+        pad = n_groups * g - stream.shape[1]
+        if pad:
+            stream = jnp.pad(stream, ((0, 0), (0, pad)))
+        return stream.reshape(m, n_groups, g).transpose(2, 0, 1)
+
+    planes = jnp.concatenate(
+        [to_planes(packed[:, :hi_cols], g_hi),
+         to_planes(packed[:, hi_cols:], g_lo)], axis=0)  # (g_hi+g_lo, m, ng)
+
+    xq = _pad_to(x, 0, ph * n_groups)
+    x_ph = xq.reshape(n_groups, ph, p).transpose(1, 0, 2)
+
+    bm = min(block_m, m)
+    bkg = max(1, min(block_k // ph, n_groups))
+    bp = min(block_p, p)
+
+    planes = _pad_to(_pad_to(planes, 1, bm), 2, bkg)
+    books = _pad_to(codebook, 0, bm)
+    x_ph = _pad_to(_pad_to(x_ph, 1, bkg), 2, bp)
+    g_all = planes.shape[0]
+    mp, ngp = planes.shape[1], planes.shape[2]
+    pp = x_ph.shape[2]
+    nm, nk, npb = mp // bm, ngp // bkg, pp // bp
+
+    out = pl.pallas_call(
+        functools.partial(_lut_kernel_nested, bits=bits,
+                          draft_bits=draft_bits, nk=nk),
+        grid=(nm, npb, nk),
+        in_specs=[
+            pl.BlockSpec((g_all, bm, bkg), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((bm, 1 << bits), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((ph, bkg, bp), lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bp), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, pp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bp), jnp.float32)],
+        interpret=interpret,
+    )(planes, books, x_ph)
+    return out[:m, :p]
+
+
 def lut_matmul_grouped(codes: jnp.ndarray, books: jnp.ndarray,
                        x: jnp.ndarray, *, bits: int, stream_bits: int = None,
                        block_m: int = 128, block_k: int = 512,

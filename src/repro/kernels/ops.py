@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from . import ref
 from .backsub import backsub
 from .lut_mpgemm import (lut_matmul, lut_matmul_bitstream,
-                         lut_matmul_grouped, lut_matmul_packed, phase_split)
+                         lut_matmul_grouped, lut_matmul_nested,
+                         lut_matmul_packed, phase_split)
 
 # smallest worthwhile per-group row count for the fused projection kernel;
 # below this the grouped tiles degenerate and sequential launches win
@@ -61,29 +62,68 @@ def _layout(bits: int, packed: bool, fmt: Optional[str]) -> int:
 
 
 def _tuned_blocks(m: int, n: int, p: int, bits: int, fmt: Optional[str],
-                  blocks, groups: int = 1):
+                  blocks, groups: int = 1, draft_bits: int = 0):
     if blocks is not None:
         return blocks.as_kwargs()
     if fmt is not None:
         from . import tune
         # groups is part of the key: a plan whose VMEM feasibility was
         # validated for a single launch must never be applied to a fused
-        # launch whose tiles scale by the group count
-        plan = tune.lookup(m, n, p, bits, fmt, groups=groups)
+        # launch whose tiles scale by the group count. draft_bits keys the
+        # nested prefix read separately from the full-width read — the two
+        # passes stream different byte counts per tile.
+        plan = tune.lookup(m, n, p, bits, fmt, groups=groups,
+                           draft_bits=draft_bits)
         if plan is not None:
             return plan.as_kwargs()
     return {}                     # kernel defaults (128/512/128)
 
 
+def _nested_linear(packed: jnp.ndarray, codebook: jnp.ndarray,
+                   x: jnp.ndarray, *, bits: int, fmt: str,
+                   draft_bits: int, use_pallas: bool,
+                   blocks) -> jnp.ndarray:
+    """Nested dual-sub-stream route of `lut_linear`: full-width read
+    recombines both streams (`lut_matmul_nested`); the draft read slices
+    the contiguous prefix and rides the plain bitstream kernel at stream
+    width draft_bits with the in-graph coarse codebook — ceil(n*db/8)
+    code bytes, no second weight buffer."""
+    from repro.core.codebook import nested_codebooks
+    from repro.core.formats import get_format
+    from repro.core.packing import code_stream_bytes
+    f = get_format(fmt)
+    db = f.draft_bits
+    assert draft_bits in (0, db), (draft_bits, db, fmt)
+    n, p = x.shape
+    m = packed.shape[0]
+    if draft_bits:
+        prefix = packed[:, :code_stream_bytes(n, db)]
+        dbook = nested_codebooks(codebook, db).astype(codebook.dtype)
+        if not use_pallas:
+            return ref.lut_matmul_bitstream_ref(prefix, dbook, x, bits=db)
+        bkw = _tuned_blocks(m, n, p, bits, fmt, blocks, draft_bits=db)
+        return lut_matmul_bitstream(prefix, dbook, x, bits=db,
+                                    stream_bits=db,
+                                    interpret=not _on_tpu(), **bkw)
+    if not use_pallas:
+        return ref.lut_matmul_nested_ref(packed, codebook, x, bits=bits,
+                                         draft_bits=db)
+    bkw = _tuned_blocks(m, n, p, bits, fmt, blocks)
+    return lut_matmul_nested(packed, codebook, x, bits=bits, draft_bits=db,
+                             interpret=not _on_tpu(), **bkw)
+
+
 def lut_linear(codes_or_packed: jnp.ndarray, codebook: jnp.ndarray,
                x: jnp.ndarray, *, bits: int = 4, packed: bool = False,
                use_pallas: bool = True,
-               fmt: Optional[str] = None, blocks=None) -> jnp.ndarray:
+               fmt: Optional[str] = None, blocks=None,
+               draft_bits: int = 0) -> jnp.ndarray:
     """Y = W~ @ X for a LUT-quantized layer.
 
     Args:
       codes_or_packed: (m, n) uint8 codes, (m, ceil(n/2)) nibble-packed,
-        or (m, ceil(n*bits/8)) true-bitstream packed.
+        (m, ceil(n*bits/8)) true-bitstream packed, or the nested dual
+        sub-stream layout for nested formats.
       codebook: (m, 2**bits).
       x: (n, p) activations.
       fmt: optional `WeightFormat` name — when given, the code layout
@@ -92,7 +132,16 @@ def lut_linear(codes_or_packed: jnp.ndarray, codebook: jnp.ndarray,
         autotuned tile-size lookup.
       blocks: optional `tune.BlockPlan` overriding both the tuned cache
         and the kernel defaults.
+      draft_bits: > 0 requests the speculative prefix read of a nested
+        format (must equal the format's `draft_bits`); ignored — the full
+        read — for non-nested formats, whose draft is exact.
     """
+    if fmt is not None:
+        from repro.core.formats import get_format
+        if get_format(fmt).draft_bits:
+            return _nested_linear(codes_or_packed, codebook, x, bits=bits,
+                                  fmt=fmt, draft_bits=draft_bits,
+                                  use_pallas=use_pallas, blocks=blocks)
     sb = _layout(bits, packed, fmt)
     n, p = x.shape
     m = codes_or_packed.shape[0]
@@ -237,7 +286,7 @@ def vmem_plan(m: int, n: int, p: int, bits: int, block_m: int = 128,
               block_k: int = 512, block_p: int = 128, *,
               fmt: str = "lut4_packed", x_dtype=jnp.bfloat16,
               book_dtype=jnp.float32, out_dtype=None,
-              groups: int = 1) -> dict:
+              groups: int = 1, draft_bits: int = 0) -> dict:
     """Static VMEM-footprint + HBM-traffic accounting for the LUT-mpGEMM
     kernels — the feasibility filter for `kernels.tune` and the roofline's
     HBM-bytes model (what the kernel actually streams).
@@ -255,13 +304,21 @@ def vmem_plan(m: int, n: int, p: int, bits: int, block_m: int = 128,
     X read once per row block, Y written once, LUT once.
     """
     from repro.core.formats import get_format
+    from repro.core.packing import code_stream_bytes
     f = get_format(fmt)
     levels = 1 << bits
+    if draft_bits:
+        # nested prefix read: only the leading ceil(n*db/8) bytes of the
+        # shared buffer stream, decoded by a 2**db-entry coarse book
+        assert draft_bits == f.draft_bits, (draft_bits, f.draft_bits, fmt)
+        levels = 1 << draft_bits
     xb = jnp.dtype(x_dtype).itemsize
     bb = jnp.dtype(book_dtype).itemsize
     ob = jnp.dtype(out_dtype).itemsize if out_dtype is not None else xb
-    codes_row_bytes = f.code_cols(n)
-    codes_tile_bytes = f.code_cols(block_k)
+    codes_row_bytes = (code_stream_bytes(n, draft_bits) if draft_bits
+                       else f.code_cols(n))
+    codes_tile_bytes = (code_stream_bytes(block_k, draft_bits) if draft_bits
+                        else f.code_cols(block_k))
     vmem = (groups * block_m * codes_tile_bytes    # code byte planes (u8)
             + groups * block_m * levels * bb       # codebook tile(s)
             + block_k * block_p * xb               # X tiles (all phases)

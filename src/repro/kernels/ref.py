@@ -8,7 +8,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.ganq import s_step as _s_step_core
-from repro.core.packing import unpack_bits, unpack_nibbles
+from repro.core.packing import (unpack_bits, unpack_bits_nested,
+                                unpack_nibbles)
 
 
 def lut_decode_ref(codes: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
@@ -42,6 +43,17 @@ def lut_matmul_bitstream_ref(packed: jnp.ndarray, codebook: jnp.ndarray,
     (m, ceil(n*bits/8)) bitstream (`core.packing.pack_bits` layout)."""
     n = x.shape[0]
     codes = unpack_bits(packed, bits, n)
+    return lut_matmul_ref(codes, codebook, x)
+
+
+def lut_matmul_nested_ref(packed: jnp.ndarray, codebook: jnp.ndarray,
+                          x: jnp.ndarray, *, bits: int,
+                          draft_bits: int) -> jnp.ndarray:
+    """Same as lut_matmul_ref but codes arrive as the nested dual
+    sub-stream (`core.packing.pack_bits_nested` layout): the draft_bits
+    prefix stream then the (bits - draft_bits) remainder stream."""
+    n = x.shape[0]
+    codes = unpack_bits_nested(packed, bits, draft_bits, n)
     return lut_matmul_ref(codes, codebook, x)
 
 

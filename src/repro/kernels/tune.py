@@ -66,10 +66,14 @@ def cache_path() -> Path:
 
 
 def plan_key(m: int, n: int, p: int, bits: int, fmt: str,
-             backend: Optional[str] = None, groups: int = 1) -> str:
+             backend: Optional[str] = None, groups: int = 1,
+             draft_bits: int = 0) -> str:
     backend = backend or jax.default_backend()
     gtag = f"|g{groups}" if groups != 1 else ""
-    return f"{backend}|{fmt}|b{bits}|{m}x{n}x{p}{gtag}"
+    # the nested draft (prefix) read streams fewer bytes per tile than the
+    # full-width read of the same layer, so it tunes under its own key
+    dtag = f"|d{draft_bits}" if draft_bits else ""
+    return f"{backend}|{fmt}|b{bits}|{m}x{n}x{p}{gtag}{dtag}"
 
 
 def _load_disk(path: Path) -> None:
@@ -102,10 +106,10 @@ def clear_cache() -> None:
 
 
 def lookup(m: int, n: int, p: int, bits: int, fmt: str,
-           groups: int = 1) -> Optional[BlockPlan]:
+           groups: int = 1, draft_bits: int = 0) -> Optional[BlockPlan]:
     """Cached plan for a problem, or None (callers keep their defaults).
     Checks the in-process dict first, then lazily loads the disk cache."""
-    key = plan_key(m, n, p, bits, fmt, groups=groups)
+    key = plan_key(m, n, p, bits, fmt, groups=groups, draft_bits=draft_bits)
     if key not in _MEM_CACHE:
         _load_disk(cache_path())
     return _MEM_CACHE.get(key)
@@ -113,8 +117,8 @@ def lookup(m: int, n: int, p: int, bits: int, fmt: str,
 
 def candidate_plans(m: int, n: int, p: int, bits: int, fmt: str,
                     groups: int = 1,
-                    vmem_budget: int = VMEM_BUDGET_BYTES
-                    ) -> List[BlockPlan]:
+                    vmem_budget: int = VMEM_BUDGET_BYTES,
+                    draft_bits: int = 0) -> List[BlockPlan]:
     """Deduplicated (block_m, block_k, block_p) candidates that pass the
     static `vmem_plan` feasibility filter for this problem."""
     from .ops import vmem_plan               # late: ops imports this module
@@ -128,7 +132,7 @@ def candidate_plans(m: int, n: int, p: int, bits: int, fmt: str,
                     continue
                 seen.add(cand)
                 plan = vmem_plan(m, n, p, bits, *cand, fmt=fmt,
-                                 groups=groups)
+                                 groups=groups, draft_bits=draft_bits)
                 if plan["vmem_bytes"] <= vmem_budget:
                     out.append(BlockPlan(*cand))
     return out
@@ -159,15 +163,15 @@ def _time_plan(run, reps: int) -> float:
 
 def autotune(m: int, n: int, p: int, bits: int, fmt: str, *,
              reps: int = 3, max_candidates: int = 8,
-             save: bool = True) -> BlockPlan:
+             save: bool = True, draft_bits: int = 0) -> BlockPlan:
     """Measure feasible tile candidates for one problem and cache the
     winner. Returns the cached plan immediately when one exists."""
-    cached = lookup(m, n, p, bits, fmt)
+    cached = lookup(m, n, p, bits, fmt, draft_bits=draft_bits)
     if cached is not None:
         return cached
     from .ops import lut_linear
     codes, book, x = _synthetic_problem(m, n, p, bits, fmt)
-    cands = candidate_plans(m, n, p, bits, fmt)
+    cands = candidate_plans(m, n, p, bits, fmt, draft_bits=draft_bits)
     if not cands:                             # nothing fits: smallest tiles
         cands = [BlockPlan(min(64, m), min(128, n), min(32, p))]
     # prefer large-tile candidates first, keep the sweep bounded
@@ -177,10 +181,10 @@ def autotune(m: int, n: int, p: int, bits: int, fmt: str, *,
     for cand in cands:
         us = _time_plan(
             lambda c=cand: lut_linear(codes, book, x, bits=bits, fmt=fmt,
-                                      blocks=c), reps)
+                                      blocks=c, draft_bits=draft_bits), reps)
         if best is None or us < best.us:
             best = dataclasses.replace(cand, us=us)
-    key = plan_key(m, n, p, bits, fmt)
+    key = plan_key(m, n, p, bits, fmt, draft_bits=draft_bits)
     _MEM_CACHE[key] = best
     if save:
         _save_disk(cache_path())
@@ -273,12 +277,17 @@ def tune_model(qparams, p: int, *, reps: int = 3,
                 # stacked-unit leaves are (U, m, nc); apply sees 2-D slices
                 mm = node.codes.shape[-2]
                 nn = node.n_cols if fmt.packed else node.codes.shape[-1]
-                problems[(mm, nn, p, node.bits, node.fmt)] = None
+                problems[(mm, nn, p, node.bits, node.fmt, 0)] = None
+                if fmt.draft_bits:
+                    # nested formats serve a second, prefix-width read
+                    problems[(mm, nn, p, node.bits, node.fmt,
+                              fmt.draft_bits)] = None
     visit(qparams)
     out = {}
-    for (mm, nn, pp, bits, fmt) in problems:
-        plan = autotune(mm, nn, pp, bits, fmt, reps=reps, save=False)
-        out[plan_key(mm, nn, pp, bits, fmt)] = plan
+    for (mm, nn, pp, bits, fmt, db) in problems:
+        plan = autotune(mm, nn, pp, bits, fmt, reps=reps, save=False,
+                        draft_bits=db)
+        out[plan_key(mm, nn, pp, bits, fmt, draft_bits=db)] = plan
     for views in group_problems.values():
         plan = autotune_grouped(views, p, reps=reps, save=False)
         if plan is not None:

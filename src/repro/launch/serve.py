@@ -81,6 +81,17 @@ def main(argv=None) -> int:
                     help="lanes per unified serving step (0 = slots + "
                          "prefill-chunk); one static shape bounds the "
                          "compile count regardless of prompt lengths")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: draft K greedy tokens "
+                         "per slot per round at --draft-bits prefix width, "
+                         "verify all K+1 positions in one mixed step, roll "
+                         "rejected cache writes back bitwise; greedy output "
+                         "is token-identical to --speculate 0")
+    ap.add_argument("--draft-bits", type=int, default=0, choices=[0, 2, 3],
+                    help="draft prefix width: the draft pass streams only "
+                         "the leading b bit-planes of each 4-bit nested "
+                         "bitstream (quantization switches to the "
+                         "lut4_nested layout); 0 = full-width drafts")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate (req/s); 0 = all at once")
     ap.add_argument("--dry-run-only", action="store_true")
@@ -126,9 +137,15 @@ def main(argv=None) -> int:
     data = MarkovStream(cfg.vocab_size, batch=4, seq=32, seed=0)
     qcfg = QuantConfig(bits=args.bits, iters=4, precondition="fixed")
     # parse the policy unconditionally: its kv= cache rule applies even to
-    # fp serving (--method none)
-    policy = parse_policy(args.policy, qcfg, args.method) \
-        if args.policy else None
+    # fp serving (--method none); --draft-bits rides in as the reserved
+    # draft= entry so quantization emits the nested bitstream layout
+    pol_spec = args.policy
+    if args.draft_bits and args.method != "none":
+        assert args.bits == 4, "--draft-bits nests a 4-bit stream"
+        entry = f"draft={args.draft_bits}"
+        pol_spec = f"{pol_spec},{entry}" if pol_spec else entry
+    policy = parse_policy(pol_spec, qcfg, args.method) \
+        if pol_spec else None
     if args.method != "none":
         calib = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
         params, report = quantize_model_ptq(
@@ -154,7 +171,13 @@ def main(argv=None) -> int:
     engine = ServeEngine(params, cfg, ctx=ctx, max_len=args.max_len,
                          n_slots=args.slots,
                          prefill_chunk=args.prefill_chunk,
-                         token_budget=args.token_budget)
+                         token_budget=args.token_budget,
+                         spec_k=args.speculate,
+                         draft_bits=args.draft_bits)
+    if args.speculate and engine.spec_k != args.speculate:
+        reason = engine.spec_fallback or "cache-width cap"
+        print(f"speculation capped: spec_k {args.speculate} -> "
+              f"{engine.spec_k} ({reason})")
     # mixed-length traffic: continuous batching needs no length grouping,
     # and chunked admission needs no length bucketing either — prompts of
     # any mix of lengths ride the one fixed-shape token-budget step
@@ -184,6 +207,10 @@ def main(argv=None) -> int:
         extra = (f", paged KV: {st['peak_pages_in_use']}/{st['n_pages']} "
                  f"pages x {st['page_size']} tok peak, "
                  f"{st['evictions']} evictions")
+    if engine.spec_k:
+        extra += (f", speculative: {st['spec_rounds']} rounds, "
+                  f"accept rate {st['accept_rate']:.2f}, "
+                  f"{st['accepted_tok_per_s']:.1f} accepted tok/s")
     gap = st.get("max_decode_gap_steps", 0)
     print(f"served {len(reqs)} requests / {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s wall, "

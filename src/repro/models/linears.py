@@ -51,7 +51,11 @@ def linear_apply(w: Union[jnp.ndarray, QuantizedLinear], x: jnp.ndarray,
         return x @ w.astype(x.dtype)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])                        # (N, n)
-    y = get_format(fmt).apply(w, x2, backend=ctx.lut_backend)
+    f = get_format(fmt)
+    # ctx says "this is a draft pass"; each nested layer streams its OWN
+    # prefix width (a mixed d2/d3 policy stays valid), others serve full
+    db = f.draft_bits if ctx.exec_policy.draft_bits else 0
+    y = f.apply(w, x2, backend=ctx.lut_backend, draft_bits=db)
     if w.bias is not None:
         y = y + w.bias.astype(y.dtype)
     return y.reshape(*lead, -1)

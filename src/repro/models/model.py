@@ -233,18 +233,25 @@ def decode_step(p: Params, cache, tokens: jnp.ndarray, pos: jnp.ndarray,
 
 
 def mixed_step(p: Params, cache, tb: TokenBatch, cfg: ModelConfig,
-               ctx: ShardCtx = LOCAL):
+               ctx: ShardCtx = LOCAL, emit_groups: int = 1):
     """THE serving execution surface: one fixed-shape token-budget step.
 
     Consumes a flat `TokenBatch` of up to T tokens drawn from live decode
     slots (one lane each) plus chunked prompt admissions (the remaining
     lanes), writes every lane's K/V / recurrent state into its slot's cache
-    rows, and returns `(logits (n_slots, V), new_cache)` where each slot's
-    logits row is gathered only at its `emit` lane (rows of slots with no
-    emit lane this step are zeros — the host ignores them). Decode lanes
-    reproduce the classic one-token `decode_step` bitwise; chunk lanes are
-    chunked prefill riding the same kernels, so admitting a long prompt
-    never stalls in-flight decode for more than one step.
+    rows, and returns `(logits (n_slots * emit_groups, V), new_cache)`
+    where each slot's logits row is gathered only at its `emit` lane (rows
+    of slots with no emit lane this step are zeros — the host ignores
+    them). Decode lanes reproduce the classic one-token `decode_step`
+    bitwise; chunk lanes are chunked prefill riding the same kernels, so
+    admitting a long prompt never stalls in-flight decode for more than
+    one step.
+
+    emit_groups > 1 (static) is the speculative-verify shape: a slot may
+    emit up to `emit_groups` consecutive lanes per step, scattered to rows
+    `slot * emit_groups + (position - horizon)` — one logits row per
+    verified lane, preserving the fixed output shape (lanes beyond the
+    group window drop).
     """
     cd = _dtype(cfg.compute_dtype)
     if cfg.is_encoder_decoder:
@@ -255,8 +262,15 @@ def mixed_step(p: Params, cache, tb: TokenBatch, cfg: ModelConfig,
     h = apply_norm(p["final_ln"], h, cfg.norm, cfg.norm_eps)
     hs = h[:, 0, :]                                        # (T, d)
     ns = tb.reset.shape[0]
-    idx = jnp.where(tb.emit & tb.active, tb.slots, ns)     # OOB: dropped
-    emit_h = jnp.zeros((ns, hs.shape[-1]), hs.dtype).at[idx].set(
+    rows = ns * emit_groups
+    if emit_groups == 1:
+        idx = jnp.where(tb.emit & tb.active, tb.slots, rows)  # OOB: dropped
+    else:
+        off = tb.positions - tb.horizon
+        idx = jnp.where(tb.emit & tb.active & (off >= 0)
+                        & (off < emit_groups),
+                        tb.slots * emit_groups + off, rows)
+    emit_h = jnp.zeros((rows, hs.shape[-1]), hs.dtype).at[idx].set(
         hs, mode="drop")
     logits = _logits_head(p, emit_h, cfg, ctx)
     return logits, cache

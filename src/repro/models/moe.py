@@ -61,17 +61,26 @@ def capacity(tokens: int, top_k: int, n_experts: int, cf: float) -> int:
     return max(8, c + (-c) % 8)
 
 
-def _as_dense(w, dtype):
+def _as_dense(w, dtype, draft: bool = False):
     """Dense (E, d_in, d_out) view; dequantizes LUT expert weights (the
     `fmt` tag marks a quantized container — decode routes through the
-    WeightFormat registry inside `dequantize`)."""
+    WeightFormat registry inside `dequantize`). draft=True decodes nested
+    expert formats from their prefix sub-stream only (coarse codebooks);
+    non-nested formats ignore it — their draft is the exact decode."""
     if getattr(w, "fmt", None) is not None:
+        if draft:
+            from repro.core.formats import get_format
+            f = get_format(w.fmt)
+            if f.draft_bits:             # (E, m, n) -> einsum (E, n, m)
+                return jnp.swapaxes(f.draft_dequantize(w), 1, 2) \
+                    .astype(dtype)
         return w.dequantize(dtype)
     return w.astype(dtype)
 
 
 def _expert_ffn(x_buf: jnp.ndarray, p: Params, act, col=None,
-                prefix: str = "", e0: int = 0) -> jnp.ndarray:
+                prefix: str = "", e0: int = 0,
+                draft: bool = False) -> jnp.ndarray:
     """(E_loc, C, d) -> (E_loc, C, d) batched SwiGLU over local experts.
 
     In capture mode (`col`), the post-activation hidden state is recorded
@@ -79,18 +88,22 @@ def _expert_ffn(x_buf: jnp.ndarray, p: Params, act, col=None,
     input, so PTQ quantizes w_down against H = h h^T instead of H = I
     (capacity-padding rows are zero and contribute nothing to H).
     """
-    g = jnp.einsum("ecd,edf->ecf", x_buf, _as_dense(p["w_gate"], x_buf.dtype))
-    u = jnp.einsum("ecd,edf->ecf", x_buf, _as_dense(p["w_up"], x_buf.dtype))
+    g = jnp.einsum("ecd,edf->ecf", x_buf,
+                   _as_dense(p["w_gate"], x_buf.dtype, draft))
+    u = jnp.einsum("ecd,edf->ecf", x_buf,
+                   _as_dense(p["w_up"], x_buf.dtype, draft))
     h = act(g) * u
     if col is not None:
         for e in range(h.shape[0]):
             col.add(f"{prefix}expert{e0 + e}/hidden", h[e])
-    return jnp.einsum("ecf,efd->ecd", h, _as_dense(p["w_down"], x_buf.dtype))
+    return jnp.einsum("ecf,efd->ecd", h,
+                      _as_dense(p["w_down"], x_buf.dtype, draft))
 
 
 def _moe_local(xf: jnp.ndarray, top_i: jnp.ndarray, top_p: jnp.ndarray,
                expert_p: Params, act, e0: int, e_loc: int, cap_c: int,
-               col=None, prefix: str = "") -> jnp.ndarray:
+               col=None, prefix: str = "",
+               draft: bool = False) -> jnp.ndarray:
     """Dispatch/FFN/combine for experts [e0, e0+e_loc); xf (T, d).
 
     Perf note (EXPERIMENTS.md §Perf, qwen3-moe hillclimb): slot->token is
@@ -113,7 +126,7 @@ def _moe_local(xf: jnp.ndarray, top_i: jnp.ndarray, top_p: jnp.ndarray,
     if col is not None:                                    # PTQ capture
         for e in range(e_loc):
             col.add(f"{prefix}expert{e0 + e}", buf[e])
-    out = _expert_ffn(buf[:e_loc], expert_p, act, col, prefix, e0)
+    out = _expert_ffn(buf[:e_loc], expert_p, act, col, prefix, e0, draft)
     out = jnp.concatenate([out, jnp.zeros((1, cap_c, d), out.dtype)], axis=0)
     slot_out = out[be, bc]                                 # (T*k, d)
     weight = jnp.where(valid, flat_p, 0.0).astype(xf.dtype)[:, None]
@@ -169,6 +182,7 @@ def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
     else:
         cap_c = capacity(t_total, cfg.top_k, cfg.n_experts, cfg.capacity_factor)
         y = _moe_local(xf, top_i, top_p.astype(x.dtype),
-                       p, act, 0, cfg.n_experts, cap_c, col, prefix)
+                       p, act, 0, cfg.n_experts, cap_c, col, prefix,
+                       draft=bool(ctx.exec_policy.draft_bits))
     y = y.reshape(b, s, d)
     return ctx.constrain(y, "dp", None, None), aux

@@ -57,7 +57,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.cache_formats import (contiguous_cfg, get_cache_format,
                                       kv_cache_bytes, kv_format_of,
-                                      pages_for)
+                                      pages_for, restore_cells,
+                                      snapshot_cells)
 from repro.models import (TokenBatch, decode_step, init_serve_cache,
                           mixed_step, prefill)
 from repro.sharding.context import ShardCtx, LOCAL
@@ -70,7 +71,8 @@ __all__ = ["GenRequest", "GenResult", "ServeEngine"]
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, ctx: ShardCtx = LOCAL,
                  max_len: int = 512, n_slots: int = 4,
-                 prefill_chunk: int = 32, token_budget: int = 0):
+                 prefill_chunk: int = 32, token_budget: int = 0,
+                 spec_k: int = 0, draft_bits: int = 0):
         if cfg.is_encoder_decoder:
             raise NotImplementedError("serving is decoder-only")
         self.params = params
@@ -101,6 +103,29 @@ class ServeEngine:
             # pin the pool geometry the cache init reads off the config
             cfg = dataclasses.replace(cfg, kv_pages=self.n_pages)
         self.cfg = cfg
+        # --- self-speculative decoding (nested-bitstream draft weights) ---
+        # k greedy draft tokens per slot per round, drafted at draft_bits
+        # prefix width (0 = full-width "exact" drafts); the verify pass
+        # scores all k+1 positions in one mixed_step and rejected cache
+        # writes are rolled back bitwise, so greedy outputs stay
+        # token-identical to spec_k=0.
+        assert spec_k >= 0
+        assert draft_bits in (0, 2, 3), "draft_bits must be 0, 2 or 3"
+        self.draft_bits = draft_bits
+        self.spec_fallback = ""
+        kinds_all = set(cfg.layer_kinds)
+        if spec_k and kinds_all & {"rwkv", "rglru"}:
+            # recurrent state folds every token irreversibly — there is no
+            # cell-level rollback, so these stacks serve non-speculatively
+            spec_k, self.spec_fallback = 0, "recurrent state (no rollback)"
+        if spec_k and "local" in kinds_all and not self.paged:
+            # a contiguous sliding-window ring aliases position p to cell
+            # p % w; a round's k+1 in-flight positions must stay distinct
+            # or accepted writes and rollbacks would collide on one cell
+            spec_k = min(spec_k, min(max_len, cfg.sliding_window) - 1)
+        if spec_k and cfg.n_experts > 0:
+            self._moe_spec_guard(n_slots, spec_k)
+        self.spec_k = spec_k
         # sliding-window page release is sound only when NO attention layer
         # keeps whole-history reach (every attn layer is 'local')
         kinds = {k for k in cfg.layer_kinds if k in ("attn", "local")}
@@ -120,6 +145,28 @@ class ServeEngine:
             lambda p, c, t, pos: decode_step(p, c, t, pos, self.ref_cfg,
                                              ctx),
             donate_argnums=(1,))
+        # speculative jits: draft steps run the SAME mixed step under a
+        # draft-pass policy (nested formats stream their prefix planes
+        # only), the verify step scores k+1 lanes per slot via
+        # emit_groups, and snapshot/restore bracket each round so
+        # rejected cache writes disappear bitwise
+        dctx = ctx.with_draft_bits(draft_bits) if draft_bits else ctx
+        self._mixed_draft = self._mixed if not draft_bits else jax.jit(
+            lambda p, c, tb: mixed_step(p, c, tb, cfg, dctx),
+            donate_argnums=(1,))
+        if self.spec_k:
+            eg = self.spec_k + 1
+            self._verify = jax.jit(
+                lambda p, c, tb: mixed_step(p, c, tb, cfg, ctx,
+                                            emit_groups=eg),
+                donate_argnums=(1,))
+            self._snapshot = jax.jit(
+                lambda c, s, q, pg: snapshot_cells(c, s, q, pages=pg))
+            self._restore = jax.jit(
+                lambda c, sn, s, q, keep, pg: restore_cells(
+                    c, sn, s, q, keep, pages=pg),
+                donate_argnums=(0,))
+            self._argmax = jax.jit(lambda l: jnp.argmax(l, axis=-1))
 
         def _sample(logits, temps, top_ks, base_keys, nsamp):
             keys = jax.vmap(jax.random.fold_in)(base_keys, nsamp)
@@ -128,6 +175,158 @@ class ServeEngine:
         self._sample = jax.jit(_sample)
         self._prefill_jits: Dict[int, object] = {}   # legacy admission only
         self.last_stats: Dict[str, float] = {}
+
+    # ---------------------------------------------- speculative decoding
+
+    def _moe_spec_guard(self, ns: int, k: int) -> None:
+        """Dropping-MoE + speculation guard: the verify step routes up to
+        ns*(k+1) lanes through the experts in ONE dispatch, and capacity
+        ranks are computed across the whole step — a token dropped there
+        would silently diverge from the sequential baseline. Require
+        per-expert capacity that absorbs the worst case (every assignment
+        landing on one expert) or refuse at construction."""
+        from repro.models.moe import capacity
+        t_v = ns * (k + 1)
+        need = t_v * self.cfg.top_k
+        cap = capacity(t_v, self.cfg.top_k, self.cfg.n_experts,
+                       self.cfg.capacity_factor)
+        if cap < need:
+            raise ValueError(
+                f"speculative decoding (spec_k={k}) over a dropping-MoE "
+                f"config: verify-step per-expert capacity {cap} cannot "
+                f"absorb the worst-case {need} routed assignments, so "
+                f"tokens could drop and break greedy token-identity; "
+                f"raise capacity_factor to >= n_experts "
+                f"({self.cfg.n_experts}) or serve with spec_k=0")
+
+    def _spec_round(self, cache, sched: SlotScheduler, budget: int,
+                    now):
+        """One speculative round replacing up to spec_k+1 sequential
+        decode steps: k chained draft passes at prefix width propose one
+        greedy token per slot each, ONE verify pass at full width scores
+        all k+1 positions per slot (lane groups via emit_groups), the
+        longest draft prefix matching the verify argmaxes is accepted
+        (plus the verify token itself as the bonus/correction), and
+        every cell a rejected — or merely drafted — token touched is
+        restored bitwise from a pre-round snapshot. Returns
+        (cache, drafted, accepted_drafts, emitted)."""
+        k = self.spec_k
+        ns = sched.n_slots
+        lanes_v = ns * (k + 1)
+        part = []
+        for i, st in enumerate(sched.slots):
+            if st is None:
+                continue
+            # per-slot draft depth: stay inside the cache row and the
+            # request's token budget (ke=0 slots still ride the verify
+            # lane j=0 — for them the round IS a plain decode step)
+            ke = min(k, self.max_len - st.pos - 2,
+                     st.req.max_new - len(st.tokens) - 1)
+            part.append((i, st, max(ke, 0)))
+        pages = None if sched.alloc is None \
+            else jnp.asarray(sched.page_table())
+
+        # fixed-shape cell coordinates for the whole round: lane i*(k+1)+j
+        # is slot i's position pos_i+1+j; unoccupied slots keep the OOB
+        # slot index (clamped reads, keep=False on every restore)
+        s_slots = np.full(lanes_v, ns, np.int32)
+        s_pos = np.zeros(lanes_v, np.int32)
+        touched = np.zeros(lanes_v, bool)
+        for i, st, ke in part:
+            for j in range(k + 1):
+                lane = i * (k + 1) + j
+                s_slots[lane] = i
+                s_pos[lane] = min(st.pos + 1 + j, self.max_len - 1)
+                touched[lane] = j <= ke
+        j_slots, j_pos = jnp.asarray(s_slots), jnp.asarray(s_pos)
+        snap = self._snapshot(cache, j_slots, j_pos, pages)
+
+        # k chained draft passes: drafts[i, 0] is the slot's pending
+        # (already sampled, not yet fed) token, drafts[i, m+1] the greedy
+        # pick of draft pass m. Draft lanes reuse the budget-shaped
+        # TokenBatch so no new mixed-step shape compiles.
+        drafts = np.zeros((ns, k + 1), np.int64)
+        for i, st, ke in part:
+            drafts[i, 0] = st.cur_token
+        reset = jnp.zeros(ns, bool)
+        ran_draft = False
+        for m in range(k):
+            live = [(i, st, ke) for (i, st, ke) in part if ke > m]
+            if not live:
+                break
+            ran_draft = True
+            tok = np.zeros(budget, np.int32)
+            slt = np.zeros(budget, np.int32)
+            pos = np.zeros(budget, np.int32)
+            act = np.zeros(budget, bool)
+            for lane, (i, st, ke) in enumerate(live):
+                tok[lane] = drafts[i, m]
+                slt[lane] = i
+                pos[lane] = st.pos + 1 + m
+                act[lane] = True
+            tb = TokenBatch(
+                tokens=jnp.asarray(tok), slots=jnp.asarray(slt),
+                positions=jnp.asarray(pos), horizon=jnp.asarray(pos),
+                emit=jnp.asarray(act), active=jnp.asarray(act),
+                reset=reset, pages=pages)
+            logits, cache = self._mixed_draft(self.params, cache, tb)
+            d = np.asarray(self._argmax(logits))
+            for i, st, ke in live:
+                drafts[i, m + 1] = int(d[i])
+
+        # clear draft residue before verifying: a draft pass wrote
+        # prefix-width KV at its position, and on a contiguous
+        # sliding-window ring that cell aliases live history the verify
+        # queries still need — restore puts the pre-round bytes back;
+        # the verify step re-writes all k+1 positions at full width
+        # through its own in-step overlay (token_write_view)
+        if ran_draft:
+            cache = self._restore(cache, snap, j_slots, j_pos,
+                                  jnp.asarray(touched), pages)
+
+        tok = np.zeros(lanes_v, np.int32)
+        slt = np.zeros(lanes_v, np.int32)
+        pos = np.zeros(lanes_v, np.int32)
+        hor = np.zeros(lanes_v, np.int32)
+        act = np.zeros(lanes_v, bool)
+        for i, st, ke in part:
+            for j in range(ke + 1):
+                lane = i * (k + 1) + j
+                tok[lane] = drafts[i, j]
+                slt[lane] = i
+                pos[lane] = st.pos + 1 + j
+                hor[lane] = st.pos + 1
+                act[lane] = True
+        tb = TokenBatch(
+            tokens=jnp.asarray(tok), slots=jnp.asarray(slt),
+            positions=jnp.asarray(pos), horizon=jnp.asarray(hor),
+            emit=jnp.asarray(act), active=jnp.asarray(act),
+            reset=reset, pages=pages)
+        logits, cache = self._verify(self.params, cache, tb)
+        v = np.asarray(self._argmax(logits)).reshape(ns, k + 1)
+
+        # accept-prefix: verify lane j is the model's true greedy token
+        # AFTER consuming drafts[i, 0..j]; accept drafts while they match,
+        # emit the first mismatching verify token as the free correction
+        keep_post = np.zeros(lanes_v, bool)
+        drafted = accepted = emitted = 0
+        tstamp = now()
+        for i, st, ke in part:
+            n_acc = 0
+            while n_acc < ke and drafts[i, n_acc + 1] == v[i, n_acc]:
+                n_acc += 1
+            toks = [int(v[i, j]) for j in range(n_acc + 1)]
+            # the scheduler may append fewer than offered (eos / length /
+            # deadline); cells past what it kept are rolled back too
+            n_app = sched.record_speculative(i, toks, tstamp)
+            keep_post[i * (k + 1):i * (k + 1) + n_app] = True
+            drafted += ke
+            accepted += max(n_app - 1, 0)
+            emitted += n_app
+        cache = self._restore(cache, snap, j_slots, j_pos,
+                              jnp.asarray(touched & ~keep_post), pages)
+        jax.block_until_ready(cache)
+        return cache, drafted, accepted, emitted
 
     # -------------------------------------------------- continuous batching
 
@@ -195,6 +394,13 @@ class ServeEngine:
         pure_decode_s = 0.0             # steps carrying no chunk lanes
         pure_decode_tokens = 0
         prefills = 0
+        spec_rounds = 0
+        spec_s = 0.0
+        drafted_tokens = 0
+        accepted_tokens = 0
+        spec_emitted = 0
+        if self.spec_k and self.cfg.n_experts > 0 and ns != self.n_slots:
+            self._moe_spec_guard(ns, self.spec_k)   # verify width changed
 
         peak_pages = 0
         while not sched.done():
@@ -229,6 +435,27 @@ class ServeEngine:
                     break
                 time.sleep(max(0.0, min(nxt - now(), 0.05)))
                 continue
+
+            if self.spec_k and sched.spec_ready():
+                # pure-greedy-decode step: run a speculative round instead
+                # (k draft passes + 1 verify emitting up to k+1 tokens/slot)
+                sched.grow_pages(now(), lookahead=self.spec_k + 1)
+                if sched.spec_ready():      # eviction can re-queue a slot
+                    t0 = time.perf_counter()
+                    if alloc is not None:
+                        peak_pages = max(peak_pages, alloc.in_use)
+                    cache, dk, ak, ek = self._spec_round(cache, sched,
+                                                         budget, now)
+                    dt = time.perf_counter() - t0
+                    step_s += dt
+                    spec_s += dt
+                    steps += 1
+                    spec_rounds += 1
+                    drafted_tokens += dk
+                    accepted_tokens += ak
+                    spec_emitted += ek
+                    decode_tokens += ek
+                    continue
 
             sched.grow_pages(now())     # map next-token pages, evict if dry
             lanes = sched.schedule_step(budget, chunk_cap, now())
@@ -279,6 +506,18 @@ class ServeEngine:
             "prefills": prefills, "slot_reuses": sched.slot_reuses,
             "kv_cache_bytes": kv_cache_bytes(cache),
             "evictions": sched.evictions,
+            # speculative decoding: accepted_tok_per_s is the emitted-token
+            # throughput of the speculative rounds alone (drafts + verify +
+            # rollback all inside the denominator), reported separately
+            # from step_tok_per_s on purpose
+            "spec_k": self.spec_k, "spec_draft_bits": self.draft_bits,
+            "spec_rounds": spec_rounds,
+            "drafted_tokens": drafted_tokens,
+            "accepted_tokens": accepted_tokens,
+            "accept_rate": accepted_tokens / drafted_tokens
+            if drafted_tokens else 0.0,
+            "accepted_tok_per_s": spec_emitted / spec_s if spec_s else 0.0,
+            "spec_emitted_tokens": spec_emitted,
         }
         if alloc is not None:
             self.last_stats.update(

@@ -353,13 +353,15 @@ class SlotScheduler:
         self._evicted[st.req.uid] = self._evicted.get(st.req.uid, 0) + 1
         self.queue.append(st.req)
 
-    def grow_pages(self, now_s: float) -> None:
+    def grow_pages(self, now_s: float, lookahead: int = 1) -> None:
         """Map the page each active slot's next token will land on,
         processing high-priority slots first and evicting under pressure
         (a slot that is itself the lowest-priority one self-evicts).
         Prefilling slots are skipped — their pages reserve per chunk in
         `schedule_step`. With `window` set, pages that slid fully out of
-        the sliding window are released back to the pool first."""
+        the sliding window are released back to the pool first.
+        `lookahead` > 1 maps pages through position pos + lookahead — a
+        speculative round writes k+1 positions ahead in one step."""
         if self.alloc is None:
             return
         order = sorted((i for i, st in enumerate(self.slots)
@@ -374,7 +376,8 @@ class SlotScheduler:
             if self.window is not None:
                 self.pages_released_by_window += \
                     self.alloc.release_window(i, st.pos + 1, self.window)
-            while not self.alloc.ensure(i, st.pos + 1):
+            while not self.alloc.ensure(
+                    i, min(st.pos + lookahead, self.max_len - 1)):
                 victim = self._eviction_candidate()
                 assert victim is not None, "no active slot to evict"
                 self.evict(victim, now_s)
@@ -502,6 +505,48 @@ class SlotScheduler:
             if self._maybe_finish(i, now_s):
                 freed.append(i)
         return freed
+
+    # ------------------------------------------------- speculative decoding
+
+    def spec_ready(self) -> bool:
+        """True when a speculative round may replace this step: every
+        active slot is a greedy decode stream.  Prefilling slots need
+        chunk lanes (the round is pure decode), and sampled (temperature
+        > 0) slots would break the PRNG stream-index bookkeeping that
+        keeps serving reproducible, so any such slot gates the whole
+        step back to the plain path."""
+        if self.n_active == 0:
+            return False
+        for st in self.slots:
+            if st is None:
+                continue
+            if st.prefilling or not st.tokens:
+                return False
+            if st.req.temperature > 0:
+                return False
+        return True
+
+    def record_speculative(self, slot: int, toks: List[int],
+                           now_s: float) -> int:
+        """Append one speculative round's accepted tokens for `slot` —
+        the decode-lane bookkeeping of `record_scheduled`, repeated once
+        per token, stopping at the first finish condition (eos / length
+        / deadline).  Returns the number of tokens actually appended;
+        the caller rolls back cache cells beyond that count."""
+        st = self.slots[slot]
+        assert st is not None and st.tokens, \
+            "speculative record on a non-decoding slot"
+        n = 0
+        for tok in toks:
+            st.pos += 1
+            st.steps += 1
+            st.cur_token = int(tok)
+            st.tokens.append(int(tok))
+            st.times.append(now_s)
+            n += 1
+            if self._maybe_finish(slot, now_s):
+                break
+        return n
 
     def slot_sample_arrays(self) -> Tuple[np.ndarray, ...]:
         """(temps, top_ks, n_sampled) dense (n_slots,) for the sampler;

@@ -35,6 +35,12 @@ class ShardCtx:
             self, exec_policy=dataclasses.replace(self.exec_policy,
                                                   lut_backend=name))
 
+    def with_draft_bits(self, draft_bits: int) -> "ShardCtx":
+        """Context for a speculative draft forward pass (0 = full width)."""
+        return dataclasses.replace(
+            self, exec_policy=dataclasses.replace(self.exec_policy,
+                                                  draft_bits=draft_bits))
+
     @property
     def dp(self):
         return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]

@@ -1,0 +1,340 @@
+"""Self-speculative decoding: nested bitstreams, rollback, token identity.
+
+The nested `lut4_nested` format orders each row's codebook so the high
+bit-planes of every code form a valid coarser codebook: a draft pass
+streams only the leading ceil(n*draft_bits/8) bytes of the shared
+bitstream, the verify pass reads the full stream, and storage counts the
+stream ONCE. The serving round (k draft passes + one k+1-lane verify +
+bitwise rollback of rejected cache writes) must leave greedy outputs
+token-identical to non-speculative serving across every cache format.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import QuantConfig, get_cache_format, quantize_linear
+from repro.core.cache_formats import restore_cells, snapshot_cells
+from repro.core.codebook import nested_codebooks
+from repro.core.formats import get_format, nested_linear_fmt
+from repro.core.packing import (code_stream_bytes, nested_stream_cols,
+                                unpack_bits_nested)
+from repro.core.policy import PrecisionPolicy, parse_policy
+from repro.data.synthetic import MarkovStream
+from repro.kernels.ops import lut_linear, vmem_plan
+from repro.models import init_params
+from repro.models.quantized import model_storage_report, quantize_model_ptq
+from repro.serve.engine import GenRequest, ServeEngine
+from repro.serve.scheduler import PageAllocator
+
+
+def _setup(arch="deepseek-7b"):
+    cfg = reduce_config(get_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    data = MarkovStream(cfg.vocab_size, batch=4, seq=32, seed=0)
+    return cfg, params, data
+
+
+def _nested_layer(m=16, n=24, seed=0, fmt="lut4_nested"):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    h = jnp.eye(n, dtype=jnp.float32)
+    res = quantize_linear(w, h, QuantConfig(bits=4), "rtn")
+    return get_format(fmt).encode(res.layer)
+
+
+# ------------------------------------------------------- format + kernels
+
+@pytest.mark.parametrize("fmt,db", [("lut4_nested", 3),
+                                    ("lut4_nested_d2", 2)])
+def test_nested_reencode_preserves_decode(fmt, db):
+    """Re-ordering the codebook + splitting the stream must not change the
+    decoded weights; re-encoding is idempotent; the draft prefix is a
+    contiguous sub-stream decoding against the coarse codebook."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(8, 21)).astype(np.float32))
+    res = quantize_linear(w, jnp.eye(21, dtype=jnp.float32),
+                          QuantConfig(bits=4), "rtn")
+    base = res.layer
+    f = get_format(fmt)
+    assert f.draft_bits == db and nested_linear_fmt(db) == fmt
+    lay = f.encode(base)
+    assert lay.fmt == fmt
+    np.testing.assert_array_equal(np.asarray(f.dequantize(lay)),
+                                  np.asarray(base.dequantize()))
+    again = f.encode(lay)                        # idempotent
+    np.testing.assert_array_equal(np.asarray(again.codes),
+                                  np.asarray(lay.codes))
+    # the draft view: leading ceil(n*db/8) bytes decode at width db
+    n = 21
+    hi_cols = code_stream_bytes(n, db)
+    assert lay.codes.shape[1] == sum(nested_stream_cols(n, 4, db))
+    assert nested_stream_cols(n, 4, db)[0] == hi_cols
+    d_codes, d_book = f.draft_view(lay)
+    assert d_codes.shape == (8, n) and d_book.shape[1] == 1 << db
+    full_codes = unpack_bits_nested(lay.codes, 4, db, n)
+    np.testing.assert_array_equal(np.asarray(d_codes),
+                                  np.asarray(full_codes) >> (4 - db))
+    np.testing.assert_array_equal(
+        np.asarray(d_book),
+        np.asarray(nested_codebooks(lay.codebook, db)))
+    # prefix slice really is byte-contiguous: draft decode only touches
+    # the first hi_cols columns
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits_nested(
+            jnp.concatenate([lay.codes[:, :hi_cols],
+                             jnp.zeros_like(lay.codes[:, hi_cols:])], 1),
+            4, db, n)) >> (4 - db),
+        np.asarray(d_codes))
+
+
+@pytest.mark.parametrize("db", [2, 3])
+def test_nested_lut_linear_full_and_draft_parity(db):
+    """`lut_linear` on the nested layout: the full path matches the dense
+    decode matmul bitwise-close; the draft path matches the coarse-book
+    matmul; XLA and Pallas(interpret) agree."""
+    fmt = nested_linear_fmt(db)
+    lay = _nested_layer(m=16, n=24, fmt=fmt)
+    f = get_format(fmt)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(24, 3)).astype(np.float32))
+    want_full = np.asarray(f.dequantize(lay) @ x)
+    d_codes, d_book = f.draft_view(lay)
+    want_draft = np.asarray(
+        jnp.take_along_axis(d_book, d_codes.astype(jnp.int32), axis=1) @ x)
+    for pallas in (False, True):
+        got = lut_linear(lay.codes, lay.codebook, x, bits=4, fmt=fmt,
+                         use_pallas=pallas)
+        np.testing.assert_allclose(np.asarray(got), want_full,
+                                   rtol=1e-5, atol=1e-5)
+        gotd = lut_linear(lay.codes, lay.codebook, x, bits=4, fmt=fmt,
+                          use_pallas=pallas, draft_bits=db)
+        np.testing.assert_allclose(np.asarray(gotd), want_draft,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_nested_storage_counts_stream_once():
+    """Satellite: honest accounting. The draft prefix is a VIEW of the
+    shared bitstream, not a second copy — code payload is exactly 4
+    bits/weight (0.5 B/wt), and the draft pass reads ceil(n*db/8) bytes
+    per row."""
+    m, n, db = 16, 24, 3
+    lay = _nested_layer(m=m, n=n)
+    f = get_format("lut4_nested")
+    total, count = f.storage_bits(lay)
+    assert count == m * n
+    book_bits = lay.codebook.size * lay.codebook.dtype.itemsize * 8
+    assert total - book_bits == 4 * count        # stream counted ONCE
+    # physical row = hi plane bytes + lo plane bytes, nothing duplicated
+    assert lay.codes.shape == (m, code_stream_bytes(n, db)
+                               + code_stream_bytes(n, 4 - db))
+    # the kernel's draft plan reads exactly the prefix bytes per row
+    plan_full = vmem_plan(m, n, 4, 4, block_m=m, block_k=n, block_p=4,
+                          fmt="lut4_nested")
+    plan_draft = vmem_plan(m, n, 4, 4, block_m=m, block_k=n, block_p=4,
+                           fmt="lut4_nested", draft_bits=db)
+    assert plan_draft["codes_bytes"] == m * code_stream_bytes(n, db)
+    assert plan_full["codes_bytes"] == m * code_stream_bytes(n, 4)
+    # whole-model report: nested bits/weight == the plain packed layout's
+    # (same payload), never payload + prefix
+    cfg, params, data = _setup()
+    pol = PrecisionPolicy(qcfg=QuantConfig(bits=4), fmt="lut4_nested",
+                          method="rtn")
+    qp, _ = quantize_model_ptq(params, cfg, data.batch_at(0), policy=pol)
+    pol_p = PrecisionPolicy(qcfg=QuantConfig(bits=4), fmt="lut4_packed",
+                            method="rtn")
+    qp_p, _ = quantize_model_ptq(params, cfg, data.batch_at(0),
+                                 policy=pol_p)
+    rep = model_storage_report(qp)
+    assert rep["bits_per_weight"] == pytest.approx(
+        model_storage_report(qp_p)["bits_per_weight"])
+
+
+def test_policy_draft_entry_selects_nested_format():
+    pol = parse_policy("draft=3,kv=paged", QuantConfig(bits=4))
+    assert pol.draft_bits == 3 and pol.fmt == "lut4_nested"
+    assert pol.kv_fmt == "paged"
+    pol2 = parse_policy("draft=2", QuantConfig(bits=4))
+    assert pol2.fmt == "lut4_nested_d2"
+
+
+# ------------------------------------------------------- rollback property
+
+@pytest.mark.parametrize("kv", ["full", "int8", "paged", "paged_int8"])
+def test_rollback_cache_bitwise_identical(kv):
+    """Property: random accept/reject rounds through snapshot/write/restore
+    leave the cache bitwise identical to a twin that only ever received
+    the accepted writes (paged formats under PageAllocator churn)."""
+    cfg, _, _ = _setup()
+    ps, n_pages, n_slots, width, k = 4, 24, 3, 32, 3
+    paged = kv.startswith("paged")
+    cfgk = dataclasses.replace(cfg, kv_format=kv, kv_page_size=ps,
+                               kv_pages=n_pages)
+    f = get_cache_format(kv)
+    spec = f.init(n_slots, width, cfgk, jnp.float32)
+    oracle = f.init(n_slots, width, cfgk, jnp.float32)
+    spec = {"units": [], "tail": [spec]}
+    oracle = {"units": [], "tail": [oracle]}
+    alloc = PageAllocator(n_pages, ps, n_slots, width // ps) if paged \
+        else None
+    rng = np.random.default_rng(3)
+    pos = np.zeros(n_slots, np.int64)
+    kv_shape = (n_slots, 1, cfg.n_kv_heads, cfg.head_dim)
+
+    def write(tree, p_np, active):
+        knew = jnp.asarray(rng.normal(size=kv_shape).astype(np.float32))
+        vnew = jnp.asarray(rng.normal(size=kv_shape).astype(np.float32))
+        pages = None if alloc is None else jnp.asarray(alloc.table())
+        st = f.write(tree["tail"][0], knew, vnew, jnp.asarray(p_np),
+                     active=jnp.asarray(active), pages=pages)
+        return {"units": [], "tail": [st]}, (knew, vnew)
+
+    for _ in range(12):
+        for i in range(n_slots):       # out of headroom: recycle the slot
+            if pos[i] + k + 1 > width - 1:   # (finish + readmission)
+                if alloc is not None:
+                    alloc.release(i)
+                pos[i] = 0
+        n_acc = rng.integers(0, k + 2, size=n_slots)   # accepted per slot
+        if alloc is not None:
+            for i in range(n_slots):
+                assert alloc.ensure(i, int(pos[i]) + k + 1)
+            alloc.check()
+        pages = None if alloc is None else jnp.asarray(alloc.table())
+        slots = np.repeat(np.arange(n_slots, dtype=np.int32), k + 1)
+        cells = np.concatenate(
+            [pos[i] + 1 + np.arange(k + 1) for i in range(n_slots)]
+        ).astype(np.int32)
+        snap = snapshot_cells(spec, jnp.asarray(slots), jnp.asarray(cells),
+                              pages=pages)
+        writes = []
+        for j in range(k + 1):                     # speculative writes: ALL
+            spec, rows = write(spec, pos + 1 + j, np.ones(n_slots, bool))
+            writes.append(rows)
+        for j in range(k + 1):                     # oracle: accepted only
+            knew, vnew = writes[j]
+            active = jnp.asarray(j < n_acc)
+            st = f.write(oracle["tail"][0], knew, vnew,
+                         jnp.asarray(pos + 1 + j), active=active,
+                         pages=pages)
+            oracle = {"units": [], "tail": [st]}
+        keep = np.concatenate([np.arange(k + 1) >= n_acc[i]
+                               for i in range(n_slots)])
+        spec = restore_cells(spec, snap, jnp.asarray(slots),
+                             jnp.asarray(cells), jnp.asarray(keep),
+                             pages=pages)
+        for key in spec["tail"][0].data:
+            a = np.asarray(spec["tail"][0].data[key])
+            b = np.asarray(oracle["tail"][0].data[key])
+            if paged:          # the scratch page (last pool row) is the
+                a, b = a[:n_pages], b[:n_pages]   # designated trash bin
+            np.testing.assert_array_equal(a, b, err_msg=key)
+        pos += n_acc
+        if alloc is not None and rng.random() < 0.3:
+            i = int(rng.integers(0, n_slots))      # churn: evict + readmit
+            alloc.release(i)
+            pos[i] = 0
+            alloc.check()
+
+    # duplicated writes must overwrite each other deterministically only
+    # for distinct cells — the engine guarantees k+1 <= ring width
+    assert k + 1 <= width
+
+
+# ------------------------------------------------------------ engine guards
+
+def test_moe_spec_guard_rejects_dropping_configs():
+    """Satellite: spec_k > 0 over a dropping MoE must be refused at
+    construction — the k+1-lane verify dispatch could drop tokens and
+    silently break token identity."""
+    cfg, params, _ = _setup("qwen3-moe-30b-a3b")
+    # reduced config has capacity_factor >= n_experts: constructs fine
+    eng = ServeEngine(params, cfg, max_len=32, n_slots=2, spec_k=2)
+    assert eng.spec_k == 2
+    tight = dataclasses.replace(cfg, capacity_factor=1.25)
+    ServeEngine(params, tight, max_len=32, n_slots=2)      # plain: fine
+    with pytest.raises(ValueError, match="dropping-MoE"):
+        ServeEngine(params, tight, max_len=32, n_slots=2, spec_k=2)
+
+
+def test_recurrent_and_ring_fallbacks():
+    cfg, params, _ = _setup("rwkv6-7b")
+    eng = ServeEngine(params, cfg, max_len=32, n_slots=2, spec_k=3)
+    assert eng.spec_k == 0 and "recurrent" in eng.spec_fallback
+    cfg2, params2, _ = _setup("gemma3-1b")     # sliding-window 'local'
+    w = min(32, cfg2.sliding_window)
+    eng2 = ServeEngine(params2, cfg2, max_len=32, n_slots=2, spec_k=w + 4)
+    assert eng2.spec_k == w - 1                # ring cells must be distinct
+
+
+# -------------------------------------------------------- token identity
+
+def _serve_pair(cfg, params, k, draft_bits, reqs, n_slots=2, max_len=64):
+    base = ServeEngine(params, cfg, max_len=max_len, n_slots=n_slots,
+                       prefill_chunk=8)
+    r0 = base.serve(reqs, seed=0)
+    eng = ServeEngine(params, cfg, max_len=max_len, n_slots=n_slots,
+                      prefill_chunk=8, spec_k=k, draft_bits=draft_bits)
+    rk = eng.serve(reqs, seed=0)
+    for a, b in zip(r0, rk):
+        assert a.tokens == b.tokens, (a.tokens, b.tokens)
+    return eng.last_stats
+
+
+def _reqs(cfg, n=3, max_new=10):
+    data = MarkovStream(cfg.vocab_size, batch=n, seq=32, seed=0)
+    toks = np.asarray(data.batch_at(0)["tokens"])
+    return [GenRequest(prompt=list(map(int, toks[i, :7 + 4 * i])),
+                       max_new=max_new, temperature=0.0) for i in range(n)]
+
+
+@pytest.mark.parametrize("kv", ["full", "int8", "paged", "paged_int8"])
+@pytest.mark.parametrize("k", [2, 4])
+def test_greedy_token_identity_all_cache_formats(kv, k):
+    """Speculative greedy serving is token-identical to spec_k=0 on every
+    attention cache layout (exact drafts isolate the round/rollback
+    machinery from draft quality)."""
+    cfg, params, _ = _setup()
+    cfg = dataclasses.replace(cfg, kv_format=kv)
+    st = _serve_pair(cfg, params, k, 0, _reqs(cfg))
+    assert st["spec_rounds"] > 0
+    assert st["accept_rate"] == 1.0            # exact drafts always match
+    assert st["accepted_tok_per_s"] > 0
+    assert st["spec_k"] == k
+
+
+@pytest.mark.parametrize("kv", ["full", "paged_int8"])
+def test_greedy_token_identity_moe(kv):
+    """Second config, with experts: the k+1-lane verify routes through the
+    no-drop-guarded MoE dispatch and must stay token-identical."""
+    cfg, params, _ = _setup("qwen3-moe-30b-a3b")
+    cfg = dataclasses.replace(cfg, kv_format=kv)
+    st = _serve_pair(cfg, params, 3, 0, _reqs(cfg))
+    assert st["spec_rounds"] > 0 and st["accept_rate"] == 1.0
+
+
+def test_greedy_token_identity_nested_quantized_drafts():
+    """The real thing: 4-bit nested-quantized model drafting at 3-bit
+    prefix width — outputs stay token-identical and some (not necessarily
+    all) drafts are accepted."""
+    cfg, params, data = _setup()
+    pol = PrecisionPolicy(qcfg=QuantConfig(bits=4), fmt="lut4_nested",
+                          method="rtn")
+    qp, _ = quantize_model_ptq(params, cfg, data.batch_at(0), policy=pol)
+    st = _serve_pair(cfg, qp, 3, 3, _reqs(cfg))
+    assert st["spec_rounds"] > 0
+    assert st["drafted_tokens"] > 0
+    assert 0.0 <= st["accept_rate"] <= 1.0
+    assert st["spec_draft_bits"] == 3
+
+
+def test_sliding_window_ring_rollback_identity():
+    """Rejected draft writes on a contiguous sliding-window ring clobber
+    LIVE history cells — identity here proves the bitwise rollback (and
+    the pre-verify residue restore) actually work."""
+    cfg, params, _ = _setup("gemma3-1b")
+    st = _serve_pair(cfg, params, 3, 0, _reqs(cfg))
+    assert st["spec_rounds"] > 0 and st["accept_rate"] == 1.0
