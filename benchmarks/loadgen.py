@@ -1,0 +1,239 @@
+"""Open-loop load generator: seeded Poisson/trace arrivals -> goodput.
+
+The closed-loop serving benches measure what the engine can do when
+requests politely wait their turn; production traffic doesn't wait. This
+harness replaces them for serving-quality questions: arrivals are drawn
+from a seeded Poisson process (or replayed from a trace file), requests
+are submitted at those times regardless of engine backlog, and the
+report is what users experience — TTFT/ITL p50/p99, SLO attainment, and
+goodput (tokens/s counted ONLY for requests that met their deadline) —
+plus the achieved-vs-peak MFU/HBM figures from the roofline-wired step
+tracker. Results merge into benchmarks/BENCH_goodput.json.
+
+Determinism: `poisson_arrivals(rate, n, seed)` is reproducible across
+runs and machines (numpy Generator, fixed seed), prompts are seeded
+Markov-stream slices, and decoding is greedy, so two runs of the same
+command line produce identical token streams (wall-clock latencies
+differ, tokens don't).
+
+`--http` additionally drives the SAME workload through the asyncio SSE
+front end (in-process server, real sockets, arrivals enforced by the
+client) and asserts the streamed tokens are identical to the engine
+path — the open-loop twin of the CI smoke test.
+
+Usage:
+  PYTHONPATH=src python benchmarks/loadgen.py --rate 8 --requests 24 \
+      --slo-ttft 2.0 --slo-itl 0.5 [--speculate 3 --draft-bits 3] \
+      [--adaptive] [--http] [--out benchmarks/BENCH_goodput.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))          # for run.py helpers
+from run import _merge_bench_json, _trained_small_lm    # noqa: E402
+
+from repro.serve import (AdaptiveDraftPolicy, GenRequest, SLO, ServeEngine,
+                         goodput_report, latency_summary)
+
+
+def poisson_arrivals(rate: float, n: int, seed: int = 0) -> List[float]:
+    """n arrival offsets (seconds) of a Poisson process with `rate`
+    requests/s: iid exponential gaps, cumsum'd. Seeded -> bitwise
+    reproducible across runs."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return [float(t) for t in np.cumsum(gaps)]
+
+
+def trace_arrivals(path: str) -> List[float]:
+    """Arrival offsets from a trace file: JSON list, or one float per
+    line. Offsets are from run start, must be non-decreasing."""
+    text = Path(path).read_text()
+    try:
+        times = json.loads(text)
+    except ValueError:
+        times = [float(x) for x in text.split()]
+    return [float(t) for t in times]
+
+
+def build_requests(cfg, n: int, prompt_lens: List[int], max_new: int,
+                   seed: int, deadline_s: Optional[float] = None
+                   ) -> List[GenRequest]:
+    """Seeded mixed-length greedy requests over the model's vocab."""
+    rng = np.random.default_rng(seed + 1)
+    reqs = []
+    for i in range(n):
+        plen = prompt_lens[i % len(prompt_lens)]
+        prompt = [int(t) for t in rng.integers(1, cfg.vocab_size,
+                                               size=plen)]
+        reqs.append(GenRequest(prompt=prompt, max_new=max_new,
+                               deadline_s=deadline_s))
+    return reqs
+
+
+def _http_check(engine: ServeEngine, reqs: List[GenRequest],
+                arrivals: List[float], ref_tokens: List[List[int]],
+                seed: int) -> dict:
+    """Open-loop over real sockets: fire the same workload at the asyncio
+    SSE front end at the same arrival offsets, assert token identity."""
+    import asyncio
+    from repro.serve.frontend import AsyncServeFrontend, sse_generate
+
+    async def drive():
+        async def one(req, delay):
+            await asyncio.sleep(delay)
+            return await sse_generate("127.0.0.1", fe.port, {
+                "prompt": req.prompt, "max_new": req.max_new,
+                "deadline_s": req.deadline_s})
+        fe = AsyncServeFrontend(engine, seed=seed)
+        async with fe:
+            frames = await asyncio.gather(
+                *[one(r, t) for r, t in zip(reqs, arrivals)])
+        return [[f["token"] for f in fs if "token" in f] for fs in frames]
+
+    toks = asyncio.run(drive())
+    identical = toks == ref_tokens
+    assert identical, "SSE open-loop tokens diverged from engine path"
+    return {"http_tokens_identical": identical, "http_requests": len(toks)}
+
+
+def run_loadgen(rate: float = 8.0, n_requests: int = 24, seed: int = 0,
+                prompt_lens: List[int] = (8, 24, 48), max_new: int = 24,
+                slo_ttft_s: float = 2.0, slo_itl_s: float = 0.5,
+                deadline_s: Optional[float] = None,
+                trace: Optional[str] = None, n_slots: int = 4,
+                prefill_chunk: int = 16, spec_k: int = 0,
+                draft_bits: int = 0, adaptive: bool = False,
+                http: bool = False, track=True,
+                out_path: Optional[str] = None) -> dict:
+    cfg, params, data = _trained_small_lm()
+    if draft_bits:
+        # low-bit-prefix drafts need the nested bitstream weight layout:
+        # quantize the trained LM to 4-bit lut4_nested (RTN is enough for
+        # a serving-shape bench) so draft passes stream 3 of 4 bit-planes
+        import jax.numpy as jnp
+        from repro.core import QuantConfig
+        from repro.core.policy import PrecisionPolicy
+        from repro.models.quantized import quantize_model_ptq
+        pol = PrecisionPolicy(qcfg=QuantConfig(bits=4), fmt="lut4_nested",
+                              method="rtn")
+        params, _ = quantize_model_ptq(
+            params, cfg, {k: jnp.asarray(v)
+                          for k, v in data.batch_at(0).items()},
+            policy=pol)
+    policy = AdaptiveDraftPolicy(queue_hi=2, queue_lo=0,
+                                 wait_hi_s=slo_ttft_s / 2,
+                                 wait_lo_s=slo_ttft_s / 8) \
+        if adaptive else None
+    engine = ServeEngine(params, cfg, max_len=128, n_slots=n_slots,
+                         prefill_chunk=prefill_chunk, spec_k=spec_k,
+                         draft_bits=draft_bits, adaptive=policy)
+    reqs = build_requests(cfg, n_requests, list(prompt_lens), max_new,
+                          seed, deadline_s)
+    arrivals = trace_arrivals(trace) if trace else \
+        poisson_arrivals(rate, n_requests, seed)
+    if len(arrivals) < n_requests:
+        raise SystemExit(f"trace has {len(arrivals)} arrivals "
+                         f"< {n_requests} requests")
+
+    # warm the serving jits off-clock (compile time would otherwise be
+    # charged to the first arrivals' TTFT and dominate the p99); bypass
+    # the adaptive gate so the draft/verify jits compile here too, not
+    # inside the measured run's first pressure spike
+    engine.adaptive = None
+    engine.serve(build_requests(cfg, min(n_slots, n_requests),
+                                list(prompt_lens), 4, seed + 7), seed=seed)
+    engine.adaptive = policy
+    results = engine.serve(reqs, seed=seed, arrival_times=arrivals,
+                           track=track)
+    stats = engine.last_stats
+    slo = SLO(ttft_s=slo_ttft_s, itl_s=slo_itl_s)
+    report = {
+        "arrivals": {"process": "trace" if trace else "poisson",
+                     "rate_req_per_s": None if trace else rate,
+                     "seed": seed, "n_requests": n_requests,
+                     "span_s": arrivals[n_requests - 1]},
+        "workload": {"prompt_lens": list(prompt_lens), "max_new": max_new,
+                     "n_slots": n_slots, "prefill_chunk": prefill_chunk,
+                     "spec_k": spec_k, "draft_bits": draft_bits,
+                     "adaptive": adaptive},
+        "latency": latency_summary(results),
+        "goodput": goodput_report(results, slo, wall_s=stats["wall_s"]),
+        "engine": {k: stats[k] for k in
+                   ("wall_s", "step_tok_per_s", "decode_tok_per_s",
+                    "chunk_tokens", "prefills", "spec_rounds",
+                    "accept_rate") if k in stats},
+    }
+    if adaptive:
+        report["engine"].update(
+            adaptive_rounds=stats["adaptive_rounds"],
+            adaptive_flips=stats["adaptive_flips"])
+    if track:
+        report["hw"] = stats["hw"]
+    if http:
+        report["http"] = _http_check(engine, reqs, arrivals,
+                                     [r.tokens for r in results], seed)
+    path = Path(out_path or Path(__file__).parent / "BENCH_goodput.json")
+    key = "open_loop" + ("_spec_adaptive" if adaptive
+                         else "_spec" if spec_k else "")
+    _merge_bench_json(path, {key: report})
+    print(json.dumps({"ttft_p99_s": report["latency"]["ttft_s"]["p99"],
+                      "itl_p99_s": report["latency"]["itl_s"]["p99"],
+                      "slo_attainment":
+                      report["goodput"]["slo_attainment"],
+                      "goodput_tok_per_s":
+                      report["goodput"]["goodput_tok_per_s"],
+                      "hbm_util_pct_p50":
+                      report["hw"]["hbm_util_pct"]["p50"] if track
+                      else None}, indent=1))
+    return report
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prompt-lens", type=int, nargs="+",
+                    default=[8, 24, 48])
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--slo-ttft", type=float, default=2.0,
+                    help="TTFT SLO seconds (goodput accounting)")
+    ap.add_argument("--slo-itl", type=float, default=0.5,
+                    help="max inter-token latency SLO seconds")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request decode deadline (engine-enforced)")
+    ap.add_argument("--trace", type=str, default=None,
+                    help="arrival trace file instead of Poisson")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--speculate", type=int, default=0, metavar="K")
+    ap.add_argument("--draft-bits", type=int, default=0,
+                    choices=(0, 2, 3))
+    ap.add_argument("--adaptive", action="store_true",
+                    help="load-adaptive draft precision policy")
+    ap.add_argument("--http", action="store_true",
+                    help="also drive the SSE front end, check identity")
+    ap.add_argument("--no-track", action="store_true",
+                    help="skip the MFU/HBM step tracker")
+    ap.add_argument("--out", type=str, default=None)
+    a = ap.parse_args(argv)
+    run_loadgen(rate=a.rate, n_requests=a.requests, seed=a.seed,
+                prompt_lens=a.prompt_lens, max_new=a.max_new,
+                slo_ttft_s=a.slo_ttft, slo_itl_s=a.slo_itl,
+                deadline_s=a.deadline, trace=a.trace, n_slots=a.slots,
+                prefill_chunk=a.prefill_chunk, spec_k=a.speculate,
+                draft_bits=a.draft_bits, adaptive=a.adaptive,
+                http=a.http, track=not a.no_track, out_path=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -620,6 +620,64 @@ def bench_mixed_precision_serving():
              f"ppl={_ppl(qp, cfg, evalb):.3f}")
 
 
+def bench_chunk_sweep_mfu(out_path=None):
+    """Revisit the `prefill_chunk` latency/throughput knob with the MFU
+    tracker: sweep the chunk size over an open-loop mixed-length
+    workload and report, per chunk size, TTFT p99 (bigger chunks admit
+    prompts in fewer steps) against step-level MFU / HBM utilization
+    (bigger chunks also pack more lanes per fixed-shape step, amortizing
+    the weight stream). The roofline-wired tracker turns each step's
+    wall time into achieved-vs-peak percentages, so the knob's cost is
+    read in % of hardware rather than raw microseconds. Greedy tokens
+    must be identical at every chunk size. Merges into
+    BENCH_goodput.json."""
+    from pathlib import Path
+    from loadgen import poisson_arrivals
+    from repro.serve import percentile
+    from repro.serve.engine import GenRequest, ServeEngine
+    cfg, params, data = _trained_small_lm()
+    n_req, max_new = 12, 12
+    toks = data.batch_at(803)["tokens"]
+    reqs = lambda: [GenRequest(prompt=toks[i % toks.shape[0],
+                                           :int(rng2.integers(8, 48))]
+                               .tolist(), max_new=max_new)
+                    for i in range(n_req)]
+    arrivals = poisson_arrivals(rate=16.0, n=n_req, seed=13)
+    sweep = {}
+    tokens = {}
+    for chunk in (8, 16, 32, 64):
+        rng2 = np.random.default_rng(5)     # same prompts per chunk size
+        engine = ServeEngine(params, cfg, max_len=128, n_slots=4,
+                             prefill_chunk=chunk)
+        engine.serve(reqs(), arrival_times=arrivals)   # warm jits
+        rng2 = np.random.default_rng(5)
+        res = engine.serve(reqs(), arrival_times=arrivals, track=True)
+        st = engine.last_stats
+        tokens[chunk] = [r.tokens for r in res]
+        ttfts = [r.prefill_s for r in res]
+        row = {
+            "ttft_p50_s": round(percentile(ttfts, 50), 4),
+            "ttft_p99_s": round(percentile(ttfts, 99), 4),
+            "step_tok_per_s": round(st["step_tok_per_s"], 1),
+            "mfu_pct_p50": st["hw"]["mfu_pct"]["p50"],
+            "hbm_util_pct_p50": st["hw"]["hbm_util_pct"]["p50"],
+            "step_bytes": st["hw"]["step_bytes"]["mixed"],
+            "token_budget": st["token_budget"],
+        }
+        sweep[f"chunk_{chunk}"] = row
+        _row(f"chunk_sweep_{chunk}", st["wall_s"] * 1e6,
+             f"ttft_p99={row['ttft_p99_s']:.3f}s "
+             f"mfu_p50={row['mfu_pct_p50']:.2f}% "
+             f"hbm_p50={row['hbm_util_pct_p50']:.2f}%")
+    first = tokens[8]
+    assert all(t == first for t in tokens.values()), \
+        "chunk size changed greedy tokens!"
+    sweep["tokens_identical_across_chunks"] = True
+    path = Path(out_path or Path(__file__).parent / "BENCH_goodput.json")
+    _merge_bench_json(path, {"chunk_sweep": sweep})
+    return sweep
+
+
 # ------------------------------------------------------------- Table 7
 
 def bench_table7_precondition():
@@ -680,6 +738,7 @@ _ALL_BENCHES = [
     "bench_chunked_prefill_ttft",
     "bench_speculative",
     "bench_mixed_precision_serving",
+    "bench_chunk_sweep_mfu",
     "bench_table7_precondition",
     "bench_fig1b_weight_stats",
     "bench_quant_cost",

@@ -19,6 +19,17 @@ prefill compiles):
       --method none --max-len 2112 --prompt-lens 32,2048,128 \\
       --prefill-chunk 64 --requests 6 --slots 2
 
+Async SSE streaming server (POST /v1/generate streams tokens as SSE
+frames, GET /v1/metrics reports TTFT/ITL percentiles + SLO goodput +
+achieved-vs-peak MFU/HBM; Ctrl-C to stop):
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
+      --method none --serve-http 8777 --track --slo-ttft 2 --slo-itl 0.5
+
+Load-adaptive draft precision (speculative 3-bit-prefix rounds only
+while the queue is backed up; greedy tokens unchanged):
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
+      --bits 4 --speculate 3 --draft-bits 3 --adaptive-draft --rate 16
+
 Production decode-step compile check (the paper's deployment on a pod):
   python -m repro.launch.serve --arch granite-3-8b --dry-run-only \\
       --bits 4 --kv8
@@ -94,6 +105,25 @@ def main(argv=None) -> int:
                          "lut4_nested layout); 0 = full-width drafts")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate (req/s); 0 = all at once")
+    ap.add_argument("--serve-http", type=int, default=None, metavar="PORT",
+                    help="start the asyncio SSE front end on PORT (0 = "
+                         "ephemeral) instead of the closed-loop demo; "
+                         "endpoints: POST /v1/generate (SSE stream), "
+                         "GET /v1/metrics, GET /healthz")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --serve-http")
+    ap.add_argument("--track", action="store_true",
+                    help="per-step MFU/HBM tracker: roofline HLO cost of "
+                         "the serving jits vs measured step wall times, "
+                         "reported as achieved-vs-peak percentages")
+    ap.add_argument("--slo-ttft", type=float, default=2.0,
+                    help="TTFT SLO seconds for the goodput report")
+    ap.add_argument("--slo-itl", type=float, default=0.5,
+                    help="max inter-token-latency SLO seconds")
+    ap.add_argument("--adaptive-draft", action="store_true",
+                    help="load-adaptive draft precision: run speculative "
+                         "low-bit-prefix rounds only while queue/SLO "
+                         "pressure is on (needs --speculate K)")
     ap.add_argument("--dry-run-only", action="store_true")
     args = ap.parse_args(argv)
 
@@ -168,16 +198,53 @@ def main(argv=None) -> int:
         cfg = policy.apply_kv_format(cfg)
     if args.kv_format:
         cfg = dataclasses.replace(cfg, kv_format=args.kv_format)
+    adaptive = None
+    if args.adaptive_draft:
+        from repro.serve.metrics import AdaptiveDraftPolicy
+        adaptive = AdaptiveDraftPolicy(queue_hi=2, queue_lo=0,
+                                       wait_hi_s=args.slo_ttft / 2,
+                                       wait_lo_s=args.slo_ttft / 8)
     engine = ServeEngine(params, cfg, ctx=ctx, max_len=args.max_len,
                          n_slots=args.slots,
                          prefill_chunk=args.prefill_chunk,
                          token_budget=args.token_budget,
                          spec_k=args.speculate,
-                         draft_bits=args.draft_bits)
+                         draft_bits=args.draft_bits,
+                         adaptive=adaptive)
     if args.speculate and engine.spec_k != args.speculate:
         reason = engine.spec_fallback or "cache-width cap"
         print(f"speculation capped: spec_k {args.speculate} -> "
               f"{engine.spec_k} ({reason})")
+
+    if args.serve_http is not None:
+        import asyncio
+        import json
+        from repro.serve.frontend import AsyncServeFrontend
+        from repro.serve.metrics import SLO
+
+        async def run_server():
+            fe = AsyncServeFrontend(
+                engine, host=args.host, port=args.serve_http,
+                slo=SLO(ttft_s=args.slo_ttft, itl_s=args.slo_itl),
+                track=args.track or None)
+            async with fe:
+                print(f"serving on http://{args.host}:{fe.port} — "
+                      f"POST /v1/generate (SSE), GET /v1/metrics, "
+                      f"GET /healthz; Ctrl-C to stop", flush=True)
+                try:
+                    while True:
+                        await asyncio.sleep(3600)
+                except asyncio.CancelledError:
+                    pass
+                finally:
+                    print("final metrics:",
+                          json.dumps(fe.metrics(), default=str)[:2000])
+
+        try:
+            asyncio.run(run_server())
+        except KeyboardInterrupt:
+            pass
+        return 0
     # mixed-length traffic: continuous batching needs no length grouping,
     # and chunked admission needs no length bucketing either — prompts of
     # any mix of lengths ride the one fixed-shape token-budget step
@@ -198,7 +265,8 @@ def main(argv=None) -> int:
         arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
                                              size=len(reqs))).tolist()
     t0 = time.time()
-    results = engine.serve(reqs, arrival_times=arrivals)
+    results = engine.serve(reqs, arrival_times=arrivals,
+                           track=args.track or None)
     dt = time.time() - t0
     n_tok = sum(len(r.tokens) for r in results)
     st = engine.last_stats
@@ -219,6 +287,26 @@ def main(argv=None) -> int:
           f"max decode gap {gap} step(s), "
           f"{st['slot_reuses']} slot reuses, "
           f"{st['kv_cache_bytes'] / 1e6:.2f} MB KV{extra}, 1 CPU core)")
+    if adaptive is not None:
+        print(f"adaptive draft: {st['adaptive_rounds']} low-bit rounds, "
+              f"{st['adaptive_flips']} policy flips")
+    from repro.serve.metrics import SLO, goodput_report, latency_summary
+    lat = latency_summary(results)
+    good = goodput_report(results,
+                          SLO(ttft_s=args.slo_ttft, itl_s=args.slo_itl),
+                          wall_s=st["wall_s"])
+    print(f"latency: TTFT p50/p99 {lat['ttft_s']['p50']:.3f}/"
+          f"{lat['ttft_s']['p99']:.3f}s, ITL p50/p99 "
+          f"{lat['itl_s']['p50']:.3f}/{lat['itl_s']['p99']:.3f}s; "
+          f"goodput {good['goodput_tok_per_s']:.1f} tok/s at "
+          f"{good['slo_attainment']:.0%} SLO attainment")
+    if args.track:
+        hw = st["hw"]
+        print(f"hw [{hw['device']}]: achieved "
+              f"{hw['achieved_hbm_gbps']['p50']:.2f} GB/s HBM "
+              f"({hw['hbm_util_pct']['p50']:.2f}% of peak), "
+              f"{hw['achieved_tflops']['p50']:.4f} TFLOP/s "
+              f"(MFU {hw['mfu_pct']['p50']:.3f}%)")
     return 0
 
 

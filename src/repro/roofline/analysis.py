@@ -233,6 +233,15 @@ def _analyze(compiled) -> CompCost:
                     coll=coll, coll_by_kind=by_kind)
 
 
+def compiled_cost(compiled) -> CompCost:
+    """Public component analyzer: per-device FLOPs / TPU-reality HBM bytes
+    / collective wire bytes of one compiled executable. The serving
+    observability layer (`serve.metrics.StepTracker` via
+    `ServeEngine.step_costs`) prices each fixed-shape serving step with
+    this, so per-step wall times become achieved-vs-peak percentages."""
+    return _analyze(compiled)
+
+
 def _abstract_block(cfg: ModelConfig, kind: str):
     dtype = _dtype(cfg.param_dtype)
     return jax.eval_shape(

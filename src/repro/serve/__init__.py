@@ -1,4 +1,15 @@
-"""Continuous-batching serving subsystem (scheduler / sampler / engine)."""
-from .engine import ServeEngine
+"""Continuous-batching serving subsystem.
+
+scheduler / sampler / engine: the token-budget serving core.
+metrics: TTFT/ITL percentiles, SLO goodput, achieved-vs-peak MFU/HBM
+    tracking, load-adaptive draft policy.
+frontend: asyncio SSE streaming server over the reentrant session API.
+"""
+from .engine import ServeEngine, ServeSession
+from .frontend import AsyncServeFrontend
+from .metrics import (SLO, AdaptiveDraftPolicy, DeviceSpec, DEVICE_DB,
+                      StepTracker, goodput_report, latency_summary,
+                      percentile, resolve_device)
 from .sampler import sample_token, sample_tokens
-from .scheduler import GenRequest, GenResult, PageAllocator, SlotScheduler
+from .scheduler import (GenRequest, GenResult, PageAllocator, SlotScheduler,
+                        TokenEvent)

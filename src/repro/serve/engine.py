@@ -63,16 +63,18 @@ from repro.models import (TokenBatch, decode_step, init_serve_cache,
                           mixed_step, prefill)
 from repro.sharding.context import ShardCtx, LOCAL
 from .sampler import request_key, sample_tokens
-from .scheduler import GenRequest, GenResult, PageAllocator, SlotScheduler
+from .scheduler import (GenRequest, GenResult, PageAllocator, SlotScheduler,
+                        TokenEvent)
 
-__all__ = ["GenRequest", "GenResult", "ServeEngine"]
+__all__ = ["GenRequest", "GenResult", "ServeEngine", "ServeSession",
+           "TokenEvent"]
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, ctx: ShardCtx = LOCAL,
                  max_len: int = 512, n_slots: int = 4,
                  prefill_chunk: int = 32, token_budget: int = 0,
-                 spec_k: int = 0, draft_bits: int = 0):
+                 spec_k: int = 0, draft_bits: int = 0, adaptive=None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError("serving is decoder-only")
         self.params = params
@@ -111,6 +113,9 @@ class ServeEngine:
         # token-identical to spec_k=0.
         assert spec_k >= 0
         assert draft_bits in (0, 2, 3), "draft_bits must be 0, 2 or 3"
+        if adaptive is not None and spec_k == 0:
+            raise ValueError("load-adaptive draft precision gates the "
+                             "speculative rounds — it needs spec_k > 0")
         self.draft_bits = draft_bits
         self.spec_fallback = ""
         kinds_all = set(cfg.layer_kinds)
@@ -126,6 +131,10 @@ class ServeEngine:
         if spec_k and cfg.n_experts > 0:
             self._moe_spec_guard(n_slots, spec_k)
         self.spec_k = spec_k
+        # load-adaptive draft precision (AdaptiveDraftPolicy): speculative
+        # low-bit-prefix rounds only while queue/SLO pressure is on; if a
+        # fallback zeroed spec_k the policy can never fire, so drop it
+        self.adaptive = adaptive if spec_k else None
         # sliding-window page release is sound only when NO attention layer
         # keeps whole-history reach (every attn layer is 'local')
         kinds = {k for k in cfg.layer_kinds if k in ("attn", "local")}
@@ -175,6 +184,7 @@ class ServeEngine:
         self._sample = jax.jit(_sample)
         self._prefill_jits: Dict[int, object] = {}   # legacy admission only
         self.last_stats: Dict[str, float] = {}
+        self.last_session: Optional["ServeSession"] = None
 
     # ---------------------------------------------- speculative decoding
 
@@ -209,7 +219,7 @@ class ServeEngine:
         (plus the verify token itself as the bonus/correction), and
         every cell a rejected — or merely drafted — token touched is
         restored bitwise from a pre-round snapshot. Returns
-        (cache, drafted, accepted_drafts, emitted)."""
+        (cache, drafted, accepted_drafts, emitted, draft_passes)."""
         k = self.spec_k
         ns = sched.n_slots
         lanes_v = ns * (k + 1)
@@ -250,11 +260,13 @@ class ServeEngine:
             drafts[i, 0] = st.cur_token
         reset = jnp.zeros(ns, bool)
         ran_draft = False
+        draft_passes = 0
         for m in range(k):
             live = [(i, st, ke) for (i, st, ke) in part if ke > m]
             if not live:
                 break
             ran_draft = True
+            draft_passes += 1
             tok = np.zeros(budget, np.int32)
             slt = np.zeros(budget, np.int32)
             pos = np.zeros(budget, np.int32)
@@ -326,7 +338,7 @@ class ServeEngine:
         cache = self._restore(cache, snap, j_slots, j_pos,
                               jnp.asarray(touched & ~keep_post), pages)
         jax.block_until_ready(cache)
-        return cache, drafted, accepted, emitted
+        return cache, drafted, accepted, emitted, draft_passes
 
     # -------------------------------------------------- continuous batching
 
@@ -344,31 +356,83 @@ class ServeEngine:
             self._prefill_jits[plen] = fn
         return fn(self.params, cache, tokens, jnp.int32(slot))
 
+    # ------------------------------------------------ per-step cost models
+
+    def step_costs(self, n_slots: Optional[int] = None,
+                   budget: Optional[int] = None) -> Dict[str, object]:
+        """HLO cost (FLOPs / TPU-reality HBM bytes) per serving-step kind.
+
+        Every serving jit is fixed-shape, so one abstract lowering prices
+        EVERY step of its kind: 'mixed' (the token-budget step), and with
+        speculation 'draft' (prefix-width pass — reads 0.75x code bytes at
+        draft_bits=3, visible here as smaller step bytes) and 'verify'
+        (the k+1-lane scoring pass). The analyzer is
+        `roofline.analysis.compiled_cost`, the same component accounting
+        the roofline harness uses — this is the wiring that turns measured
+        step wall times into achieved-vs-peak percentages
+        (`serve.metrics.StepTracker`)."""
+        from repro.roofline.analysis import compiled_cost
+        ns = n_slots or self.n_slots
+        legacy = self.prefill_chunk == 0
+        budget = budget or max(self.token_budget,
+                               ns + (0 if legacy else 1))
+        p_sds = jax.eval_shape(lambda p: p, self.params)
+        cache_sds = jax.eval_shape(
+            lambda p: init_serve_cache(p, {}, ns, self.max_len, self.cfg,
+                                       self.ctx), p_sds)
+
+        def tb_sds(lanes: int) -> TokenBatch:
+            i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+            b8 = lambda *s: jax.ShapeDtypeStruct(s, jnp.bool_)
+            return TokenBatch(
+                tokens=i32(lanes), slots=i32(lanes), positions=i32(lanes),
+                horizon=i32(lanes), emit=b8(lanes), active=b8(lanes),
+                reset=b8(ns),
+                pages=i32(ns, self.max_pages_per_slot) if self.paged
+                else None)
+
+        costs = {"mixed": compiled_cost(
+            self._mixed.lower(p_sds, cache_sds, tb_sds(budget)).compile())}
+        if self.spec_k:
+            costs["draft"] = costs["mixed"] if not self.draft_bits else \
+                compiled_cost(self._mixed_draft.lower(
+                    p_sds, cache_sds, tb_sds(budget)).compile())
+            costs["verify"] = compiled_cost(self._verify.lower(
+                p_sds, cache_sds,
+                tb_sds(ns * (self.spec_k + 1))).compile())
+        return costs
+
+    # ----------------------------------------------------- session driving
+
+    def start(self, n_slots: Optional[int] = None, seed: int = 0,
+              track=None, adaptive=None) -> "ServeSession":
+        """Open a reentrant serving session: `submit` requests any time,
+        pump `step()` (one admission + one jitted round each call, token
+        events returned per call), read `stats()` whenever. The closed-loop
+        `serve()` and the async SSE front end both drive this same API.
+
+        `track`: enable the achieved-vs-peak StepTracker — True
+        (autodetect device), a device-DB key ('tpu-v5e'), or a DeviceSpec.
+        `adaptive`: an AdaptiveDraftPolicy overriding the engine's."""
+        return ServeSession(self, n_slots=n_slots, seed=seed, track=track,
+                            adaptive=adaptive if adaptive is not None
+                            else self.adaptive)
+
     def serve(self, requests: List[GenRequest], seed: int = 0,
               arrival_times: Optional[List[float]] = None,
-              n_slots: Optional[int] = None) -> List[GenResult]:
+              n_slots: Optional[int] = None,
+              track=None) -> List[GenResult]:
         """Continuous batching on the unified token-budget step: admit on
         any free slot, lane decode tokens + prompt chunks into ONE jitted
-        fixed-shape `mixed_step`, results in submission order.
+        fixed-shape `mixed_step`, results in submission order. A thin
+        closed-loop driver over the `start()`/`step()` session API.
 
         `arrival_times` (seconds from call start, per request) simulates an
         open-loop arrival process; requests are not admitted before their
         arrival. Without it, everything is admittable immediately.
+        `track` enables the per-step MFU/HBM tracker (see `start`).
         """
-        ns = n_slots or self.n_slots
-        legacy = self.prefill_chunk == 0
-        budget = max(self.token_budget, ns + (0 if legacy else 1))
-        # chunks must fit the lanes left after every decode slot's token —
-        # clamped once per serve call so a prompt's chunk boundaries (and
-        # therefore its greedy output) never depend on co-scheduling
-        chunk_cap = self.max_len if legacy \
-            else min(self.prefill_chunk, budget - ns)
-        alloc = None
-        if self.paged:
-            alloc = PageAllocator(self.n_pages, self.page_size, ns,
-                                  self.max_pages_per_slot)
-        sched = SlotScheduler(ns, self.max_len, alloc=alloc,
-                              window=self.release_window)
+        sess = self.start(n_slots=n_slots, seed=seed, track=track)
         submitted = []
         for i, r in enumerate(requests):
             if arrival_times is not None:
@@ -380,152 +444,14 @@ class ServeEngine:
         # request queued behind a late one head-of-line blocks
         stream_ids = {r.uid: i for i, r in enumerate(submitted)}
         for r in sorted(submitted, key=lambda r: r.arrival_s):
-            sched.submit(r)
-
-        cache = init_serve_cache(self.params, {}, ns, self.max_len, self.cfg,
-                                 self.ctx)
-        base_keys = np.zeros((ns, 2), np.uint32)
-        t_start = time.perf_counter()
-        now = lambda: time.perf_counter() - t_start
-        step_s = 0.0
-        steps = 0
-        decode_tokens = 0
-        chunk_tokens = 0
-        pure_decode_s = 0.0             # steps carrying no chunk lanes
-        pure_decode_tokens = 0
-        prefills = 0
-        spec_rounds = 0
-        spec_s = 0.0
-        drafted_tokens = 0
-        accepted_tokens = 0
-        spec_emitted = 0
-        if self.spec_k and self.cfg.n_experts > 0 and ns != self.n_slots:
-            self._moe_spec_guard(ns, self.spec_k)   # verify width changed
-
-        peak_pages = 0
-        while not sched.done():
-            for slot in sched.free_slots():
-                req = sched.next_ready(now(), slot=slot)
-                if req is None:
-                    break
-                bkey = np.asarray(
-                    request_key(seed, stream_ids[req.uid]), np.uint32)
-                if legacy:
-                    # whole-prompt prefill: one jit per prompt length, the
-                    # entire decode stream frozen while it runs (the stall
-                    # the chunked path exists to remove)
-                    t0 = time.perf_counter()
-                    toks = jnp.asarray([req.prompt], jnp.int32)
-                    logits, cache = self._prefill_insert(cache, toks, slot)
-                    first = self._sample(
-                        logits, jnp.asarray([req.temperature], jnp.float32),
-                        jnp.asarray([req.top_k], jnp.int32),
-                        jnp.asarray(bkey[None]), jnp.zeros((1,), jnp.int32))
-                    first = int(jax.block_until_ready(first)[0])
-                    sched.admit(slot, req, first, now(),
-                                time.perf_counter() - t0)
-                else:
-                    sched.admit_chunked(slot, req, now())
-                base_keys[slot] = bkey
-                prefills += 1
-
-            if sched.n_active == 0:
-                nxt = sched.next_arrival()
-                if nxt is None:
-                    break
-                time.sleep(max(0.0, min(nxt - now(), 0.05)))
-                continue
-
-            if self.spec_k and sched.spec_ready():
-                # pure-greedy-decode step: run a speculative round instead
-                # (k draft passes + 1 verify emitting up to k+1 tokens/slot)
-                sched.grow_pages(now(), lookahead=self.spec_k + 1)
-                if sched.spec_ready():      # eviction can re-queue a slot
-                    t0 = time.perf_counter()
-                    if alloc is not None:
-                        peak_pages = max(peak_pages, alloc.in_use)
-                    cache, dk, ak, ek = self._spec_round(cache, sched,
-                                                         budget, now)
-                    dt = time.perf_counter() - t0
-                    step_s += dt
-                    spec_s += dt
-                    steps += 1
-                    spec_rounds += 1
-                    drafted_tokens += dk
-                    accepted_tokens += ak
-                    spec_emitted += ek
-                    decode_tokens += ek
-                    continue
-
-            sched.grow_pages(now())     # map next-token pages, evict if dry
-            lanes = sched.schedule_step(budget, chunk_cap, now())
-            if lanes is None:           # transiently page-starved
-                continue
-            tb = TokenBatch(
-                tokens=jnp.asarray(lanes["tokens"]),
-                slots=jnp.asarray(lanes["slots"]),
-                positions=jnp.asarray(lanes["positions"]),
-                horizon=jnp.asarray(lanes["horizon"]),
-                emit=jnp.asarray(lanes["emit"]),
-                active=jnp.asarray(lanes["active"]),
-                reset=jnp.asarray(lanes["reset"]),
-                pages=None if alloc is None
-                else jnp.asarray(sched.page_table()))
-            temps, top_ks, nsamp = sched.slot_sample_arrays()
-            t0 = time.perf_counter()
-            if alloc is not None:
-                peak_pages = max(peak_pages, alloc.in_use)
-            logits, cache = self._mixed(self.params, cache, tb)
-            samp = self._sample(logits, jnp.asarray(temps),
-                                jnp.asarray(top_ks), jnp.asarray(base_keys),
-                                jnp.asarray(nsamp))
-            samp = np.asarray(jax.block_until_ready(samp))
-            dt = time.perf_counter() - t0
-            step_s += dt
-            steps += 1
-            decode_tokens += int(lanes["n_decode"])
-            chunk_tokens += int(lanes["n_chunk"])
-            if lanes["n_chunk"] == 0:
-                pure_decode_s += dt
-                pure_decode_tokens += int(lanes["n_decode"])
-            sched.record_scheduled(samp, now())
-
-        wall = now()
-        # decode_tok_per_s is measured over chunk-free steps only, so it
-        # stays comparable with the pre-chunking engine's decode-only
-        # stepping; step_tok_per_s is the mixed-lane throughput
-        self.last_stats = {
-            "wall_s": wall, "decode_s": step_s,
-            "decode_steps": steps, "decode_tokens": decode_tokens,
-            "decode_tok_per_s": pure_decode_tokens / pure_decode_s
-            if pure_decode_s else 0.0,
-            "step_tok_per_s": (decode_tokens + chunk_tokens) / step_s
-            if step_s else 0.0,
-            "chunk_tokens": chunk_tokens, "token_budget": budget,
-            "max_decode_gap_steps": sched.max_decode_gap,
-            "prefills": prefills, "slot_reuses": sched.slot_reuses,
-            "kv_cache_bytes": kv_cache_bytes(cache),
-            "evictions": sched.evictions,
-            # speculative decoding: accepted_tok_per_s is the emitted-token
-            # throughput of the speculative rounds alone (drafts + verify +
-            # rollback all inside the denominator), reported separately
-            # from step_tok_per_s on purpose
-            "spec_k": self.spec_k, "spec_draft_bits": self.draft_bits,
-            "spec_rounds": spec_rounds,
-            "drafted_tokens": drafted_tokens,
-            "accepted_tokens": accepted_tokens,
-            "accept_rate": accepted_tokens / drafted_tokens
-            if drafted_tokens else 0.0,
-            "accepted_tok_per_s": spec_emitted / spec_s if spec_s else 0.0,
-            "spec_emitted_tokens": spec_emitted,
-        }
-        if alloc is not None:
-            self.last_stats.update(
-                n_pages=self.n_pages, page_size=self.page_size,
-                peak_pages_in_use=peak_pages,
-                pages_released_by_window=sched.pages_released_by_window)
-            alloc.check()
-        return [sched.results[u] for u in uids]
+            sess.submit(r, stream_id=stream_ids[r.uid])
+        while not sess.done():
+            sess.step()
+        self.last_stats = sess.stats()
+        self.last_session = sess
+        if sess.sched.alloc is not None:
+            sess.sched.alloc.check()
+        return [sess.results[u] for u in uids]
 
     def serve_queue(self, requests: List[GenRequest],
                     batch_size: Optional[int] = None,
@@ -592,3 +518,268 @@ class ServeEngine:
                                                   == requests[j].eos_id)
                           else "length")
                 for j in range(b)]
+
+
+class ServeSession:
+    """Reentrant serving session: the engine's continuous-batching loop
+    unrolled into submit / step / drain, so ANY driver — the closed-loop
+    `ServeEngine.serve()`, the asyncio SSE front end's driver thread, the
+    open-loop load generator — pumps the identical control flow and gets
+    identical greedy tokens.
+
+    One `step()` call performs at most one admission sweep plus one jitted
+    round (a token-budget mixed step, a speculative round, or an idle
+    wait), and returns the `TokenEvent`s produced since the last call —
+    first token on admission, one event per decode token, interpolated
+    events for speculative batches, and a terminal `done` event per
+    request. The scheduler is NOT thread-safe: all calls must come from
+    one driver thread; concurrent producers marshal submissions to it
+    (see serve/frontend.py).
+    """
+
+    def __init__(self, engine: ServeEngine, n_slots: Optional[int] = None,
+                 seed: int = 0, track=None, adaptive=None):
+        self.engine = engine
+        self.seed = seed
+        ns = n_slots or engine.n_slots
+        self.n_slots = ns
+        self.legacy = engine.prefill_chunk == 0
+        self.budget = max(engine.token_budget,
+                          ns + (0 if self.legacy else 1))
+        # chunks must fit the lanes left after every decode slot's token —
+        # clamped once per session so a prompt's chunk boundaries (and
+        # therefore its greedy output) never depend on co-scheduling
+        self.chunk_cap = engine.max_len if self.legacy \
+            else min(engine.prefill_chunk, self.budget - ns)
+        alloc = None
+        if engine.paged:
+            alloc = PageAllocator(engine.n_pages, engine.page_size, ns,
+                                  engine.max_pages_per_slot)
+        self.sched = SlotScheduler(ns, engine.max_len, alloc=alloc,
+                                   window=engine.release_window)
+        if engine.spec_k and engine.cfg.n_experts > 0 \
+                and ns != engine.n_slots:
+            engine._moe_spec_guard(ns, engine.spec_k)  # verify width changed
+        self.cache = init_serve_cache(engine.params, {}, ns, engine.max_len,
+                                      engine.cfg, engine.ctx)
+        self.base_keys = np.zeros((ns, 2), np.uint32)
+        # admission keys the PRNG stream on submission index, so a
+        # request's samples are independent of co-scheduling AND of which
+        # driver (closed loop / async front end) submitted it
+        self.stream_ids: Dict[int, int] = {}
+        self._n_submitted = 0
+        self.adaptive = adaptive
+        if self.adaptive is not None:
+            self.adaptive.reset()
+        self.tracker = None
+        if track:
+            from .metrics import StepTracker, resolve_device
+            self.tracker = StepTracker(
+                resolve_device(None if track is True else track),
+                engine.step_costs(ns, self.budget))
+        self._t0 = time.perf_counter()
+        # step/counter state mirrored from the old monolithic serve() loop
+        self.step_s = 0.0
+        self.steps = 0
+        self.decode_tokens = 0
+        self.chunk_tokens = 0
+        self.pure_decode_s = 0.0        # steps carrying no chunk lanes
+        self.pure_decode_tokens = 0
+        self.prefills = 0
+        self.spec_rounds = 0
+        self.spec_s = 0.0
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.spec_emitted = 0
+        self.adaptive_rounds = 0
+        self.peak_pages = 0
+
+    # ------------------------------------------------------------- intake
+
+    def now(self) -> float:
+        """Seconds since session start — the session's event clock."""
+        return time.perf_counter() - self._t0
+
+    def submit(self, req: GenRequest, stream_id: Optional[int] = None,
+               at: Optional[float] = None) -> int:
+        """Queue a request. `at` overrides its arrival time (session
+        clock); `stream_id` pins the PRNG stream (defaults to submission
+        order). Returns the request uid."""
+        if at is not None:
+            req = dataclasses.replace(req, arrival_s=float(at))
+        sid = self._n_submitted if stream_id is None else stream_id
+        self._n_submitted += 1
+        self.stream_ids[req.uid] = sid
+        self.sched.submit(req)
+        return req.uid
+
+    def done(self) -> bool:
+        """True when nothing is queued or in flight (more `submit`s may
+        still arrive — the async driver idles on this, it doesn't exit)."""
+        return self.sched.done()
+
+    @property
+    def results(self) -> Dict[int, GenResult]:
+        return self.sched.results
+
+    # -------------------------------------------------------------- pump
+
+    def step(self) -> List[TokenEvent]:
+        """One scheduling round: admit whatever is ready, then run ONE
+        jitted round (mixed token-budget step or speculative round) — or
+        sleep briefly if every slot is empty and the next arrival is in
+        the future. Returns the token events produced by this call."""
+        eng = self.engine
+        sched = self.sched
+        for slot in sched.free_slots():
+            req = sched.next_ready(self.now(), slot=slot)
+            if req is None:
+                break
+            bkey = np.asarray(
+                request_key(self.seed, self.stream_ids[req.uid]), np.uint32)
+            if self.legacy:
+                # whole-prompt prefill: one jit per prompt length, the
+                # entire decode stream frozen while it runs (the stall
+                # the chunked path exists to remove)
+                t0 = time.perf_counter()
+                toks = jnp.asarray([req.prompt], jnp.int32)
+                logits, self.cache = eng._prefill_insert(
+                    self.cache, toks, slot)
+                first = eng._sample(
+                    logits, jnp.asarray([req.temperature], jnp.float32),
+                    jnp.asarray([req.top_k], jnp.int32),
+                    jnp.asarray(bkey[None]), jnp.zeros((1,), jnp.int32))
+                first = int(jax.block_until_ready(first)[0])
+                sched.admit(slot, req, first, self.now(),
+                            time.perf_counter() - t0)
+            else:
+                sched.admit_chunked(slot, req, self.now())
+            self.base_keys[slot] = bkey
+            self.prefills += 1
+
+        if sched.n_active == 0:
+            nxt = sched.next_arrival()
+            if nxt is not None:
+                time.sleep(max(0.0, min(nxt - self.now(), 0.05)))
+            return sched.take_events()
+
+        spec_want = eng.spec_k > 0
+        if spec_want and self.adaptive is not None:
+            # load-adaptive draft precision: speculative low-bit-prefix
+            # rounds only while the queue is backed up / requests are
+            # aging past the SLO knobs; pressure cleared -> plain decode.
+            # Greedy outputs are identical either way (verified rounds),
+            # only the step mix changes.
+            depth, wait = sched.queue_pressure(self.now())
+            spec_want = self.adaptive.update(depth, wait)
+        if spec_want and sched.spec_ready():
+            # pure-greedy-decode step: run a speculative round instead
+            # (k draft passes + 1 verify emitting up to k+1 tokens/slot)
+            sched.grow_pages(self.now(), lookahead=eng.spec_k + 1)
+            if sched.spec_ready():      # eviction can re-queue a slot
+                t0 = time.perf_counter()
+                if sched.alloc is not None:
+                    self.peak_pages = max(self.peak_pages,
+                                          sched.alloc.in_use)
+                self.cache, dk, ak, ek, dp = eng._spec_round(
+                    self.cache, sched, self.budget, self.now)
+                dt = time.perf_counter() - t0
+                self.step_s += dt
+                self.spec_s += dt
+                self.steps += 1
+                self.spec_rounds += 1
+                if self.adaptive is not None:
+                    self.adaptive_rounds += 1
+                self.drafted_tokens += dk
+                self.accepted_tokens += ak
+                self.spec_emitted += ek
+                self.decode_tokens += ek
+                if self.tracker is not None:
+                    self.tracker.record_spec_round(dt, dp, ek)
+                return sched.take_events()
+
+        sched.grow_pages(self.now())    # map next-token pages, evict if dry
+        lanes = sched.schedule_step(self.budget, self.chunk_cap, self.now())
+        if lanes is None:               # transiently page-starved
+            return sched.take_events()
+        tb = TokenBatch(
+            tokens=jnp.asarray(lanes["tokens"]),
+            slots=jnp.asarray(lanes["slots"]),
+            positions=jnp.asarray(lanes["positions"]),
+            horizon=jnp.asarray(lanes["horizon"]),
+            emit=jnp.asarray(lanes["emit"]),
+            active=jnp.asarray(lanes["active"]),
+            reset=jnp.asarray(lanes["reset"]),
+            pages=None if sched.alloc is None
+            else jnp.asarray(sched.page_table()))
+        temps, top_ks, nsamp = sched.slot_sample_arrays()
+        t0 = time.perf_counter()
+        if sched.alloc is not None:
+            self.peak_pages = max(self.peak_pages, sched.alloc.in_use)
+        logits, self.cache = eng._mixed(eng.params, self.cache, tb)
+        samp = eng._sample(logits, jnp.asarray(temps), jnp.asarray(top_ks),
+                           jnp.asarray(self.base_keys), jnp.asarray(nsamp))
+        samp = np.asarray(jax.block_until_ready(samp))
+        dt = time.perf_counter() - t0
+        n_tok = int(lanes["n_decode"]) + int(lanes["n_chunk"])
+        self.step_s += dt
+        self.steps += 1
+        self.decode_tokens += int(lanes["n_decode"])
+        self.chunk_tokens += int(lanes["n_chunk"])
+        if lanes["n_chunk"] == 0:
+            self.pure_decode_s += dt
+            self.pure_decode_tokens += int(lanes["n_decode"])
+        if self.tracker is not None:
+            self.tracker.record("mixed", dt, n_tok)
+        sched.record_scheduled(samp, self.now())
+        return sched.take_events()
+
+    # ------------------------------------------------------------- stats
+
+    def stats(self) -> Dict[str, object]:
+        """The engine's serving stat block (same keys `serve()` always
+        published as `last_stats`), computed over the session so far."""
+        eng = self.engine
+        sched = self.sched
+        # decode_tok_per_s is measured over chunk-free steps only, so it
+        # stays comparable with the pre-chunking engine's decode-only
+        # stepping; step_tok_per_s is the mixed-lane throughput
+        stats = {
+            "wall_s": self.now(), "decode_s": self.step_s,
+            "decode_steps": self.steps, "decode_tokens": self.decode_tokens,
+            "decode_tok_per_s": self.pure_decode_tokens / self.pure_decode_s
+            if self.pure_decode_s else 0.0,
+            "step_tok_per_s":
+            (self.decode_tokens + self.chunk_tokens) / self.step_s
+            if self.step_s else 0.0,
+            "chunk_tokens": self.chunk_tokens, "token_budget": self.budget,
+            "max_decode_gap_steps": sched.max_decode_gap,
+            "prefills": self.prefills, "slot_reuses": sched.slot_reuses,
+            "kv_cache_bytes": kv_cache_bytes(self.cache),
+            "evictions": sched.evictions,
+            # speculative decoding: accepted_tok_per_s is the emitted-token
+            # throughput of the speculative rounds alone (drafts + verify +
+            # rollback all inside the denominator), reported separately
+            # from step_tok_per_s on purpose
+            "spec_k": eng.spec_k, "spec_draft_bits": eng.draft_bits,
+            "spec_rounds": self.spec_rounds,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "accept_rate": self.accepted_tokens / self.drafted_tokens
+            if self.drafted_tokens else 0.0,
+            "accepted_tok_per_s": self.spec_emitted / self.spec_s
+            if self.spec_s else 0.0,
+            "spec_emitted_tokens": self.spec_emitted,
+        }
+        if self.adaptive is not None:
+            stats.update(adaptive_rounds=self.adaptive_rounds,
+                         adaptive_flips=self.adaptive.flips,
+                         adaptive_on=self.adaptive.on)
+        if sched.alloc is not None:
+            stats.update(
+                n_pages=eng.n_pages, page_size=eng.page_size,
+                peak_pages_in_use=self.peak_pages,
+                pages_released_by_window=sched.pages_released_by_window)
+        if self.tracker is not None:
+            stats["hw"] = self.tracker.summary()
+        return stats

@@ -1,0 +1,294 @@
+"""Async streaming serve front end: raw-asyncio HTTP/1.1 with SSE tokens.
+
+The production rim around the continuous-batching engine. Request
+handlers never touch the scheduler directly — the `SlotScheduler` (and
+everything jitted behind it) is single-threaded by design, so the front
+end marshals work through one background *driver thread* that pumps the
+reentrant `ServeSession` (engine.start()/step()):
+
+  asyncio handler --(deque + lock)--> driver thread --submit()--> session
+  asyncio handler <--(asyncio.Queue)<-- loop.call_soon_threadsafe <-- step()
+
+Each `step()` call returns the `TokenEvent`s it produced; the driver
+relays every event to the owning request's `asyncio.Queue`, and the
+handler turns the queue into a Server-Sent-Events stream. Greedy streams
+are token-identical to `ServeEngine.serve()` on the same seed: both are
+thin drivers over the same session control flow, and PRNG streams key on
+submission index either way.
+
+No HTTP library is assumed (stdlib only): the server speaks just enough
+HTTP/1.1 for POST-with-Content-Length and close-delimited responses.
+
+Endpoints
+  POST /v1/generate   body {"prompt": [int,...], "max_new": int,
+                      "temperature": float, "top_k": int, "eos_id": int?,
+                      "deadline_s": float?, "priority": int?}
+                      -> text/event-stream; one `data: {...}` frame per
+                      token {token, index, t_s}, then a terminal frame
+                      {done: true, finish_reason, n_tokens, ttft_s}.
+                      If page pressure evicts a request mid-flight, its
+                      replay re-streams from index 0 (at-least-once token
+                      delivery; the terminal frame carries the final
+                      sequence length).
+  GET  /v1/metrics    -> JSON {engine: <session stats incl. hw tracker>,
+                      latency: TTFT/ITL/E2E percentiles, goodput: SLO
+                      attainment} over all finished requests so far.
+  GET  /healthz       -> {"ok": true}
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from .engine import ServeEngine, ServeSession
+from .metrics import SLO, goodput_report, latency_summary
+from .scheduler import GenRequest
+
+__all__ = ["AsyncServeFrontend", "sse_generate", "fetch_json"]
+
+_REQ_FIELDS = ("max_new", "temperature", "top_k", "eos_id", "deadline_s",
+               "priority")
+
+
+class AsyncServeFrontend:
+    """Asyncio SSE server + driver thread over one `ServeSession`.
+
+    `port=0` binds an ephemeral port (read `self.port` after `start()`).
+    `track` / `slo` feed the observability side: the per-step MFU/HBM
+    tracker and the goodput report of GET /v1/metrics."""
+
+    def __init__(self, engine: ServeEngine, host: str = "127.0.0.1",
+                 port: int = 0, seed: int = 0, slo: Optional[SLO] = None,
+                 track=None, poll_s: float = 0.01):
+        self.engine = engine
+        self.host = host
+        self.port = port
+        self.seed = seed
+        self.slo = slo or SLO()
+        self.track = track
+        self.poll_s = poll_s
+        self.session: Optional[ServeSession] = None
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._driver: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._pending: List[Tuple[GenRequest, asyncio.Queue]] = []
+        self._streams: Dict[int, asyncio.Queue] = {}
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+
+    # ---------------------------------------------------------- lifecycle
+
+    async def start(self) -> None:
+        self._loop = asyncio.get_running_loop()
+        # session construction compiles the cost models when tracking —
+        # do it before accepting traffic so TTFT isn't charged for it
+        self.session = self.engine.start(seed=self.seed, track=self.track)
+        self._server = await asyncio.start_server(self._handle, self.host,
+                                                  self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._driver = threading.Thread(target=self._drive, daemon=True,
+                                        name="serve-driver")
+        self._driver.start()
+
+    async def stop(self) -> None:
+        self._stop.set()
+        self._wake.set()
+        if self._driver is not None:
+            await self._loop.run_in_executor(None, self._driver.join)
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    async def __aenter__(self) -> "AsyncServeFrontend":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # ---------------------------------------------------- driver thread
+
+    def _drive(self) -> None:
+        """The ONLY thread that touches the session/scheduler: drain
+        marshalled submissions, pump one step, relay its events into the
+        owning asyncio queues (thread-safely, via the loop)."""
+        sess = self.session
+        while not self._stop.is_set():
+            with self._lock:
+                pending, self._pending = self._pending, []
+            for req, q in pending:
+                self._streams[req.uid] = q
+                sess.submit(req, at=sess.now())
+            if not pending and sess.done():
+                self._publish(sess.sched.take_events())  # stragglers
+                self._wake.wait(self.poll_s)
+                self._wake.clear()
+                continue
+            self._publish(sess.step())
+
+    def _publish(self, events) -> None:
+        for ev in events:
+            q = self._streams.get(ev.uid)
+            if q is None:
+                continue
+            if ev.done:
+                del self._streams[ev.uid]
+            self._loop.call_soon_threadsafe(q.put_nowait, ev)
+
+    # ------------------------------------------------------ http plumbing
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            head = await reader.readuntil(b"\r\n\r\n")
+        except (asyncio.IncompleteReadError, asyncio.LimitOverrunError):
+            writer.close()
+            return
+        try:
+            request_line, *header_lines = head.decode("latin-1").split("\r\n")
+            method, path, _ = request_line.split(" ", 2)
+            headers = {}
+            for line in header_lines:
+                if ":" in line:
+                    k, v = line.split(":", 1)
+                    headers[k.strip().lower()] = v.strip()
+            body = b""
+            clen = int(headers.get("content-length", 0))
+            if clen:
+                body = await reader.readexactly(clen)
+            if method == "POST" and path == "/v1/generate":
+                await self._generate(writer, body)
+            elif method == "GET" and path == "/v1/metrics":
+                await self._json(writer, self.metrics())
+            elif method == "GET" and path == "/healthz":
+                await self._json(writer, {"ok": True})
+            else:
+                await self._json(writer, {"error": f"no route {method} "
+                                          f"{path}"}, status="404 Not Found")
+        except Exception as e:                       # malformed request
+            try:
+                await self._json(writer, {"error": str(e)},
+                                 status="400 Bad Request")
+            except Exception:
+                pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except Exception:
+                pass
+
+    async def _generate(self, writer: asyncio.StreamWriter,
+                        body: bytes) -> None:
+        payload = json.loads(body.decode("utf-8"))
+        prompt = [int(t) for t in payload["prompt"]]
+        kwargs = {k: payload[k] for k in _REQ_FIELDS if payload.get(k)
+                  is not None}
+        req = GenRequest(prompt=prompt, **kwargs)
+        q: asyncio.Queue = asyncio.Queue()
+        with self._lock:
+            self._pending.append((req, q))
+        self._wake.set()
+
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: text/event-stream\r\n"
+                     b"Cache-Control: no-cache\r\n"
+                     b"Connection: close\r\n\r\n")
+        await writer.drain()
+        while True:
+            ev = await q.get()
+            if ev.done:
+                res = self.session.results[req.uid]
+                frame = {"done": True, "finish_reason": ev.finish_reason,
+                         "n_tokens": len(res.tokens),
+                         "ttft_s": res.prefill_s, "t_s": ev.t_s}
+            else:
+                frame = {"token": ev.token, "index": ev.index,
+                         "t_s": ev.t_s}
+            writer.write(b"data: " + json.dumps(frame).encode("utf-8")
+                         + b"\n\n")
+            await writer.drain()
+            if ev.done:
+                return
+
+    async def _json(self, writer: asyncio.StreamWriter, obj,
+                    status: str = "200 OK") -> None:
+        data = json.dumps(obj).encode("utf-8")
+        writer.write(f"HTTP/1.1 {status}\r\n"
+                     f"Content-Type: application/json\r\n"
+                     f"Content-Length: {len(data)}\r\n"
+                     f"Connection: close\r\n\r\n".encode("latin-1") + data)
+        await writer.drain()
+
+    # ----------------------------------------------------- observability
+
+    def metrics(self) -> Dict[str, object]:
+        """Serving stats + latency percentiles + SLO goodput, over every
+        request finished so far (engine block includes the hw tracker's
+        achieved-vs-peak summary when tracking is on)."""
+        sess = self.session
+        results = list(sess.results.values())
+        return {
+            "engine": sess.stats(),
+            "latency": latency_summary(results),
+            "goodput": goodput_report(results, self.slo,
+                                      wall_s=sess.now()),
+        }
+
+
+# ------------------------------------------------------------ test client
+
+async def sse_generate(host: str, port: int, payload: Dict) -> List[Dict]:
+    """Minimal SSE client: POST /v1/generate, parse every `data:` frame
+    until the terminal one; returns the frame dicts in stream order."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = json.dumps(payload).encode("utf-8")
+    writer.write(f"POST /v1/generate HTTP/1.1\r\n"
+                 f"Host: {host}\r\n"
+                 f"Content-Type: application/json\r\n"
+                 f"Content-Length: {len(body)}\r\n"
+                 f"Connection: close\r\n\r\n".encode("latin-1") + body)
+    await writer.drain()
+    await reader.readuntil(b"\r\n\r\n")             # response headers
+    frames: List[Dict] = []
+    while True:
+        line = await reader.readline()
+        if not line:
+            break
+        line = line.strip()
+        if not line.startswith(b"data: "):
+            continue
+        frame = json.loads(line[6:].decode("utf-8"))
+        frames.append(frame)
+        if frame.get("done"):
+            break
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except Exception:
+        pass
+    return frames
+
+
+async def fetch_json(host: str, port: int, path: str) -> Dict:
+    """GET a JSON endpoint (close-delimited or Content-Length body)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: {host}\r\n"
+                 f"Connection: close\r\n\r\n".encode("latin-1"))
+    await writer.drain()
+    head = await reader.readuntil(b"\r\n\r\n")
+    clen = None
+    for line in head.decode("latin-1").split("\r\n"):
+        if line.lower().startswith("content-length:"):
+            clen = int(line.split(":", 1)[1])
+    body = await (reader.readexactly(clen) if clen is not None
+                  else reader.read())
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except Exception:
+        pass
+    return json.loads(body.decode("utf-8"))

@@ -61,6 +61,23 @@ class GenRequest:
 
 
 @dataclasses.dataclass
+class TokenEvent:
+    """One emitted token (or completion) as seen by a streaming consumer.
+
+    The scheduler appends these as it folds samples back in; the engine
+    session drains them per step (`SlotScheduler.take_events`) and the SSE
+    front end relays them to the request's open stream. `token == -1`
+    marks the terminal event (no token payload — `finish_reason` is set
+    and the full `GenResult` is in `results[uid]`)."""
+    uid: int
+    token: int
+    t_s: float                         # offset from serve()/session start
+    index: int                         # token index within the request
+    done: bool = False
+    finish_reason: str = ""
+
+
+@dataclasses.dataclass
 class GenResult:
     tokens: List[int]
     prefill_s: float = 0.0             # admission -> first token (TTFT)
@@ -217,6 +234,7 @@ class SlotScheduler:
         self._used = [False] * n_slots
         self._step_emits: List[int] = []
         self._step_reset: List[int] = []
+        self.events: List[TokenEvent] = []   # drained via take_events()
 
     # ------------------------------------------------------------ queue side
 
@@ -286,6 +304,18 @@ class SlotScheduler:
     def next_arrival(self) -> Optional[float]:
         return min(r.arrival_s for r in self.queue) if self.queue else None
 
+    def queue_pressure(self, now_s: float) -> Tuple[int, float]:
+        """(arrived-but-unadmitted queue depth, oldest such request's wait
+        in seconds) — the load signal adaptive policies key on."""
+        waits = [now_s - r.arrival_s for r in self.queue
+                 if r.arrival_s <= now_s]
+        return len(waits), max(waits, default=0.0)
+
+    def take_events(self) -> List[TokenEvent]:
+        """Drain the token-event stream accumulated since the last call."""
+        out, self.events = self.events, []
+        return out
+
     # ------------------------------------------------------------- slot side
 
     def admit(self, slot: int, req: GenRequest, first_token: int,
@@ -303,6 +333,7 @@ class SlotScheduler:
                    evictions=self._evicted.get(req.uid, 0),
                    fed=len(req.prompt), times=[now_s])
         self.slots[slot] = st
+        self.events.append(TokenEvent(req.uid, first_token, now_s, 0))
         return self._maybe_finish(slot, now_s)
 
     def admit_chunked(self, slot: int, req: GenRequest, now_s: float) -> None:
@@ -502,6 +533,8 @@ class SlotScheduler:
             st.cur_token = tok
             st.tokens.append(tok)
             st.times.append(now_s)
+            self.events.append(TokenEvent(st.req.uid, tok, now_s,
+                                          len(st.tokens) - 1))
             if self._maybe_finish(i, now_s):
                 freed.append(i)
         return freed
@@ -532,17 +565,31 @@ class SlotScheduler:
         the decode-lane bookkeeping of `record_scheduled`, repeated once
         per token, stopping at the first finish condition (eos / length
         / deadline).  Returns the number of tokens actually appended;
-        the caller rolls back cache cells beyond that count."""
+        the caller rolls back cache cells beyond that count.
+
+        Timestamps: the round emits up to k+1 tokens at one wall-clock
+        instant, but stamping them all `now_s` would collapse ITL
+        percentiles computed from `token_times` to zero-gap runs.  The
+        tokens were produced *throughout* the round (k draft passes + one
+        verify), so each appended token gets a timestamp linearly
+        interpolated between the slot's previous sample time and `now_s` —
+        monotone, summing to the true round span, and honest about the
+        per-token latency a streaming client would observe."""
         st = self.slots[slot]
         assert st is not None and st.tokens, \
             "speculative record on a non-decoding slot"
+        t_prev = st.times[-1] if st.times else now_s
+        span = max(now_s - t_prev, 0.0)
         n = 0
         for tok in toks:
             st.pos += 1
             st.steps += 1
             st.cur_token = int(tok)
             st.tokens.append(int(tok))
-            st.times.append(now_s)
+            t_tok = t_prev + span * (n + 1) / len(toks)
+            st.times.append(t_tok)
+            self.events.append(TokenEvent(st.req.uid, int(tok), t_tok,
+                                          len(st.tokens) - 1))
             n += 1
             if self._maybe_finish(slot, now_s):
                 break
@@ -582,6 +629,9 @@ class SlotScheduler:
             decode_s=now_s - st.started_s, steps=st.steps,
             finish_reason=reason, done_s=now_s, evictions=st.evictions,
             token_times=st.times)
+        self.events.append(TokenEvent(st.req.uid, -1, now_s,
+                                      len(st.tokens), done=True,
+                                      finish_reason=reason))
         if self.alloc is not None:
             self.alloc.release(slot)
         self.slots[slot] = None

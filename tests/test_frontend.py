@@ -1,0 +1,157 @@
+"""Async SSE front end + reentrant session: token identity, streaming.
+
+The contract under test is the tentpole's: `ServeEngine.serve()` (closed
+loop), manual `start()`/`step()` session driving, and the asyncio SSE
+front end are three drivers over ONE control flow, so greedy tokens must
+be identical across all of them for the same seed — and the streamed
+token events must carry every token exactly once, in order, with
+strictly increasing timestamps.
+"""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.models import init_params
+from repro.serve.engine import GenRequest, ServeEngine
+from repro.serve.frontend import AsyncServeFrontend, fetch_json, sse_generate
+
+
+def _setup():
+    cfg = reduce_config(get_config("deepseek-7b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _reqs():
+    return [GenRequest(prompt=[1, 2, 3, 4, 5], max_new=6),
+            GenRequest(prompt=[7, 8, 9], max_new=5),
+            GenRequest(prompt=[3, 1, 4, 1, 5, 9, 2, 6], max_new=4)]
+
+
+def test_session_step_matches_serve():
+    """Manual submit/step driving reproduces serve() results and streams
+    every token as an ordered event."""
+    cfg, params = _setup()
+    eng = ServeEngine(params, cfg, max_len=64, n_slots=2, prefill_chunk=8)
+    ref = eng.serve(_reqs(), seed=0)
+
+    sess = eng.start(seed=0)
+    uids = [sess.submit(r) for r in _reqs()]
+    events = []
+    while not sess.done():
+        events.append(sess.step())
+    flat = [e for step in events for e in step]
+    assert max(len(s) for s in events) >= 1       # events arrive per step
+    for uid, r in zip(uids, ref):
+        toks = [e.token for e in flat if e.uid == uid and not e.done]
+        assert toks == r.tokens
+        idxs = [e.index for e in flat if e.uid == uid and not e.done]
+        assert idxs == list(range(len(r.tokens)))
+        ts = [e.t_s for e in flat if e.uid == uid]
+        assert ts == sorted(ts)
+        terminal = [e for e in flat if e.uid == uid and e.done]
+        assert len(terminal) == 1
+        assert terminal[0].finish_reason == r.finish_reason
+        assert sess.results[uid].tokens == r.tokens
+    st = sess.stats()
+    assert st["decode_tokens"] > 0 and st["prefills"] == 3
+
+
+def test_frontend_sse_identity_and_metrics():
+    """CI smoke contract: >=3 concurrent mixed-length SSE streams produce
+    exactly the closed-loop engine's greedy tokens, and /v1/metrics
+    reports nonzero TTFT/ITL percentiles and an achieved-bandwidth
+    figure."""
+    cfg, params = _setup()
+    eng = ServeEngine(params, cfg, max_len=64, n_slots=2, prefill_chunk=8)
+    ref = eng.serve(_reqs(), seed=0)
+
+    async def drive():
+        async with AsyncServeFrontend(eng, seed=0, track=True) as fe:
+            frames = await asyncio.gather(*[
+                sse_generate("127.0.0.1", fe.port,
+                             {"prompt": r.prompt, "max_new": r.max_new})
+                for r in _reqs()])
+            metrics = await fetch_json("127.0.0.1", fe.port, "/v1/metrics")
+            health = await fetch_json("127.0.0.1", fe.port, "/healthz")
+        return frames, metrics, health
+
+    frames, metrics, health = asyncio.run(drive())
+    assert health == {"ok": True}
+    for fs, r in zip(frames, ref):
+        toks = [f["token"] for f in fs if "token" in f]
+        assert toks == r.tokens
+        final = fs[-1]
+        assert final["done"] and final["finish_reason"] == r.finish_reason
+        assert final["n_tokens"] == len(r.tokens)
+        assert final["ttft_s"] > 0
+    lat = metrics["latency"]
+    assert lat["ttft_s"]["p99"] > 0 and lat["itl_s"]["p50"] > 0
+    assert metrics["goodput"]["n_requests"] == 3
+    assert metrics["goodput"]["slo_attainment"] == 1.0  # SLO() = no limits
+    hw = metrics["engine"]["hw"]
+    assert hw["achieved_hbm_gbps"]["p50"] > 0
+    assert 0 < hw["hbm_util_pct"]["p50"] and hw["mfu_pct"]["p50"] > 0
+    assert hw["step_bytes"]["mixed"] > 0
+
+
+def test_frontend_streams_while_decoding():
+    """Tokens arrive incrementally (streaming, not buffered-at-end): the
+    first SSE frame lands before the request's terminal frame by
+    construction; check frame timestamps span multiple engine steps."""
+    cfg, params = _setup()
+    eng = ServeEngine(params, cfg, max_len=64, n_slots=2, prefill_chunk=8)
+
+    async def drive():
+        async with AsyncServeFrontend(eng, seed=0) as fe:
+            return await sse_generate(
+                "127.0.0.1", fe.port, {"prompt": [1, 2, 3], "max_new": 8})
+
+    frames = asyncio.run(drive())
+    toks = [f for f in frames if "token" in f]
+    assert len(toks) == 8
+    ts = [f["t_s"] for f in toks]
+    assert ts == sorted(ts) and ts[0] < ts[-1]
+
+
+def test_frontend_open_loop_poisson_identity():
+    """Seeded Poisson arrivals through real sockets match the engine's
+    open-loop serve() on the same arrival offsets (loadgen's identity
+    contract, miniature)."""
+    cfg, params = _setup()
+    eng = ServeEngine(params, cfg, max_len=64, n_slots=2, prefill_chunk=8)
+    rng = np.random.default_rng(3)
+    arrivals = np.cumsum(rng.exponential(1 / 40.0, size=3)).tolist()
+    ref = eng.serve(_reqs(), seed=0, arrival_times=arrivals)
+
+    async def drive():
+        async def one(req, delay):
+            await asyncio.sleep(delay)
+            return await sse_generate("127.0.0.1", fe.port,
+                                      {"prompt": req.prompt,
+                                       "max_new": req.max_new})
+        fe = AsyncServeFrontend(eng, seed=0)
+        async with fe:
+            return await asyncio.gather(
+                *[one(r, t) for r, t in zip(_reqs(), arrivals)])
+
+    frames = asyncio.run(drive())
+    toks = [[f["token"] for f in fs if "token" in f] for fs in frames]
+    assert toks == [r.tokens for r in ref]
+
+
+def test_loadgen_poisson_reproducible():
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                           / "benchmarks"))
+    from loadgen import poisson_arrivals
+    a = poisson_arrivals(8.0, 16, seed=5)
+    b = poisson_arrivals(8.0, 16, seed=5)
+    c = poisson_arrivals(8.0, 16, seed=6)
+    assert a == b and a != c
+    assert all(x < y for x, y in zip(a, a[1:]))   # strictly increasing
+    assert len(a) == 16 and a[0] > 0

@@ -1,0 +1,166 @@
+"""Serving observability: percentile math, SLO goodput, tracker, policy."""
+import math
+
+import pytest
+
+from repro.serve.metrics import (DEVICE_DB, SLO, AdaptiveDraftPolicy,
+                                 DeviceSpec, StepTracker, goodput_report,
+                                 latency_summary, meets_slo, percentile,
+                                 request_itls, resolve_device)
+from repro.serve.scheduler import GenRequest, GenResult, SlotScheduler
+
+
+# ------------------------------------------------------------- percentile
+
+def test_percentile_degenerate_inputs():
+    assert percentile([], 50) == 0.0
+    assert percentile([], 99) == 0.0
+    assert percentile([7.0], 0) == 7.0
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([7.0], 100) == 7.0
+
+
+def test_percentile_interpolation_and_ties():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    # numpy linear method: pos = 3 * 0.99 = 2.97
+    assert percentile(xs, 99) == pytest.approx(3.97)
+    assert percentile([5.0, 5.0, 5.0, 5.0], 99) == 5.0   # ties
+    assert percentile([2.0, 1.0], 50) == pytest.approx(1.5)  # unsorted in
+    with pytest.raises(ValueError):
+        percentile(xs, 101)
+    with pytest.raises(ValueError):
+        percentile(xs, -1)
+
+
+# ---------------------------------------------------------------- goodput
+
+def _res(tokens=4, ttft=0.5, itl=0.25, reason="length"):
+    times = [ttft + i * itl for i in range(tokens)]
+    return GenResult(tokens=list(range(tokens)), prefill_s=ttft,
+                     finish_reason=reason, token_times=times,
+                     done_s=times[-1])
+
+
+def test_meets_slo_boundaries():
+    # power-of-two budgets so the constructed gaps are float-exact and
+    # the boundary case really sits ON the boundary
+    slo = SLO(ttft_s=0.5, itl_s=0.25)
+    assert meets_slo(_res(ttft=0.5, itl=0.25), slo)       # exactly on: good
+    assert not meets_slo(_res(ttft=0.500001, itl=0.25), slo)  # TTFT overrun
+    assert not meets_slo(_res(ttft=0.5, itl=0.250001), slo)   # slow gap
+    assert not meets_slo(_res(reason="deadline"), slo)    # engine killed it
+    assert meets_slo(_res(tokens=1), SLO(ttft_s=0.5))     # no gaps, no itl
+    assert meets_slo(_res(ttft=9.9, itl=9.9), SLO())      # inf disables
+
+
+def test_goodput_counts_only_slo_meeting_tokens():
+    slo = SLO(ttft_s=0.5, itl_s=0.25)
+    good, bad = _res(tokens=6), _res(tokens=4, ttft=1.5)
+    rep = goodput_report([good, bad], slo, wall_s=2.0)
+    assert rep["n_requests"] == 2 and rep["n_good"] == 1
+    assert rep["slo_attainment"] == 0.5
+    assert rep["tokens"] == 10 and rep["good_tokens"] == 6
+    assert rep["throughput_tok_per_s"] == pytest.approx(5.0)
+    assert rep["goodput_tok_per_s"] == pytest.approx(3.0)
+    empty = goodput_report([], slo, wall_s=1.0)
+    assert empty["slo_attainment"] == 0.0
+
+
+def test_latency_summary_shapes():
+    lat = latency_summary([_res(tokens=3), _res(tokens=1)])
+    assert lat["ttft_s"]["n"] == 2
+    assert lat["itl_s"]["n"] == 2          # 2 gaps from the 3-token result
+    assert lat["itl_s"]["p50"] == pytest.approx(0.25)
+
+
+# ---------------------------------------- speculative timestamp honesty
+
+def test_record_speculative_interpolates_timestamps():
+    """Regression: a speculative round emits k tokens at one wall-clock
+    instant; naive timestamping collapses their ITL gaps to zero and the
+    p50 lies. The scheduler interpolates across the round's span."""
+    sched = SlotScheduler(1, max_len=64)
+    req = GenRequest(prompt=[1, 2], max_new=8)
+    sched.submit(req)
+    assert sched.next_ready(0.0, slot=0) is req
+    sched.admit(0, req, first_token=5, now_s=1.0, prefill_s=0.1)
+    n = sched.record_speculative(0, [6, 7, 8], now_s=1.3)
+    assert n == 3
+    st = sched.slots[0]
+    assert st.times == pytest.approx([1.0, 1.1, 1.2, 1.3])
+    gaps = [b - a for a, b in zip(st.times, st.times[1:])]
+    assert min(gaps) > 0.0                 # no zero-gap runs
+    # a second round keeps interpolating from the previous timestamp
+    sched.record_speculative(0, [9, 10], now_s=1.5)
+    assert st.times == pytest.approx([1.0, 1.1, 1.2, 1.3, 1.4, 1.5])
+    res_itls = request_itls(GenResult(tokens=st.tokens,
+                                      token_times=st.times))
+    assert all(g > 0 for g in res_itls)
+
+
+# ----------------------------------------------------------- device + hw
+
+def test_device_db_mirrors_roofline_constants():
+    from repro.roofline import analysis
+    spec = DEVICE_DB["tpu-v5e"]
+    assert spec.peak_flops == analysis.PEAK_FLOPS
+    assert spec.hbm_bw == analysis.HBM_BW
+    assert resolve_device("rtx-4090").name == "rtx-4090"
+    assert resolve_device(DeviceSpec("x", 1.0, 1.0)).name == "x"
+    assert resolve_device(None).name == "host-cpu"   # CPU container
+
+
+class _Cost:
+    def __init__(self, flops, bytes_):
+        self.flops, self.bytes = flops, bytes_
+
+
+def test_step_tracker_achieved_vs_peak():
+    dev = DeviceSpec("toy", peak_flops=1e12, hbm_bw=1e9)
+    tr = StepTracker(dev, {"mixed": _Cost(1e9, 1e6),
+                           "draft": _Cost(4e8, 5e5),
+                           "verify": _Cost(2e9, 2e6)})
+    tr.record("mixed", dt_s=0.01, tokens=8)     # 1e8 B/s, 1e11 FLOP/s
+    tr.record_spec_round(dt_s=0.02, draft_passes=2, tokens=6)
+    s = tr.summary()
+    assert s["steps"] == 2 and s["tokens"] == 14
+    assert s["step_bytes"]["mixed"] == 1e6
+    # spec round bytes: 2 drafts * 5e5 + 2e6 = 3e6 over 0.02s = 1.5e8 B/s
+    bws = sorted([1e6 / 0.01, 3e6 / 0.02])
+    assert s["achieved_hbm_gbps"]["p50"] == pytest.approx(
+        (bws[0] + bws[1]) / 2 / 1e9)
+    assert s["hbm_util_pct"]["p50"] == pytest.approx(
+        100.0 * (bws[0] + bws[1]) / 2 / dev.hbm_bw)
+    assert s["mfu_pct"]["p50"] > 0
+
+
+# ------------------------------------------------------- adaptive policy
+
+def test_adaptive_policy_hysteresis():
+    p = AdaptiveDraftPolicy(queue_hi=2, queue_lo=0, wait_hi_s=1.0,
+                            wait_lo_s=0.25)
+    assert not p.update(1, 0.0)            # below both thresholds
+    assert p.update(2, 0.0)                # queue depth trips it on
+    assert p.flips == 1
+    assert p.update(1, 0.3)                # above lo: stays on (hysteresis)
+    assert not p.update(0, 0.1)            # both cleared -> off
+    assert p.flips == 2
+    assert p.update(0, 1.5)                # wait alone can trip it
+    assert p.flips == 3
+    p.reset()
+    assert not p.on and p.flips == 0
+
+
+def test_adaptive_policy_requires_speculation():
+    import jax
+    from repro.configs import get_config, reduce_config
+    from repro.models import init_params
+    from repro.serve.engine import ServeEngine
+    cfg = reduce_config(get_config("deepseek-7b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, max_len=32, n_slots=2,
+                    adaptive=AdaptiveDraftPolicy())
