@@ -21,10 +21,16 @@ front end (in-process server, real sockets, arrivals enforced by the
 client) and asserts the streamed tokens are identical to the engine
 path — the open-loop twin of the CI smoke test.
 
+`--chaos SEED` runs the same workload twice — fault-free oracle, then
+under a deterministic injected fault schedule — and asserts the chaos
+run's surviving requests stream bitwise-identical greedy tokens while
+the watchdog/quarantine/requeue paths demonstrably fired.
+
 Usage:
   PYTHONPATH=src python benchmarks/loadgen.py --rate 8 --requests 24 \
       --slo-ttft 2.0 --slo-itl 0.5 [--speculate 3 --draft-bits 3] \
-      [--adaptive] [--http] [--out benchmarks/BENCH_goodput.json]
+      [--adaptive] [--http] [--chaos 7 --chaos-rate 0.15] \
+      [--out benchmarks/BENCH_goodput.json]
 """
 from __future__ import annotations
 
@@ -112,6 +118,8 @@ def run_loadgen(rate: float = 8.0, n_requests: int = 24, seed: int = 0,
                 prefill_chunk: int = 16, spec_k: int = 0,
                 draft_bits: int = 0, adaptive: bool = False,
                 http: bool = False, track=True,
+                chaos_seed: Optional[int] = None, chaos_rate: float = 0.1,
+                queue_cap: Optional[int] = None,
                 out_path: Optional[str] = None) -> dict:
     cfg, params, data = _trained_small_lm()
     if draft_bits:
@@ -151,8 +159,20 @@ def run_loadgen(rate: float = 8.0, n_requests: int = 24, seed: int = 0,
     engine.serve(build_requests(cfg, min(n_slots, n_requests),
                                 list(prompt_lens), 4, seed + 7), seed=seed)
     engine.adaptive = policy
+    faults = None
+    oracle_tokens = None
+    if chaos_seed is not None:
+        # fault-free oracle first: the chaos run's SURVIVING requests
+        # (finish_reason eos/length) must emit bitwise-identical greedy
+        # tokens — quarantine/requeue replays deterministically, retries
+        # never double-sample, NaN rounds roll back cleanly
+        from repro.serve.faults import chaos_injector
+        oracle = engine.serve(reqs, seed=seed, arrival_times=arrivals)
+        oracle_tokens = [r.tokens for r in oracle]
+        faults = chaos_injector(chaos_seed, rate=chaos_rate,
+                                paged=engine.paged)
     results = engine.serve(reqs, seed=seed, arrival_times=arrivals,
-                           track=track)
+                           track=track, faults=faults, queue_cap=queue_cap)
     stats = engine.last_stats
     slo = SLO(ttft_s=slo_ttft_s, itl_s=slo_itl_s)
     report = {
@@ -180,19 +200,44 @@ def run_loadgen(rate: float = 8.0, n_requests: int = 24, seed: int = 0,
     if http:
         report["http"] = _http_check(engine, reqs, arrivals,
                                      [r.tokens for r in results], seed)
+    if chaos_seed is not None:
+        survivors = [i for i, r in enumerate(results)
+                     if r.finish_reason in ("eos", "length")]
+        diverged = [i for i in survivors
+                    if results[i].tokens != oracle_tokens[i]]
+        assert not diverged, \
+            f"chaos survivors diverged from fault-free oracle: {diverged}"
+        flt = stats["faults"]
+        injected = flt["injected"]
+        assert sum(injected.values()) > 0, \
+            "chaos run injected no faults — raise --chaos-rate or --requests"
+        assert flt["step_retries"] + flt["requeues"] + flt["cancels"] > 0, \
+            "chaos faults injected but engine recovery paths never exercised"
+        report["faults"] = {
+            "chaos_seed": chaos_seed, "chaos_rate": chaos_rate,
+            "queue_cap": queue_cap, **flt,
+            "survivors": len(survivors), "n_requests": n_requests,
+            "survivor_tokens_identical": True,
+        }
     path = Path(out_path or Path(__file__).parent / "BENCH_goodput.json")
-    key = "open_loop" + ("_spec_adaptive" if adaptive
-                         else "_spec" if spec_k else "")
+    key = ("chaos" if chaos_seed is not None else "open_loop") \
+        + ("_spec_adaptive" if adaptive else "_spec" if spec_k else "")
     _merge_bench_json(path, {key: report})
-    print(json.dumps({"ttft_p99_s": report["latency"]["ttft_s"]["p99"],
-                      "itl_p99_s": report["latency"]["itl_s"]["p99"],
-                      "slo_attainment":
-                      report["goodput"]["slo_attainment"],
-                      "goodput_tok_per_s":
-                      report["goodput"]["goodput_tok_per_s"],
-                      "hbm_util_pct_p50":
-                      report["hw"]["hbm_util_pct"]["p50"] if track
-                      else None}, indent=1))
+    summary = {"ttft_p99_s": report["latency"]["ttft_s"]["p99"],
+               "itl_p99_s": report["latency"]["itl_s"]["p99"],
+               "slo_attainment": report["goodput"]["slo_attainment"],
+               "goodput_tok_per_s": report["goodput"]["goodput_tok_per_s"],
+               "hbm_util_pct_p50":
+               report["hw"]["hbm_util_pct"]["p50"] if track else None}
+    if chaos_seed is not None:
+        f = report["faults"]
+        summary.update(survivors=f"{f['survivors']}/{n_requests}",
+                       survivor_tokens_identical=True,
+                       step_retries=f["step_retries"],
+                       quarantines=f["quarantines"],
+                       requeues=f["requeues"], sheds=f["sheds"],
+                       cancels=f["cancels"])
+    print(json.dumps(summary, indent=1))
     return report
 
 
@@ -224,6 +269,16 @@ def main(argv=None) -> None:
                     help="also drive the SSE front end, check identity")
     ap.add_argument("--no-track", action="store_true",
                     help="skip the MFU/HBM step tracker")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="chaos mode: run a fault-free oracle, then the "
+                         "same workload under a deterministic fault "
+                         "schedule seeded by SEED; asserts survivors' "
+                         "tokens are bitwise the oracle's and recovery "
+                         "paths actually fired")
+    ap.add_argument("--chaos-rate", type=float, default=0.1,
+                    help="per-step fault probability for --chaos")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="arrived-queue depth before shedding; 0 = off")
     ap.add_argument("--out", type=str, default=None)
     a = ap.parse_args(argv)
     run_loadgen(rate=a.rate, n_requests=a.requests, seed=a.seed,
@@ -232,7 +287,9 @@ def main(argv=None) -> None:
                 deadline_s=a.deadline, trace=a.trace, n_slots=a.slots,
                 prefill_chunk=a.prefill_chunk, spec_k=a.speculate,
                 draft_bits=a.draft_bits, adaptive=a.adaptive,
-                http=a.http, track=not a.no_track, out_path=a.out)
+                http=a.http, track=not a.no_track,
+                chaos_seed=a.chaos, chaos_rate=a.chaos_rate,
+                queue_cap=a.queue_cap or None, out_path=a.out)
 
 
 if __name__ == "__main__":

@@ -124,6 +124,27 @@ def main(argv=None) -> int:
                     help="load-adaptive draft precision: run speculative "
                          "low-bit-prefix rounds only while queue/SLO "
                          "pressure is on (needs --speculate K)")
+    ap.add_argument("--sse-queue-max", type=int, default=256,
+                    help="per-request SSE event-queue bound: a client "
+                         "this many events behind is disconnected and "
+                         "its request cancelled (slot + pages freed)")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="arrived-queue depth before overload shedding "
+                         "(503 on the front end, finish_reason='shed' "
+                         "in the engine); 0 = unbounded. The adaptive "
+                         "draft policy's thresholds sit below the cap: "
+                         "precision degrades before admission does")
+    ap.add_argument("--timeout", type=float, default=0.0,
+                    help="default per-request wall-clock timeout seconds "
+                         "(arrival -> finish_reason='timeout'); 0 = off")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="inject a deterministic fault schedule (step "
+                         "faults, NaN logits, page quarantine, "
+                         "stragglers, client cancels) seeded by SEED; "
+                         "surviving requests' greedy tokens are bitwise "
+                         "the fault-free run's")
+    ap.add_argument("--chaos-rate", type=float, default=0.1,
+                    help="per-step fault probability for --chaos")
     ap.add_argument("--dry-run-only", action="store_true")
     args = ap.parse_args(argv)
 
@@ -216,6 +237,16 @@ def main(argv=None) -> int:
         print(f"speculation capped: spec_k {args.speculate} -> "
               f"{engine.spec_k} ({reason})")
 
+    faults = None
+    if args.chaos is not None:
+        from repro.serve.faults import chaos_injector
+        faults = chaos_injector(args.chaos, rate=args.chaos_rate,
+                                paged=engine.paged)
+        print(f"chaos injection on: seed {args.chaos}, "
+              f"rate {args.chaos_rate}")
+    queue_cap = args.queue_cap or None
+    timeout_s = args.timeout or None
+
     if args.serve_http is not None:
         import asyncio
         import json
@@ -226,7 +257,10 @@ def main(argv=None) -> int:
             fe = AsyncServeFrontend(
                 engine, host=args.host, port=args.serve_http,
                 slo=SLO(ttft_s=args.slo_ttft, itl_s=args.slo_itl),
-                track=args.track or None)
+                track=args.track or None,
+                sse_queue_max=args.sse_queue_max,
+                queue_cap=queue_cap, timeout_s=timeout_s,
+                faults=faults)
             async with fe:
                 print(f"serving on http://{args.host}:{fe.port} — "
                       f"POST /v1/generate (SSE), GET /v1/metrics, "
@@ -258,7 +292,7 @@ def main(argv=None) -> int:
     data_long = MarkovStream(cfg.vocab_size, batch=1, seq=long_seq, seed=2)
     toks = data_long.batch_at(1)["tokens"]
     reqs = [GenRequest(prompt=toks[0, :lens[i % len(lens)]].tolist(),
-                       max_new=args.max_new)
+                       max_new=args.max_new, timeout_s=timeout_s)
             for i in range(args.requests)]
     arrivals = None
     if args.rate > 0:
@@ -266,7 +300,8 @@ def main(argv=None) -> int:
                                              size=len(reqs))).tolist()
     t0 = time.time()
     results = engine.serve(reqs, arrival_times=arrivals,
-                           track=args.track or None)
+                           track=args.track or None,
+                           faults=faults, queue_cap=queue_cap)
     dt = time.time() - t0
     n_tok = sum(len(r.tokens) for r in results)
     st = engine.last_stats
@@ -290,6 +325,19 @@ def main(argv=None) -> int:
     if adaptive is not None:
         print(f"adaptive draft: {st['adaptive_rounds']} low-bit rounds, "
               f"{st['adaptive_flips']} policy flips")
+    flt = st["faults"]
+    if faults is not None or any(
+            v for k, v in flt.items() if isinstance(v, int)):
+        reasons = {}
+        for r in results:
+            reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+        print(f"faults: {flt['step_retries']} step retries, "
+              f"{flt['quarantines']} quarantines "
+              f"({flt['requeues']} requeued, {flt['poisoned']} poisoned), "
+              f"{flt['sheds']} shed, {flt['timeouts']} timeouts, "
+              f"{flt['cancels']} cancels; finish reasons {reasons}"
+              + (f"; injected {flt['injected']}" if faults is not None
+                 else ""))
     from repro.serve.metrics import SLO, goodput_report, latency_summary
     lat = latency_summary(results)
     good = goodput_report(results,

@@ -3,9 +3,12 @@
 scheduler / sampler / engine: the token-budget serving core.
 metrics: TTFT/ITL percentiles, SLO goodput, achieved-vs-peak MFU/HBM
     tracking, load-adaptive draft policy.
+faults: deterministic chaos injection + the fault-tolerance knobs
+    (watchdog retry, slot quarantine/requeue, shedding, timeouts).
 frontend: asyncio SSE streaming server over the reentrant session API.
 """
 from .engine import ServeEngine, ServeSession
+from .faults import ServeFaultInjector, StepFault, chaos_injector
 from .frontend import AsyncServeFrontend
 from .metrics import (SLO, AdaptiveDraftPolicy, DeviceSpec, DEVICE_DB,
                       StepTracker, goodput_report, latency_summary,

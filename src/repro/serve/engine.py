@@ -176,10 +176,17 @@ class ServeEngine:
                     c, sn, s, q, keep, pages=pg),
                 donate_argnums=(0,))
             self._argmax = jax.jit(lambda l: jnp.argmax(l, axis=-1))
+            self._finite = jax.jit(
+                lambda l: jnp.all(jnp.isfinite(l), axis=-1))
 
         def _sample(logits, temps, top_ks, base_keys, nsamp):
             keys = jax.vmap(jax.random.fold_in)(base_keys, nsamp)
-            return sample_tokens(logits, temps, top_ks, keys)
+            toks = sample_tokens(logits, temps, top_ks, keys)
+            # per-row finite flag folded into the same jit: the NaN/Inf
+            # guard costs no extra device round-trip, and a poisoned
+            # logits row is detected the step it appears (the session
+            # quarantines the slot before the garbage token is recorded)
+            return toks, jnp.all(jnp.isfinite(logits), axis=-1)
 
         self._sample = jax.jit(_sample)
         self._prefill_jits: Dict[int, object] = {}   # legacy admission only
@@ -219,7 +226,10 @@ class ServeEngine:
         (plus the verify token itself as the bonus/correction), and
         every cell a rejected — or merely drafted — token touched is
         restored bitwise from a pre-round snapshot. Returns
-        (cache, drafted, accepted_drafts, emitted, draft_passes)."""
+        (cache, drafted, accepted_drafts, emitted, draft_passes,
+        bad_slots) — bad_slots are slots whose verify logits went
+        NaN/Inf: they accept nothing (their cells roll back with the
+        rejects) and the caller quarantines them."""
         k = self.spec_k
         ns = sched.n_slots
         lanes_v = ns * (k + 1)
@@ -316,14 +326,23 @@ class ServeEngine:
             reset=reset, pages=pages)
         logits, cache = self._verify(self.params, cache, tb)
         v = np.asarray(self._argmax(logits)).reshape(ns, k + 1)
+        fin = np.asarray(self._finite(logits)).reshape(ns, k + 1)
 
         # accept-prefix: verify lane j is the model's true greedy token
         # AFTER consuming drafts[i, 0..j]; accept drafts while they match,
         # emit the first mismatching verify token as the free correction
         keep_post = np.zeros(lanes_v, bool)
         drafted = accepted = emitted = 0
+        bad: List[int] = []
         tstamp = now()
         for i, st, ke in part:
+            if not fin[i, :ke + 1].all():
+                # poisoned verify logits: accept nothing — keep_post
+                # stays False so the round rolls back bitwise, and the
+                # session quarantines the slot for replay
+                bad.append(i)
+                drafted += ke
+                continue
             n_acc = 0
             while n_acc < ke and drafts[i, n_acc + 1] == v[i, n_acc]:
                 n_acc += 1
@@ -338,7 +357,7 @@ class ServeEngine:
         cache = self._restore(cache, snap, j_slots, j_pos,
                               jnp.asarray(touched & ~keep_post), pages)
         jax.block_until_ready(cache)
-        return cache, drafted, accepted, emitted, draft_passes
+        return cache, drafted, accepted, emitted, draft_passes, bad
 
     # -------------------------------------------------- continuous batching
 
@@ -405,7 +424,10 @@ class ServeEngine:
     # ----------------------------------------------------- session driving
 
     def start(self, n_slots: Optional[int] = None, seed: int = 0,
-              track=None, adaptive=None) -> "ServeSession":
+              track=None, adaptive=None, faults=None,
+              queue_cap: Optional[int] = None,
+              poison_threshold: int = 3, max_step_retries: int = 3,
+              retry_backoff_s: float = 0.005) -> "ServeSession":
         """Open a reentrant serving session: `submit` requests any time,
         pump `step()` (one admission + one jitted round each call, token
         events returned per call), read `stats()` whenever. The closed-loop
@@ -413,15 +435,24 @@ class ServeEngine:
 
         `track`: enable the achieved-vs-peak StepTracker — True
         (autodetect device), a device-DB key ('tpu-v5e'), or a DeviceSpec.
-        `adaptive`: an AdaptiveDraftPolicy overriding the engine's."""
+        `adaptive`: an AdaptiveDraftPolicy overriding the engine's.
+        `faults`: a ServeFaultInjector for chaos runs. `queue_cap` bounds
+        the arrived-but-unadmitted queue (overflow sheds with
+        finish_reason='shed'); `poison_threshold` / `max_step_retries` /
+        `retry_backoff_s` tune the fault watchdog."""
         return ServeSession(self, n_slots=n_slots, seed=seed, track=track,
                             adaptive=adaptive if adaptive is not None
-                            else self.adaptive)
+                            else self.adaptive, faults=faults,
+                            queue_cap=queue_cap,
+                            poison_threshold=poison_threshold,
+                            max_step_retries=max_step_retries,
+                            retry_backoff_s=retry_backoff_s)
 
     def serve(self, requests: List[GenRequest], seed: int = 0,
               arrival_times: Optional[List[float]] = None,
               n_slots: Optional[int] = None,
-              track=None) -> List[GenResult]:
+              track=None, faults=None,
+              queue_cap: Optional[int] = None) -> List[GenResult]:
         """Continuous batching on the unified token-budget step: admit on
         any free slot, lane decode tokens + prompt chunks into ONE jitted
         fixed-shape `mixed_step`, results in submission order. A thin
@@ -430,9 +461,11 @@ class ServeEngine:
         `arrival_times` (seconds from call start, per request) simulates an
         open-loop arrival process; requests are not admitted before their
         arrival. Without it, everything is admittable immediately.
-        `track` enables the per-step MFU/HBM tracker (see `start`).
+        `track` enables the per-step MFU/HBM tracker, `faults` injects a
+        chaos schedule, `queue_cap` sheds overload (see `start`).
         """
-        sess = self.start(n_slots=n_slots, seed=seed, track=track)
+        sess = self.start(n_slots=n_slots, seed=seed, track=track,
+                          faults=faults, queue_cap=queue_cap)
         submitted = []
         for i, r in enumerate(requests):
             if arrival_times is not None:
@@ -447,6 +480,8 @@ class ServeEngine:
             sess.submit(r, stream_id=stream_ids[r.uid])
         while not sess.done():
             sess.step()
+        if faults is not None:
+            faults.finish(sess.sched.alloc)
         self.last_stats = sess.stats()
         self.last_session = sess
         if sess.sched.alloc is not None:
@@ -488,8 +523,8 @@ class ServeEngine:
 
         outs = [[] for _ in range(b)]
         done = np.zeros(b, bool)
-        cur = self._sample(logits, temps, top_ks, base_keys,
-                           jnp.zeros((b,), jnp.int32))
+        cur, _ = self._sample(logits, temps, top_ks, base_keys,
+                              jnp.zeros((b,), jnp.int32))
         cur = jax.block_until_ready(cur)
         t1 = time.perf_counter()
         steps = 0
@@ -506,8 +541,8 @@ class ServeEngine:
                 break
             pos = jnp.full((b,), plen + i, jnp.int32)
             logits, cache = self._decode_legacy(self.params, cache, cur, pos)
-            cur = self._sample(logits, temps, top_ks, base_keys,
-                               jnp.full((b,), i + 1, jnp.int32))
+            cur, _ = self._sample(logits, temps, top_ks, base_keys,
+                                  jnp.full((b,), i + 1, jnp.int32))
             cur = jax.block_until_ready(cur)
             steps += 1
         decode_s = time.perf_counter() - t1
@@ -538,7 +573,10 @@ class ServeSession:
     """
 
     def __init__(self, engine: ServeEngine, n_slots: Optional[int] = None,
-                 seed: int = 0, track=None, adaptive=None):
+                 seed: int = 0, track=None, adaptive=None, faults=None,
+                 queue_cap: Optional[int] = None,
+                 poison_threshold: int = 3, max_step_retries: int = 3,
+                 retry_backoff_s: float = 0.005):
         self.engine = engine
         self.seed = seed
         ns = n_slots or engine.n_slots
@@ -556,7 +594,20 @@ class ServeSession:
             alloc = PageAllocator(engine.n_pages, engine.page_size, ns,
                                   engine.max_pages_per_slot)
         self.sched = SlotScheduler(ns, engine.max_len, alloc=alloc,
-                                   window=engine.release_window)
+                                   window=engine.release_window,
+                                   queue_cap=queue_cap,
+                                   poison_threshold=poison_threshold)
+        # fault watchdog state (see step()): a failed round retries with
+        # exponential backoff; past the budget every active slot is
+        # quarantined (requeue-or-abort) so the session cannot livelock
+        self.faults = faults
+        self.max_step_retries = max_step_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.step_seq = 0               # fault-schedule clock (attempted rounds)
+        self.step_retries = 0
+        self.cache_recoveries = 0
+        self.watchdog_exhausted = 0
+        self.last_fault = ""
         if engine.spec_k and engine.cfg.n_experts > 0 \
                 and ns != engine.n_slots:
             engine._moe_spec_guard(ns, engine.spec_k)  # verify width changed
@@ -613,6 +664,13 @@ class ServeSession:
         self.sched.submit(req)
         return req.uid
 
+    def cancel(self, uid: int) -> bool:
+        """Drop a request the client abandoned: from the queue, or from
+        its active slot (slot + pages free immediately, partial tokens
+        kept in the result, finish_reason='cancelled'). Driver-thread
+        only, like every other scheduler-touching call. Idempotent."""
+        return self.sched.cancel(uid, self.now())
+
     def done(self) -> bool:
         """True when nothing is queued or in flight (more `submit`s may
         still arrive — the async driver idles on this, it doesn't exit)."""
@@ -628,7 +686,17 @@ class ServeSession:
         """One scheduling round: admit whatever is ready, then run ONE
         jitted round (mixed token-budget step or speculative round) — or
         sleep briefly if every slot is empty and the next arrival is in
-        the future. Returns the token events produced by this call."""
+        the future. Returns the token events produced by this call.
+
+        The round runs under a fault watchdog: a transient failure
+        (injected StepFault or a real RuntimeError out of the jit)
+        retries with exponential backoff up to `max_step_retries` times;
+        if the failure interrupted a donated jit the consumed cache is
+        rebuilt and every active slot quarantined for deterministic
+        replay; past the retry budget all active slots quarantine rather
+        than livelock. Overload and expiry valves (queue_cap shedding,
+        queued-request timeouts, injected client cancels) run around the
+        round."""
         eng = self.engine
         sched = self.sched
         for slot in sched.free_slots():
@@ -645,7 +713,7 @@ class ServeSession:
                 toks = jnp.asarray([req.prompt], jnp.int32)
                 logits, self.cache = eng._prefill_insert(
                     self.cache, toks, slot)
-                first = eng._sample(
+                first, _ = eng._sample(
                     logits, jnp.asarray([req.temperature], jnp.float32),
                     jnp.asarray([req.top_k], jnp.int32),
                     jnp.asarray(bkey[None]), jnp.zeros((1,), jnp.int32))
@@ -657,12 +725,80 @@ class ServeSession:
             self.base_keys[slot] = bkey
             self.prefills += 1
 
+        # overload + expiry valves: shed the arrived queue past queue_cap
+        # (the adaptive policy has already had its chance to absorb the
+        # pressure with low-bit draft rounds — its thresholds sit below
+        # the cap), expire queued requests whose timeout elapsed
+        sched.expire_queued(self.now())
+        sched.shed_overflow(self.now())
+
         if sched.n_active == 0:
             nxt = sched.next_arrival()
             if nxt is not None:
                 time.sleep(max(0.0, min(nxt - self.now(), 0.05)))
+            if self.faults is not None:
+                # keep the fault clock moving while idle, or quarantined
+                # pages could never return and admission would starve
+                self.faults.tick_idle(self.step_seq, sched.alloc)
+                self.step_seq += 1
             return sched.take_events()
 
+        if self.faults is not None:
+            uids = [st.req.uid for st in sched.slots if st is not None]
+            victim = self.faults.cancel_victim(self.step_seq, uids)
+            if victim is not None:
+                sched.cancel(victim, self.now())
+            if sched.n_active == 0:
+                self.step_seq += 1
+                return sched.take_events()
+
+        for attempt in range(self.max_step_retries + 1):
+            try:
+                if self.faults is not None:
+                    self.faults.begin_step(self.step_seq, sched.alloc)
+                self._round()
+                break
+            except RuntimeError as e:   # StepFault or a real device error
+                self.step_retries += 1
+                self.last_fault = repr(e)
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
+                self._recover_cache()
+        else:
+            # persistent failure: quarantine every active slot (requeue
+            # below the poison threshold, error-abort at it) instead of
+            # retrying forever
+            self.watchdog_exhausted += 1
+            for i, st in enumerate(sched.slots):
+                if st is not None:
+                    sched.quarantine(i, self.now())
+        self.step_seq += 1
+        return sched.take_events()
+
+    def _recover_cache(self) -> None:
+        """Post-failure repair: if the exception interrupted a donated
+        jit, the step consumed (deleted) the cache buffers — rebuild a
+        blank cache and quarantine every active slot so their requests
+        replay deterministically. A failure BEFORE the jit (the injected
+        kind) leaves the cache intact and this is a no-op: the plain
+        retry is token-safe because no state was mutated."""
+        leaves = jax.tree_util.tree_leaves(self.cache)
+        if not any(getattr(l, "is_deleted", lambda: False)()
+                   for l in leaves):
+            return
+        eng = self.engine
+        self.cache = init_serve_cache(eng.params, {}, self.n_slots,
+                                      eng.max_len, eng.cfg, eng.ctx)
+        self.cache_recoveries += 1
+        for i, st in enumerate(self.sched.slots):
+            if st is not None:
+                self.sched.quarantine(i, self.now())
+
+    def _round(self) -> None:
+        """The jitted part of one step: a speculative round or a mixed
+        token-budget step (events accumulate in the scheduler; `step()`
+        drains them)."""
+        eng = self.engine
+        sched = self.sched
         spec_want = eng.spec_k > 0
         if spec_want and self.adaptive is not None:
             # load-adaptive draft precision: speculative low-bit-prefix
@@ -681,7 +817,7 @@ class ServeSession:
                 if sched.alloc is not None:
                     self.peak_pages = max(self.peak_pages,
                                           sched.alloc.in_use)
-                self.cache, dk, ak, ek, dp = eng._spec_round(
+                self.cache, dk, ak, ek, dp, bad = eng._spec_round(
                     self.cache, sched, self.budget, self.now)
                 dt = time.perf_counter() - t0
                 self.step_s += dt
@@ -696,12 +832,15 @@ class ServeSession:
                 self.decode_tokens += ek
                 if self.tracker is not None:
                     self.tracker.record_spec_round(dt, dp, ek)
-                return sched.take_events()
+                for i in bad:           # NaN verify logits: replay
+                    if sched.slots[i] is not None:
+                        sched.quarantine(i, self.now())
+                return
 
         sched.grow_pages(self.now())    # map next-token pages, evict if dry
         lanes = sched.schedule_step(self.budget, self.chunk_cap, self.now())
         if lanes is None:               # transiently page-starved
-            return sched.take_events()
+            return
         tb = TokenBatch(
             tokens=jnp.asarray(lanes["tokens"]),
             slots=jnp.asarray(lanes["slots"]),
@@ -717,9 +856,19 @@ class ServeSession:
         if sched.alloc is not None:
             self.peak_pages = max(self.peak_pages, sched.alloc.in_use)
         logits, self.cache = eng._mixed(eng.params, self.cache, tb)
-        samp = eng._sample(logits, jnp.asarray(temps), jnp.asarray(top_ks),
-                           jnp.asarray(self.base_keys), jnp.asarray(nsamp))
+        if self.faults is not None:
+            # poison the chosen slots' logits rows post-jit (a NaN'd
+            # activation); other slots' rows and KV are untouched, and
+            # the quarantined slot's KV is discarded by the requeue
+            active = [i for i, s in enumerate(sched.slots)
+                      if s is not None]
+            for t in self.faults.nan_targets(self.step_seq, active):
+                logits = logits.at[t].set(jnp.nan)
+        samp, finite = eng._sample(
+            logits, jnp.asarray(temps), jnp.asarray(top_ks),
+            jnp.asarray(self.base_keys), jnp.asarray(nsamp))
         samp = np.asarray(jax.block_until_ready(samp))
+        finite = np.asarray(finite)
         dt = time.perf_counter() - t0
         n_tok = int(lanes["n_decode"]) + int(lanes["n_chunk"])
         self.step_s += dt
@@ -731,8 +880,13 @@ class ServeSession:
             self.pure_decode_tokens += int(lanes["n_decode"])
         if self.tracker is not None:
             self.tracker.record("mixed", dt, n_tok)
+        # NaN/Inf guard: quarantine a slot whose emitting logits row went
+        # non-finite BEFORE the garbage token is recorded — the slot
+        # empties, so record_scheduled skips it and its request replays
+        for i in sched.step_emits:
+            if sched.slots[i] is not None and not bool(finite[i]):
+                sched.quarantine(i, self.now())
         sched.record_scheduled(samp, self.now())
-        return sched.take_events()
 
     # ------------------------------------------------------------- stats
 
@@ -771,6 +925,21 @@ class ServeSession:
             if self.spec_s else 0.0,
             "spec_emitted_tokens": self.spec_emitted,
         }
+        stats["faults"] = {
+            "step_retries": self.step_retries,
+            "watchdog_exhausted": self.watchdog_exhausted,
+            "cache_recoveries": self.cache_recoveries,
+            "quarantines": sched.quarantines,
+            "requeues": sched.requeues,
+            "poisoned": sched.poisoned,
+            "sheds": sched.sheds,
+            "timeouts": sched.timeouts,
+            "cancels": sched.cancels,
+            "degrade_rounds": self.adaptive_rounds,
+            "queue_cap": sched.queue_cap,
+        }
+        if self.faults is not None:
+            stats["faults"]["injected"] = self.faults.summary()
         if self.adaptive is not None:
             stats.update(adaptive_rounds=self.adaptive_rounds,
                          adaptive_flips=self.adaptive.flips,

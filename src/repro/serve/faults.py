@@ -1,0 +1,178 @@
+"""Serving fault tolerance: deterministic chaos injection for the engine.
+
+The serve-side mirror of `train/fault.py`: in a single-process container
+the *mechanisms* are real (the watchdog retry path, slot quarantine +
+deterministic requeue, page quarantine, overload shedding) and the
+failures are injected on a seedable schedule so every chaos run is
+reproducible. A real deployment wires the same hooks to actual signals —
+an XLA launch failure, a NaN guard on logits, ECC page retirement, a
+stalled SSE client.
+
+Fault kinds (each gated by its own rate, decisions keyed on
+`(seed, kind, step)` so they are independent of wall clock and of each
+other):
+
+  step faults     — a transient exception raised BEFORE the jitted step
+                    runs (a launch failure / preempted device); the
+                    session watchdog retries with exponential backoff.
+  NaN slots       — one active slot's logits row is overwritten with NaN
+                    AFTER the jitted step (a numerically poisoned
+                    activation); detection quarantines the slot and
+                    requeues its request through the eviction/replay
+                    path (PRNG streams key on submission index, so the
+                    replay is deterministic and survivors' greedy tokens
+                    are bitwise those of a fault-free run).
+  page quarantine — a fraction of the free KV pages is retired for a few
+                    steps (ECC-style bad-page retirement / a neighbor
+                    stealing HBM); allocation pressure drives the
+                    scheduler's ordinary eviction valve.
+  stragglers      — an artificial sleep inside the step (a slow host);
+                    degrades latency SLOs, never tokens.
+  client cancels  — a random active request is cancelled mid-flight (a
+                    dead SSE client); its slot and pages free
+                    immediately.
+
+`begin_step` / `corrupt_logits` / `cancel_victim` are called by
+`ServeSession`; the SSE front end exercises the slow/dead-client and
+malformed-request paths with real sockets (tests/test_frontend.py).
+Explicit schedules (`fail_steps`, `nan_steps`) override the rates for
+targeted tests, mirroring `train.fault.FailureInjector.fail_at`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["StepFault", "ServeFaultInjector", "chaos_injector"]
+
+
+class StepFault(RuntimeError):
+    """Raised when an injected transient failure hits a serving step."""
+
+
+@dataclasses.dataclass
+class ServeFaultInjector:
+    """Deterministic, seedable fault schedule for the serving engine.
+
+    All decisions are drawn from `default_rng([seed, kind, step])`, so a
+    given (seed, step index) always produces the same faults regardless
+    of retry timing, wall clock, or which other fault kinds are enabled.
+    A step fault fires at most once per step index (the retry that
+    follows it must be able to succeed)."""
+
+    seed: int = 0
+    # per-step probabilities
+    step_fault_rate: float = 0.0
+    nan_rate: float = 0.0
+    page_rate: float = 0.0
+    straggle_rate: float = 0.0
+    cancel_rate: float = 0.0
+    # shapes of the injected faults
+    page_frac: float = 0.5             # fraction of free pages retired
+    page_hold_steps: int = 3           # steps before retired pages return
+    straggle_s: float = 0.005          # artificial per-step delay
+    # explicit schedules (override/augment the rates in targeted tests)
+    fail_steps: Tuple[int, ...] = ()
+    nan_steps: Tuple[Tuple[int, int], ...] = ()   # (step, slot) pairs
+
+    def __post_init__(self) -> None:
+        self._raised: set = set()
+        self._page_release_step: Optional[int] = None
+        self.counts: Dict[str, int] = {
+            "step_faults": 0, "nan_slots": 0, "page_quarantines": 0,
+            "pages_quarantined": 0, "straggles": 0, "cancels": 0}
+
+    def _rng(self, kind: int, step: int) -> np.random.Generator:
+        return np.random.default_rng([self.seed, kind, step])
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts.values()) - self.counts["pages_quarantined"]
+
+    # ------------------------------------------------------------- hooks
+
+    def begin_step(self, step: int, alloc=None) -> None:
+        """Pre-step injection point: straggler delay, page quarantine
+        churn, then (possibly) a transient StepFault. Called inside the
+        session watchdog — a raised StepFault is retried, and because a
+        step index fires at most once, the retry proceeds."""
+        if self.straggle_rate and \
+                self._rng(1, step).random() < self.straggle_rate:
+            self.counts["straggles"] += 1
+            time.sleep(self.straggle_s)
+        if alloc is not None:
+            if self._page_release_step is not None \
+                    and step >= self._page_release_step:
+                alloc.restore_quarantined()
+                self._page_release_step = None
+            if self.page_rate and self._page_release_step is None \
+                    and self._rng(2, step).random() < self.page_rate:
+                n = max(1, int(alloc.available * self.page_frac))
+                got = alloc.quarantine_free_pages(n)
+                if got:
+                    self.counts["page_quarantines"] += 1
+                    self.counts["pages_quarantined"] += got
+                    self._page_release_step = step + self.page_hold_steps
+        fail = step in self.fail_steps or (
+            self.step_fault_rate
+            and self._rng(3, step).random() < self.step_fault_rate)
+        if fail and step not in self._raised:
+            self._raised.add(step)
+            self.counts["step_faults"] += 1
+            raise StepFault(f"injected transient fault at serve step {step}")
+
+    def tick_idle(self, step: int, alloc=None) -> None:
+        """Idle-step hook: only advances the page-quarantine clock (no
+        new faults — there is nothing to fault). Without it an idle
+        session could starve forever waiting for retired pages."""
+        if alloc is not None and self._page_release_step is not None \
+                and step >= self._page_release_step:
+            alloc.restore_quarantined()
+            self._page_release_step = None
+
+    def nan_targets(self, step: int, slots: Sequence[int]) -> List[int]:
+        """Slots whose logits rows get poisoned this step (post-jit):
+        explicit (step, slot) entries, plus at most one rate-drawn victim
+        among the active slots."""
+        targets = [s for (st, s) in self.nan_steps
+                   if st == step and s in slots]
+        if self.nan_rate and len(slots) > 0 \
+                and self._rng(4, step).random() < self.nan_rate:
+            pick = int(self._rng(5, step).integers(len(slots)))
+            if slots[pick] not in targets:
+                targets.append(slots[pick])
+        self.counts["nan_slots"] += len(targets)
+        return targets
+
+    def cancel_victim(self, step: int,
+                      uids: Sequence[int]) -> Optional[int]:
+        """Uid of the active request a (simulated) dead client abandons
+        this step, or None."""
+        if self.cancel_rate and len(uids) > 0 \
+                and self._rng(6, step).random() < self.cancel_rate:
+            self.counts["cancels"] += 1
+            return uids[int(self._rng(7, step).integers(len(uids)))]
+        return None
+
+    def finish(self, alloc=None) -> None:
+        """Return any still-quarantined pages (end-of-run cleanup so the
+        allocator's partition invariant closes over the whole pool)."""
+        if alloc is not None:
+            alloc.restore_quarantined()
+        self._page_release_step = None
+
+    def summary(self) -> Dict[str, int]:
+        return dict(self.counts)
+
+
+def chaos_injector(seed: int, rate: float = 0.1,
+                   paged: bool = False) -> ServeFaultInjector:
+    """The default chaos mix used by `loadgen --chaos` and the CI smoke:
+    every fault kind on, scaled off one knob."""
+    return ServeFaultInjector(
+        seed=seed, step_fault_rate=rate, nan_rate=rate,
+        page_rate=2 * rate if paged else 0.0, straggle_rate=rate,
+        cancel_rate=rate / 2)

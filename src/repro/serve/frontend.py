@@ -16,13 +16,33 @@ are token-identical to `ServeEngine.serve()` on the same seed: both are
 thin drivers over the same session control flow, and PRNG streams key on
 submission index either way.
 
+Robustness contract (the driver thread is shared — nothing a single
+client does may take it down or stall it):
+
+  * malformed input is rejected with a 400 + JSON body BEFORE anything
+    reaches the driver (`_parse_request`); a request the scheduler still
+    refuses fails only itself (terminal `error` frame).
+  * per-request SSE queues are bounded (`sse_queue_max`): a slow client
+    whose socket backs up first buffers, then is disconnected and its
+    request cancelled mid-flight — slot and KV pages free immediately.
+  * a client that goes away (EOF / reset on its socket) has its request
+    cancelled the same way instead of generating into the void.
+  * overload: when the arrived queue exceeds the session's `queue_cap`,
+    new POSTs get a fast 503 (and the scheduler sheds anything that
+    slips past the race); the AdaptiveDraftPolicy's low-bit draft
+    rounds sit BELOW the cap, so precision degrades before admission
+    does.
+  * `stop()` drains by default: new work gets 503, in-flight streams
+    finish, then the driver halts.
+
 No HTTP library is assumed (stdlib only): the server speaks just enough
 HTTP/1.1 for POST-with-Content-Length and close-delimited responses.
 
 Endpoints
   POST /v1/generate   body {"prompt": [int,...], "max_new": int,
                       "temperature": float, "top_k": int, "eos_id": int?,
-                      "deadline_s": float?, "priority": int?}
+                      "deadline_s": float?, "timeout_s": float?,
+                      "priority": int?}
                       -> text/event-stream; one `data: {...}` frame per
                       token {token, index, t_s}, then a terminal frame
                       {done: true, finish_reason, n_tokens, ttft_s}.
@@ -30,9 +50,12 @@ Endpoints
                       replay re-streams from index 0 (at-least-once token
                       delivery; the terminal frame carries the final
                       sequence length).
-  GET  /v1/metrics    -> JSON {engine: <session stats incl. hw tracker>,
-                      latency: TTFT/ITL/E2E percentiles, goodput: SLO
-                      attainment} over all finished requests so far.
+                      400 {"error": ...} on malformed input, 503 when
+                      draining or overloaded.
+  GET  /v1/metrics    -> JSON {engine: <session stats incl. hw tracker
+                      and fault counters>, latency: TTFT/ITL/E2E
+                      percentiles, goodput: SLO attainment, frontend:
+                      request/disconnect/reject counters}.
   GET  /healthz       -> {"ok": true}
 """
 from __future__ import annotations
@@ -44,12 +67,13 @@ from typing import Dict, List, Optional, Tuple
 
 from .engine import ServeEngine, ServeSession
 from .metrics import SLO, goodput_report, latency_summary
-from .scheduler import GenRequest
+from .scheduler import GenRequest, TokenEvent
 
-__all__ = ["AsyncServeFrontend", "sse_generate", "fetch_json"]
+__all__ = ["AsyncServeFrontend", "sse_generate", "fetch_json", "post_json"]
 
 _REQ_FIELDS = ("max_new", "temperature", "top_k", "eos_id", "deadline_s",
-               "priority")
+               "timeout_s", "priority")
+_INT_FIELDS = ("max_new", "top_k", "eos_id", "priority")
 
 
 class AsyncServeFrontend:
@@ -57,11 +81,22 @@ class AsyncServeFrontend:
 
     `port=0` binds an ephemeral port (read `self.port` after `start()`).
     `track` / `slo` feed the observability side: the per-step MFU/HBM
-    tracker and the goodput report of GET /v1/metrics."""
+    tracker and the goodput report of GET /v1/metrics.
+
+    `sse_queue_max` bounds each request's event queue (the slow-client
+    disconnect threshold); `queue_cap` bounds the arrived request queue
+    (503 + scheduler shedding past it); `timeout_s` is a default
+    per-request wall-clock cap applied to requests that don't set their
+    own. `faults` threads a ServeFaultInjector into the session for
+    chaos runs."""
 
     def __init__(self, engine: ServeEngine, host: str = "127.0.0.1",
                  port: int = 0, seed: int = 0, slo: Optional[SLO] = None,
-                 track=None, poll_s: float = 0.01):
+                 track=None, poll_s: float = 0.01,
+                 sse_queue_max: int = 256,
+                 queue_cap: Optional[int] = None,
+                 timeout_s: Optional[float] = None,
+                 drain_timeout_s: float = 30.0, faults=None):
         self.engine = engine
         self.host = host
         self.port = port
@@ -69,15 +104,28 @@ class AsyncServeFrontend:
         self.slo = slo or SLO()
         self.track = track
         self.poll_s = poll_s
+        self.sse_queue_max = sse_queue_max
+        self.queue_cap = queue_cap
+        self.timeout_s = timeout_s
+        self.drain_timeout_s = drain_timeout_s
+        self.faults = faults
         self.session: Optional[ServeSession] = None
         self._server: Optional[asyncio.AbstractServer] = None
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._driver: Optional[threading.Thread] = None
         self._lock = threading.Lock()
         self._pending: List[Tuple[GenRequest, asyncio.Queue]] = []
+        self._cancels: List[int] = []          # uids, handler -> driver
         self._streams: Dict[int, asyncio.Queue] = {}
+        self._transports: Dict[int, object] = {}
+        self._dropped: set = set()             # uids force-dropped (slow)
+        self._draining = False
         self._stop = threading.Event()
         self._wake = threading.Event()
+        self.counters: Dict[str, int] = {
+            "requests": 0, "rejected_400": 0, "rejected_503": 0,
+            "client_disconnects": 0, "slow_client_disconnects": 0,
+            "submit_rejects": 0, "driver_errors": 0}
 
     # ---------------------------------------------------------- lifecycle
 
@@ -85,7 +133,9 @@ class AsyncServeFrontend:
         self._loop = asyncio.get_running_loop()
         # session construction compiles the cost models when tracking —
         # do it before accepting traffic so TTFT isn't charged for it
-        self.session = self.engine.start(seed=self.seed, track=self.track)
+        self.session = self.engine.start(seed=self.seed, track=self.track,
+                                         faults=self.faults,
+                                         queue_cap=self.queue_cap)
         self._server = await asyncio.start_server(self._handle, self.host,
                                                   self.port)
         self.port = self._server.sockets[0].getsockname()[1]
@@ -93,7 +143,23 @@ class AsyncServeFrontend:
                                         name="serve-driver")
         self._driver.start()
 
-    async def stop(self) -> None:
+    async def stop(self, drain: bool = True,
+                   drain_timeout_s: Optional[float] = None) -> None:
+        """Graceful by default: stop admitting (new POSTs get 503), let
+        every in-flight request finish streaming (bounded by
+        `drain_timeout_s`), then halt the driver and close the server.
+        `drain=False` tears down immediately."""
+        self._draining = True
+        if drain and self.session is not None:
+            tmo = self.drain_timeout_s if drain_timeout_s is None \
+                else drain_timeout_s
+            t0 = self._loop.time()
+            while self._loop.time() - t0 < tmo:
+                with self._lock:
+                    busy = bool(self._pending) or bool(self._cancels)
+                if not busy and not self._streams and self.session.done():
+                    break
+                await asyncio.sleep(self.poll_s)
         self._stop.set()
         self._wake.set()
         if self._driver is not None:
@@ -113,21 +179,40 @@ class AsyncServeFrontend:
 
     def _drive(self) -> None:
         """The ONLY thread that touches the session/scheduler: drain
-        marshalled submissions, pump one step, relay its events into the
-        owning asyncio queues (thread-safely, via the loop)."""
+        marshalled cancels and submissions, pump one step, relay its
+        events into the owning asyncio queues (thread-safely, via the
+        loop). One bad request — or one failed step — fails itself,
+        never this thread."""
         sess = self.session
         while not self._stop.is_set():
             with self._lock:
                 pending, self._pending = self._pending, []
+                cancels, self._cancels = self._cancels, []
+            for uid in cancels:
+                sess.cancel(uid)
             for req, q in pending:
                 self._streams[req.uid] = q
-                sess.submit(req, at=sess.now())
-            if not pending and sess.done():
+                try:
+                    sess.submit(req, at=sess.now())
+                except Exception:
+                    # the handler validates, but the scheduler has the
+                    # last word (e.g. page-pool infeasibility): fail the
+                    # one request with a terminal frame
+                    self._streams.pop(req.uid, None)
+                    self.counters["submit_rejects"] += 1
+                    ev = TokenEvent(req.uid, -1, sess.now(), 0, done=True,
+                                    finish_reason="error")
+                    self._loop.call_soon_threadsafe(q.put_nowait, ev)
+            if not pending and not cancels and sess.done():
                 self._publish(sess.sched.take_events())  # stragglers
                 self._wake.wait(self.poll_s)
                 self._wake.clear()
                 continue
-            self._publish(sess.step())
+            try:
+                self._publish(sess.step())
+            except Exception:       # step()'s watchdog absorbed retries;
+                self.counters["driver_errors"] += 1     # keep pumping
+            self._publish(sess.sched.take_events())     # valve events
 
     def _publish(self, events) -> None:
         for ev in events:
@@ -136,6 +221,19 @@ class AsyncServeFrontend:
                 continue
             if ev.done:
                 del self._streams[ev.uid]
+            elif q.qsize() >= self.sse_queue_max:
+                # slow client: its handler is not draining (socket backed
+                # up). Backpressure has already buffered sse_queue_max
+                # events; now disconnect it and cancel the request so the
+                # slot and its pages serve someone who is listening.
+                self.counters["slow_client_disconnects"] += 1
+                self._dropped.add(ev.uid)
+                del self._streams[ev.uid]
+                self.session.cancel(ev.uid)   # we ARE the driver thread
+                tr = self._transports.get(ev.uid)
+                if tr is not None:
+                    self._loop.call_soon_threadsafe(tr.abort)
+                continue
             self._loop.call_soon_threadsafe(q.put_nowait, ev)
 
     # ------------------------------------------------------ http plumbing
@@ -160,7 +258,7 @@ class AsyncServeFrontend:
             if clen:
                 body = await reader.readexactly(clen)
             if method == "POST" and path == "/v1/generate":
-                await self._generate(writer, body)
+                await self._generate(reader, writer, body)
             elif method == "GET" and path == "/v1/metrics":
                 await self._json(writer, self.metrics())
             elif method == "GET" and path == "/healthz":
@@ -168,7 +266,7 @@ class AsyncServeFrontend:
             else:
                 await self._json(writer, {"error": f"no route {method} "
                                           f"{path}"}, status="404 Not Found")
-        except Exception as e:                       # malformed request
+        except Exception as e:                       # malformed protocol
             try:
                 await self._json(writer, {"error": str(e)},
                                  status="400 Bad Request")
@@ -181,14 +279,80 @@ class AsyncServeFrontend:
             except Exception:
                 pass
 
-    async def _generate(self, writer: asyncio.StreamWriter,
-                        body: bytes) -> None:
-        payload = json.loads(body.decode("utf-8"))
-        prompt = [int(t) for t in payload["prompt"]]
-        kwargs = {k: payload[k] for k in _REQ_FIELDS if payload.get(k)
-                  is not None}
-        req = GenRequest(prompt=prompt, **kwargs)
+    def _parse_request(self, body: bytes) -> GenRequest:
+        """Strict request validation — every ValueError here becomes a
+        400 with a JSON body, and nothing invalid ever reaches the
+        shared driver thread."""
+        try:
+            payload = json.loads(body.decode("utf-8"))
+        except (UnicodeDecodeError, ValueError) as e:
+            raise ValueError(f"body is not valid JSON: {e}")
+        if not isinstance(payload, dict):
+            raise ValueError("body must be a JSON object")
+        unknown = set(payload) - set(_REQ_FIELDS) - {"prompt"}
+        if unknown:
+            raise ValueError(f"unknown fields: {sorted(unknown)}")
+        prompt = payload.get("prompt")
+        if not isinstance(prompt, list) or not prompt:
+            raise ValueError("'prompt' must be a non-empty list of "
+                             "token ids")
+        try:
+            prompt = [int(t) for t in prompt]
+        except (TypeError, ValueError):
+            raise ValueError("'prompt' tokens must be integers")
+        vocab = self.engine.cfg.vocab_size
+        if any(t < 0 or t >= vocab for t in prompt):
+            raise ValueError(f"prompt token ids must be in [0, {vocab})")
+        if len(prompt) >= self.engine.max_len:
+            raise ValueError(f"prompt length {len(prompt)} must be < "
+                             f"max_len ({self.engine.max_len})")
+        kwargs = {}
+        for k in _REQ_FIELDS:
+            v = payload.get(k)
+            if v is None:
+                continue
+            try:
+                kwargs[k] = int(v) if k in _INT_FIELDS else float(v)
+            except (TypeError, ValueError):
+                raise ValueError(f"'{k}' must be a number")
+        if kwargs.get("max_new", 1) < 1:
+            raise ValueError("'max_new' must be >= 1")
+        if kwargs.get("temperature", 0.0) < 0:
+            raise ValueError("'temperature' must be >= 0")
+        for k in ("deadline_s", "timeout_s"):
+            if k in kwargs and kwargs[k] <= 0:
+                raise ValueError(f"'{k}' must be > 0")
+        if self.timeout_s is not None:
+            kwargs.setdefault("timeout_s", self.timeout_s)
+        return GenRequest(prompt=prompt, **kwargs)
+
+    async def _generate(self, reader: asyncio.StreamReader,
+                        writer: asyncio.StreamWriter, body: bytes) -> None:
+        try:
+            req = self._parse_request(body)
+        except ValueError as e:
+            self.counters["rejected_400"] += 1
+            await self._json(writer, {"error": str(e)},
+                             status="400 Bad Request")
+            return
+        if self._draining:
+            self.counters["rejected_503"] += 1
+            await self._json(writer, {"error": "draining"},
+                             status="503 Service Unavailable")
+            return
+        if self.queue_cap is not None:
+            depth, _ = self.session.sched.queue_pressure(self.session.now())
+            if depth >= self.queue_cap:
+                # fast-path shed: don't even marshal it (anything racing
+                # past this check is shed by the scheduler's own valve)
+                self.counters["rejected_503"] += 1
+                await self._json(writer, {"error": "overloaded",
+                                          "queue_depth": depth},
+                                 status="503 Service Unavailable")
+                return
+        self.counters["requests"] += 1
         q: asyncio.Queue = asyncio.Queue()
+        self._transports[req.uid] = writer.transport
         with self._lock:
             self._pending.append((req, q))
         self._wake.set()
@@ -198,21 +362,53 @@ class AsyncServeFrontend:
                      b"Cache-Control: no-cache\r\n"
                      b"Connection: close\r\n\r\n")
         await writer.drain()
-        while True:
-            ev = await q.get()
-            if ev.done:
-                res = self.session.results[req.uid]
-                frame = {"done": True, "finish_reason": ev.finish_reason,
-                         "n_tokens": len(res.tokens),
-                         "ttft_s": res.prefill_s, "t_s": ev.t_s}
-            else:
-                frame = {"token": ev.token, "index": ev.index,
-                         "t_s": ev.t_s}
-            writer.write(b"data: " + json.dumps(frame).encode("utf-8")
-                         + b"\n\n")
-            await writer.drain()
-            if ev.done:
-                return
+        # half-open watcher: an SSE client sends nothing after its POST
+        # body, so ANY completion of this read (EOF included) means the
+        # client went away — cancel its request instead of generating
+        # into the void
+        eof = asyncio.ensure_future(reader.read(1))
+        try:
+            while True:
+                getter = asyncio.ensure_future(q.get())
+                done, _ = await asyncio.wait(
+                    {getter, eof}, return_when=asyncio.FIRST_COMPLETED)
+                if getter not in done:
+                    getter.cancel()
+                    self._client_gone(req.uid)
+                    return
+                ev = getter.result()
+                if ev.done:
+                    res = self.session.results.get(req.uid)
+                    frame = {"done": True,
+                             "finish_reason": ev.finish_reason,
+                             "n_tokens": len(res.tokens) if res else 0,
+                             "ttft_s": res.prefill_s if res else 0.0,
+                             "t_s": ev.t_s}
+                else:
+                    frame = {"token": ev.token, "index": ev.index,
+                             "t_s": ev.t_s}
+                writer.write(b"data: " + json.dumps(frame).encode("utf-8")
+                             + b"\n\n")
+                await writer.drain()
+                if ev.done:
+                    return
+        except ConnectionError:
+            self._client_gone(req.uid)
+        finally:
+            eof.cancel()
+            self._transports.pop(req.uid, None)
+
+    def _client_gone(self, uid: int) -> None:
+        """The stream's client vanished mid-flight: marshal a cancel to
+        the driver so the slot and its pages free. No-op for a uid the
+        slow-client policy already dropped (that cancel happened on the
+        driver thread itself)."""
+        if uid in self._dropped:
+            return
+        self.counters["client_disconnects"] += 1
+        with self._lock:
+            self._cancels.append(uid)
+        self._wake.set()
 
     async def _json(self, writer: asyncio.StreamWriter, obj,
                     status: str = "200 OK") -> None:
@@ -228,7 +424,8 @@ class AsyncServeFrontend:
     def metrics(self) -> Dict[str, object]:
         """Serving stats + latency percentiles + SLO goodput, over every
         request finished so far (engine block includes the hw tracker's
-        achieved-vs-peak summary when tracking is on)."""
+        achieved-vs-peak summary when tracking is on, and the fault
+        counter block always), plus the frontend's own counters."""
         sess = self.session
         results = list(sess.results.values())
         return {
@@ -236,6 +433,11 @@ class AsyncServeFrontend:
             "latency": latency_summary(results),
             "goodput": goodput_report(results, self.slo,
                                       wall_s=sess.now()),
+            "frontend": {**self.counters,
+                         "sse_queue_max": self.sse_queue_max,
+                         "queue_cap": self.queue_cap,
+                         "draining": self._draining,
+                         "open_streams": len(self._streams)},
         }
 
 
@@ -271,6 +473,34 @@ async def sse_generate(host: str, port: int, payload: Dict) -> List[Dict]:
     except Exception:
         pass
     return frames
+
+
+async def post_json(host: str, port: int, path: str,
+                    payload) -> Tuple[int, Dict]:
+    """POST JSON (a dict) or raw bytes; returns (status_code, body dict)
+    — the error-path twin of `sse_generate` for 400/503 responses."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = payload if isinstance(payload, (bytes, bytearray)) \
+        else json.dumps(payload).encode("utf-8")
+    writer.write(f"POST {path} HTTP/1.1\r\nHost: {host}\r\n"
+                 f"Content-Type: application/json\r\n"
+                 f"Content-Length: {len(body)}\r\n"
+                 f"Connection: close\r\n\r\n".encode("latin-1") + bytes(body))
+    await writer.drain()
+    head = await reader.readuntil(b"\r\n\r\n")
+    status = int(head.split(b" ", 2)[1])
+    clen = None
+    for line in head.decode("latin-1").split("\r\n"):
+        if line.lower().startswith("content-length:"):
+            clen = int(line.split(":", 1)[1])
+    data = await (reader.readexactly(clen) if clen is not None
+                  else reader.read())
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except Exception:
+        pass
+    return status, (json.loads(data.decode("utf-8")) if data else {})
 
 
 async def fetch_json(host: str, port: int, path: str) -> Dict:

@@ -94,7 +94,10 @@ class SLO:
 
 
 def meets_slo(result, slo: SLO) -> bool:
-    if result.finish_reason == "deadline":
+    # only cleanly completed requests can count toward goodput: anything
+    # the fault/overload machinery terminated (deadline, timeout, shed,
+    # error, cancelled) is by definition not served within SLO
+    if result.finish_reason not in ("eos", "length"):
         return False
     if result.prefill_s > slo.ttft_s:
         return False

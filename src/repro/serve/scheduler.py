@@ -55,6 +55,7 @@ class GenRequest:
     eos_id: Optional[int] = None
     top_k: int = 0                     # 0 = no truncation
     deadline_s: Optional[float] = None  # decode wall-clock budget, None = off
+    timeout_s: Optional[float] = None  # hard wall-clock cap from ARRIVAL
     arrival_s: float = 0.0             # offset from serve() start (Poisson)
     priority: int = 0                  # higher = evicted later under pressure
     uid: int = dataclasses.field(default_factory=lambda: next(_UID))
@@ -83,7 +84,8 @@ class GenResult:
     prefill_s: float = 0.0             # admission -> first token (TTFT)
     decode_s: float = 0.0
     steps: int = 0
-    finish_reason: str = "length"      # length | eos | deadline
+    # length | eos | deadline | timeout | error | shed | cancelled
+    finish_reason: str = "length"
     done_s: float = 0.0                # completion time, offset from serve()
     evictions: int = 0                 # page-pressure preemptions (restarts)
     token_times: Optional[List[float]] = None  # per-token sample times
@@ -135,6 +137,7 @@ class PageAllocator:
         self.max_pages_per_slot = max_pages_per_slot
         self.free: List[int] = list(range(n_pages))
         self.owned: List[List[int]] = [[] for _ in range(n_slots)]
+        self.quarantined: List[int] = []   # retired (ECC-style) free pages
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 0) // self.page_size)
@@ -195,9 +198,28 @@ class PageAllocator:
                     t[i, j] = p
         return t
 
+    def quarantine_free_pages(self, n: int) -> int:
+        """Retire up to `n` FREE pages from circulation (simulated ECC
+        retirement / a neighbor stealing HBM). Quarantined pages are
+        neither free nor owned — allocation pressure rises and the
+        scheduler's ordinary eviction valve absorbs it. Returns the
+        number actually retired."""
+        n = min(n, len(self.free))
+        for _ in range(n):
+            self.quarantined.append(self.free.pop())
+        return n
+
+    def restore_quarantined(self) -> int:
+        """Return every quarantined page to the free list."""
+        n = len(self.quarantined)
+        self.free.extend(self.quarantined)
+        self.quarantined = []
+        return n
+
     def check(self) -> None:
-        """Assert the no-leak / no-double-own invariant."""
-        seen = list(self.free)
+        """Assert the no-leak / no-double-own invariant: free + owned +
+        quarantined partition range(n_pages)."""
+        seen = list(self.free) + list(self.quarantined)
         for pages in self.owned:
             seen.extend(p for p in pages if p is not None)
         assert sorted(seen) == list(range(self.n_pages)), \
@@ -217,12 +239,16 @@ class SlotScheduler:
 
     def __init__(self, n_slots: int, max_len: int,
                  alloc: Optional[PageAllocator] = None,
-                 window: Optional[int] = None):
+                 window: Optional[int] = None,
+                 queue_cap: Optional[int] = None,
+                 poison_threshold: int = 3):
         assert n_slots >= 1
         self.n_slots = n_slots
         self.max_len = max_len
         self.alloc = alloc
         self.window = window
+        self.queue_cap = queue_cap     # arrived-queue depth before shedding
+        self.poison_threshold = poison_threshold  # quarantines before abort
         self.queue: deque = deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.results: Dict[int, GenResult] = {}
@@ -230,7 +256,14 @@ class SlotScheduler:
         self.evictions = 0             # page-pressure preemptions
         self.max_decode_gap = 0        # worst steps-between-samples, any stream
         self.pages_released_by_window = 0
+        self.quarantines = 0           # fault preemptions (NaN / watchdog)
+        self.requeues = 0              # quarantines that replayed the request
+        self.poisoned = 0              # requests aborted after N strikes
+        self.sheds = 0                 # overload rejections (queue_cap)
+        self.timeouts = 0              # per-request wall-clock expiries
+        self.cancels = 0               # client-abandoned requests
         self._evicted: Dict[int, int] = {}   # uid -> times preempted
+        self._strikes: Dict[int, int] = {}   # uid -> fault quarantines
         self._used = [False] * n_slots
         self._step_emits: List[int] = []
         self._step_reset: List[int] = []
@@ -239,16 +272,24 @@ class SlotScheduler:
     # ------------------------------------------------------------ queue side
 
     def submit(self, req: GenRequest) -> None:
-        assert len(req.prompt) >= 1, "empty prompt"
-        assert len(req.prompt) < self.max_len, \
-            f"prompt ({len(req.prompt)}) must fit the cache ({self.max_len})"
+        """Validate and enqueue. Raises ValueError (never an assert — the
+        SSE front end turns it into a 400, and a bad request must not
+        take down the shared driver thread)."""
+        if len(req.prompt) < 1:
+            raise ValueError("empty prompt")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(f"prompt ({len(req.prompt)}) must fit the "
+                             f"cache ({self.max_len})")
+        if req.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {req.max_new}")
         if self.alloc is not None:
             # a request whose full trajectory cannot fit the pool would
             # evict-thrash forever; refuse it up front
             worst = min(len(req.prompt) + req.max_new, self.max_len)
-            assert self.alloc.pages_for(worst) <= self.alloc.n_pages, \
-                (f"request needs {self.alloc.pages_for(worst)} pages, pool "
-                 f"holds {self.alloc.n_pages}")
+            if self.alloc.pages_for(worst) > self.alloc.n_pages:
+                raise ValueError(
+                    f"request needs {self.alloc.pages_for(worst)} pages, "
+                    f"pool holds {self.alloc.n_pages}")
         self.queue.append(req)
 
     @property
@@ -315,6 +356,13 @@ class SlotScheduler:
         """Drain the token-event stream accumulated since the last call."""
         out, self.events = self.events, []
         return out
+
+    @property
+    def step_emits(self) -> List[int]:
+        """Slots the in-flight step will sample for (set by
+        `schedule_step`, consumed by `record_scheduled`); the engine's
+        NaN guard reads it to know whose logits rows matter."""
+        return list(self._step_emits)
 
     # ------------------------------------------------------------- slot side
 
@@ -383,6 +431,101 @@ class SlotScheduler:
         self.evictions += 1
         self._evicted[st.req.uid] = self._evicted.get(st.req.uid, 0) + 1
         self.queue.append(st.req)
+
+    # ------------------------------------------------------ fault handling
+
+    def _abort(self, req: GenRequest, reason: str, now_s: float,
+               tokens: Optional[List[int]] = None,
+               times: Optional[List[float]] = None) -> None:
+        """Terminate a request that will NOT produce (more) output:
+        record a GenResult with an explicit finish_reason and emit the
+        terminal TokenEvent so a streaming client unblocks."""
+        toks = tokens or []
+        self.results[req.uid] = GenResult(
+            tokens=toks, finish_reason=reason, done_s=now_s,
+            evictions=self._evicted.get(req.uid, 0), token_times=times)
+        self.events.append(TokenEvent(req.uid, -1, now_s, len(toks),
+                                      done=True, finish_reason=reason))
+
+    def quarantine(self, slot: int, now_s: float) -> str:
+        """Preempt a FAULTED slot (NaN logits, watchdog exhaustion): its
+        pages return to the pool and its generated tokens are discarded.
+        Below `poison_threshold` strikes the request requeues for a
+        deterministic replay (PRNG streams key on submission index, so a
+        surviving replay's greedy tokens are bitwise the fault-free
+        run's); at the threshold it aborts with finish_reason='error'
+        instead of livelocking. Returns 'requeued' or 'error'."""
+        st = self.slots[slot]
+        assert st is not None
+        if self.alloc is not None:
+            self.alloc.release(slot)
+        self.slots[slot] = None
+        self.quarantines += 1
+        uid = st.req.uid
+        self._strikes[uid] = self._strikes.get(uid, 0) + 1
+        if self._strikes[uid] >= self.poison_threshold:
+            self.poisoned += 1
+            self._abort(st.req, "error", now_s)
+            return "error"
+        self._evicted[uid] = self._evicted.get(uid, 0) + 1
+        self.requeues += 1
+        self.queue.append(st.req)
+        return "requeued"
+
+    def cancel(self, uid: int, now_s: float) -> bool:
+        """Drop a request the client abandoned: from the queue, or from
+        its active slot (freeing the slot and its pages mid-flight).
+        Partial tokens are kept in the result. Idempotent — returns
+        False if the uid is not live (already finished/cancelled)."""
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[i]
+                self.cancels += 1
+                self._abort(r, "cancelled", now_s)
+                return True
+        for i, st in enumerate(self.slots):
+            if st is not None and st.req.uid == uid:
+                if self.alloc is not None:
+                    self.alloc.release(i)
+                self.slots[i] = None
+                self.cancels += 1
+                self._abort(st.req, "cancelled", now_s,
+                            tokens=st.tokens, times=st.times)
+                return True
+        return False
+
+    def shed_overflow(self, now_s: float) -> int:
+        """Overload valve: when the ARRIVED-but-unadmitted queue depth
+        exceeds `queue_cap`, shed the least-urgent overflow (EDF-last)
+        with finish_reason='shed'. Requests with future arrivals (the
+        closed-loop pre-submitted workload) don't count until they
+        arrive — shedding is decided at arrival pressure, not submit
+        time. Returns the number shed."""
+        if self.queue_cap is None:
+            return 0
+        order = self._edf_order(now_s)
+        n_over = len(order) - self.queue_cap
+        if n_over <= 0:
+            return 0
+        for i in sorted(order[self.queue_cap:], reverse=True):
+            req = self.queue[i]
+            del self.queue[i]
+            self.sheds += 1
+            self._abort(req, "shed", now_s)
+        return n_over
+
+    def expire_queued(self, now_s: float) -> int:
+        """Time out queued requests whose `timeout_s` elapsed before they
+        ever reached a slot (active slots time out in `_maybe_finish`)."""
+        expired = [i for i, r in enumerate(self.queue)
+                   if r.timeout_s is not None
+                   and now_s - r.arrival_s > r.timeout_s]
+        for i in sorted(expired, reverse=True):
+            req = self.queue[i]
+            del self.queue[i]
+            self.timeouts += 1
+            self._abort(req, "timeout", now_s)
+        return len(expired)
 
     def grow_pages(self, now_s: float, lookahead: int = 1) -> None:
         """Map the page each active slot's next token will land on,
@@ -622,6 +765,10 @@ class SlotScheduler:
         elif (st.req.deadline_s is not None
                 and now_s - st.started_s > st.req.deadline_s):
             reason = "deadline"
+        elif (st.req.timeout_s is not None
+                and now_s - st.req.arrival_s > st.req.timeout_s):
+            reason = "timeout"
+            self.timeouts += 1
         if reason is None:
             return False
         self.results[st.req.uid] = GenResult(

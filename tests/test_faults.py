@@ -1,0 +1,342 @@
+"""Fault tolerance: chaos injection, quarantine/requeue, graceful valves.
+
+The robustness invariant everything here circles: under ANY injected
+fault schedule (transient step exceptions, NaN logits, retired KV pages,
+stragglers, client cancels, overload), the engine never deadlocks or
+crashes, the page allocator's partition invariant closes, and every
+SURVIVING request's greedy tokens are bitwise identical to a fault-free
+run — quarantine requeues replay through the same deterministic
+PRNG-stream machinery as page-pressure eviction, and watchdog retries
+fire before any state mutates.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.data.synthetic import MarkovStream
+from repro.models import init_params
+from repro.serve.engine import GenRequest, ServeEngine
+from repro.serve.faults import ServeFaultInjector, StepFault, chaos_injector
+from repro.serve.metrics import SLO, meets_slo
+from repro.serve.scheduler import GenResult, PageAllocator
+
+
+def _setup():
+    cfg = reduce_config(get_config("deepseek-7b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _reqs(cfg, n=3, max_new=8, seed=3, timeout_s=None):
+    rng = np.random.default_rng(seed)
+    toks = MarkovStream(cfg.vocab_size, batch=1, seq=32,
+                        seed=2).batch_at(1)["tokens"][0]
+    return [GenRequest(prompt=toks[:int(rng.integers(4, 12))].tolist(),
+                       max_new=max_new, timeout_s=timeout_s)
+            for _ in range(n)]
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg, params = _setup()
+    return ServeEngine(params, cfg, max_len=64, n_slots=3, prefill_chunk=8)
+
+
+@pytest.fixture(scope="module")
+def paged_engine():
+    cfg, params = _setup()
+    cfg = dataclasses.replace(cfg, kv_format="paged", kv_page_size=8,
+                              kv_pages=24)
+    return ServeEngine(params, cfg, max_len=64, n_slots=3, prefill_chunk=8)
+
+
+# ------------------------------------------------------- injector alone
+
+def test_injector_deterministic():
+    """Same seed -> identical schedule regardless of retry timing or
+    which other kinds ran; a step fault fires at most once per step
+    (the watchdog's retry must be able to succeed)."""
+    def schedule(seed):
+        inj = ServeFaultInjector(seed=seed, step_fault_rate=0.4,
+                                 nan_rate=0.4, cancel_rate=0.4)
+        fired, nans, cancels = [], [], []
+        for step in range(30):
+            try:
+                inj.begin_step(step)
+            except StepFault:
+                fired.append(step)
+                inj.begin_step(step)          # retry: must NOT re-raise
+            nans.append(tuple(inj.nan_targets(step, [0, 1, 2])))
+            cancels.append(inj.cancel_victim(step, [10, 11, 12]))
+        return fired, nans, cancels
+    assert schedule(7) == schedule(7)
+    assert schedule(7) != schedule(8)
+    fired, _, _ = schedule(7)
+    assert fired, "rate 0.4 over 30 steps fired nothing"
+
+
+def test_injector_explicit_schedules():
+    inj = ServeFaultInjector(seed=0, fail_steps=(2, 5),
+                             nan_steps=((3, 1), (3, 7)))
+    for step in range(7):
+        if step in (2, 5):
+            with pytest.raises(StepFault):
+                inj.begin_step(step)
+            inj.begin_step(step)              # once per step index
+        else:
+            inj.begin_step(step)
+    # only slots that are actually active are targeted
+    assert inj.nan_targets(3, [0, 1, 2]) == [1]
+    assert inj.nan_targets(4, [0, 1, 2]) == []
+    assert inj.counts["step_faults"] == 2
+
+
+def test_page_allocator_quarantine_partition():
+    """Retired pages are a third partition class: free + quarantined +
+    owned must always tile the pool, and restore returns exactly what
+    was taken."""
+    alloc = PageAllocator(8, 4, 2, 4)
+    assert alloc.alloc(0, 3)
+    got = alloc.quarantine_free_pages(3)
+    assert got == 3 and len(alloc.free) == 2
+    alloc.check()                             # partition holds mid-retire
+    assert alloc.quarantine_free_pages(99) == 2   # capped at free pool
+    assert alloc.free == []
+    alloc.check()
+    assert alloc.restore_quarantined() == 5
+    assert alloc.quarantined == [] and len(alloc.free) == 5
+    alloc.check()
+
+
+# ----------------------------------------------- engine recovery paths
+
+def test_step_fault_retry_token_identity(engine):
+    """Transient step faults raise BEFORE the jit runs, so the watchdog
+    retry is token-safe: no state mutated, same tokens as fault-free."""
+    cfg = engine.cfg
+    oracle = engine.serve(_reqs(cfg))
+    faults = ServeFaultInjector(seed=1, fail_steps=(1, 3))
+    res = engine.serve(_reqs(cfg), faults=faults)
+    assert [r.tokens for r in res] == [r.tokens for r in oracle]
+    flt = engine.last_stats["faults"]
+    assert flt["step_retries"] == 2
+    assert flt["watchdog_exhausted"] == 0
+    assert all(r.finish_reason == "length" for r in res)
+
+
+def test_nan_quarantine_requeues_and_replays(engine):
+    """A NaN'd logits row quarantines the slot BEFORE the garbage token
+    is recorded; the requeued request replays deterministically and ends
+    with exactly the fault-free tokens."""
+    cfg = engine.cfg
+    oracle = engine.serve(_reqs(cfg))
+    faults = ServeFaultInjector(seed=1, nan_steps=((2, 0),))
+    res = engine.serve(_reqs(cfg), faults=faults)
+    assert [r.tokens for r in res] == [r.tokens for r in oracle]
+    flt = engine.last_stats["faults"]
+    assert flt["quarantines"] == 1 and flt["requeues"] == 1
+    assert flt["poisoned"] == 0
+
+
+def test_poison_threshold_aborts(engine):
+    """A request that keeps faulting must abort with
+    finish_reason='error' rather than requeue-livelock; the healthy
+    neighbours are untouched (bitwise)."""
+    cfg = engine.cfg
+    reqs = _reqs(cfg)
+    oracle = engine.serve(reqs)
+    sess = engine.start(poison_threshold=1,
+                        faults=ServeFaultInjector(seed=1,
+                                                  nan_steps=((2, 0),)))
+    for i, r in enumerate(reqs):
+        sess.submit(r, stream_id=i)
+    steps = 0
+    while not sess.done():
+        sess.step()
+        steps += 1
+        assert steps < 500, "poisoned request livelocked the session"
+    results = [sess.results[r.uid] for r in reqs]
+    poisoned = [r for r in results if r.finish_reason == "error"]
+    assert len(poisoned) == 1 and poisoned[0].tokens == []
+    for got, ref in zip(results, oracle):
+        if got.finish_reason == "length":
+            assert got.tokens == ref.tokens
+
+
+def test_nan_storm_terminates(engine):
+    """nan_rate=1.0 poisons a slot every step: every request eventually
+    strikes out at the poison threshold and the session drains — no
+    deadlock, no crash, every result terminal."""
+    cfg = engine.cfg
+    faults = ServeFaultInjector(seed=3, nan_rate=1.0)
+    res = engine.serve(_reqs(cfg, max_new=4), faults=faults)
+    assert all(r.finish_reason in ("error", "length") for r in res)
+    assert engine.last_stats["faults"]["poisoned"] >= 1
+
+
+def test_watchdog_exhaustion_quarantines(engine):
+    """Every retry failing (fail range >> retry budget) must quarantine
+    the active slots, strike them out, and still drain the session."""
+    cfg = engine.cfg
+
+    # ServeFaultInjector fires once per step index (so retries succeed);
+    # exhausting the watchdog needs the SAME step to keep failing:
+    class AlwaysFail(ServeFaultInjector):
+        def begin_step(self, step, alloc=None):
+            self.counts["step_faults"] += 1
+            raise StepFault(f"hard fault at step {step}")
+
+    res = engine.serve(_reqs(cfg, max_new=4),
+                       faults=AlwaysFail(seed=0))
+    assert all(r.finish_reason == "error" for r in res)
+    flt = engine.last_stats["faults"]
+    assert flt["watchdog_exhausted"] >= 1
+    assert flt["poisoned"] == len(res)
+
+
+def test_cache_recovery_after_mid_jit_failure(engine):
+    """A failure AFTER the donated jit consumed the cache leaves deleted
+    buffers behind; the watchdog rebuilds the cache, quarantines the
+    active slots, and the replay still matches the fault-free run."""
+    cfg = engine.cfg
+    oracle = engine.serve(_reqs(cfg))
+    real = engine._mixed
+    state = {"armed": False, "fired": False}
+
+    def boom(params, cache, tb):
+        out = real(params, cache, tb)   # donates + deletes `cache`
+        if state["armed"] and not state["fired"]:
+            state["fired"] = True
+            raise RuntimeError("simulated crash after cache donation")
+        return out
+
+    engine._mixed = boom
+    try:
+        sess = engine.start(faults=None)
+        reqs = _reqs(cfg)
+        for i, r in enumerate(reqs):
+            sess.submit(r, stream_id=i)
+        sess.step()                     # healthy first round
+        state["armed"] = True
+        steps = 0
+        while not sess.done():
+            sess.step()
+            steps += 1
+            assert steps < 500
+    finally:
+        engine._mixed = real
+    assert state["fired"]
+    assert sess.cache_recoveries == 1
+    results = [sess.results[r.uid] for r in reqs]
+    assert [r.tokens for r in results] == [r.tokens for r in oracle]
+
+
+# ------------------------------------------------------ overload valves
+
+def test_queue_cap_sheds_edf_last(engine):
+    """Overflow past queue_cap sheds with finish_reason='shed'; the
+    survivors' tokens are bitwise the uncapped run's."""
+    cfg = engine.cfg
+    reqs = _reqs(cfg, n=5)
+    oracle = engine.serve(reqs, n_slots=1)
+    res = engine.serve(reqs, n_slots=1, queue_cap=1)
+    flt = engine.last_stats["faults"]
+    assert flt["sheds"] >= 1
+    shed = [r for r in res if r.finish_reason == "shed"]
+    assert len(shed) == flt["sheds"] and all(r.tokens == [] for r in shed)
+    for got, ref in zip(res, oracle):
+        if got.finish_reason == "length":
+            assert got.tokens == ref.tokens
+
+
+def test_timeout_queued_and_active(engine):
+    """timeout_s counts from ARRIVAL: requests stuck behind a single
+    slot time out in the queue, and a too-slow active request times out
+    mid-decode; either way finish_reason='timeout' and the session
+    drains."""
+    cfg = engine.cfg
+    res = engine.serve(_reqs(cfg, n=4, max_new=16, timeout_s=1e-4),
+                       n_slots=1)
+    assert engine.last_stats["faults"]["timeouts"] >= 1
+    assert all(r.finish_reason in ("timeout", "length") for r in res)
+    assert any(r.finish_reason == "timeout" for r in res)
+
+
+def test_cancel_mid_flight_frees_slot(engine):
+    """Cancelling an active request keeps its partial tokens, frees the
+    slot immediately, and leaves the other streams bitwise untouched."""
+    cfg = engine.cfg
+    reqs = _reqs(cfg)
+    oracle = engine.serve(reqs)
+    sess = engine.start()
+    for i, r in enumerate(reqs):
+        sess.submit(r, stream_id=i)
+    for _ in range(4):
+        sess.step()
+    assert sess.cancel(reqs[1].uid)
+    assert not sess.cancel(reqs[1].uid)       # idempotent
+    steps = 0
+    while not sess.done():
+        sess.step()
+        steps += 1
+        assert steps < 500
+    got = [sess.results[r.uid] for r in reqs]
+    assert got[1].finish_reason == "cancelled"
+    assert got[1].tokens == oracle[1].tokens[:len(got[1].tokens)]
+    assert got[0].tokens == oracle[0].tokens
+    assert got[2].tokens == oracle[2].tokens
+
+
+def test_meets_slo_excludes_faulted_finishes():
+    slo = SLO(ttft_s=100.0, itl_s=100.0)
+    ok = GenResult(tokens=[1, 2], finish_reason="length",
+                   prefill_s=0.1, token_times=[0.1, 0.2])
+    assert meets_slo(ok, slo)
+    for reason in ("shed", "error", "timeout", "cancelled", "deadline"):
+        bad = dataclasses.replace(ok, finish_reason=reason)
+        assert not meets_slo(bad, slo)
+
+
+# ------------------------------------------------- chaos property sweep
+
+@pytest.mark.parametrize("which", ["contiguous", "paged"])
+@pytest.mark.parametrize("seed", [1, 2])
+def test_chaos_survivors_bitwise_identical(engine, paged_engine,
+                                           which, seed):
+    """The headline property, over both cache layouts: a full chaos mix
+    (step faults + NaN + page retirement + stragglers + cancels) may
+    kill requests, but every request that finishes cleanly emits
+    exactly the fault-free tokens, and the allocator partition closes
+    (serve() runs alloc.check() after every chaos run)."""
+    eng = engine if which == "contiguous" else paged_engine
+    reqs = _reqs(eng.cfg, n=4)
+    oracle = eng.serve(reqs)
+    faults = chaos_injector(seed, rate=0.15, paged=eng.paged)
+    res = eng.serve(reqs, faults=faults)
+    assert all(r.finish_reason in
+               ("length", "eos", "error", "timeout", "cancelled", "shed")
+               for r in res)
+    survivors = [i for i, r in enumerate(res)
+                 if r.finish_reason in ("eos", "length")]
+    for i in survivors:
+        assert res[i].tokens == oracle[i].tokens, f"survivor {i} diverged"
+    assert sum(eng.last_stats["faults"]["injected"].values()) > 0
+
+
+def test_chaos_paged_exercises_page_path(paged_engine):
+    """At a page-heavy rate the retirement path actually fires and the
+    pool still closes clean."""
+    reqs = _reqs(paged_engine.cfg, n=4, max_new=10)
+    oracle = paged_engine.serve(reqs)
+    faults = ServeFaultInjector(seed=5, page_rate=0.6, page_frac=0.5,
+                                page_hold_steps=2)
+    res = paged_engine.serve(reqs, faults=faults)
+    assert faults.counts["page_quarantines"] >= 1
+    survivors = [i for i, r in enumerate(res)
+                 if r.finish_reason in ("eos", "length")]
+    assert survivors, "page churn alone should not kill everything"
+    for i in survivors:
+        assert res[i].tokens == oracle[i].tokens

@@ -16,7 +16,8 @@ import pytest
 from repro.configs import get_config, reduce_config
 from repro.models import init_params
 from repro.serve.engine import GenRequest, ServeEngine
-from repro.serve.frontend import AsyncServeFrontend, fetch_json, sse_generate
+from repro.serve.frontend import (AsyncServeFrontend, fetch_json, post_json,
+                                  sse_generate)
 
 
 def _setup():
@@ -141,6 +142,216 @@ def test_frontend_open_loop_poisson_identity():
     frames = asyncio.run(drive())
     toks = [[f["token"] for f in fs if "token" in f] for fs in frames]
     assert toks == [r.tokens for r in ref]
+
+
+# ------------------------------------------------------ robustness rim
+
+def test_frontend_malformed_requests_400():
+    """Every malformed body gets a 400 + JSON error BEFORE touching the
+    shared driver thread — and the server keeps serving good requests
+    afterwards (the original bug: a bad body crashed the driver)."""
+    cfg, params = _setup()
+    eng = ServeEngine(params, cfg, max_len=64, n_slots=2, prefill_chunk=8)
+    ref = eng.serve([_reqs()[0]], seed=0)
+    bad_bodies = [
+        b"{not json",                                  # not JSON
+        b"[1, 2, 3]",                                  # not an object
+        {"max_new": 4},                                # missing prompt
+        {"prompt": []},                                # empty prompt
+        {"prompt": "hello"},                           # wrong type
+        {"prompt": [1, "x"]},                          # non-int token
+        {"prompt": [1, cfg.vocab_size + 5]},           # out of vocab
+        {"prompt": list(range(1, 70))},                # >= max_len
+        {"prompt": [1, 2], "max_new": 0},              # bad max_new
+        {"prompt": [1, 2], "temperature": -1},         # bad temperature
+        {"prompt": [1, 2], "timeout_s": 0},            # bad timeout
+        {"prompt": [1, 2], "max_new": "many"},         # non-numeric
+        {"prompt": [1, 2], "frobnicate": 1},           # unknown field
+    ]
+
+    async def drive():
+        async with AsyncServeFrontend(eng, seed=0) as fe:
+            statuses = []
+            for body in bad_bodies:
+                status, payload = await post_json(
+                    "127.0.0.1", fe.port, "/v1/generate", body)
+                statuses.append(status)
+                assert "error" in payload, payload
+            # the driver thread survived all of that: a good request
+            # still streams the exact engine tokens
+            frames = await sse_generate(
+                "127.0.0.1", fe.port,
+                {"prompt": _reqs()[0].prompt, "max_new": _reqs()[0].max_new})
+            metrics = await fetch_json("127.0.0.1", fe.port, "/v1/metrics")
+        return statuses, frames, metrics
+
+    statuses, frames, metrics = asyncio.run(drive())
+    assert statuses == [400] * len(bad_bodies)
+    assert [f["token"] for f in frames if "token" in f] == ref[0].tokens
+    fr = metrics["frontend"]
+    assert fr["rejected_400"] == len(bad_bodies)
+    assert fr["requests"] == 1 and fr["driver_errors"] == 0
+
+
+def test_publish_slow_client_policy():
+    """Driver-side backpressure valve, unit-tested (loopback OS socket
+    buffers absorb small streams, so the real-socket path can't fill an
+    SSE queue deterministically): a stream whose queue is at
+    `sse_queue_max` is disconnected, its request cancelled ON the driver
+    thread, its transport aborted — and the later ConnectionError in its
+    handler must NOT double-count as a plain client disconnect."""
+    class FakeSession:
+        def __init__(self):
+            self.cancelled = []
+
+        def cancel(self, uid):
+            self.cancelled.append(uid)
+            return True
+
+    class FakeLoop:
+        def __init__(self):
+            self.calls = []
+
+        def call_soon_threadsafe(self, fn, *a):
+            self.calls.append((fn, a))
+            fn(*a)
+
+    class FakeTransport:
+        def __init__(self):
+            self.aborted = False
+
+        def abort(self):
+            self.aborted = True
+
+    from repro.serve.scheduler import TokenEvent
+    fe = AsyncServeFrontend(object(), sse_queue_max=2)
+    fe.session = FakeSession()
+    fe._loop = FakeLoop()
+    slow_q, fast_q = asyncio.Queue(), asyncio.Queue()
+    for _ in range(2):                     # slow client: at the bound
+        slow_q.put_nowait(object())
+    fe._streams = {5: slow_q, 6: fast_q}
+    tr = FakeTransport()
+    fe._transports[5] = tr
+    fe._publish([TokenEvent(5, 11, 0.1, 3), TokenEvent(6, 12, 0.1, 3)])
+    assert fe.counters["slow_client_disconnects"] == 1
+    assert 5 not in fe._streams and 5 in fe._dropped
+    assert fe.session.cancelled == [5]     # freed on the driver thread
+    assert tr.aborted
+    assert slow_q.qsize() == 2             # the overflow event was dropped
+    assert fast_q.qsize() == 1             # healthy stream still fed
+    fe._client_gone(5)                     # handler sees ConnectionError
+    assert fe.counters["client_disconnects"] == 0   # no double count
+    fe._client_gone(6)
+    assert fe.counters["client_disconnects"] == 1
+
+
+def test_frontend_client_disconnect_cancels_request():
+    """A client that vanishes mid-stream (socket close -> EOF watcher)
+    gets its request cancelled: slot freed, finish_reason='cancelled',
+    partial tokens kept — and the engine keeps serving others."""
+    import json as _json
+    cfg, params = _setup()
+    eng = ServeEngine(params, cfg, max_len=64, n_slots=2, prefill_chunk=8)
+
+    async def drive():
+        async with AsyncServeFrontend(eng, seed=0) as fe:
+            reader, writer = await asyncio.open_connection(
+                "127.0.0.1", fe.port)
+            body = _json.dumps({"prompt": [1, 2, 3], "max_new": 40}
+                               ).encode()
+            writer.write(
+                b"POST /v1/generate HTTP/1.1\r\nHost: x\r\n"
+                b"Content-Type: application/json\r\n"
+                + f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+            await writer.drain()
+            await reader.readuntil(b"\r\n\r\n")
+            await reader.readline()            # at least one token frame
+            writer.close()                     # client walks away
+            await writer.wait_closed()
+            for _ in range(300):               # wait for the cancel
+                m = await fetch_json("127.0.0.1", fe.port, "/v1/metrics")
+                if m["engine"]["faults"]["cancels"] >= 1:
+                    break
+                await asyncio.sleep(0.02)
+            else:
+                raise AssertionError("disconnect never cancelled request")
+            # engine unharmed: a fresh stream completes normally
+            frames = await sse_generate("127.0.0.1", fe.port,
+                                        {"prompt": [7, 8, 9], "max_new": 4})
+            m = await fetch_json("127.0.0.1", fe.port, "/v1/metrics")
+        return frames, m
+
+    frames, metrics = asyncio.run(drive())
+    assert frames[-1]["done"] and frames[-1]["finish_reason"] == "length"
+    assert metrics["frontend"]["client_disconnects"] == 1
+    assert metrics["engine"]["faults"]["cancels"] == 1
+
+
+def test_frontend_graceful_drain_and_503():
+    """stop() drains: the in-flight stream finishes cleanly while NEW
+    posts are refused with 503 — then the server closes."""
+    cfg, params = _setup()
+    eng = ServeEngine(params, cfg, max_len=64, n_slots=2, prefill_chunk=8)
+
+    async def drive():
+        fe = AsyncServeFrontend(eng, seed=0)
+        await fe.start()
+        stream = asyncio.create_task(sse_generate(
+            "127.0.0.1", fe.port, {"prompt": [1, 2, 3], "max_new": 32}))
+        await asyncio.sleep(0.3)               # let it start decoding
+        stop = asyncio.create_task(fe.stop())
+        await asyncio.sleep(0.05)
+        if not stop.done():                    # still draining: 503
+            status, payload = await post_json(
+                "127.0.0.1", fe.port, "/v1/generate",
+                {"prompt": [4, 5], "max_new": 4})
+            assert status == 503 and payload["error"] == "draining"
+            assert fe.counters["rejected_503"] == 1
+        frames = await stream
+        await stop
+        return frames
+
+    frames = asyncio.run(drive())
+    # drained, not killed: the full stream arrived with a clean finish
+    assert [f for f in frames if "token" in f]
+    assert frames[-1]["done"] and frames[-1]["finish_reason"] == "length"
+
+
+def test_frontend_queue_cap_503_overload():
+    """Past `queue_cap` arrived-queue depth a new POST gets a fast 503
+    (the engine-side shed valve backs this up for anything that races
+    past the check)."""
+    cfg, params = _setup()
+    eng = ServeEngine(params, cfg, max_len=64, n_slots=1, prefill_chunk=8)
+
+    async def drive():
+        async with AsyncServeFrontend(eng, seed=0, queue_cap=1) as fe:
+            # A occupies the single slot; B queues (depth 1 == cap)
+            a = asyncio.create_task(sse_generate(
+                "127.0.0.1", fe.port, {"prompt": [1, 2, 3],
+                                       "max_new": 48}))
+            await asyncio.sleep(0.3)
+            b = asyncio.create_task(sse_generate(
+                "127.0.0.1", fe.port, {"prompt": [4, 5, 6],
+                                       "max_new": 4}))
+            for _ in range(300):    # wait until B is queued behind A
+                m = await fetch_json("127.0.0.1", fe.port, "/v1/metrics")
+                if m["frontend"]["open_streams"] >= 2:
+                    break
+                await asyncio.sleep(0.01)
+            else:
+                raise AssertionError("B never reached the queue")
+            status, payload = await post_json(   # C: refused at the door
+                "127.0.0.1", fe.port, "/v1/generate",
+                {"prompt": [7, 8], "max_new": 4})
+            assert status == 503 and payload["error"] == "overloaded"
+            fa, fb = await a, await b
+        return fa, fb
+
+    fa, fb = asyncio.run(drive())
+    assert fa[-1]["done"] and fa[-1]["finish_reason"] == "length"
+    assert fb[-1]["done"]                      # B eventually served
 
 
 def test_loadgen_poisson_reproducible():
