@@ -26,6 +26,14 @@ under a deterministic injected fault schedule — and asserts the chaos
 run's surviving requests stream bitwise-identical greedy tokens while
 the watchdog/quarantine/requeue paths demonstrably fired.
 
+`--shared-prefix` swaps the iid prompts for a multi-tenant shape:
+`--prefix-count` fixed system prompts of `--prefix-len` tokens,
+Zipf-weighted (`--zipf-a`) so a few prompts dominate, each followed by
+a fresh per-user tail. Seeded -> the same command line replays the
+same prompt mix. Combine with `--prefix-cache` (implies a paged
+`--kv-format`) to measure shared-prompt KV reuse under open-loop load,
+or with `--chaos` to hammer the refcounted allocator invariants.
+
 Usage:
   PYTHONPATH=src python benchmarks/loadgen.py --rate 8 --requests 24 \
       --slo-ttft 2.0 --slo-itl 0.5 [--speculate 3 --draft-bits 3] \
@@ -35,6 +43,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 from pathlib import Path
@@ -46,7 +55,8 @@ sys.path.insert(0, str(Path(__file__).parent))          # for run.py helpers
 from run import _merge_bench_json, _trained_small_lm    # noqa: E402
 
 from repro.serve import (AdaptiveDraftPolicy, GenRequest, SLO, ServeEngine,
-                         goodput_report, latency_summary)
+                         goodput_report, latency_summary,
+                         prefix_cache_report)
 
 
 def poisson_arrivals(rate: float, n: int, seed: int = 0) -> List[float]:
@@ -80,6 +90,33 @@ def build_requests(cfg, n: int, prompt_lens: List[int], max_new: int,
         prompt = [int(t) for t in rng.integers(1, cfg.vocab_size,
                                                size=plen)]
         reqs.append(GenRequest(prompt=prompt, max_new=max_new,
+                               deadline_s=deadline_s))
+    return reqs
+
+
+def build_shared_prefix_requests(cfg, n: int, n_prefixes: int,
+                                 prefix_len: int, tail_lens: List[int],
+                                 max_new: int, seed: int,
+                                 zipf_a: float = 1.5,
+                                 deadline_s: Optional[float] = None
+                                 ) -> List[GenRequest]:
+    """Multi-tenant prompt shape: `n_prefixes` fixed system prompts,
+    each request Zipf-samples one (rank-k prompt drawn with weight
+    1/k^a — a few prompts dominate, as in production) and appends a
+    fresh per-user tail. Fully seeded -> the same (seed, knobs) tuple
+    replays the identical prompt mix."""
+    rng = np.random.default_rng(seed + 1)
+    prefixes = [[int(t) for t in rng.integers(1, cfg.vocab_size,
+                                              size=prefix_len)]
+                for _ in range(n_prefixes)]
+    w = 1.0 / np.arange(1, n_prefixes + 1, dtype=np.float64) ** zipf_a
+    w /= w.sum()
+    reqs = []
+    for i in range(n):
+        k = int(rng.choice(n_prefixes, p=w))
+        tail = [int(t) for t in rng.integers(
+            1, cfg.vocab_size, size=tail_lens[i % len(tail_lens)])]
+        reqs.append(GenRequest(prompt=prefixes[k] + tail, max_new=max_new,
                                deadline_s=deadline_s))
     return reqs
 
@@ -120,8 +157,18 @@ def run_loadgen(rate: float = 8.0, n_requests: int = 24, seed: int = 0,
                 http: bool = False, track=True,
                 chaos_seed: Optional[int] = None, chaos_rate: float = 0.1,
                 queue_cap: Optional[int] = None,
+                shared_prefix: bool = False, n_prefixes: int = 3,
+                prefix_len: int = 48, zipf_a: float = 1.5,
+                kv_format: Optional[str] = None, page_size: int = 16,
+                kv_pages: int = 0, prefix_cache: bool = False,
                 out_path: Optional[str] = None) -> dict:
     cfg, params, data = _trained_small_lm()
+    if prefix_cache and not kv_format:
+        kv_format = "paged"          # the cache shares pages of the pool
+    if kv_format:
+        cfg = dataclasses.replace(cfg, kv_format=kv_format,
+                                  kv_page_size=page_size,
+                                  kv_pages=kv_pages)
     if draft_bits:
         # low-bit-prefix drafts need the nested bitstream weight layout:
         # quantize the trained LM to 4-bit lut4_nested (RTN is enough for
@@ -142,9 +189,15 @@ def run_loadgen(rate: float = 8.0, n_requests: int = 24, seed: int = 0,
         if adaptive else None
     engine = ServeEngine(params, cfg, max_len=128, n_slots=n_slots,
                          prefill_chunk=prefill_chunk, spec_k=spec_k,
-                         draft_bits=draft_bits, adaptive=policy)
-    reqs = build_requests(cfg, n_requests, list(prompt_lens), max_new,
-                          seed, deadline_s)
+                         draft_bits=draft_bits, adaptive=policy,
+                         prefix_cache=prefix_cache)
+    if shared_prefix:
+        reqs = build_shared_prefix_requests(
+            cfg, n_requests, n_prefixes, prefix_len, list(prompt_lens),
+            max_new, seed, zipf_a=zipf_a, deadline_s=deadline_s)
+    else:
+        reqs = build_requests(cfg, n_requests, list(prompt_lens), max_new,
+                              seed, deadline_s)
     arrivals = trace_arrivals(trace) if trace else \
         poisson_arrivals(rate, n_requests, seed)
     if len(arrivals) < n_requests:
@@ -183,7 +236,11 @@ def run_loadgen(rate: float = 8.0, n_requests: int = 24, seed: int = 0,
         "workload": {"prompt_lens": list(prompt_lens), "max_new": max_new,
                      "n_slots": n_slots, "prefill_chunk": prefill_chunk,
                      "spec_k": spec_k, "draft_bits": draft_bits,
-                     "adaptive": adaptive},
+                     "adaptive": adaptive, "kv_format": kv_format,
+                     "shared_prefix": ({"n_prefixes": n_prefixes,
+                                        "prefix_len": prefix_len,
+                                        "zipf_a": zipf_a}
+                                       if shared_prefix else None)},
         "latency": latency_summary(results),
         "goodput": goodput_report(results, slo, wall_s=stats["wall_s"]),
         "engine": {k: stats[k] for k in
@@ -195,6 +252,9 @@ def run_loadgen(rate: float = 8.0, n_requests: int = 24, seed: int = 0,
         report["engine"].update(
             adaptive_rounds=stats["adaptive_rounds"],
             adaptive_flips=stats["adaptive_flips"])
+    pc = prefix_cache_report(stats)
+    if pc is not None:
+        report["prefix_cache"] = pc
     if track:
         report["hw"] = stats["hw"]
     if http:
@@ -221,7 +281,8 @@ def run_loadgen(rate: float = 8.0, n_requests: int = 24, seed: int = 0,
         }
     path = Path(out_path or Path(__file__).parent / "BENCH_goodput.json")
     key = ("chaos" if chaos_seed is not None else "open_loop") \
-        + ("_spec_adaptive" if adaptive else "_spec" if spec_k else "")
+        + ("_spec_adaptive" if adaptive else "_spec" if spec_k else "") \
+        + ("_shared_prefix" if shared_prefix else "")
     _merge_bench_json(path, {key: report})
     summary = {"ttft_p99_s": report["latency"]["ttft_s"]["p99"],
                "itl_p99_s": report["latency"]["itl_s"]["p99"],
@@ -229,6 +290,11 @@ def run_loadgen(rate: float = 8.0, n_requests: int = 24, seed: int = 0,
                "goodput_tok_per_s": report["goodput"]["goodput_tok_per_s"],
                "hbm_util_pct_p50":
                report["hw"]["hbm_util_pct"]["p50"] if track else None}
+    if pc is not None:
+        summary.update(prefix_hits=pc["prefix_hits"],
+                       prefix_hit_rate=round(pc["hit_rate"], 3),
+                       pages_shared=pc["pages_shared"],
+                       cow_copies=pc["cow_copies"])
     if chaos_seed is not None:
         f = report["faults"]
         summary.update(survivors=f"{f['survivors']}/{n_requests}",
@@ -279,6 +345,24 @@ def main(argv=None) -> None:
                     help="per-step fault probability for --chaos")
     ap.add_argument("--queue-cap", type=int, default=0,
                     help="arrived-queue depth before shedding; 0 = off")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="Zipf-sampled shared system prompts + per-user "
+                         "tails (tail lengths from --prompt-lens)")
+    ap.add_argument("--prefix-count", type=int, default=3,
+                    help="number of distinct system prompts")
+    ap.add_argument("--prefix-len", type=int, default=48,
+                    help="system-prompt length in tokens")
+    ap.add_argument("--zipf-a", type=float, default=1.5,
+                    help="Zipf exponent for prompt popularity")
+    ap.add_argument("--kv-format", type=str, default=None,
+                    choices=("full", "int8", "paged", "paged_int8"))
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size when --kv-format is paged")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="page-pool size; 0 = dense equivalent")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="page-granular prefix caching (implies a "
+                         "paged --kv-format)")
     ap.add_argument("--out", type=str, default=None)
     a = ap.parse_args(argv)
     run_loadgen(rate=a.rate, n_requests=a.requests, seed=a.seed,
@@ -289,7 +373,12 @@ def main(argv=None) -> None:
                 draft_bits=a.draft_bits, adaptive=a.adaptive,
                 http=a.http, track=not a.no_track,
                 chaos_seed=a.chaos, chaos_rate=a.chaos_rate,
-                queue_cap=a.queue_cap or None, out_path=a.out)
+                queue_cap=a.queue_cap or None,
+                shared_prefix=a.shared_prefix, n_prefixes=a.prefix_count,
+                prefix_len=a.prefix_len, zipf_a=a.zipf_a,
+                kv_format=a.kv_format, page_size=a.page_size,
+                kv_pages=a.kv_pages, prefix_cache=a.prefix_cache,
+                out_path=a.out)
 
 
 if __name__ == "__main__":

@@ -271,6 +271,11 @@ class CacheFormat:
         """(B, W) bool: which entries of the `read` view may be attended."""
         raise NotImplementedError(self.name)
 
+    def copy_page(self, cache: CacheState, src, dst) -> CacheState:
+        """Device-side physical page copy (copy-on-write for shared
+        prefix pages); only paged layouts have pages to copy."""
+        raise NotImplementedError(self.name)
+
     # -------------------------------------------------------- prefill paths
     def from_prefill(self, k, v, width: int, cfg, dtype) -> CacheState:
         """Fresh prompt K/V (B, S, K, hd) -> this layout, positioned after
@@ -421,6 +426,31 @@ def restore_cells(cache_tree, snap, slots: jnp.ndarray, pos: jnp.ndarray,
     tail = [_state_restore(st, rows, slots, pos, keep, pages, False)
             for st, rows in zip(cache_tree["tail"], snap["tail"])]
     return {"units": units, "tail": tail}
+
+
+def copy_page_cells(cache_tree, src, dst):
+    """Physical page copy pool[dst] <- pool[src] across a whole stack
+    cache tree ({"units": [...], "tail": [...]}) — every paged attention
+    layer copies the page in each of its pools (unit-stacked entries copy
+    it in every unit's pool). Non-paged and recurrent-state entries pass
+    through untouched: copy-on-write is only defined for the paged pools.
+    Note shared-prefix ADMISSION needs no data movement at all — mapping
+    a cached page into a slot's table row IS the insert; this op runs
+    only when a slot must write into a page other holders still share."""
+    def one(st, stacked):
+        if st is None:
+            return st
+        f = get_cache_format(st.fmt)
+        if not (f.kv and f.paged):
+            return st
+        if stacked:
+            return CacheState(st.fmt, jax.vmap(
+                lambda data: f.copy_page(
+                    CacheState(st.fmt, data), src, dst).data)(st.data))
+        return f.copy_page(st, src, dst)
+
+    return {"units": [one(st, True) for st in cache_tree["units"]],
+            "tail": [one(st, False) for st in cache_tree["tail"]]}
 
 
 def kv_cache_bytes(cache_tree) -> int:
@@ -713,6 +743,18 @@ class _PagedBase(CacheFormat):
         return CacheState(big.fmt, {
             key + "_pages": put(big.data[key + "_pages"], small.data[key])
             for key in small.data})
+
+    def copy_page(self, cache, src, dst):
+        """Copy physical page `src`'s rows into page `dst` across every
+        pool leaf — codes AND scale pages alike, so both 'paged' and
+        'paged_int8' copy bit-exactly. This is the device half of
+        copy-on-write: the allocator remaps a slot's shared logical page
+        to `dst`, and this op makes `dst` a byte-identical private copy
+        before the step that writes into it runs. `src`/`dst` are int32
+        scalars, so the op jits once per cache shape."""
+        return CacheState(self.name, {
+            key: pool.at[dst].set(pool[src])
+            for key, pool in cache.data.items()})
 
     def read(self, cache, dtype, pages=None):
         assert pages is not None, "paged cache read needs a page table"

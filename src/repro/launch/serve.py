@@ -73,6 +73,12 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-pages", type=int, default=0,
                     help="KV page-pool size per layer (paged formats); "
                          "0 = dense equivalent slots*ceil(max_len/page)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="page-granular prefix caching on the paged pool: "
+                         "requests sharing a prompt prefix map the same "
+                         "physical pages (refcounted, copy-on-write) and "
+                         "admission skips straight past the cached run; "
+                         "needs a paged --kv-format")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=128,
@@ -231,7 +237,8 @@ def main(argv=None) -> int:
                          token_budget=args.token_budget,
                          spec_k=args.speculate,
                          draft_bits=args.draft_bits,
-                         adaptive=adaptive)
+                         adaptive=adaptive,
+                         prefix_cache=args.prefix_cache)
     if args.speculate and engine.spec_k != args.speculate:
         reason = engine.spec_fallback or "cache-width cap"
         print(f"speculation capped: spec_k {args.speculate} -> "
@@ -325,6 +332,18 @@ def main(argv=None) -> int:
     if adaptive is not None:
         print(f"adaptive draft: {st['adaptive_rounds']} low-bit rounds, "
               f"{st['adaptive_flips']} policy flips")
+    from repro.serve.metrics import prefix_cache_report
+    pc = prefix_cache_report(st)
+    if pc is not None:
+        print(f"prefix cache: {pc['prefix_hits']} hits / "
+              f"{pc['prefix_misses']} misses "
+              f"({pc['hit_rate']:.0%} hit rate), "
+              f"{pc['prefix_hit_tokens']} prompt tokens from cache "
+              f"({pc['prefill_tokens_from_cache']:.0%} of prefill), "
+              f"{pc['pages_shared']} pages shared, "
+              f"{pc['cow_copies']} COW copies, "
+              f"{pc['cache_evictions']} cache evictions, "
+              f"{pc['cached_pages']} pages held")
     flt = st["faults"]
     if faults is not None or any(
             v for k, v in flt.items() if isinstance(v, int)):

@@ -12,7 +12,7 @@ from .faults import ServeFaultInjector, StepFault, chaos_injector
 from .frontend import AsyncServeFrontend
 from .metrics import (SLO, AdaptiveDraftPolicy, DeviceSpec, DEVICE_DB,
                       StepTracker, goodput_report, latency_summary,
-                      percentile, resolve_device)
+                      percentile, prefix_cache_report, resolve_device)
 from .sampler import sample_token, sample_tokens
-from .scheduler import (GenRequest, GenResult, PageAllocator, SlotScheduler,
-                        TokenEvent)
+from .scheduler import (GenRequest, GenResult, PageAllocator, PrefixCache,
+                        PrefixHasher, SlotScheduler, TokenEvent)

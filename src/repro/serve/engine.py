@@ -47,6 +47,7 @@ oracle for the chunked path.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Dict, List, Optional
 
@@ -55,16 +56,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.cache_formats import (contiguous_cfg, get_cache_format,
-                                      kv_cache_bytes, kv_format_of,
-                                      pages_for, restore_cells,
-                                      snapshot_cells)
+from repro.core.cache_formats import (contiguous_cfg, copy_page_cells,
+                                      get_cache_format, kv_cache_bytes,
+                                      kv_format_of, pages_for,
+                                      restore_cells, snapshot_cells)
 from repro.models import (TokenBatch, decode_step, init_serve_cache,
                           mixed_step, prefill)
 from repro.sharding.context import ShardCtx, LOCAL
 from .sampler import request_key, sample_tokens
-from .scheduler import (GenRequest, GenResult, PageAllocator, SlotScheduler,
-                        TokenEvent)
+from .scheduler import (GenRequest, GenResult, PageAllocator, PrefixCache,
+                        PrefixHasher, SlotScheduler, TokenEvent)
 
 __all__ = ["GenRequest", "GenResult", "ServeEngine", "ServeSession",
            "TokenEvent"]
@@ -74,7 +75,8 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, ctx: ShardCtx = LOCAL,
                  max_len: int = 512, n_slots: int = 4,
                  prefill_chunk: int = 32, token_budget: int = 0,
-                 spec_k: int = 0, draft_bits: int = 0, adaptive=None):
+                 spec_k: int = 0, draft_bits: int = 0, adaptive=None,
+                 prefix_cache: bool = False):
         if cfg.is_encoder_decoder:
             raise NotImplementedError("serving is decoder-only")
         self.params = params
@@ -105,6 +107,31 @@ class ServeEngine:
             # pin the pool geometry the cache init reads off the config
             cfg = dataclasses.replace(cfg, kv_pages=self.n_pages)
         self.cfg = cfg
+        # --- page-granular prefix caching (shared-prompt KV reuse) ---
+        # requests sharing a prompt prefix map the same physical pages;
+        # admission skips straight past the cached run. Needs the paged
+        # pool (page-table surgery IS the reuse mechanism) and is gated
+        # off for recurrent layers: rwkv/rglru state folds every token,
+        # so prefill cannot skip chunks (their reset fires at fed==0 and
+        # there is no per-position state to map in).
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache:
+            if not self.paged:
+                raise ValueError(
+                    "prefix caching shares pages of the paged KV pool; "
+                    "serve with kv_format 'paged' or 'paged_int8'")
+            bad_kinds = set(cfg.layer_kinds) - {"attn", "local"}
+            if bad_kinds:
+                raise ValueError(
+                    f"prefix caching skips prompt chunks, which recurrent "
+                    f"layers {sorted(bad_kinds)} cannot — their state "
+                    f"folds every token in order")
+            # one fixed-shape jitted device copy serves every COW: src/dst
+            # are traced scalars, the donated cache rebinds in place
+            self._copy_page = jax.jit(
+                lambda c, s, d: copy_page_cells(c, s, d),
+                donate_argnums=(0,))
+            self.cache_fingerprint = self._fingerprint(params, cfg, ctx)
         # --- self-speculative decoding (nested-bitstream draft weights) ---
         # k greedy draft tokens per slot per round, drafted at draft_bits
         # prefix width (0 = full-width "exact" drafts); the verify pass
@@ -192,6 +219,28 @@ class ServeEngine:
         self._prefill_jits: Dict[int, object] = {}   # legacy admission only
         self.last_stats: Dict[str, float] = {}
         self.last_session: Optional["ServeSession"] = None
+
+    # ------------------------------------------------- prefix-cache keying
+
+    @staticmethod
+    def _fingerprint(params, cfg, ctx) -> bytes:
+        """Seed for the prefix hash chain: model config + precision
+        policy context + every weight leaf's path/shape/dtype. Two
+        engines whose KV bytes could differ for the same token prefix —
+        different weights, quantization, cache format, page size — get
+        different chains, so their cache entries can never alias. Leaf
+        VALUES are not hashed (device pulls would stall construction);
+        the cache is per-session anyway, so the fingerprint only needs to
+        separate configurations, not checkpoint revisions."""
+        h = hashlib.blake2b(digest_size=16)
+        h.update(repr(cfg).encode())
+        h.update(repr(ctx).encode())
+        leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+        for path, leaf in leaves:
+            h.update(jax.tree_util.keystr(path).encode())
+            h.update(f"{getattr(leaf, 'shape', ())}"
+                     f"{getattr(leaf, 'dtype', '')}".encode())
+        return h.digest()
 
     # ---------------------------------------------- speculative decoding
 
@@ -593,10 +642,15 @@ class ServeSession:
         if engine.paged:
             alloc = PageAllocator(engine.n_pages, engine.page_size, ns,
                                   engine.max_pages_per_slot)
+        prefix = None
+        if engine.prefix_cache:
+            prefix = PrefixCache(alloc, PrefixHasher(
+                engine.page_size, engine.cache_fingerprint))
         self.sched = SlotScheduler(ns, engine.max_len, alloc=alloc,
                                    window=engine.release_window,
                                    queue_cap=queue_cap,
-                                   poison_threshold=poison_threshold)
+                                   poison_threshold=poison_threshold,
+                                   prefix_cache=prefix)
         # fault watchdog state (see step()): a failed round retries with
         # exponential backoff; past the budget every active slot is
         # quarantined (requeue-or-abort) so the session cannot livelock
@@ -644,6 +698,8 @@ class ServeSession:
         self.spec_emitted = 0
         self.adaptive_rounds = 0
         self.peak_pages = 0
+        self.cow_applied = 0            # device page copies executed
+        self.prefix_invalidations = 0   # cache clears after recovery
 
     # ------------------------------------------------------------- intake
 
@@ -792,6 +848,29 @@ class ServeSession:
         for i, st in enumerate(self.sched.slots):
             if st is not None:
                 self.sched.quarantine(i, self.now())
+        if self.sched.prefix_cache is not None:
+            # the rebuilt pool is blank: every cached page's bytes are
+            # gone, so the whole prefix index is invalid — and so are any
+            # registered-but-unapplied COW copies
+            self.sched.pending_copies = []
+            if self.sched.prefix_cache.clear():
+                self.prefix_invalidations += 1
+
+    def _apply_cow(self) -> None:
+        """Execute the device half of every copy-on-write the scheduler
+        registered since the last round: page dst becomes a byte-exact
+        private copy of shared page src BEFORE the jitted step whose
+        writes land in it. Device page contents are immutable between
+        steps, so the copies commute with host-side remapping/eviction
+        that happened after registration (stale pairs were dropped by
+        take_pending_copies)."""
+        sched = self.sched
+        if sched.prefix_cache is None:
+            return
+        for src, dst in sched.take_pending_copies():
+            self.cache = self.engine._copy_page(
+                self.cache, jnp.int32(src), jnp.int32(dst))
+            self.cow_applied += 1
 
     def _round(self) -> None:
         """The jitted part of one step: a speculative round or a mixed
@@ -812,6 +891,7 @@ class ServeSession:
             # pure-greedy-decode step: run a speculative round instead
             # (k draft passes + 1 verify emitting up to k+1 tokens/slot)
             sched.grow_pages(self.now(), lookahead=eng.spec_k + 1)
+            self._apply_cow()
             if sched.spec_ready():      # eviction can re-queue a slot
                 t0 = time.perf_counter()
                 if sched.alloc is not None:
@@ -839,6 +919,9 @@ class ServeSession:
 
         sched.grow_pages(self.now())    # map next-token pages, evict if dry
         lanes = sched.schedule_step(self.budget, self.chunk_cap, self.now())
+        # COW copies must land even on a lane-less pass: the remap already
+        # happened, so dst needs src's bytes before anything reads it
+        self._apply_cow()
         if lanes is None:               # transiently page-starved
             return
         tb = TokenBatch(
@@ -949,6 +1032,20 @@ class ServeSession:
                 n_pages=eng.n_pages, page_size=eng.page_size,
                 peak_pages_in_use=self.peak_pages,
                 pages_released_by_window=sched.pages_released_by_window)
+        pc = sched.prefix_cache
+        if pc is not None:
+            stats["prefix_cache"] = {
+                "prefix_hits": pc.hits,
+                "prefix_misses": pc.misses,
+                "prefix_hit_tokens": pc.hit_tokens,
+                "pages_shared": pc.pages_shared,
+                "cow_copies": pc.cow_copies,
+                "cow_applied": self.cow_applied,
+                "cache_deposits": pc.deposits,
+                "cache_evictions": pc.evictions,
+                "cached_pages": pc.pages,
+                "invalidations": self.prefix_invalidations,
+            }
         if self.tracker is not None:
             stats["hw"] = self.tracker.summary()
         return stats

@@ -55,7 +55,8 @@ Endpoints
   GET  /v1/metrics    -> JSON {engine: <session stats incl. hw tracker
                       and fault counters>, latency: TTFT/ITL/E2E
                       percentiles, goodput: SLO attainment, frontend:
-                      request/disconnect/reject counters}.
+                      request/disconnect/reject counters, prefix_cache:
+                      hit/share/COW figures when prefix caching is on}.
   GET  /healthz       -> {"ok": true}
 """
 from __future__ import annotations
@@ -66,7 +67,8 @@ import threading
 from typing import Dict, List, Optional, Tuple
 
 from .engine import ServeEngine, ServeSession
-from .metrics import SLO, goodput_report, latency_summary
+from .metrics import (SLO, goodput_report, latency_summary,
+                      prefix_cache_report)
 from .scheduler import GenRequest, TokenEvent
 
 __all__ = ["AsyncServeFrontend", "sse_generate", "fetch_json", "post_json"]
@@ -428,8 +430,9 @@ class AsyncServeFrontend:
         counter block always), plus the frontend's own counters."""
         sess = self.session
         results = list(sess.results.values())
-        return {
-            "engine": sess.stats(),
+        engine = sess.stats()
+        out = {
+            "engine": engine,
             "latency": latency_summary(results),
             "goodput": goodput_report(results, self.slo,
                                       wall_s=sess.now()),
@@ -439,6 +442,10 @@ class AsyncServeFrontend:
                          "draining": self._draining,
                          "open_streams": len(self._streams)},
         }
+        pc = prefix_cache_report(engine)
+        if pc is not None:              # derived hit/share/COW figures
+            out["prefix_cache"] = pc
+        return out
 
 
 # ------------------------------------------------------------ test client

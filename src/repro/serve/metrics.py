@@ -33,8 +33,9 @@ import math
 from typing import Dict, Iterable, List, Optional, Sequence, Union
 
 __all__ = ["percentile", "latency_summary", "SLO", "meets_slo",
-           "goodput_report", "DeviceSpec", "DEVICE_DB", "detect_device",
-           "resolve_device", "StepTracker", "AdaptiveDraftPolicy"]
+           "goodput_report", "prefix_cache_report", "DeviceSpec",
+           "DEVICE_DB", "detect_device", "resolve_device", "StepTracker",
+           "AdaptiveDraftPolicy"]
 
 
 # ------------------------------------------------------------- percentiles
@@ -119,6 +120,22 @@ def goodput_report(results: Iterable, slo: SLO,
             "tokens": tok, "good_tokens": good_tok,
             "throughput_tok_per_s": tok / w,
             "goodput_tok_per_s": good_tok / w}
+
+
+def prefix_cache_report(engine_stats: Dict) -> Optional[Dict[str, float]]:
+    """Derived prefix-cache figures from an engine stats() block: the raw
+    counters plus hit rate over admissions and the token fraction whose
+    prefill was served from cache instead of recomputed. None when the
+    session ran without a prefix cache."""
+    pc = engine_stats.get("prefix_cache")
+    if pc is None:
+        return None
+    adm = pc["prefix_hits"] + pc["prefix_misses"]
+    fed = pc["prefix_hit_tokens"] + engine_stats.get("chunk_tokens", 0)
+    return {**pc,
+            "hit_rate": pc["prefix_hits"] / adm if adm else 0.0,
+            "prefill_tokens_from_cache":
+            pc["prefix_hit_tokens"] / fed if fed else 0.0}
 
 
 # -------------------------------------------------------------- device DB

@@ -38,8 +38,9 @@ one-token-per-slot step).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -123,9 +124,20 @@ class PageAllocator:
     maps them to -1, so reads route to the scratch page and the window
     mask hides them).
 
-    Invariants (property-tested): the free list and the per-slot owned
-    (non-None) entries are always a disjoint partition of range(n_pages) —
-    no page is leaked or double-owned across admit/grow/release churn.
+    Pages are refcounted: `refs[p]` counts every holder of page p — each
+    slot whose owned list maps it, plus one if the prefix cache indexes
+    it (`cache_hold`/`cache_drop`). A page frees back to the pool only
+    when its last holder drops it, so one physical page can back the
+    shared prompt prefix of many slots at once; `cow` swaps a slot's
+    mapping of a shared page for a fresh private one (the device-side
+    byte copy is the engine's job).
+
+    Invariants (property-tested): free (refs 0, on the free list),
+    uniquely-owned (refs 1), shared (refs >= 2), and quarantined (refs 0,
+    retired) are always a disjoint partition of range(n_pages), and
+    refs[p] always equals the number of slot mappings of p plus its
+    cache hold — no page is leaked, double-owned, or double-freed across
+    admit/share/COW/evict/quarantine churn.
     """
 
     def __init__(self, n_pages: int, page_size: int, n_slots: int,
@@ -138,6 +150,12 @@ class PageAllocator:
         self.free: List[int] = list(range(n_pages))
         self.owned: List[List[int]] = [[] for _ in range(n_slots)]
         self.quarantined: List[int] = []   # retired (ECC-style) free pages
+        self.refs: List[int] = [0] * n_pages   # holders: slot maps + cache
+        self.cache_held: set = set()       # pages the prefix cache indexes
+        # device page table, kept incrementally: only rows whose owned
+        # list changed since the last table() call are rebuilt
+        self._table = np.full((n_slots, max_pages_per_slot), -1, np.int32)
+        self._dirty: set = set()
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 0) // self.page_size)
@@ -150,21 +168,34 @@ class PageAllocator:
     def in_use(self) -> int:
         return self.n_pages - len(self.free)
 
+    def _decref(self, page: int) -> bool:
+        """Drop one hold on `page`; frees it to the pool when the last
+        holder is gone. Returns True if the page was actually freed."""
+        assert self.refs[page] >= 1, (page, self.refs[page])
+        self.refs[page] -= 1
+        if self.refs[page] == 0:
+            self.free.append(page)
+            return True
+        return False
+
     def release_window(self, slot: int, pos: int, window: int) -> int:
-        """Free this slot's pages that slid fully out of the sliding window
-        of every present-or-future query (positions <= pos - window can
-        never be attended again once the next token sits at `pos`). Only
-        valid when ALL attention layers are windowed — a single global
-        layer keeps whole-history pages live. Returns pages freed."""
+        """Drop this slot's hold on pages that slid fully out of the
+        sliding window of every present-or-future query (positions
+        <= pos - window can never be attended again once the next token
+        sits at `pos`). Only valid when ALL attention layers are windowed
+        — a single global layer keeps whole-history pages live. A shared
+        page merely loses this slot's reference; it frees only when the
+        prefix cache and every other slot have dropped it too. Returns
+        pages freed back to the pool."""
         freed = 0
         for j, pg in enumerate(self.owned[slot]):
             if pg is None:
                 continue
             if (j + 1) * self.page_size - 1 > pos - window:
                 break                   # logical pages are position-ordered
-            self.free.append(pg)
+            freed += self._decref(pg)
             self.owned[slot][j] = None
-            freed += 1
+            self._dirty.add(slot)
         return freed
 
     def alloc(self, slot: int, n: int) -> bool:
@@ -174,7 +205,11 @@ class PageAllocator:
                 len(self.owned[slot]) + n > self.max_pages_per_slot:
             return False
         for _ in range(n):
-            self.owned[slot].append(self.free.pop())
+            pg = self.free.pop()
+            assert self.refs[pg] == 0, (pg, self.refs[pg])
+            self.refs[pg] = 1
+            self.owned[slot].append(pg)
+        self._dirty.add(slot)
         return True
 
     def ensure(self, slot: int, pos: int) -> bool:
@@ -183,20 +218,74 @@ class PageAllocator:
         return True if need <= 0 else self.alloc(slot, need)
 
     def release(self, slot: int) -> int:
-        """Return all of a slot's pages to the pool; returns the count."""
-        live = [p for p in self.owned[slot] if p is not None]
-        self.free.extend(live)
+        """Drop the slot's hold on all its pages; returns how many went
+        back to the pool (shared / cache-held pages stay out)."""
+        freed = 0
+        for p in self.owned[slot]:
+            if p is not None:
+                freed += self._decref(p)
         self.owned[slot] = []
-        return len(live)
+        self._dirty.add(slot)
+        return freed
+
+    def share(self, slot: int, pages: List[int]) -> None:
+        """Map an already-held page run as the slot's leading logical
+        pages (prefix-cache admission): entry j serves positions
+        [j*page_size, (j+1)*page_size) out of a page some other holder
+        (the cache, possibly other slots) also references."""
+        assert not self.owned[slot], "share() must precede any alloc"
+        assert len(pages) <= self.max_pages_per_slot
+        for p in pages:
+            assert self.refs[p] >= 1, (p, self.refs[p])
+            self.refs[p] += 1
+        self.owned[slot] = list(pages)
+        self._dirty.add(slot)
+
+    def cow(self, slot: int, j: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write logical page `j` of `slot`: remap it from the
+        shared physical page to a fresh private one and return (src, dst)
+        for the device-side byte copy. Returns None when the page is
+        already exclusively owned (no copy needed). The caller must have
+        checked `available > 0`."""
+        src = self.owned[slot][j]
+        assert src is not None and self.refs[src] >= 1
+        if self.refs[src] == 1:
+            return None
+        assert self.free, "cow() needs a free page; evict first"
+        dst = self.free.pop()
+        assert self.refs[dst] == 0, (dst, self.refs[dst])
+        self.refs[dst] = 1
+        self.refs[src] -= 1            # still >= 1: other holders remain
+        self.owned[slot][j] = dst
+        self._dirty.add(slot)
+        return src, dst
+
+    def cache_hold(self, page: int) -> None:
+        """Add the prefix cache's hold on a slot-owned page (deposit)."""
+        assert page not in self.cache_held and self.refs[page] >= 1
+        self.cache_held.add(page)
+        self.refs[page] += 1
+
+    def cache_drop(self, page: int) -> bool:
+        """Drop the prefix cache's hold (entry eviction / invalidation);
+        True if that freed the page back to the pool."""
+        self.cache_held.remove(page)
+        return self._decref(page)
 
     def table(self) -> np.ndarray:
-        """(n_slots, max_pages_per_slot) int32 page table; -1 = unmapped."""
-        t = np.full((self.n_slots, self.max_pages_per_slot), -1, np.int32)
-        for i, pages in enumerate(self.owned):
-            for j, p in enumerate(pages):
+        """(n_slots, max_pages_per_slot) int32 page table; -1 = unmapped.
+        Rebuilds only rows dirtied since the last call — a steady-state
+        decode step with no page growth pays O(1) host work, not
+        O(slots x pages). The returned array is the allocator's live
+        buffer: treat it as read-only (the engine copies it to device)."""
+        for i in self._dirty:
+            row = self._table[i]
+            row[:] = -1
+            for j, p in enumerate(self.owned[i]):
                 if p is not None:
-                    t[i, j] = p
-        return t
+                    row[j] = p
+        self._dirty.clear()
+        return self._table
 
     def quarantine_free_pages(self, n: int) -> int:
         """Retire up to `n` FREE pages from circulation (simulated ECC
@@ -216,14 +305,166 @@ class PageAllocator:
         self.quarantined = []
         return n
 
+    def partition(self) -> Dict[str, List[int]]:
+        """The four-way page partition: free / uniquely-owned (refs 1) /
+        shared (refs >= 2) / quarantined."""
+        held = [p for p in range(self.n_pages) if self.refs[p] >= 1]
+        return {"free": sorted(self.free),
+                "unique": [p for p in held if self.refs[p] == 1],
+                "shared": [p for p in held if self.refs[p] >= 2],
+                "quarantined": sorted(self.quarantined)}
+
     def check(self) -> None:
-        """Assert the no-leak / no-double-own invariant: free + owned +
-        quarantined partition range(n_pages)."""
-        seen = list(self.free) + list(self.quarantined)
+        """Assert the no-leak / no-double-own invariant: free +
+        uniquely-owned + shared + quarantined partition range(n_pages),
+        and every page's refcount equals its slot mappings + cache hold."""
+        want = [0] * self.n_pages
         for pages in self.owned:
-            seen.extend(p for p in pages if p is not None)
-        assert sorted(seen) == list(range(self.n_pages)), \
-            (sorted(seen), self.n_pages)
+            for p in pages:
+                if p is not None:
+                    want[p] += 1
+        for p in self.cache_held:
+            want[p] += 1
+        assert want == self.refs, (want, self.refs)
+        part = self.partition()
+        for p in self.free:
+            assert self.refs[p] == 0, (p, self.refs[p])
+        for p in self.quarantined:
+            assert self.refs[p] == 0, (p, self.refs[p])
+        assert not set(self.free) & set(self.quarantined)
+        seen = sorted(part["free"] + part["unique"] + part["shared"]
+                      + part["quarantined"])
+        assert seen == list(range(self.n_pages)), (seen, self.n_pages)
+
+
+class PrefixHasher:
+    """Rolling prefix hashes at page granularity.
+
+    Page j's KV contents depend causally on tokens[0 : (j+1)*page_size]
+    and nothing else (PR 5 made chunk boundaries fixed, and per-lane
+    numerics are independent of how positions are grouped into lanes), so
+    a chain of blake2b digests over page-sized token blocks keys page
+    contents exactly. The chain is seeded with a fingerprint of the
+    model / weights / precision policy / cache format — two sessions with
+    different weights or KV layouts can never alias each other's pages.
+    Only FULL pages hash: a partial tail page is never shared.
+    """
+
+    def __init__(self, page_size: int, fingerprint: bytes = b""):
+        assert page_size >= 1
+        self.page_size = page_size
+        self.root = hashlib.blake2b(fingerprint, digest_size=16).digest()
+
+    def page_hashes(self, tokens: List[int]) -> List[bytes]:
+        """Digest chain h_j keying the KV page of positions
+        [j*page_size, (j+1)*page_size), for every full page of `tokens`."""
+        out: List[bytes] = []
+        h = self.root
+        ps = self.page_size
+        for j in range(len(tokens) // ps):
+            block = np.asarray(tokens[j * ps:(j + 1) * ps],
+                               np.int64).tobytes()
+            h = hashlib.blake2b(h + block, digest_size=16).digest()
+            out.append(h)
+        return out
+
+
+class PrefixCache:
+    """Host-side index of reusable KV pages: prefix digest -> physical page.
+
+    Entries are deposited when a slot's computed pages become reusable
+    (prefill completion, request finish, and eviction — eviction-into-
+    cache turns preempted work into cache hits instead of recompute) and
+    hold one refcount on their page via the allocator. Lookup walks the
+    digest chain from page 0 and returns the longest fully-cached leading
+    run; admission maps those pages shared into the slot's table and
+    skips prefill straight to the tail. The cache is the FIRST eviction
+    tier under page pressure: LRU entries whose page no live slot
+    references are reclaimed before any live slot is touched.
+    """
+
+    def __init__(self, alloc: PageAllocator, hasher: PrefixHasher,
+                 capacity_pages: Optional[int] = None):
+        self.alloc = alloc
+        self.hasher = hasher
+        self.capacity_pages = capacity_pages   # None: pool pressure only
+        self.entries: "OrderedDict[bytes, int]" = OrderedDict()  # LRU order
+        self.hits = 0            # admissions that reused >= 1 cached page
+        self.misses = 0          # admissions with no cached prefix
+        self.hit_tokens = 0      # prompt tokens whose prefill was skipped
+        self.pages_shared = 0    # page mappings served from the cache
+        self.cow_copies = 0      # device page copies (write into shared)
+        self.deposits = 0        # pages newly indexed
+        self.evictions = 0       # entries reclaimed under page pressure
+
+    @property
+    def pages(self) -> int:
+        return len(self.entries)
+
+    def lookup(self, hashes: List[bytes]) -> List[int]:
+        """Longest leading run of cached pages for a prompt's digest
+        chain; touches each hit entry's LRU recency."""
+        run: List[int] = []
+        for h in hashes:
+            pg = self.entries.get(h)
+            if pg is None:
+                break
+            self.entries.move_to_end(h)
+            run.append(pg)
+        return run
+
+    def deposit(self, hashes: List[bytes], pages: List[Optional[int]]
+                ) -> int:
+        """Index a slot's computed pages under their prefix digests.
+        Stops at the first unmapped entry (window-released leading pages
+        break the chain) and dedupes against existing entries — the
+        digest keys page CONTENT, so the first deposit wins and later
+        identical pages just refresh recency. Returns pages indexed."""
+        n = 0
+        for h, pg in zip(hashes, pages):
+            if pg is None:
+                break
+            cur = self.entries.get(h)
+            if cur is not None:
+                self.entries.move_to_end(h)
+                continue
+            if (self.capacity_pages is not None
+                    and len(self.entries) >= self.capacity_pages
+                    and not self.evict_lru(1)):
+                break
+            self.alloc.cache_hold(pg)
+            self.entries[h] = pg
+            n += 1
+        self.deposits += n
+        return n
+
+    def evict_lru(self, n: int = 1) -> int:
+        """Reclaim up to `n` LRU entries whose page has no live slot
+        reference (the cache is its only holder — refs exactly 1), freeing
+        their pages to the pool. Entries still shared with live slots are
+        skipped: evicting them would free nothing. Returns pages freed."""
+        freed = 0
+        while freed < n:
+            victim = None
+            for h, pg in self.entries.items():     # oldest first
+                if self.alloc.refs[pg] == 1:
+                    victim = h
+                    break
+            if victim is None:
+                break
+            self.alloc.cache_drop(self.entries.pop(victim))
+            self.evictions += 1
+            freed += 1
+        return freed
+
+    def clear(self) -> int:
+        """Drop every entry (cache recovery rebuilt the device pool, so
+        all cached page contents are invalid). Returns entries dropped."""
+        n = len(self.entries)
+        for pg in self.entries.values():
+            self.alloc.cache_drop(pg)
+        self.entries.clear()
+        return n
 
 
 class SlotScheduler:
@@ -235,18 +476,29 @@ class SlotScheduler:
     each live slot's mapping ahead of every step. `window` (token count)
     enables mid-flight release of pages that slid fully out of a sliding
     window — only pass it when every attention layer is 'local'.
+    `prefix_cache` (a PrefixCache over the same allocator) switches on
+    shared-prompt KV reuse: admissions map cached prefix pages shared and
+    skip straight to the tail chunks, finished/evicted slots deposit
+    their pages, and under page pressure refcount-1 cache entries are the
+    first eviction tier. Copy-on-write pairs land in `pending_copies` for
+    the engine to apply on device BEFORE the step that writes them.
     """
 
     def __init__(self, n_slots: int, max_len: int,
                  alloc: Optional[PageAllocator] = None,
                  window: Optional[int] = None,
                  queue_cap: Optional[int] = None,
-                 poison_threshold: int = 3):
+                 poison_threshold: int = 3,
+                 prefix_cache: Optional[PrefixCache] = None):
         assert n_slots >= 1
+        assert prefix_cache is None or alloc is not None
         self.n_slots = n_slots
         self.max_len = max_len
         self.alloc = alloc
         self.window = window
+        self.prefix_cache = prefix_cache
+        # COW copies registered this pass: (slot, logical j, src, dst)
+        self.pending_copies: List[Tuple[int, int, int, int]] = []
         self.queue_cap = queue_cap     # arrived-queue depth before shedding
         self.poison_threshold = poison_threshold  # quarantines before abort
         self.queue: deque = deque()
@@ -387,14 +639,124 @@ class SlotScheduler:
     def admit_chunked(self, slot: int, req: GenRequest, now_s: float) -> None:
         """Bind req to slot for chunked prefill: its prompt will be laned
         into the token-budget steps by `schedule_step`; the first token
-        samples when the final prompt chunk emits."""
+        samples when the final prompt chunk emits. With a prefix cache,
+        the longest cached leading page run maps shared into the slot and
+        prefill skips straight past it."""
         assert self.slots[slot] is None
         if self._used[slot]:
             self.slot_reuses += 1
         self._used[slot] = True
-        self.slots[slot] = _Slot(
+        st = _Slot(
             req=req, pos=-1, cur_token=-1, tokens=[], started_s=now_s,
             prefill_s=0.0, evictions=self._evicted.get(req.uid, 0), fed=0)
+        self.slots[slot] = st
+        if self.prefix_cache is not None:
+            self._admit_prefix(slot, st, now_s)
+
+    # ------------------------------------------------------- prefix cache
+
+    def _admit_prefix(self, slot: int, st: _Slot, now_s: float) -> None:
+        """Skip-ahead admission: map the longest cached leading page run
+        shared into the slot and start prefill at its end. A fully-cached
+        prompt still feeds its FINAL token (the first sample needs that
+        lane's logits), whose write lands inside the last shared page —
+        that page is copy-on-written so the cached original stays
+        pristine for other holders."""
+        pc = self.prefix_cache
+        ps = self.alloc.page_size
+        hashes = pc.hasher.page_hashes(st.req.prompt)
+        run = pc.lookup(hashes)[:self.alloc.max_pages_per_slot]
+        if not run:
+            pc.misses += 1
+            return
+        plen = len(st.req.prompt)
+        skip = len(run) * ps
+        cow_j = None
+        if skip >= plen:               # every prompt page cached
+            skip = plen - 1
+            cow_j = skip // ps
+        self.alloc.share(slot, run)
+        if cow_j is not None and not self._cow_range(
+                slot, skip, skip, now_s, below=st.req.priority):
+            # no page for the copy even after cache-tier eviction: fall
+            # back to recomputing the last page instead of stalling
+            self.alloc.release(slot)
+            run = run[:-1]
+            skip = len(run) * ps
+            if not run:
+                pc.misses += 1
+                return
+            self.alloc.share(slot, run)
+        st.fed = skip
+        st.pos = skip - 1
+        pc.hits += 1
+        pc.hit_tokens += skip
+        pc.pages_shared += len(run)
+
+    def _deposit(self, slot: int, st: _Slot) -> None:
+        """Index the slot's fully-written pages in the prefix cache. The
+        written positions are exactly prompt[:fed] mid-prefill and
+        prompt + tokens[:-1] while decoding (the latest sampled token is
+        an input of the NEXT step, its KV not yet written)."""
+        if self.prefix_cache is None or self.alloc is None:
+            return
+        seq = (st.req.prompt[:st.fed] if st.prefilling
+               else st.req.prompt + st.tokens[:-1])
+        hashes = self.prefix_cache.hasher.page_hashes(seq)
+        if hashes:
+            self.prefix_cache.deposit(
+                hashes, self.alloc.owned[slot][:len(hashes)])
+
+    def _evict_cache_tier(self, n: int = 1) -> bool:
+        """First eviction tier under page pressure: reclaim LRU prefix-
+        cache entries no live slot references before any live slot is
+        touched. True if at least one page was freed."""
+        if self.prefix_cache is None:
+            return False
+        return self.prefix_cache.evict_lru(n) > 0
+
+    def _cow_range(self, slot: int, first_pos: int, last_pos: int,
+                   now_s: float, below: Optional[int] = None) -> bool:
+        """Copy-on-write every shared page the write range [first_pos,
+        last_pos] touches, registering (src, dst) pairs for the engine's
+        device copy. Frees pages for the copies through the standard
+        pressure ladder (cache tier first, then strictly-lower-priority
+        eviction). False if a needed copy page could not be found."""
+        if self.prefix_cache is None or self.alloc is None:
+            return True
+        ps = self.alloc.page_size
+        for j in range(first_pos // ps, last_pos // ps + 1):
+            owned = self.alloc.owned[slot]
+            if j >= len(owned) or owned[j] is None:
+                continue
+            pg = owned[j]
+            while self.alloc.refs[pg] >= 2:
+                if self.alloc.available > 0:
+                    src, dst = self.alloc.cow(slot, j)
+                    self.pending_copies.append((slot, j, src, dst))
+                    self.prefix_cache.cow_copies += 1
+                    break
+                if self._evict_cache_tier():
+                    continue
+                victim = self._eviction_candidate(below=below)
+                if victim is None or victim == slot:
+                    return False
+                self.evict(victim, now_s)
+        return True
+
+    def take_pending_copies(self) -> List[Tuple[int, int]]:
+        """Drain the (src, dst) device page-copy pairs registered this
+        scheduling pass. Pairs whose mapping was torn down in the
+        meantime (the COW'd slot was evicted and dst possibly handed to
+        a new owner) are dropped — their writes route to scratch, and the
+        copy must not clobber dst's new contents."""
+        out = []
+        for slot, j, src, dst in self.pending_copies:
+            owned = self.alloc.owned[slot]
+            if j < len(owned) and owned[j] == dst:
+                out.append((src, dst))
+        self.pending_copies = []
+        return out
 
     # ------------------------------------------------------ paged eviction
 
@@ -419,13 +781,16 @@ class SlotScheduler:
 
     def evict(self, slot: int, now_s: float) -> None:
         """Preempt a slot: release its pages and requeue its request for a
-        fresh prefill (preemption by recompute — generated tokens are
-        discarded and regenerated after re-admission; greedy and seeded
-        sampling replay identically because PRNG streams key on the
-        submission index)."""
+        fresh prefill (greedy and seeded sampling replay identically
+        because PRNG streams key on the submission index). With a prefix
+        cache this is eviction-INTO-cache, not eviction-by-recompute: the
+        slot's fully-written pages are deposited first, so re-admission
+        maps them back shared and skips the recompute entirely (the
+        carried checkpointed-preemption item, closed by refcounts)."""
         st = self.slots[slot]
         assert st is not None
         if self.alloc is not None:
+            self._deposit(slot, st)     # eviction-into-cache
             self.alloc.release(slot)
         self.slots[slot] = None
         self.evictions += 1
@@ -458,6 +823,9 @@ class SlotScheduler:
         st = self.slots[slot]
         assert st is not None
         if self.alloc is not None:
+            # NO cache deposit: a faulted step may have written garbage.
+            # release() only drops this slot's refs — pages the prefix
+            # cache or other slots still hold stay mapped for them.
             self.alloc.release(slot)
         self.slots[slot] = None
         self.quarantines += 1
@@ -550,13 +918,20 @@ class SlotScheduler:
             if self.window is not None:
                 self.pages_released_by_window += \
                     self.alloc.release_window(i, st.pos + 1, self.window)
-            while not self.alloc.ensure(
-                    i, min(st.pos + lookahead, self.max_len - 1)):
+            last = min(st.pos + lookahead, self.max_len - 1)
+            while not self.alloc.ensure(i, last):
+                if self._evict_cache_tier():
+                    continue            # cache entries go before live slots
                 victim = self._eviction_candidate()
                 assert victim is not None, "no active slot to evict"
                 self.evict(victim, now_s)
                 if victim == i:
                     break
+            if self.slots[i] is st:
+                # decode writes land past every shared prefix page, but a
+                # COW here guards the invariant if that ever changes
+                self._cow_range(i, st.pos + 1, last, now_s)
+
 
     def _reserve_chunk(self, slot: int, st: _Slot, last_pos: int,
                        now_s: float) -> bool:
@@ -570,11 +945,16 @@ class SlotScheduler:
             self.pages_released_by_window += \
                 self.alloc.release_window(slot, st.fed, self.window)
         while not self.alloc.ensure(slot, last_pos):
+            if self._evict_cache_tier():
+                continue                # cache entries go before live slots
             victim = self._eviction_candidate(below=st.req.priority)
             if victim is None:
                 return False            # stall this slot; others proceed
             self.evict(victim, now_s)
-        return True
+        # chunk writes into a page another holder shares (a fully-cached
+        # admission's final token) must not mutate the shared bytes
+        return self._cow_range(slot, st.fed, last_pos, now_s,
+                               below=st.req.priority)
 
     # ------------------------------------------------ token-budget stepping
 
@@ -670,6 +1050,8 @@ class SlotScheduler:
             tok = int(sampled[i])
             if not st.tokens:                   # prefill completed
                 st.prefill_s = now_s - st.started_s
+                if self.prefix_cache is not None:
+                    self._deposit(i, st)        # prompt pages now reusable
             else:
                 st.pos += 1
                 st.steps += 1
@@ -780,6 +1162,7 @@ class SlotScheduler:
                                       len(st.tokens), done=True,
                                       finish_reason=reason))
         if self.alloc is not None:
+            self._deposit(slot, st)     # full history reusable (multi-turn)
             self.alloc.release(slot)
         self.slots[slot] = None
         return True

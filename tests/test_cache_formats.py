@@ -120,27 +120,62 @@ def test_inactive_paged_write_lands_on_scratch():
 # ------------------------------------------------------------ page allocator
 
 def test_page_allocator_property_churn():
-    """No page leaked or double-owned across random admit/grow/release
-    churn; table rows mirror ownership."""
+    """Free + uniquely-owned + shared(refs>=2) + quarantined pages always
+    partition range(n_pages) across random admit/share/COW/evict/
+    quarantine churn; no page leaked or double-owned; table rows mirror
+    ownership (None -> -1 during windowed release)."""
     rng = np.random.default_rng(7)
     alloc = PageAllocator(n_pages=13, page_size=4, n_slots=3,
                           max_pages_per_slot=5)
+    cache_held = []                    # refcounts held by a prefix cache
     for step in range(500):
-        op = rng.integers(0, 3)
+        op = rng.integers(0, 8)
         slot = int(rng.integers(0, 3))
         if op == 0:
             alloc.alloc(slot, int(rng.integers(1, 4)))
         elif op == 1:
             alloc.ensure(slot, int(rng.integers(0, 20)))
-        else:
+        elif op == 2:
+            # deposit before release: cache keeps a ref on the pages
+            for pg in alloc.owned[slot]:
+                if pg not in cache_held:
+                    cache_held.append(pg)
+                    alloc.cache_hold(pg)
             alloc.release(slot)
+        elif op == 3 and cache_held and not alloc.owned[slot]:
+            # prefix hit: map a run of cache-held pages into an idle slot
+            n = int(rng.integers(1, min(len(cache_held), 5) + 1))
+            alloc.share(slot, cache_held[:n])
+        elif op == 4 and alloc.owned[slot] and alloc.available:
+            # COW a random owned page (no-op unless actually shared)
+            j = int(rng.integers(0, len(alloc.owned[slot])))
+            alloc.cow(slot, j)
+        elif op == 5 and cache_held:
+            # cache-tier eviction drops a ref; page frees iff unshared
+            pg = cache_held.pop(int(rng.integers(0, len(cache_held))))
+            alloc.cache_drop(pg)
+        elif op == 6:
+            alloc.quarantine_free_pages(int(rng.integers(1, 3)))
+        else:
+            alloc.restore_quarantined()
         alloc.check()                  # the invariant
+        part = alloc.partition()
+        assert sorted(part["free"] + part["unique"] + part["shared"]
+                      + part["quarantined"]) == list(range(13))
+        assert all(alloc.refs[p] >= 2 for p in part["shared"])
         t = alloc.table()
         for i in range(3):
             owned = alloc.owned[i]
-            assert list(t[i, :len(owned)]) == owned
+            assert list(t[i, :len(owned)]) == \
+                [-1 if p is None else p for p in owned]
             assert (t[i, len(owned):] == -1).all()
-    assert alloc.available + alloc.in_use == 13
+    alloc.restore_quarantined()
+    for pg in cache_held:
+        alloc.cache_drop(pg)
+    for slot in range(3):
+        alloc.release(slot)
+    alloc.check()
+    assert alloc.available == 13       # everything returned to the pool
 
 
 def test_page_allocator_bounds():

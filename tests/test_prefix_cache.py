@@ -1,0 +1,233 @@
+"""Page-granular prefix caching: hashing, refcounted sharing, COW,
+eviction-into-cache, and the warm == cold == contiguous-oracle token
+identity that makes the cache invisible to users.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import CacheState, contiguous_cfg, get_cache_format
+from repro.data.synthetic import MarkovStream
+from repro.models import init_params
+from repro.serve.engine import GenRequest, ServeEngine
+from repro.serve.scheduler import PageAllocator, PrefixCache, PrefixHasher
+
+
+def _setup(arch="deepseek-7b"):
+    cfg = reduce_config(get_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    data = MarkovStream(cfg.vocab_size, batch=4, seq=32, seed=0)
+    return cfg, params, data
+
+
+# ------------------------------------------------------------------ hashing
+
+def test_prefix_hasher_chain_and_keying():
+    h = PrefixHasher(4, b"fp")
+    toks = list(range(12))
+    hs = h.page_hashes(toks)
+    assert len(hs) == 3
+    assert h.page_hashes(toks) == hs                 # deterministic
+    assert h.page_hashes(toks + [99]) == hs          # partial page ignored
+    assert h.page_hashes(toks[:8]) == hs[:2]         # chain is prefix-stable
+    # page j's digest depends on every earlier token, not just its own
+    bent = [7] + toks[1:]
+    assert h.page_hashes(bent)[2] != hs[2]
+    # a different model/policy fingerprint keys a disjoint hash space
+    assert PrefixHasher(4, b"other").page_hashes(toks) != hs
+    assert PrefixHasher(3, b"fp").page_hashes(toks) != hs[:1]
+
+
+# ------------------------------------------- cache + allocator unit behavior
+
+def test_prefix_cache_lookup_deposit_share_evict():
+    alloc = PageAllocator(n_pages=8, page_size=4, n_slots=2,
+                          max_pages_per_slot=4)
+    hasher = PrefixHasher(4, b"t")
+    pc = PrefixCache(alloc, hasher)
+    hs = hasher.page_hashes(list(range(12)))
+    assert alloc.alloc(0, 3)
+    pc.deposit(hs, alloc.owned[0][:3])
+    alloc.release(0)
+    alloc.check()
+    held = list(pc.entries.values())
+    assert all(alloc.refs[p] == 1 for p in held)     # cache-only holds
+    assert pc.lookup(hs) == held                     # longest leading run
+    assert pc.lookup(hasher.page_hashes(list(range(8)) + [99, 98, 97, 96])) \
+        == held[:2]
+    assert pc.lookup(hasher.page_hashes([5, 6, 7, 8])) == []
+    # a shared mapping pins the pages against cache-tier eviction
+    alloc.share(1, held)
+    assert pc.evict_lru(3) == 0
+    alloc.release(1)
+    assert pc.evict_lru(2) == 2                      # LRU first, refs-1 only
+    alloc.check()
+    assert pc.evictions == 2 and pc.pages == 1
+    assert pc.clear() == 1
+    alloc.check()
+    assert alloc.available == 8
+
+
+def test_prefix_cache_capacity_bound():
+    alloc = PageAllocator(n_pages=8, page_size=2, n_slots=1,
+                          max_pages_per_slot=8)
+    hasher = PrefixHasher(2, b"t")
+    pc = PrefixCache(alloc, hasher, capacity_pages=2)
+    hs = hasher.page_hashes(list(range(8)))
+    assert alloc.alloc(0, 4)
+    pc.deposit(hs, alloc.owned[0][:4])
+    assert pc.pages <= 2                             # oldest spilled
+    alloc.release(0)
+    alloc.check()
+
+
+def test_cow_remaps_only_shared_pages():
+    alloc = PageAllocator(n_pages=6, page_size=4, n_slots=2,
+                          max_pages_per_slot=3)
+    assert alloc.alloc(0, 2)
+    a, b = alloc.owned[0]
+    assert alloc.cow(0, 0) is None                   # exclusive: no copy
+    alloc.share(1, [a, b])
+    src, dst = alloc.cow(1, 1)
+    assert (src, dst) == (b, alloc.owned[1][1])
+    assert alloc.owned[0] == [a, b] and alloc.refs[b] == 1
+    assert alloc.refs[dst] == 1
+    alloc.check()
+
+
+# ------------------------------------------------------- device page copies
+
+@pytest.mark.parametrize("fmt_name", ["paged", "paged_int8"])
+def test_copy_page_clones_all_pools(fmt_name):
+    cfg, _, _ = _setup()
+    cfgp = dataclasses.replace(cfg, kv_format=fmt_name, kv_page_size=4,
+                               kv_pages=5)
+    fmt = get_cache_format(fmt_name)
+    c = fmt.init(1, 8, cfgp, jnp.float32)
+    pages = jnp.asarray([[2, -1]], jnp.int32)
+    rng = np.random.default_rng(3)
+    for t in range(3):
+        k = jnp.asarray(rng.normal(size=(1, 1, cfg.n_kv_heads,
+                                         cfg.head_dim)).astype(np.float32))
+        c = fmt.write(c, k, -k, jnp.asarray([t], jnp.int32), pages=pages)
+    c2 = fmt.copy_page(c, 2, 4)
+    for key, pool in c2.data.items():
+        np.testing.assert_array_equal(np.asarray(pool[4]),
+                                      np.asarray(pool[2]))
+        np.testing.assert_array_equal(np.asarray(pool[:4]),
+                                      np.asarray(c.data[key][:4]))
+    # reads through the remapped table see identical bytes
+    kp, vp = fmt.read(c2, jnp.float32, pages=jnp.asarray([[4, -1]],
+                                                         jnp.int32))
+    ko, vo = fmt.read(c2, jnp.float32, pages=pages)
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(ko))
+    np.testing.assert_array_equal(np.asarray(vp), np.asarray(vo))
+
+
+# ------------------------------------------------- engine gating + identity
+
+def test_prefix_cache_requires_paged_kv():
+    cfg, params, _ = _setup()
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(params, cfg, max_len=32, prefix_cache=True)
+
+
+def test_prefix_cache_rejects_recurrent_state():
+    cfg, params, _ = _setup("rwkv6-7b")
+    cfgp = dataclasses.replace(cfg, kv_format="paged", kv_page_size=4)
+    with pytest.raises(ValueError, match="recurrent|attn"):
+        ServeEngine(params, cfgp, max_len=32, prefix_cache=True)
+
+
+def _identity_run(fmt_name):
+    """Cold-then-warm shared-prompt serve, cache-on vs cache-off vs the
+    contiguous oracle; returns (cache-on stats, results)."""
+    cfg, params, data = _setup()
+    toks = data.batch_at(5)["tokens"]
+    shared = toks[0, :16].tolist()                  # 4 full pages at ps=4
+    reqs = [GenRequest(prompt=shared + toks[1, :5].tolist(), max_new=6),
+            GenRequest(prompt=shared, max_new=6),   # exact repeat: full hit
+            GenRequest(prompt=shared + toks[2, :3].tolist(), max_new=6)]
+    cfgp = dataclasses.replace(cfg, kv_format=fmt_name, kv_page_size=4,
+                               kv_pages=0)
+    warm = ServeEngine(params, cfgp, max_len=64, n_slots=1, prefill_chunk=4,
+                       prefix_cache=True)
+    res_w = warm.serve(reqs)
+    cold = ServeEngine(params, cfgp, max_len=64, n_slots=1, prefill_chunk=4)
+    res_c = cold.serve(reqs)
+    oracle = ServeEngine(params, contiguous_cfg(cfgp), max_len=64,
+                         n_slots=1, prefill_chunk=4)
+    res_o = oracle.serve(reqs)
+    for w, c, o in zip(res_w, res_c, res_o):
+        assert w.tokens == c.tokens == o.tokens, (w.tokens, c.tokens,
+                                                  o.tokens)
+    st = warm.last_stats
+    assert st["chunk_tokens"] < cold.last_stats["chunk_tokens"]
+    return st, res_w
+
+
+def test_warm_cold_oracle_identity_paged():
+    st, _ = _identity_run("paged")
+    pc = st["prefix_cache"]
+    assert pc["prefix_hits"] == 2 and pc["prefix_misses"] == 1
+    # repeat skips to token 15 of 16 (COW of the final shared page);
+    # the tailed request skips all 16 prefix tokens
+    assert pc["prefix_hit_tokens"] == 15 + 16
+    assert pc["cow_copies"] >= 1 and pc["cow_applied"] >= 1
+    assert pc["pages_shared"] >= 8
+
+
+def test_warm_cold_oracle_identity_paged_int8():
+    st, _ = _identity_run("paged_int8")
+    assert st["prefix_cache"]["prefix_hits"] == 2
+
+
+def test_eviction_into_cache_feeds_readmission():
+    """Preemption now deposits the victim's prefilled pages instead of
+    discarding them: under page pressure with repeated prompts, greedy
+    tokens still match the contiguous oracle and the cache records both
+    deposits and hits while the allocator invariant holds."""
+    cfg, params, data = _setup()
+    toks = data.batch_at(5)["tokens"]
+    shared = toks[0, :12].tolist()
+    reqs = [GenRequest(prompt=shared, max_new=8),
+            GenRequest(prompt=toks[1, :9].tolist(), max_new=8, priority=1),
+            GenRequest(prompt=shared, max_new=6)]
+    cfgp = dataclasses.replace(cfg, kv_format="paged", kv_page_size=4,
+                               kv_pages=9)
+    eng = ServeEngine(params, cfgp, max_len=64, n_slots=2,
+                      prefix_cache=True)
+    res = eng.serve(reqs)
+    st = eng.last_stats
+    pc = st["prefix_cache"]
+    assert pc["cache_deposits"] >= 1
+    assert pc["prefix_hits"] >= 1
+    oracle = ServeEngine(params, cfg, max_len=64, n_slots=2)
+    for a, b in zip(res, oracle.serve(reqs)):
+        assert a.tokens == b.tokens, (a.tokens, b.tokens)
+
+
+def test_cache_is_first_eviction_tier():
+    """Refcount-0 cache entries are reclaimed before any live slot is
+    preempted: a workload that fits only if the cache yields its pages
+    must complete with cache_evictions > 0 and evictions == 0."""
+    cfg, params, data = _setup()
+    toks = data.batch_at(5)["tokens"]
+    reqs = [GenRequest(prompt=toks[0, :16].tolist(), max_new=4),
+            GenRequest(prompt=toks[1, :16].tolist(), max_new=4),
+            GenRequest(prompt=toks[2, :16].tolist(), max_new=4)]
+    cfgp = dataclasses.replace(cfg, kv_format="paged", kv_page_size=4,
+                               kv_pages=7)
+    eng = ServeEngine(params, cfgp, max_len=64, n_slots=1,
+                      prefix_cache=True)
+    res = eng.serve(reqs)
+    st = eng.last_stats
+    assert st["prefix_cache"]["cache_evictions"] >= 1
+    assert st["evictions"] == 0
+    oracle = ServeEngine(params, cfg, max_len=64, n_slots=1)
+    for a, b in zip(res, oracle.serve(reqs)):
+        assert a.tokens == b.tokens
