@@ -103,6 +103,7 @@ class _Slot:
     steps: int = 0
     evictions: int = 0                 # times this request was preempted
     fed: int = 0                       # prompt tokens scheduled so far
+    written: int = 0                   # prompt tokens whose KV is on device
     gap: int = 0                       # steps since this stream last sampled
     times: List[float] = dataclasses.field(default_factory=list)
 
@@ -276,8 +277,10 @@ class PageAllocator:
         """(n_slots, max_pages_per_slot) int32 page table; -1 = unmapped.
         Rebuilds only rows dirtied since the last call — a steady-state
         decode step with no page growth pays O(1) host work, not
-        O(slots x pages). The returned array is the allocator's live
-        buffer: treat it as read-only (the engine copies it to device)."""
+        O(slots x pages). Returns a write-protected view of the
+        allocator's live buffer (the engine copies it to device), so a
+        caller that mutates it or writes through a stale reference gets
+        a ValueError instead of silent page-table corruption."""
         for i in self._dirty:
             row = self._table[i]
             row[:] = -1
@@ -285,7 +288,9 @@ class PageAllocator:
                 if p is not None:
                     row[j] = p
         self._dirty.clear()
-        return self._table
+        view = self._table.view()
+        view.setflags(write=False)
+        return view
 
     def quarantine_free_pages(self, n: int) -> int:
         """Retire up to `n` FREE pages from circulation (simulated ECC
@@ -519,6 +524,10 @@ class SlotScheduler:
         self._used = [False] * n_slots
         self._step_emits: List[int] = []
         self._step_reset: List[int] = []
+        # chunks laned into the in-flight step: (slot, slot object, new
+        # fed). record_scheduled advances each slot's `written` watermark
+        # from these once the step has actually run on device.
+        self._step_fed: List[Tuple[int, _Slot, int]] = []
         self.events: List[TokenEvent] = []   # drained via take_events()
 
     # ------------------------------------------------------------ queue side
@@ -631,7 +640,8 @@ class SlotScheduler:
         st = _Slot(req=req, pos=len(req.prompt) - 1, cur_token=first_token,
                    tokens=[first_token], started_s=now_s, prefill_s=prefill_s,
                    evictions=self._evicted.get(req.uid, 0),
-                   fed=len(req.prompt), times=[now_s])
+                   fed=len(req.prompt), written=len(req.prompt),
+                   times=[now_s])
         self.slots[slot] = st
         self.events.append(TokenEvent(req.uid, first_token, now_s, 0))
         return self._maybe_finish(slot, now_s)
@@ -688,6 +698,7 @@ class SlotScheduler:
                 return
             self.alloc.share(slot, run)
         st.fed = skip
+        st.written = skip              # shared pages hold real KV already
         st.pos = skip - 1
         pc.hits += 1
         pc.hit_tokens += skip
@@ -695,13 +706,18 @@ class SlotScheduler:
 
     def _deposit(self, slot: int, st: _Slot) -> None:
         """Index the slot's fully-written pages in the prefix cache. The
-        written positions are exactly prompt[:fed] mid-prefill and
-        prompt + tokens[:-1] while decoding (the latest sampled token is
-        an input of the NEXT step, its KV not yet written)."""
+        written positions are exactly prompt[:written] before the first
+        sample and prompt + tokens[:-1] once decoding (the latest sampled
+        token is an input of the NEXT step, its KV not yet written).
+        `fed` must NOT stand in for `written` here: a chunk laned THIS
+        scheduling pass has bumped `fed` but its step has not run — if
+        the slot is evicted mid-pass its lanes write to scratch, and
+        depositing prompt[:fed] would index pages of garbage KV that a
+        later shared-prefix admission silently reads."""
         if self.prefix_cache is None or self.alloc is None:
             return
-        seq = (st.req.prompt[:st.fed] if st.prefilling
-               else st.req.prompt + st.tokens[:-1])
+        seq = (st.req.prompt + st.tokens[:-1] if st.tokens
+               else st.req.prompt[:st.written])
         hashes = self.prefix_cache.hasher.page_hashes(seq)
         if hashes:
             self.prefix_cache.deposit(
@@ -929,8 +945,12 @@ class SlotScheduler:
                     break
             if self.slots[i] is st:
                 # decode writes land past every shared prefix page, but a
-                # COW here guards the invariant if that ever changes
-                self._cow_range(i, st.pos + 1, last, now_s)
+                # COW here guards the invariant if that ever changes; a
+                # failed COW must never let the write proceed into a
+                # shared page (corrupting other holders' bytes) — evict
+                # the slot instead, the standard self-evict valve
+                if not self._cow_range(i, st.pos + 1, last, now_s):
+                    self.evict(i, now_s)
 
 
     def _reserve_chunk(self, slot: int, st: _Slot, last_pos: int,
@@ -975,6 +995,7 @@ class SlotScheduler:
         lanes: List[Tuple[int, int, int, int, bool]] = []
         reset = np.zeros(self.n_slots, bool)
         self._step_emits = []
+        self._step_fed = []
         for i, st in enumerate(self.slots):     # decode lanes
             if st is None or st.prefilling or not st.tokens:
                 continue
@@ -1010,6 +1031,7 @@ class SlotScheduler:
                 self._step_emits.append(i)
             st.fed += c
             st.pos = st.fed - 1
+            self._step_fed.append((i, st, st.fed))
         if not lanes:
             # every lane-less slot is page-starved mid-prefill: force the
             # standard pressure valve so the system cannot livelock
@@ -1042,6 +1064,14 @@ class SlotScheduler:
         their next token, a slot whose final prompt chunk emitted records
         its FIRST token (TTFT). Returns slots freed this step."""
         freed = []
+        # the step ran: its chunk writes are on device, so the written
+        # watermark catches up to fed. The identity check drops slots
+        # evicted/quarantined after laning (their writes routed to
+        # scratch — nothing real was written).
+        for i, st, fed in self._step_fed:
+            if self.slots[i] is st:
+                st.written = fed
+        self._step_fed = []
         emits, self._step_emits = self._step_emits, []
         for i in emits:
             st = self.slots[i]

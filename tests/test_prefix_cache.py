@@ -14,7 +14,8 @@ from repro.core import CacheState, contiguous_cfg, get_cache_format
 from repro.data.synthetic import MarkovStream
 from repro.models import init_params
 from repro.serve.engine import GenRequest, ServeEngine
-from repro.serve.scheduler import PageAllocator, PrefixCache, PrefixHasher
+from repro.serve.scheduler import (PageAllocator, PrefixCache, PrefixHasher,
+                                   SlotScheduler)
 
 
 def _setup(arch="deepseek-7b"):
@@ -209,6 +210,49 @@ def test_eviction_into_cache_feeds_readmission():
     oracle = ServeEngine(params, cfg, max_len=64, n_slots=2)
     for a, b in zip(res, oracle.serve(reqs)):
         assert a.tokens == b.tokens, (a.tokens, b.tokens)
+
+
+def test_mid_pass_eviction_deposits_only_written_pages():
+    """Eviction-into-cache must key on the WRITTEN watermark, not `fed`:
+    schedule_step bumps fed at lane-scheduling time, before the step
+    runs, so a slot evicted after laning (e.g. by a higher-priority
+    peer's chunk reservation in the same pass) has pages its lanes never
+    wrote — writes route to scratch once the table row clears. Those
+    pages must never reach the cache, or later shared-prefix admissions
+    read garbage KV. Once record_scheduled confirms the step ran, the
+    same eviction deposits the chunk's full pages."""
+
+    def fresh(prompt_len):
+        alloc = PageAllocator(n_pages=8, page_size=4, n_slots=2,
+                              max_pages_per_slot=4)
+        pc = PrefixCache(alloc, PrefixHasher(4, b"t"))
+        s = SlotScheduler(n_slots=2, max_len=32, alloc=alloc,
+                          prefix_cache=pc)
+        req = GenRequest(prompt=list(range(prompt_len)), max_new=4)
+        s.admit_chunked(0, req, now_s=0.0)
+        lanes = s.schedule_step(budget=16, chunk_cap=8, now_s=0.0)
+        assert lanes is not None and s.slots[0].fed == min(8, prompt_len)
+        return alloc, pc, s
+
+    # evicted between laning and the step: fed == 8 but nothing written
+    alloc, pc, s = fresh(12)
+    s.evict(0, now_s=0.0)
+    assert pc.deposits == 0 and pc.pages == 0
+    alloc.check()
+    # the fed == plen flavor: prefilling flips False with tokens still
+    # empty, which must not deposit the whole (unwritten) prompt
+    alloc, pc, s = fresh(8)
+    assert not s.slots[0].prefilling and not s.slots[0].tokens
+    s.evict(0, now_s=0.0)
+    assert pc.deposits == 0 and pc.pages == 0
+    alloc.check()
+    # after record_scheduled the step's writes are real: deposit proceeds
+    alloc, pc, s = fresh(12)
+    s.record_scheduled(np.zeros(2, np.int32), now_s=0.1)
+    assert s.slots[0].written == 8
+    s.evict(0, now_s=0.1)
+    assert pc.deposits == 2 and pc.pages == 2        # both full pages
+    alloc.check()
 
 
 def test_cache_is_first_eviction_tier():
