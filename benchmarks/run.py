@@ -127,6 +127,44 @@ def _ppl(params, cfg, batch):
     return float(jnp.exp(jnp.mean(logz - gold)))
 
 
+def _sensitivity_profile():
+    """Per-(group, width) sensitivity of the trained small LM, measured
+    once per process (three PTQ passes + one fp pass) and shared by the
+    frontier and mixed-precision-serving benches."""
+    if "profile" in _E2E_CACHE:
+        return _E2E_CACHE["profile"]
+    from repro.core import profile_sensitivity
+    cfg, params, data = _trained_small_lm()
+    calib_stream = MarkovStream(cfg.vocab_size, batch=32, seq=128, seed=11)
+    calib = {k: jnp.asarray(v)
+             for k, v in calib_stream.batch_at(900).items()}
+    prof = profile_sensitivity(
+        params, cfg, calib, widths=(2, 3, 4),
+        qcfg=QuantConfig(bits=4, iters=8, precondition="fixed"),
+        arch="small-lm")
+    _E2E_CACHE["profile"] = prof
+    return prof
+
+
+def _code_bpw(report):
+    """Code (checkpoint-stream) bits/weight of a PTQ report — the budget
+    axis of the precision search; fp layers count at their dtype width."""
+    total_b = sum((r.bits if r.bits is not None else r.bits_per_weight)
+                  * r.n_weights for r in report.values())
+    total_w = sum(r.n_weights for r in report.values())
+    return total_b / max(total_w, 1)
+
+
+def _eval_ppl(qp, cfg, data, n=16):
+    """Held-out ppl averaged over n eval batches — single-batch draws on
+    the toy model have ~0.3% noise, enough to scramble nearby frontier
+    points."""
+    return float(np.mean([
+        _ppl(qp, cfg, {k: jnp.asarray(v)
+                       for k, v in data.batch_at(901 + i).items()})
+        for i in range(n)]))
+
+
 def bench_table2_e2e_ppl():
     """Perplexity of a TRAINED small LM after sequential PTQ — the paper's
     Table 2 protocol end-to-end (synthetic corpus; calib 32x128 tokens).
@@ -591,29 +629,35 @@ def bench_speculative(out_path=None):
 # -------------------------------------------- mixed-precision policy
 
 
-def bench_mixed_precision_serving():
-    """Uniform 4-bit vs a 3-bit-MLP/4-bit-attention `PrecisionPolicy`,
-    reporting bits/weight and continuous-batching decode throughput side
-    by side (the Any-Precision/FineQuant-style serving question: how much
-    HBM does the mixed model give back, at what fidelity/throughput)."""
-    from repro.core import LayerRule, PrecisionPolicy
+def bench_mixed_precision_serving(out_path=None):
+    """Uniform 4-bit vs hand-mixed 3-bit-MLP/4-bit-attention vs the
+    SEARCHED policy (`core.bitsearch`, budget 3.0 code bits/weight),
+    reporting bits/weight, decode throughput and ppl side by side — the
+    serving-side counterpart of bench_policy_frontier's quality curve.
+    Merges a "mixed_precision" section into BENCH_serving.json."""
+    from pathlib import Path
+    from repro.core import (LayerRule, PrecisionPolicy, parse_policy,
+                            search_policy)
     from repro.models.quantized import (model_storage_report,
                                         quantize_model_ptq)
     from repro.serve.engine import GenRequest, ServeEngine
     cfg, params, data = _trained_small_lm()
     calib = {k: jnp.asarray(v) for k, v in data.batch_at(800).items()}
-    evalb = {k: jnp.asarray(v) for k, v in data.batch_at(901).items()}
     base = QuantConfig(bits=4, iters=4, precondition="fixed")
+    searched = search_policy(_sensitivity_profile(), budget=3.0)
     scenarios = (
         ("uniform4", PrecisionPolicy.uniform(base)),
         ("mixed_3mlp_4attn", PrecisionPolicy(
             qcfg=base, rules=(LayerRule(pattern="*/mlp/*", bits=3),))),
+        ("searched_b3.0", parse_policy(searched.spec, base)),
     )
     rng = np.random.default_rng(42)
     toks = data.batch_at(801)["tokens"]
     reqs = [GenRequest(prompt=toks[i % toks.shape[0],
                                    :int(rng.integers(6, 20))].tolist(),
                        max_new=8) for i in range(8)]
+    section = {"searched_spec": searched.spec,
+               "searched_budget_bits_per_weight": searched.budget}
     for name, policy in scenarios:
         qp, report = quantize_model_ptq(params, cfg, calib, policy=policy)
         rep = model_storage_report(qp, report)
@@ -621,10 +665,121 @@ def bench_mixed_precision_serving():
         engine.serve(reqs)      # warm: prefill jits per prompt length
         engine.serve(reqs)
         st = engine.last_stats
+        ppl = _eval_ppl(qp, cfg, data)
+        section[name] = {
+            "code_bits_per_weight": round(_code_bpw(report), 4),
+            "storage_bits_per_weight": round(rep["bits_per_weight"], 4),
+            "decode_tok_per_s": round(st["decode_tok_per_s"], 2),
+            "ppl": round(ppl, 4)}
         _row(f"mixed_policy_{name}", st["wall_s"] * 1e6,
              f"bits_per_weight={rep['bits_per_weight']:.2f} "
              f"decode_tok_s={st['decode_tok_per_s']:.1f} "
-             f"ppl={_ppl(qp, cfg, evalb):.3f}")
+             f"ppl={ppl:.3f}")
+    path = Path(out_path or Path(__file__).parent / "BENCH_serving.json")
+    _merge_bench_json(path, {"mixed_precision": section})
+    return section
+
+
+def bench_policy_frontier(out_path=None):
+    """Measured ppl-vs-bits/weight frontier of the precision search
+    (paper claim closed loop): the searched allocation at several
+    budgets vs uniform 2/3/4-bit vs the hand-mixed 3-MLP/4-attn policy,
+    each point quantized with the SAME sequential pipeline and evaluated
+    on the held-out batch. Also proves the spec round-trip in anger: the
+    headline searched policy is served twice — once straight from the
+    search (--auto-policy path) and once from its emitted spec string
+    (--policy path) — and the greedy tokens must be bitwise identical.
+    Writes BENCH_quality.json.
+
+    Budget semantics: code (checkpoint-stream) bits/weight. On this toy
+    model (n = 128/256 input columns) the fp32 codebooks add 1-4 b/w of
+    storage overhead that real-scale rows amortize away, so storage
+    bits/weight are recorded alongside but budgets are set on code bits
+    (see README "Automatic precision search")."""
+    from pathlib import Path
+    from repro.core import (LayerRule, PrecisionPolicy, parse_policy,
+                            search_policy)
+    from repro.core.formats import packed_linear_fmt
+    from repro.models.quantized import (model_storage_report,
+                                        quantize_model_ptq)
+    from repro.serve.engine import GenRequest, ServeEngine
+    cfg, params, data = _trained_small_lm()
+    calib_stream = MarkovStream(cfg.vocab_size, batch=32, seq=128, seed=11)
+    calib = {k: jnp.asarray(v)
+             for k, v in calib_stream.batch_at(900).items()}
+    base = QuantConfig(bits=4, iters=8, precondition="fixed")
+    prof = _sensitivity_profile()
+
+    points = {}
+
+    def run_point(name, policy, extra=None):
+        qp, report = quantize_model_ptq(params, cfg, calib, policy=policy)
+        rep = model_storage_report(qp, report)
+        pt = {"code_bits_per_weight": round(_code_bpw(report), 4),
+              "storage_bits_per_weight": round(rep["bits_per_weight"], 4),
+              "ppl": round(_eval_ppl(qp, cfg, data), 4)}
+        pt.update(extra or {})
+        points[name] = pt
+        _row(f"policy_frontier_{name}", 0.0,
+             f"code_bpw={pt['code_bits_per_weight']:.3f} "
+             f"storage_bpw={pt['storage_bits_per_weight']:.2f} "
+             f"ppl={pt['ppl']:.3f}")
+        return qp
+
+    for b in (2, 3, 4):
+        qcfg_b = QuantConfig(bits=b, iters=8, precondition="fixed")
+        run_point(f"uniform{b}", PrecisionPolicy.uniform(
+            qcfg_b, fmt=packed_linear_fmt(b)))
+    run_point("mixed_3mlp_4attn", PrecisionPolicy(
+        qcfg=base, rules=(LayerRule(pattern="*/mlp/*", bits=3),)))
+
+    searched = {}
+    for budget in (2.6, 3.0, 3.4):
+        res = search_policy(prof, budget=budget)
+        searched[budget] = res
+        run_point(f"searched_b{budget}", parse_policy(res.spec, base),
+                  extra={"budget": budget, "spec": res.spec,
+                         "predicted_err": round(res.total_err, 4)})
+
+    # spec round-trip in anger: auto-policy path vs --policy path must
+    # serve bitwise-identical greedy tokens (headline budget 3.0)
+    res = searched[3.0]
+    rng = np.random.default_rng(42)
+    toks = data.batch_at(801)["tokens"]
+    reqs = [GenRequest(prompt=toks[i % toks.shape[0],
+                                   :int(rng.integers(6, 20))].tolist(),
+                       max_new=8) for i in range(8)]
+    served = []
+    for policy in (parse_policy(res.spec, base),          # auto path
+                   parse_policy(str(res.spec), base)):    # emitted string
+        qp, _ = quantize_model_ptq(params, cfg, calib, policy=policy)
+        engine = ServeEngine(qp, cfg, max_len=64, n_slots=4)
+        served.append([r.tokens for r in engine.serve(reqs)])
+    tokens_identical = served[0] == served[1]
+    assert tokens_identical, "searched spec round-trip diverged!"
+
+    # acceptance: some searched point at budget <= 3.5 dominates
+    # uniform 3-bit (<= code bits/weight AND lower ppl)
+    uni3 = points["uniform3"]
+    dominating = [
+        n for n, pt in points.items()
+        if n.startswith("searched") and pt.get("budget", 99) <= 3.5
+        and pt["code_bits_per_weight"] <= uni3["code_bits_per_weight"]
+        and pt["ppl"] < uni3["ppl"]]
+    results = {"policy_frontier": {
+        "points": points,
+        "tokens_identical_auto_vs_policy": tokens_identical,
+        "searched_dominates_uniform3": dominating,
+        "eval": {"batches": "seed-11 stream, 16-batch mean @901..916",
+                 "calib": "32x128 @900", "iters": 8},
+    }}
+    _row("policy_frontier_acceptance", 0.0,
+         f"dominating={dominating} tokens_identical={tokens_identical}")
+    assert dominating, (
+        "no searched point dominates uniform 3-bit", points)
+    path = Path(out_path or Path(__file__).parent / "BENCH_quality.json")
+    _merge_bench_json(path, results)
+    return results
 
 
 def bench_chunk_sweep_mfu(out_path=None):
@@ -892,6 +1047,7 @@ _ALL_BENCHES = [
     "bench_chunked_prefill_ttft",
     "bench_speculative",
     "bench_mixed_precision_serving",
+    "bench_policy_frontier",
     "bench_chunk_sweep_mfu",
     "bench_degradation",
     "bench_prefix_cache",

@@ -4,14 +4,23 @@ then run a mixed-precision `PrecisionPolicy` (3-bit MLPs / 4-bit attention)
 through the same pipeline.
 
     PYTHONPATH=src python examples/quantize_llm.py
+    PYTHONPATH=src python examples/quantize_llm.py --report-out report.json
 """
+import argparse
 import dataclasses
 import tempfile
 
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_config
-from repro.core import LayerRule, PrecisionPolicy, QuantConfig
+from repro.core import LayerRule, PrecisionPolicy, QuantConfig, save_report
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--report-out", default=None, metavar="JSON",
+                help="write the mixed-precision pass's per-layer "
+                     "LayerQuantReport dict as JSON (inspectable offline; "
+                     "feeds bitsearch warm starts)")
+cli = ap.parse_args()
 from repro.data.synthetic import MarkovStream
 from repro.models import forward_logits
 from repro.models.quantized import model_storage_report, quantize_model_ptq
@@ -64,3 +73,8 @@ print(f"mixed 3-bit-mlp/4-bit-attn: ppl {ppl(qp, cfg, evalb):7.3f}   "
 for name, r in list(rep["per_layer"].items())[:7]:
     print(f"  {name:24s} {r['bits']}-bit {r['fmt']:12s} "
           f"{r['bits_per_weight']:5.2f} b/w  err {r['err']:.4f}")
+if cli.report_out:
+    save_report(report, cli.report_out,
+                extra={"policy": "*/mlp/*=3", "method": "ganq",
+                       "bits_per_weight": rep["bits_per_weight"]})
+    print(f"per-layer report written to {cli.report_out}")

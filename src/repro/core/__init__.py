@@ -22,6 +22,11 @@ from .packing import (pack_nibbles, unpack_nibbles, pack_bits_np,
                       unpack_bits_np, storage_bytes)
 from .pipeline import (HCollector, quantize_linear, register_quantizer,
                        available_quantizers, SequentialPTQ)
+from .bitsearch import (PROVEN_WIDTHS, AllocGroup, AutoSpec, SearchResult,
+                        SensitivityProfile, allocation_groups, candidate_fmt,
+                        emit_policy_spec, escape_pattern, load_report,
+                        model_layer_names, parse_auto_spec,
+                        profile_sensitivity, save_report, search_policy)
 
 __all__ = [
     "QuantConfig", "QuantizedLinear", "QuantizedExperts", "QuantResult",
@@ -45,4 +50,9 @@ __all__ = [
     "storage_bytes",
     "HCollector", "quantize_linear", "register_quantizer",
     "available_quantizers", "SequentialPTQ",
+    "PROVEN_WIDTHS", "AllocGroup", "AutoSpec", "SearchResult",
+    "SensitivityProfile", "allocation_groups", "candidate_fmt",
+    "emit_policy_spec", "escape_pattern", "load_report",
+    "model_layer_names", "parse_auto_spec", "profile_sensitivity",
+    "save_report", "search_policy",
 ]

@@ -1,0 +1,626 @@
+"""Auto-precision search: sensitivity-profiled per-layer bit allocation
+that emits servable `--policy` specs (ROADMAP item 5).
+
+Closes the quality/speed loop training-free, in three stages:
+
+1. **Sensitivity profiler** (`profile_sensitivity`): one
+   `quantize_model_ptq` pass per candidate width — the per-layer
+   `LayerQuantReport` dict that pass already produces IS the profile
+   entry, so error/storage accounting can never drift from what the
+   quantizer actually emitted. Entries tabulate
+   `(group, width) -> (err, bits/weight, weight-bytes-read)`, the last
+   from `kernels.ops.vmem_plan` (codes + codebook stream bytes).
+
+2. **Budget-constrained allocator** (`search_policy`):
+   sensitivity-ranked greedy (best err-reduction per cost at every
+   step) followed by a Lagrangian refinement pass (bisect the price
+   lambda; each group independently picks argmin(err + lambda*cost));
+   the better of the two solutions is topped up greedily with any
+   remaining slack. Cost modes: "bits" (code bits/weight — the
+   checkpoint-stream accounting, default), "storage" (includes
+   codebooks/sparse payloads, i.e. `LayerQuantReport.bits_per_weight`),
+   "bytes" (decode-time HBM bytes from `vmem_plan`), "measured"
+   (autotuner-cache microseconds via `kernels.tune.lookup`, normalized
+   to a bits/weight-equivalent scale, byte-cost fallback for untimed
+   shapes; `roofline.analysis.compiled_cost` gives the same signal for
+   whole-graph costs).
+
+3. **Spec emitter** (`emit_policy_spec`): serializes an allocation to
+   the exact string `parse_policy` accepts, with `kv=`/`draft=`
+   passthrough. Guarantee: `parse_policy(emit(alloc))` resolves every
+   capture name AND every param-tree path to the original allocation
+   (tests/test_bitsearch.py proves this over all registered configs).
+   fnmatch metacharacters in layer names are escaped ("*" -> "[*]"),
+   and literal rules are anchored by wrapping their first character in
+   a character class ("layer3/..." -> "[l]ayer3/...") so
+   `parse_policy` treats them as full-path fnmatch patterns rather
+   than substring/segment shorthands.
+
+Allocation granularity respects the stacking constraint
+(models/transformer.py): pattern-unit layers are stacked per position,
+so unit layers are grouped by (position-in-pattern, sublayer) across
+all units; tail layers are free per layer; whisper stacks each side
+whole, so enc/dec group per (side, sublayer).
+
+Candidate widths are gated on kernel-parity proof: {2, 3, 4} serve
+packed bitstream containers, {5, 6, 8} the unpacked byte stream
+(tests/test_kernels_bitstream.py covers all six); anything else is
+rejected with a ValueError naming the proven set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .formats import packed_linear_fmt
+from .policy import LayerQuantReport, LayerRule, PrecisionPolicy
+from .types import QuantConfig
+
+PROFILE_SCHEMA = 1
+#: widths with committed kernel parity tests — the allocator's universe
+PROVEN_WIDTHS = (2, 3, 4, 5, 6, 8)
+_PACKED_WIDTHS = (2, 3, 4)
+FP_KEY = "fp"
+
+
+def candidate_fmt(bits: int) -> str:
+    """Serving format for a candidate width: true-bitstream packed
+    containers for {2, 3, 4}, the unpacked byte stream for {5, 6, 8}.
+    Unproven widths are rejected — the allocator must never emit a spec
+    the kernels have no parity proof for."""
+    if bits not in PROVEN_WIDTHS:
+        raise ValueError(
+            f"{bits}-bit has no kernel parity proof; proven widths are "
+            f"{sorted(PROVEN_WIDTHS)} (tests/test_kernels_bitstream.py)")
+    return packed_linear_fmt(bits) if bits in _PACKED_WIDTHS else "lut"
+
+
+# ------------------------------------------------------------- escaping
+
+def escape_pattern(name: str) -> str:
+    """Escape a literal layer name into a `parse_policy` pattern that
+    full-matches exactly that name.
+
+    fnmatch metacharacters are neutralized via character classes
+    ("*" -> "[*]", "?" -> "[?]", "[" -> "[[]"); if the result contains
+    no "[", the first character is wrapped in one ("layer3/mlp/w_up" ->
+    "[l]ayer3/mlp/w_up") — `parse_policy` would otherwise treat a bare
+    subpath as a substring pattern (wrapping it in "*...*"), under
+    which "layer3/mlp/w_up" also matches "layer13/mlp/w_up".
+    """
+    if "," in name or "=" in name:
+        raise ValueError(f"layer name {name!r} cannot be spelled in the "
+                         f"policy spec grammar (contains ',' or '=')")
+    out = []
+    for c in name:
+        if c == "[":
+            out.append("[[]")
+        elif c in "*?":
+            out.append(f"[{c}]")
+        else:
+            out.append(c)
+    pat = "".join(out)
+    if "[" not in pat:
+        pat = f"[{pat[0]}]{pat[1:]}"
+    return pat
+
+
+# ---------------------------------------------------- allocation groups
+
+@dataclasses.dataclass
+class AllocGroup:
+    """One independently-allocatable precision decision.
+
+    Stacked positions must be depth-uniform (containers with different
+    widths cannot stack into one leaf), so a group spans every layer
+    that shares the stacked leaf."""
+
+    key: str                 # stable id, e.g. "unit0:attn/wq"
+    suffix: str              # sublayer subpath, e.g. "attn/wq"
+    members: List[str]       # capture names ("layer3/attn/wq", ...)
+    param_paths: List[str]   # param-tree literals ("stack/units/0/attn/wq")
+
+
+def _decoder_layer_specs(cfg) -> List[Tuple[int, str, List[str]]]:
+    """[(layer index, kind, [sublayer suffixes])] for decoder stacks."""
+    from repro.models.quantized import QUANT_MOE, block_linear_specs
+    from repro.models.transformer import pattern_split
+    pattern, _, _ = pattern_split(cfg)
+    out = []
+    for li in range(cfg.n_layers):
+        kind = pattern[li % len(pattern)]
+        sfx = [cap for _, cap in block_linear_specs(kind, cfg)]
+        if kind in ("attn", "local") and cfg.n_experts:
+            sfx += list(QUANT_MOE)
+        out.append((li, kind, sfx))
+    return out
+
+
+def model_layer_names(cfg) -> List[str]:
+    """Every quantizable capture name of a config, in pipeline order."""
+    if cfg.is_encoder_decoder:
+        from repro.models.quantized import _BLOCK_LINEARS, _XATTN_LINEARS
+        names = []
+        for side, n in (("enc", cfg.n_encoder_layers), ("dec", cfg.n_layers)):
+            specs = _BLOCK_LINEARS["attn"] + _BLOCK_LINEARS["mlp_gelu"] + (
+                _XATTN_LINEARS if side == "dec" else [])
+            for i in range(n):
+                names += [f"{side}{i}/{cap}" for _, cap in specs]
+        return names
+    return [f"layer{li}/{s}" for li, _, sfx in _decoder_layer_specs(cfg)
+            for s in sfx]
+
+
+def allocation_groups(cfg) -> List[AllocGroup]:
+    """Group capture names into independently-allocatable units under
+    the stacking constraint."""
+    groups: List[AllocGroup] = []
+    if cfg.is_encoder_decoder:
+        from repro.models.quantized import _BLOCK_LINEARS, _XATTN_LINEARS
+        for side, n in (("enc", cfg.n_encoder_layers), ("dec", cfg.n_layers)):
+            specs = _BLOCK_LINEARS["attn"] + _BLOCK_LINEARS["mlp_gelu"] + (
+                _XATTN_LINEARS if side == "dec" else [])
+            for _, cap in specs:
+                groups.append(AllocGroup(
+                    key=f"{side}:{cap}", suffix=cap,
+                    members=[f"{side}{i}/{cap}" for i in range(n)],
+                    param_paths=[f"stacks/{side}/{cap}"]))
+        return groups
+    from repro.models.transformer import pattern_split
+    pattern, n_units, _ = pattern_split(cfg)
+    P = len(pattern)
+    specs = _decoder_layer_specs(cfg)
+    by_pos: Dict[Tuple[int, str], AllocGroup] = {}
+    for li, _, sfx in specs:
+        if li < n_units * P:                       # stacked unit layer
+            pos = li % P
+            for s in sfx:
+                g = by_pos.get((pos, s))
+                if g is None:
+                    g = AllocGroup(key=f"unit{pos}:{s}", suffix=s,
+                                   members=[],
+                                   param_paths=[f"stack/units/{pos}/{s}"])
+                    by_pos[(pos, s)] = g
+                    groups.append(g)
+                g.members.append(f"layer{li}/{s}")
+        else:                                      # tail layer: free
+            ti = li - n_units * P
+            for s in sfx:
+                groups.append(AllocGroup(
+                    key=f"tail{ti}:{s}", suffix=s,
+                    members=[f"layer{li}/{s}"],
+                    param_paths=[f"stack/tail/{ti}/{s}"]))
+    return groups
+
+
+# -------------------------------------------------- sensitivity profile
+
+@dataclasses.dataclass
+class SensitivityProfile:
+    """`(group, width) -> cost/error` table plus the group structure it
+    was measured over; JSON round-trips for offline inspection and
+    warm-started searches."""
+
+    arch: str
+    groups: Dict[str, Dict]           # key -> {suffix, members,
+                                      #   param_paths, n_weights, shape}
+    entries: Dict[str, Dict[str, Dict]]   # key -> width key -> {err,
+                                      #   bits_per_weight, fmt, bits,
+                                      #   weight_bytes}
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def widths(self) -> List[str]:
+        ws = set()
+        for per in self.entries.values():
+            ws |= set(per)
+        return sorted(ws, key=lambda w: -1 if w == FP_KEY else int(w))
+
+    def total_weights(self) -> int:
+        return sum(g["n_weights"] for g in self.groups.values())
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"schema": PROFILE_SCHEMA, "arch": self.arch,
+                       "groups": self.groups, "entries": self.entries,
+                       "meta": self.meta}, f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "SensitivityProfile":
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("schema") != PROFILE_SCHEMA:
+            raise ValueError(f"unsupported profile schema "
+                             f"{d.get('schema')!r} in {path}")
+        return cls(arch=d.get("arch", ""), groups=d["groups"],
+                   entries=d["entries"], meta=d.get("meta", {}))
+
+
+def _stream_bytes(m: int, n: int, bits: int, fmt: str, decode_p: int,
+                  n_weights: int) -> float:
+    """Decode-time HBM bytes for one group's weights (codes + codebook
+    stream), scaled to the group's total weight count (covers stacked
+    units and MoE expert leading dims)."""
+    from repro.kernels.ops import vmem_plan
+    plan = vmem_plan(m, n, decode_p, bits, fmt=fmt)
+    per_layer = plan["codes_bytes"] + plan["lut_bytes"]
+    return per_layer * (n_weights / (m * n))
+
+
+def profile_sensitivity(params, cfg, batch, widths: Sequence[int] = (2, 3, 4),
+                        qcfg: Optional[QuantConfig] = None,
+                        method: str = "ganq", ctx=None,
+                        include_fp: bool = True, decode_p: int = 8,
+                        warm: Optional[SensitivityProfile] = None,
+                        arch: str = "") -> SensitivityProfile:
+    """Quantize the model once per candidate width and tabulate the
+    per-group (err, bits/weight, weight-bytes-read) surface.
+
+    Reuses `quantize_model_ptq`'s report path: each width is one
+    ordinary uniform-policy PTQ pass whose `LayerQuantReport` dict is
+    aggregated per allocation group. `warm=` (a previously saved
+    profile over the same group structure) skips widths it already
+    covers, so a saved profile makes re-search free."""
+    from repro.models.quantized import quantize_model_ptq
+    from repro.sharding.context import LOCAL
+    if ctx is None:
+        ctx = LOCAL
+    qcfg = qcfg or QuantConfig(bits=4, iters=4, precondition="fixed")
+    groups = allocation_groups(cfg)
+    gdesc: Dict[str, Dict] = {
+        g.key: {"suffix": g.suffix, "members": g.members,
+                "param_paths": g.param_paths, "n_weights": 0, "shape": None}
+        for g in groups}
+    by_member = {m: g.key for g in groups for m in g.members}
+    entries: Dict[str, Dict[str, Dict]] = {g.key: {} for g in groups}
+
+    warm_ok = (warm is not None
+               and set(warm.groups) == set(gdesc)
+               and all(warm.groups[k]["members"] == gdesc[k]["members"]
+                       for k in gdesc))
+    if warm_ok:
+        for k, per in warm.entries.items():
+            entries[k].update(per)
+        for k in gdesc:
+            if warm.groups[k].get("n_weights"):
+                gdesc[k]["n_weights"] = warm.groups[k]["n_weights"]
+                gdesc[k]["shape"] = warm.groups[k]["shape"]
+
+    def ingest(report: Dict[str, LayerQuantReport], wkey: str,
+               fmt: str, bits: Optional[int]) -> None:
+        agg: Dict[str, Dict] = {}
+        for name, rep in report.items():
+            gkey = by_member.get(name)
+            if gkey is None:
+                continue
+            a = agg.setdefault(gkey, {"err": 0.0, "bits": 0.0, "w": 0})
+            a["err"] += float(rep.err)
+            a["bits"] += rep.bits_per_weight * rep.n_weights
+            a["w"] += rep.n_weights
+            if gdesc[gkey]["shape"] is None and rep.shape is not None:
+                gdesc[gkey]["shape"] = list(rep.shape)
+        for gkey, a in agg.items():
+            if not gdesc[gkey]["n_weights"]:
+                gdesc[gkey]["n_weights"] = a["w"]
+            m, n = gdesc[gkey]["shape"] or (1, 1)
+            if bits is None:
+                wb = a["bits"] / a["w"] / 8.0 * a["w"]
+            else:
+                wb = _stream_bytes(m, n, bits, fmt, decode_p, a["w"])
+            entries[gkey][wkey] = {
+                "err": a["err"], "bits_per_weight": a["bits"] / a["w"],
+                "fmt": fmt if bits is not None else "dense",
+                "bits": bits, "weight_bytes": wb}
+
+    for b in widths:
+        wkey = str(int(b))
+        fmt = candidate_fmt(int(b))
+        if all(wkey in entries[g.key] for g in groups):
+            continue
+        pol = PrecisionPolicy(
+            qcfg=dataclasses.replace(qcfg, bits=int(b)), method=method,
+            fmt=fmt)
+        _, report = quantize_model_ptq(params, cfg, batch, ctx=ctx,
+                                       policy=pol)
+        ingest(report, wkey, fmt, int(b))
+
+    if include_fp and not all(FP_KEY in entries[g.key] for g in groups):
+        pol = PrecisionPolicy(qcfg=qcfg, method=method, fmt="lut",
+                              rules=(LayerRule(pattern="*", keep_fp=True),))
+        _, report = quantize_model_ptq(params, cfg, batch, ctx=ctx,
+                                       policy=pol)
+        ingest(report, FP_KEY, "dense", None)
+
+    return SensitivityProfile(
+        arch=arch, groups=gdesc, entries=entries,
+        meta={"method": method, "decode_p": decode_p,
+              "widths": [int(b) for b in widths], "include_fp": include_fp,
+              "qcfg_bits": qcfg.bits, "qcfg_iters": qcfg.iters})
+
+
+# ------------------------------------------------------------ allocator
+
+@dataclasses.dataclass
+class SearchResult:
+    choice: Dict[str, str]       # group key -> width key
+    spec: str                    # servable --policy string
+    bits_per_weight: float       # achieved, code-bits accounting
+    storage_bits_per_weight: float   # achieved, incl. codebooks
+    total_err: float             # summed layer objective
+    budget: float
+    cost_mode: str
+    predicted: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def _group_costs(profile: SensitivityProfile, cost: str,
+                 widths: Optional[Sequence[int]],
+                 include_fp: bool) -> Dict[str, Dict[str, float]]:
+    """cost[group][width key] in *bits* (all modes normalized so a
+    budget is always expressed as bits/weight)."""
+    from repro.kernels import tune
+    decode_p = int(profile.meta.get("decode_p", 8))
+    allowed = None
+    if widths is not None:
+        for b in widths:
+            candidate_fmt(int(b))              # reject unproven widths
+        allowed = {str(int(b)) for b in widths}
+    costs: Dict[str, Dict[str, float]] = {}
+    measured: Dict[Tuple[str, str], float] = {}
+    for gkey, per in profile.entries.items():
+        w = profile.groups[gkey]["n_weights"]
+        shape = profile.groups[gkey]["shape"] or (1, 1)
+        costs[gkey] = {}
+        for wkey, e in per.items():
+            if wkey == FP_KEY:
+                if not include_fp:
+                    continue
+            elif allowed is not None and wkey not in allowed:
+                continue
+            if cost == "bits":
+                bpw = (e["bits_per_weight"] if e["bits"] is None
+                       else float(e["bits"]))
+                c = bpw * w
+            elif cost == "storage":
+                c = e["bits_per_weight"] * w
+            elif cost in ("bytes", "measured"):
+                c = 8.0 * e["weight_bytes"]
+                if cost == "measured" and e["bits"] is not None:
+                    m, n = shape
+                    plan = tune.lookup(int(m), int(n), decode_p,
+                                       int(e["bits"]), e["fmt"])
+                    if plan is not None and plan.us > 0:
+                        measured[(gkey, wkey)] = plan.us * (
+                            w / (int(m) * int(n)))
+            else:
+                raise ValueError(f"unknown cost mode {cost!r}; use "
+                                 f"bits|storage|bytes|measured")
+            costs[gkey][wkey] = c
+        if not costs[gkey]:
+            raise ValueError(f"group {gkey!r} has no candidate widths "
+                             f"under widths={widths} include_fp="
+                             f"{include_fp}")
+    if cost == "measured" and measured:
+        # normalize tuner microseconds onto the byte-cost scale so timed
+        # and untimed (byte-fallback) groups share one budget axis
+        ref_c = sum(costs[g][k] for (g, k) in measured)
+        ref_us = sum(measured.values())
+        scale = ref_c / ref_us if ref_us > 0 else 0.0
+        for (g, k), us in measured.items():
+            if scale > 0:
+                costs[g][k] = us * scale
+    return costs
+
+
+def _err_of(profile: SensitivityProfile, gkey: str, wkey: str) -> float:
+    return float(profile.entries[gkey][wkey]["err"])
+
+
+def search_policy(profile: SensitivityProfile, budget: float,
+                  cost: str = "bits",
+                  widths: Optional[Sequence[int]] = None,
+                  include_fp: bool = True, kv: Optional[str] = None,
+                  draft: int = 0) -> SearchResult:
+    """Pick per-group widths minimizing summed layer error under a
+    bits/weight budget.
+
+    Greedy phase: start every group at its cheapest candidate, then
+    repeatedly apply the affordable upgrade with the best error
+    reduction per extra bit. Lagrangian refinement: bisect a price
+    lambda where each group independently picks
+    argmin(err + lambda * cost); the cheapest feasible pricing is kept
+    if it beats greedy, and any remaining slack is consumed by one more
+    greedy pass. Infeasible budgets raise with the minimum achievable
+    bits/weight."""
+    costs = _group_costs(profile, cost, widths, include_fp)
+    total_w = profile.total_weights()
+    budget_bits = budget * total_w
+
+    def total_cost(ch):
+        return sum(costs[g][k] for g, k in ch.items())
+
+    def total_err(ch):
+        return sum(_err_of(profile, g, k) for g, k in ch.items())
+
+    def greedy_fill(ch):
+        """Upgrade toward lower error while the budget allows."""
+        while True:
+            slack = budget_bits - total_cost(ch)
+            best = None
+            for g, cur in ch.items():
+                ce, cc = _err_of(profile, g, cur), costs[g][cur]
+                for k, kc in costs[g].items():
+                    ke = _err_of(profile, g, k)
+                    if ke >= ce or kc - cc > slack:
+                        continue
+                    gain = (ce - ke) / max(kc - cc, 1e-9)
+                    if best is None or gain > best[0]:
+                        best = (gain, g, k)
+            if best is None:
+                return ch
+            ch[best[1]] = best[2]
+
+    # -- greedy from the cheapest feasible point
+    choice = {g: min(per, key=lambda k: (per[k], _err_of(profile, g, k)))
+              for g, per in costs.items()}
+    min_cost = total_cost(choice)
+    if min_cost > budget_bits + 1e-6:
+        raise ValueError(
+            f"budget {budget:g} bits/weight infeasible: minimum "
+            f"achievable is {min_cost / total_w:.3f} with the given "
+            f"candidate set")
+    greedy = greedy_fill(dict(choice))
+
+    # -- Lagrangian pricing, bisected to the cheapest feasible lambda
+    def priced(lam):
+        return {g: min(per, key=lambda k: (
+            _err_of(profile, g, k) + lam * per[k], per[k]))
+            for g, per in costs.items()}
+
+    lo, hi = 0.0, 1.0
+    for _ in range(60):                      # find an upper bracket
+        if total_cost(priced(hi)) <= budget_bits:
+            break
+        hi *= 4.0
+    lagr = None
+    if total_cost(priced(hi)) <= budget_bits:
+        for _ in range(64):
+            mid = 0.5 * (lo + hi)
+            if total_cost(priced(mid)) <= budget_bits:
+                hi = mid
+            else:
+                lo = mid
+        lagr = greedy_fill(priced(hi))
+
+    best = greedy
+    if lagr is not None and (total_err(lagr), total_cost(lagr)) < (
+            total_err(best), total_cost(best)):
+        best = lagr
+
+    spec = emit_policy_spec(profile, best, kv=kv, draft=draft)
+    code_bits = 0.0
+    storage_bits = 0.0
+    for g, k in best.items():
+        e = profile.entries[g][k]
+        w = profile.groups[g]["n_weights"]
+        code_bits += (e["bits_per_weight"] if e["bits"] is None
+                      else float(e["bits"])) * w
+        storage_bits += e["bits_per_weight"] * w
+    return SearchResult(
+        choice=best, spec=spec,
+        bits_per_weight=code_bits / total_w,
+        storage_bits_per_weight=storage_bits / total_w,
+        total_err=total_err(best), budget=budget, cost_mode=cost,
+        predicted={"cost_bits_per_weight": total_cost(best) / total_w})
+
+
+# -------------------------------------------------------------- emitter
+
+def _choice_value(entry: Dict) -> str:
+    if entry["bits"] is None:
+        return FP_KEY
+    return f"{entry['bits']}@{entry['fmt']}"
+
+
+def emit_policy_spec(profile: SensitivityProfile,
+                     choice: Dict[str, str], kv: Optional[str] = None,
+                     draft: int = 0) -> str:
+    """Serialize an allocation to the exact `--policy` grammar.
+
+    Compaction: when every group sharing a sublayer suffix picked the
+    same value, one `*/suffix=value` wildcard covers them all (it
+    matches capture names and param-tree paths alike — fnmatch `*`
+    crosses `/`). Disagreeing suffixes fall back to escaped literal
+    rules for every member name plus the groups' param-tree paths, so
+    `abstract_quantize` (dry-run) resolves identically to the live
+    pipeline. Literal rules precede wildcards; wildcard suffixes are
+    ordered longest-first so e.g. `*/xattn/wq` wins over `*/attn/wq`.
+    """
+    by_suffix: Dict[str, List[str]] = {}
+    for gkey in choice:
+        by_suffix.setdefault(profile.groups[gkey]["suffix"], []).append(gkey)
+
+    literal, wildcard = [], []
+    for suffix, gkeys in by_suffix.items():
+        vals = {_choice_value(profile.entries[g][choice[g]]) for g in gkeys}
+        if len(vals) == 1:
+            wildcard.append((suffix, vals.pop()))
+            continue
+        for g in gkeys:
+            val = _choice_value(profile.entries[g][choice[g]])
+            for name in (profile.groups[g]["members"]
+                         + profile.groups[g]["param_paths"]):
+                literal.append((escape_pattern(name), val))
+    wildcard.sort(key=lambda sv: (-len(sv[0]), sv[0]))
+    parts = [f"{p}={v}" for p, v in literal]
+    parts += [f"*/{s}={v}" for s, v in wildcard]
+    if kv:
+        parts.append(f"kv={kv}")
+    if draft:
+        parts.append(f"draft={draft}")
+    return ",".join(parts)
+
+
+# -------------------------------------------------------- CLI front end
+
+@dataclasses.dataclass
+class AutoSpec:
+    budget: float
+    cost: str = "bits"
+    widths: Optional[Tuple[int, ...]] = None
+    include_fp: bool = True
+    kv: Optional[str] = None
+    draft: int = 0
+
+
+def parse_auto_spec(spec: str) -> AutoSpec:
+    """Parse `--auto-policy` strings:
+    ``budget=3.4[,cost=bits|storage|bytes|measured][,cands=2+3+4]
+    [,fp=0|1][,kv=<fmt>][,draft=N]`` (candidate widths are
+    "+"-separated because "," separates entries)."""
+    budget = None
+    kw: Dict[str, object] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise ValueError(f"auto-policy entry {part!r} is not key=value")
+        key, val = part.split("=", 1)
+        key, val = key.strip(), val.strip()
+        if key == "budget":
+            budget = float(val)
+        elif key == "cost":
+            kw["cost"] = val
+        elif key == "cands":
+            kw["widths"] = tuple(int(b) for b in val.split("+") if b)
+        elif key == "fp":
+            kw["include_fp"] = bool(int(val))
+        elif key == "kv":
+            kw["kv"] = val
+        elif key == "draft":
+            kw["draft"] = int(val)
+        else:
+            raise ValueError(f"unknown auto-policy key {key!r}")
+    if budget is None:
+        raise ValueError("auto-policy spec needs budget=<bits/weight>")
+    return AutoSpec(budget=budget, **kw)
+
+
+# ----------------------------------------------------------- report IO
+
+def save_report(report: Dict[str, LayerQuantReport], path: str,
+                extra: Optional[Dict] = None) -> None:
+    """Serialize a per-layer `LayerQuantReport` dict to JSON."""
+    out = {"schema": 1,
+           "layers": {name: rep.to_dict() for name, rep in report.items()}}
+    if extra:
+        out.update(extra)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+
+
+def load_report(path: str) -> Dict[str, LayerQuantReport]:
+    with open(path) as f:
+        d = json.load(f)
+    return {name: LayerQuantReport.from_dict(rep)
+            for name, rep in d["layers"].items()}

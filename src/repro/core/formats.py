@@ -423,6 +423,26 @@ class LUT3PackedFormat(_PackedLUT):
         return unpack_bits(codes, self.stream_bits, n)
 
 
+@register_format
+class LUT2PackedFormat(_PackedLUT):
+    """True 2-bit bitstream: codes (m, ceil(n/4)) uint8 — four codes per
+    byte, streamed at 1/4 B/weight. Same phase-decomposed kernel as
+    'lut3_packed' (sb=2 -> g=1 byte plane, ph=4 phases), so the most
+    aggressive width the precision search can allocate streams at its
+    true container width too."""
+
+    name = "lut2_packed"
+    bits = 2
+    stream_bits = 2
+    expert_fmt = "experts2_packed"
+
+    def pack_codes(self, codes):
+        return pack_bits(codes, self.stream_bits)
+
+    def unpack_codes(self, codes, n):
+        return unpack_bits(codes, self.stream_bits, n)
+
+
 # ----------------------------------------------------------------- nested
 
 class _NestedLUT(_LUTBase):
@@ -624,6 +644,23 @@ class Experts3PackedFormat(_ExpertsBase):
         return unpack_bits(codes, self.stream_bits, n)
 
 
+@register_format
+class Experts2PackedFormat(_ExpertsBase):
+    """Stacked per-expert 2-bit bitstream: codes (E, m, ceil(n/4)) —
+    'lut2_packed' for MoE expert weights."""
+
+    name = "experts2_packed"
+    packed = True
+    stream_bits = 2
+    expert_fmt = "experts2_packed"
+
+    def pack_codes(self, codes):
+        return pack_bits(codes, self.stream_bits)
+
+    def unpack_codes(self, codes, n):
+        return unpack_bits(codes, self.stream_bits, n)
+
+
 class _NestedExperts(_ExpertsBase):
     """Stacked per-expert nested bitstream — `lut4_nested`'s MoE
     counterpart: codes (E, m, hi+lo cols), per-expert sorted codebooks.
@@ -696,9 +733,10 @@ def nested_linear_fmt(draft_bits: int) -> str:
 
 
 def packed_linear_fmt(bits: int) -> str:
-    """The packed linear format for a bit width. 3-bit has its own true
-    bitstream container; other widths <= 4 ride the 4-bit nibble
-    container."""
+    """The packed linear format for a bit width. 2- and 3-bit have their
+    own true bitstream containers; 4-bit rides the nibble container."""
+    if bits == 2:
+        return "lut2_packed"
     if bits == 3:
         return "lut3_packed"
     if bits <= 4:

@@ -214,6 +214,23 @@ class LayerQuantReport:
     bits: Optional[int]          # codebook bit width; None = kept fp
     fmt: str
     method: str
+    n_weights: int = 0           # weight count (0 on pre-existing reports)
+    shape: Optional[Tuple[int, int]] = None   # (m=out, n=in) GANQ layout
 
     def __float__(self) -> float:
         return float(self.err)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if self.shape is not None:
+            d["shape"] = list(self.shape)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LayerQuantReport":
+        d = dict(d)
+        if d.get("shape") is not None:
+            d["shape"] = tuple(d["shape"])
+        return cls(**{k: d[k] for k in
+                      ("err", "bits_per_weight", "bits", "fmt", "method",
+                       "n_weights", "shape") if k in d})

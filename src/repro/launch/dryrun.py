@@ -104,8 +104,38 @@ def main(argv=None) -> int:
     ap.add_argument("--policy", default=None,
                     help="mixed-precision spec for --quantized-serve "
                          "(core.policy.parse_policy syntax)")
+    ap.add_argument("--auto-policy", default=None, metavar="SPEC",
+                    help="search a precision policy from a saved "
+                         "sensitivity profile (needs --profile) and "
+                         "dry-run the emitted spec: 'budget=3.4[,cost=..."
+                         "][,cands=2+3+4][,fp=0][,kv=..][,draft=N]'; "
+                         "implies --quantized-serve")
+    ap.add_argument("--profile", default=None, metavar="JSON",
+                    help="sensitivity profile for --auto-policy (written "
+                         "by serve.py --profile-out); the search runs "
+                         "offline, no weights or calibration needed")
     ap.add_argument("--out", default=None, help="append JSONL here")
     args = ap.parse_args(argv)
+
+    if args.auto_policy:
+        if not args.profile:
+            ap.error("--auto-policy needs --profile (saved sensitivity "
+                     "profile; dry-run has no weights to measure one)")
+        if args.policy:
+            ap.error("--auto-policy and --policy are mutually exclusive")
+        from repro.core import (SensitivityProfile, parse_auto_spec,
+                                search_policy)
+        auto = parse_auto_spec(args.auto_policy)
+        prof = SensitivityProfile.load(args.profile)
+        if args.arch and prof.arch and prof.arch != args.arch:
+            print(f"warning: profile measured on {prof.arch!r}, "
+                  f"dry-running {args.arch!r}", file=sys.stderr)
+        res = search_policy(prof, auto.budget, cost=auto.cost,
+                            widths=auto.widths, include_fp=auto.include_fp,
+                            kv=auto.kv, draft=auto.draft)
+        print(f"auto-policy spec: {res.spec}", file=sys.stderr)
+        args.policy = res.spec
+        args.quantized_serve = True
 
     archs = [args.arch] if args.arch else list_archs()
     shapes = [args.shape] if args.shape else list(SHAPES)

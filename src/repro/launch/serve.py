@@ -8,6 +8,12 @@ Mixed-precision policy (3-bit MLPs, 4-bit attention, fp-kept w_down):
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
       --policy "mlp=3,attn=4" --requests 8
 
+Automatic precision search (per-width sensitivity profile -> budgeted
+per-layer allocation -> servable spec; the printed spec passed back via
+--policy reproduces the run token-for-token):
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
+      --auto-policy "budget=3.0" --profile-out prof.json --requests 8
+
 Paged KV cache (slot count decoupled from max_len; pool sized in pages):
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \\
       --method none --kv-format paged --page-size 16 --requests 8
@@ -52,6 +58,28 @@ def main(argv=None) -> int:
                     help="per-layer precision spec, e.g. 'mlp=3,attn=4,"
                          "head=fp' or 'mlp=3@lut3_packed' (see "
                          "core.policy.parse_policy); default uniform --bits")
+    ap.add_argument("--auto-policy", default=None, metavar="SPEC",
+                    help="search a per-layer precision policy under a "
+                         "bits/weight budget and serve it: 'budget=3.4"
+                         "[,cost=bits|storage|bytes|measured]"
+                         "[,cands=2+3+4][,fp=0][,kv=<fmt>][,draft=N]' "
+                         "(core.bitsearch); prints the emitted spec, "
+                         "which served via --policy reproduces this run "
+                         "token-for-token")
+    ap.add_argument("--profile", default=None, metavar="JSON",
+                    help="warm-start --auto-policy from a saved "
+                         "sensitivity profile (skips per-width PTQ "
+                         "passes it already covers)")
+    ap.add_argument("--profile-out", default=None, metavar="JSON",
+                    help="save the sensitivity profile measured by "
+                         "--auto-policy")
+    ap.add_argument("--report-out", default=None, metavar="JSON",
+                    help="write the per-layer LayerQuantReport dict of "
+                         "the quantization pass (err, bits/weight, fmt, "
+                         "method per layer) as JSON")
+    ap.add_argument("--tokens-out", default=None, metavar="JSON",
+                    help="write served greedy tokens per request as JSON "
+                         "(closed-loop mode) for offline identity checks")
     ap.add_argument("--lut-backend", default="xla",
                     choices=["xla", "pallas"],
                     help="LUT-matmul backend (ExecPolicy threaded through "
@@ -193,6 +221,33 @@ def main(argv=None) -> int:
     params = init_params(jax.random.PRNGKey(0), cfg)
     data = MarkovStream(cfg.vocab_size, batch=4, seq=32, seed=0)
     qcfg = QuantConfig(bits=args.bits, iters=4, precondition="fixed")
+    if args.auto_policy:
+        if args.policy:
+            ap.error("--auto-policy and --policy are mutually exclusive "
+                     "(serve the emitted spec via --policy instead)")
+        if args.method == "none":
+            ap.error("--auto-policy needs a quantizing --method")
+        from repro.core import (SensitivityProfile, parse_auto_spec,
+                                profile_sensitivity, search_policy)
+        auto = parse_auto_spec(args.auto_policy)
+        warm = SensitivityProfile.load(args.profile) if args.profile else None
+        calib = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+        prof = profile_sensitivity(
+            params, cfg, calib, widths=auto.widths or (2, 3, 4), qcfg=qcfg,
+            method=args.method, ctx=ctx, include_fp=auto.include_fp,
+            warm=warm, arch=args.arch)
+        if args.profile_out:
+            prof.save(args.profile_out)
+            print(f"sensitivity profile saved to {args.profile_out}")
+        res = search_policy(prof, auto.budget, cost=auto.cost,
+                            widths=auto.widths, include_fp=auto.include_fp,
+                            kv=auto.kv, draft=auto.draft)
+        print(f"auto-policy: budget {auto.budget:g} b/w ({auto.cost}) -> "
+              f"{res.bits_per_weight:.3f} code bits/weight "
+              f"({res.storage_bits_per_weight:.2f} with codebooks), "
+              f"summed layer err {res.total_err:.4f}")
+        print(f"auto-policy spec: {res.spec}")
+        args.policy = res.spec
     # parse the policy unconditionally: its kv= cache rule applies even to
     # fp serving (--method none); --draft-bits rides in as the reserved
     # draft= entry so quantization emits the nested bitstream layout
@@ -212,6 +267,13 @@ def main(argv=None) -> int:
         print(f"quantized with {args.method} @{args.bits}-bit{pol_str}: "
               f"{rep['bits_per_weight']:.2f} bits/weight over "
               f"{rep['quantized_weights']} weights")
+        if args.report_out:
+            from repro.core import save_report
+            save_report(report, args.report_out,
+                        extra={"arch": args.arch, "method": args.method,
+                               "policy": args.policy,
+                               "bits_per_weight": rep["bits_per_weight"]})
+            print(f"per-layer report written to {args.report_out}")
         if args.autotune:
             from repro.kernels.tune import cache_path, tune_model
             plans = tune_model(params, p=args.slots)
@@ -310,6 +372,14 @@ def main(argv=None) -> int:
                            track=args.track or None,
                            faults=faults, queue_cap=queue_cap)
     dt = time.time() - t0
+    if args.tokens_out:
+        import json
+        with open(args.tokens_out, "w") as f:
+            json.dump({"tokens": [list(map(int, r.tokens))
+                                  for r in results],
+                       "finish_reasons": [r.finish_reason
+                                          for r in results]}, f)
+        print(f"served tokens written to {args.tokens_out}")
     n_tok = sum(len(r.tokens) for r in results)
     st = engine.last_stats
     extra = ""

@@ -96,8 +96,12 @@ def _as_policy(qcfg: Optional[QuantConfig], method: str,
 
 
 def _fp_report(w: jnp.ndarray) -> LayerQuantReport:
+    # w is model-layout (..., d_in, d_out); report shape in GANQ's
+    # (m=out, n=in) orientation to match quantized entries
     return LayerQuantReport(err=0.0, bits_per_weight=dtype_bits(w.dtype),
-                            bits=None, fmt="dense", method="none")
+                            bits=None, fmt="dense", method="none",
+                            n_weights=int(w.size),
+                            shape=(int(w.shape[-1]), int(w.shape[-2])))
 
 
 def _expert_fmt(linear_fmt: str) -> str:
@@ -129,7 +133,9 @@ def _quantize_one(w: jnp.ndarray, h: jnp.ndarray,
     total, count = get_format(layer.fmt).storage_bits(layer)
     rep = LayerQuantReport(err=float(res.err_history[-1]),
                            bits_per_weight=total / count,
-                           bits=r.qcfg.bits, fmt=layer.fmt, method=r.method)
+                           bits=r.qcfg.bits, fmt=layer.fmt, method=r.method,
+                           n_weights=count,
+                           shape=(int(w.shape[-1]), int(w.shape[-2])))
     return layer, rep
 
 
@@ -213,7 +219,9 @@ def quantize_block(block_params: Dict, kind: str, col: HCollector,
             report[name] = LayerQuantReport(
                 err=float(jnp.mean(jnp.asarray(errs))),
                 bits_per_weight=total / count, bits=r.qcfg.bits,
-                fmt=experts.fmt, method=r.method)
+                fmt=experts.fmt, method=r.method, n_weights=count,
+                shape=(int(moe[wname].shape[-1]),
+                       int(moe[wname].shape[-2])))
     return qp, report
 
 

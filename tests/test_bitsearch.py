@@ -1,0 +1,302 @@
+"""Auto-precision search: sensitivity profiler, budgeted allocator,
+spec emitter round-trip over every registered config's real layer names."""
+import itertools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduce_config
+from repro.core import (LayerQuantReport, QuantConfig, parse_policy)
+from repro.core.bitsearch import (FP_KEY, AutoSpec, SensitivityProfile,
+                                  allocation_groups, candidate_fmt,
+                                  emit_policy_spec, escape_pattern,
+                                  load_report, model_layer_names,
+                                  parse_auto_spec, profile_sensitivity,
+                                  save_report, search_policy)
+
+KEY = jax.random.PRNGKey(0)
+QCFG = QuantConfig(bits=4, iters=2, precondition="fixed")
+
+
+def synth_profile(cfg, widths=(2, 3, 4), include_fp=True, err_fn=None):
+    """Fabricate a SensitivityProfile over a config's real group
+    structure (no PTQ) for allocator/emitter tests."""
+    groups = allocation_groups(cfg)
+    gdesc, entries = {}, {}
+    for gi, g in enumerate(groups):
+        n_w = 1000 + 10 * gi
+        gdesc[g.key] = {"suffix": g.suffix, "members": g.members,
+                        "param_paths": g.param_paths, "n_weights": n_w,
+                        "shape": [16, 16]}
+        per = {}
+        for b in widths:
+            err = (err_fn(g.key, b) if err_fn
+                   else (1 + gi) * 100.0 / (b * b))
+            per[str(b)] = {"err": err, "bits_per_weight": b + 1.0,
+                           "fmt": candidate_fmt(b), "bits": b,
+                           "weight_bytes": n_w * b / 8.0}
+        if include_fp:
+            per[FP_KEY] = {"err": 0.0, "bits_per_weight": 32.0,
+                           "fmt": "dense", "bits": None,
+                           "weight_bytes": n_w * 4.0}
+        entries[g.key] = per
+    return SensitivityProfile(arch="synthetic", groups=gdesc,
+                              entries=entries, meta={"decode_p": 8})
+
+
+# ------------------------------------------------------------- escaping
+
+def test_escape_pattern_literal_anchoring():
+    """Escaped literals full-match exactly their name: no substring
+    capture (layer3 vs layer13), no segment shorthand."""
+    pol = parse_policy(f"{escape_pattern('layer3/mlp/w_up')}=2,"
+                       f"{escape_pattern('layer13/mlp/w_up')}=3", QCFG)
+    assert pol.resolve("layer3/mlp/w_up").qcfg.bits == 2
+    assert pol.resolve("layer13/mlp/w_up").qcfg.bits == 3
+    # unrelated names fall through to the default
+    assert pol.resolve("layer31/mlp/w_up").qcfg.bits == 4
+
+
+@pytest.mark.parametrize("name", [
+    "layer3/mlp/w_up", "weird*name/w", "q?mark/w", "br[acket/w",
+    "mix*?/[all]/w", "[leading/w", "enc0/attn/wq",
+])
+def test_escape_pattern_adversarial_names(name):
+    import fnmatch
+    pat = escape_pattern(name)
+    assert fnmatch.fnmatchcase(name, pat), (name, pat)
+    # near-miss names must NOT match (superstring / substring attacks)
+    for other in (f"x{name}", f"{name}x", name.replace("/", "//")):
+        assert not fnmatch.fnmatchcase(other, pat), (other, pat)
+
+
+def test_escape_pattern_rejects_grammar_breakers():
+    with pytest.raises(ValueError):
+        escape_pattern("has=equals/w")
+    with pytest.raises(ValueError):
+        escape_pattern("has,comma/w")
+
+
+# --------------------------------------------------- groups + roundtrip
+
+def test_allocation_groups_respect_stacking():
+    """Unit-layer groups span every unit sharing a stacked position;
+    whisper sides group whole; all capture names covered exactly once."""
+    cfg = reduce_config(get_config("deepseek-7b"))
+    groups = allocation_groups(cfg)
+    for g in groups:
+        if g.key.startswith("unit"):
+            assert len(g.members) == cfg.n_layers // 1 or len(g.members) > 1
+    names = model_layer_names(cfg)
+    covered = [m for g in groups for m in g.members]
+    assert sorted(covered) == sorted(names)
+    assert len(set(covered)) == len(covered)
+
+    wcfg = reduce_config(get_config("whisper-medium"))
+    wgroups = allocation_groups(wcfg)
+    sides = {g.key.split(":")[0] for g in wgroups}
+    assert sides == {"enc", "dec"}
+    assert any(g.suffix.startswith("xattn/") for g in wgroups
+               if g.key.startswith("dec"))
+    wnames = model_layer_names(wcfg)
+    assert sorted(m for g in wgroups for m in g.members) == sorted(wnames)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_policy_roundtrip_all_configs(arch):
+    """parse_policy(emit(alloc)) resolves every real capture name AND
+    param-tree path of every registered config back to the original
+    allocation — the spec round-trip guarantee."""
+    cfg = reduce_config(get_config(arch))
+    prof = synth_profile(cfg)
+    groups = allocation_groups(cfg)
+    assert groups, arch
+    # cycle widths across groups so same-suffix groups disagree wherever
+    # the config allows it (exercises the literal-rule fallback)
+    cycle = itertools.cycle(["2", "3", "4", FP_KEY])
+    choice = {g.key: next(cycle) for g in groups}
+    spec = emit_policy_spec(prof, choice)
+    pol = parse_policy(spec, QCFG)
+    for g in groups:
+        want = choice[g.key]
+        for name in g.members + g.param_paths:
+            r = pol.resolve(name)
+            got = FP_KEY if r.keep_fp else str(r.qcfg.bits)
+            assert got == want, (arch, name, got, want, spec)
+
+
+def test_roundtrip_survives_reparse_of_emitted_spec():
+    """emit -> parse -> emit (same choices) is a fixed point."""
+    cfg = reduce_config(get_config("deepseek-7b"))
+    prof = synth_profile(cfg)
+    res = search_policy(prof, budget=3.0)
+    pol = parse_policy(res.spec, QCFG)
+    for gkey, wkey in res.choice.items():
+        for name in prof.groups[gkey]["members"]:
+            r = pol.resolve(name)
+            got = FP_KEY if r.keep_fp else str(r.qcfg.bits)
+            assert got == wkey
+
+
+def test_emitted_spec_drives_abstract_quantize():
+    """The dry-run transform resolves the emitted spec identically to
+    the live pipeline (param-tree paths, stacked leaves)."""
+    from repro.core.types import QuantizedLinear
+    from repro.models.model import abstract_params
+    from repro.models.quantized import abstract_quantize
+    cfg = reduce_config(get_config("deepseek-7b"))
+    prof = synth_profile(cfg)
+    groups = allocation_groups(cfg)
+    choice = {g.key: ("2" if "mlp" in g.suffix else "4") for g in groups}
+    spec = emit_policy_spec(prof, choice)
+    sds = abstract_quantize(abstract_params(cfg), cfg,
+                            policy=parse_policy(spec, QCFG))
+    units = sds["stack"]["units"][0]
+    assert units["mlp"]["w_up"].bits == 2
+    assert units["attn"]["wq"].bits == 4
+    assert isinstance(units["mlp"]["w_up"], QuantizedLinear)
+
+
+def test_emit_kv_draft_passthrough():
+    cfg = reduce_config(get_config("deepseek-7b"))
+    prof = synth_profile(cfg)
+    choice = {g.key: "4" for g in allocation_groups(cfg)}
+    spec = emit_policy_spec(prof, choice, kv="paged_int8", draft=3)
+    assert "kv=paged_int8" in spec and "draft=3" in spec
+    pol = parse_policy(spec, QCFG)
+    assert pol.kv_fmt == "paged_int8"
+    assert pol.draft_bits == 3
+
+
+# ------------------------------------------------------------ allocator
+
+def test_search_respects_budget_and_picks_known_optimum():
+    cfg = reduce_config(get_config("deepseek-7b"))
+    # one group far more sensitive than the rest: at a budget of 3.0 the
+    # optimum parks everything else low to buy it width
+    groups = allocation_groups(cfg)
+    hot = groups[0].key
+
+    def err_fn(key, b):
+        base = 1e4 if key == hot else 1.0
+        return base / (2.0 ** b)
+    prof = synth_profile(cfg, err_fn=err_fn, include_fp=False)
+    res = search_policy(prof, budget=3.0, include_fp=False)
+    total_w = prof.total_weights()
+    used = sum(int(k) * prof.groups[g]["n_weights"]
+               for g, k in res.choice.items())
+    assert used / total_w <= 3.0 + 1e-9
+    assert res.choice[hot] == "4"
+    # and it beats uniform 3-bit (which is feasible) on summed error
+    uni_err = sum(prof.entries[g.key]["3"]["err"] for g in groups)
+    assert res.total_err <= uni_err
+
+
+def test_search_infeasible_budget_raises_with_minimum():
+    cfg = reduce_config(get_config("deepseek-7b"))
+    prof = synth_profile(cfg, widths=(3, 4), include_fp=False)
+    with pytest.raises(ValueError, match="minimum achievable"):
+        search_policy(prof, budget=1.0, widths=(3, 4), include_fp=False)
+
+
+def test_search_rejects_unproven_widths():
+    cfg = reduce_config(get_config("deepseek-7b"))
+    prof = synth_profile(cfg)
+    with pytest.raises(ValueError, match="parity"):
+        search_policy(prof, budget=3.0, widths=(3, 7))
+
+
+def test_search_cost_modes_agree_on_direction():
+    """All cost modes produce feasible allocations; storage mode charges
+    the codebook so its achieved code-bits are <= the bits mode's."""
+    cfg = reduce_config(get_config("deepseek-7b"))
+    prof = synth_profile(cfg, include_fp=False)
+    r_bits = search_policy(prof, budget=3.0, cost="bits", include_fp=False)
+    r_stor = search_policy(prof, budget=3.0, cost="storage",
+                           include_fp=False)
+    r_byte = search_policy(prof, budget=3.0, cost="bytes", include_fp=False)
+    r_meas = search_policy(prof, budget=3.0, cost="measured",
+                           include_fp=False)
+    assert r_bits.bits_per_weight <= 3.0 + 1e-9
+    assert r_stor.bits_per_weight <= r_bits.bits_per_weight + 1e-9
+    for r in (r_byte, r_meas):
+        assert set(r.choice) == set(r_bits.choice)
+    with pytest.raises(ValueError, match="cost mode"):
+        search_policy(prof, budget=3.0, cost="nope")
+
+
+# ----------------------------------------------------- auto-spec parser
+
+def test_parse_auto_spec():
+    a = parse_auto_spec("budget=3.4")
+    assert a == AutoSpec(budget=3.4)
+    a = parse_auto_spec("budget=3,cost=storage,cands=2+3+4,fp=0,"
+                        "kv=paged_int8,draft=2")
+    assert a.cost == "storage" and a.widths == (2, 3, 4)
+    assert a.include_fp is False and a.kv == "paged_int8" and a.draft == 2
+    with pytest.raises(ValueError, match="budget"):
+        parse_auto_spec("cost=bits")
+    with pytest.raises(ValueError, match="unknown"):
+        parse_auto_spec("budget=3,bogus=1")
+    with pytest.raises(ValueError, match="key=value"):
+        parse_auto_spec("budget=3,oops")
+
+
+# ------------------------------------------- profiler + IO (real model)
+
+def test_profile_search_roundtrip_real_model(tmp_path):
+    """End to end on a real reduced model: profile via the PTQ report
+    path, search, emit, save/load, warm-start equality."""
+    from repro.data.synthetic import MarkovStream
+    from repro.models import init_params
+    cfg = reduce_config(get_config("deepseek-7b"))
+    params = init_params(KEY, cfg)
+    data = MarkovStream(cfg.vocab_size, batch=2, seq=32, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    prof = profile_sensitivity(params, cfg, batch, widths=(2, 3),
+                               qcfg=QCFG, arch="deepseek-7b")
+    assert set(prof.widths()) == {FP_KEY, "2", "3"}
+    for gkey, per in prof.entries.items():
+        assert prof.groups[gkey]["n_weights"] > 0
+        # wider is better: monotone err in width per group
+        assert per["3"]["err"] <= per["2"]["err"]
+        assert per[FP_KEY]["err"] == 0.0
+        assert per["2"]["fmt"] == "lut2_packed"
+        assert per["2"]["weight_bytes"] > 0
+    path = tmp_path / "prof.json"
+    prof.save(str(path))
+    loaded = SensitivityProfile.load(str(path))
+    assert loaded.entries == prof.entries
+    assert loaded.groups == prof.groups
+    # warm start: no params needed beyond the covered widths -> equal
+    warm = profile_sensitivity(params, cfg, batch, widths=(2, 3),
+                               qcfg=QCFG, warm=loaded, arch="deepseek-7b")
+    assert warm.entries == prof.entries
+    res = search_policy(prof, budget=2.5, widths=(2, 3), include_fp=False)
+    assert res.bits_per_weight <= 2.5 + 1e-9
+    assert res.spec
+    # schema guard
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": 99}))
+    with pytest.raises(ValueError, match="schema"):
+        SensitivityProfile.load(str(bad))
+
+
+def test_report_json_roundtrip(tmp_path):
+    rep = {"layer0/attn/wq": LayerQuantReport(
+        err=1.5, bits_per_weight=4.5, bits=4, fmt="lut4_packed",
+        method="ganq", n_weights=4096, shape=(64, 64)),
+        "layer0/mlp/w_up": LayerQuantReport(
+        err=0.0, bits_per_weight=32.0, bits=None, fmt="dense",
+        method="none", n_weights=128, shape=(16, 8))}
+    path = tmp_path / "report.json"
+    save_report(rep, str(path), extra={"arch": "x"})
+    d = json.loads(path.read_text())
+    assert d["arch"] == "x"
+    back = load_report(str(path))
+    assert back == rep
+    assert back["layer0/attn/wq"].shape == (64, 64)
+    assert float(back["layer0/attn/wq"]) == 1.5

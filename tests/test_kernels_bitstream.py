@@ -76,6 +76,60 @@ def test_phase_split():
     assert phase_split(4) == (1, 2)
     assert phase_split(2) == (1, 4)
     assert phase_split(8) == (1, 1)
+    assert phase_split(5) == (5, 8)
+    assert phase_split(6) == (3, 4)
+    assert phase_split(7) == (7, 8)
+
+
+# widths beyond the packed-format set {2,3,4}: the kernel is bit-parametric
+# (g = sb/gcd(sb,8) byte planes, ph = 8/gcd(sb,8) phases), and the
+# precision search may allocate {5,6,8} via the unpacked 'lut' container —
+# these parity proofs are what gates them into bitsearch.PROVEN_WIDTHS.
+# Shapes stay small: interpret-mode decode runs 2^bits-1 compare-selects.
+@pytest.mark.parametrize("m,n,p", [(16, 24, 4), (8, 41, 3), (4, 9, 2)])
+@pytest.mark.parametrize("bits", [5, 6, 8])
+def test_bitstream_wide_widths_match_ref(m, n, p, bits):
+    codes, t, x = _mk(11, m, n, p, bits)
+    packed = jnp.asarray(pack_bits_np(np.asarray(codes), bits))
+    assert packed.shape == (m, code_stream_bytes(n, bits))
+    y = lut_matmul_bitstream(packed, t, x, bits=bits, interpret=True)
+    yref = ref.lut_matmul_ref(codes, t, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_allocator_width_gate_matches_kernel_proofs():
+    """bitsearch.candidate_fmt accepts exactly the widths proven above
+    (packed {2,3,4} + unpacked {5,6,8}) and rejects the rest by name."""
+    from repro.core.bitsearch import PROVEN_WIDTHS, candidate_fmt
+    assert set(PROVEN_WIDTHS) == {2, 3, 4, 5, 6, 8}
+    assert candidate_fmt(2) == "lut2_packed"
+    assert candidate_fmt(3) == "lut3_packed"
+    assert candidate_fmt(4) == "lut4_packed"
+    for b in (5, 6, 8):
+        assert candidate_fmt(b) == "lut"
+    for b in (1, 7, 9, 16):
+        with pytest.raises(ValueError, match="parity"):
+            candidate_fmt(b)
+
+
+def test_lut2_packed_streams_checkpoint_bytes():
+    """The 2-bit container mirrors lut3_packed: exactly ceil(n/4) code
+    bytes per row, vmem_plan agrees, serving matches the reference."""
+    m, n, p = 32, 45, 6
+    lay = _q(7, m, n, 2, "lut2_packed")
+    assert lay.codes.shape == (m, code_stream_bytes(n, 2)) == (m, 12)
+    plan = vmem_plan(m, n, 8, 2, fmt="lut2_packed")
+    assert plan["codes_bytes"] == m * code_stream_bytes(n, 2)
+    assert plan["codes_bytes"] < vmem_plan(m, n, 8, 2,
+                                           fmt="lut4_packed")["codes_bytes"]
+    codes, t, x = _mk(7, m, n, p, 2)
+    yref = ref.lut_matmul_ref(lay.unpacked_codes(), lay.codebook, x)
+    for use_pallas in (True, False):
+        y = lut_linear(lay.codes, lay.codebook, x, bits=2,
+                       fmt="lut2_packed", use_pallas=use_pallas)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                                   rtol=1e-4, atol=1e-4)
 
 
 def test_lut3_packed_streams_checkpoint_bytes():
